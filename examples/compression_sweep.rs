@@ -1,0 +1,105 @@
+//! Compression study: CPD-SGDM across the whole δ-contraction operator
+//! zoo (sign / top-k / rand-k / QSGD), against full-precision PD-SGDM and
+//! the no-momentum compressed baselines (CHOCO-SGD, DeepSqueeze).
+//!
+//!     cargo run --release --example compression_sweep
+//!
+//! Reports, per operator: advertised δ, final loss/accuracy, total MB,
+//! and the bytes reduction vs full precision — the practical summary of
+//! the paper's §4.2 and Figures 2(c,d)/3.
+
+use pdsgdm::algorithms::Hyper;
+use pdsgdm::compress::{self, Compressor};
+use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
+use pdsgdm::coordinator::Experiment;
+use pdsgdm::metrics;
+use pdsgdm::optim::LrSchedule;
+
+fn main() -> anyhow::Result<()> {
+    let base = || {
+        let mut c = ExperimentConfig::default();
+        c.workers = 8;
+        c.steps = 1200;
+        c.eval_every = 100;
+        c.seed = 21;
+        c.workload = WorkloadConfig::Mlp { n: 4000, dim: 32, classes: 10, hidden: 64, batch: 16 };
+        c.hyper = Hyper {
+            lr: LrSchedule::paper_cifar(0.1, 1200),
+            mu: 0.9,
+            weight_decay: 1e-4,
+            period: 4,
+            gamma: 0.4, // paper's CIFAR-10 consensus step size
+        };
+        c
+    };
+
+    let mut traces = Vec::new();
+    let mut rows = Vec::new();
+
+    // Full-precision reference (Algorithm 1).
+    let mut cfg = base();
+    cfg.algorithm = "pd-sgdm".into();
+    let mut exp = Experiment::build(cfg)?;
+    let full = exp.run(false);
+    let full_mb = full.total_comm_mb();
+    rows.push((
+        "pd-sgdm (full precision)".to_string(),
+        1.0,
+        full.final_loss(),
+        full.final_accuracy(),
+        full_mb,
+        1.0,
+    ));
+    traces.push(full);
+
+    // Algorithm 2 with each operator.
+    let d_hint = 32 * 64 + 64 + 10 * 64 + 10; // MLP param dim for δ display
+    for spec in ["sign", "top0.05", "rand0.05", "qsgd4"] {
+        let mut cfg = base();
+        cfg.algorithm = "cpd-sgdm".into();
+        cfg.compressor = Some(spec.into());
+        let mut exp = Experiment::build(cfg)?;
+        let trace = exp.run(false);
+        let delta = compress::parse(spec).unwrap().delta(d_hint);
+        let ratio = full_mb / trace.total_comm_mb();
+        rows.push((
+            format!("cpd-sgdm + {spec}"),
+            delta,
+            trace.final_loss(),
+            trace.final_accuracy(),
+            trace.total_comm_mb(),
+            ratio,
+        ));
+        traces.push(trace);
+    }
+
+    // No-momentum compressed baselines for context.
+    for algo in ["choco-sgd", "deepsqueeze"] {
+        let mut cfg = base();
+        cfg.algorithm = algo.into();
+        cfg.compressor = Some("sign".into());
+        let mut exp = Experiment::build(cfg)?;
+        let trace = exp.run(false);
+        let ratio = full_mb / trace.total_comm_mb();
+        rows.push((
+            format!("{algo} + sign"),
+            compress::Sign.delta(d_hint),
+            trace.final_loss(),
+            trace.final_accuracy(),
+            trace.total_comm_mb(),
+            ratio,
+        ));
+        traces.push(trace);
+    }
+
+    println!(
+        "\n{:<28} {:>10} {:>11} {:>9} {:>10} {:>10}",
+        "run", "delta", "final_loss", "acc", "MB", "MB_saving"
+    );
+    for (name, delta, loss, acc, mb, ratio) in &rows {
+        println!("{name:<28} {delta:>10.4} {loss:>11.4} {acc:>9.3} {mb:>10.2} {ratio:>9.1}x");
+    }
+    metrics::write_csv(std::path::Path::new("bench_out/compression_sweep.csv"), &traces)?;
+    println!("\ntraces -> bench_out/compression_sweep.csv");
+    Ok(())
+}

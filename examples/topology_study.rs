@@ -1,0 +1,66 @@
+//! Topology study: how the spectral gap ρ = 1 − |λ₂(W)| shapes PD-SGDM,
+//! empirically grounding the `(1 + 4/ρ²)` consensus term of Theorem 1.
+//!
+//!     cargo run --release --example topology_study
+//!
+//! For each topology family at K=16: prints ρ, the theorem's consensus
+//! amplification factor, the measured peak consensus error, and the final
+//! loss — chain (small ρ) should drift most, complete (ρ=1) least, with
+//! ring/torus/hypercube ordered in between.
+
+use pdsgdm::algorithms::Hyper;
+use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
+use pdsgdm::coordinator::Experiment;
+use pdsgdm::optim::LrSchedule;
+use pdsgdm::topology::Topology;
+
+fn main() -> anyhow::Result<()> {
+    let k = 16;
+    let topologies: &[(&str, Topology)] = &[
+        ("chain", Topology::Chain),
+        ("ring", Topology::Ring),
+        ("torus", Topology::Torus2d),
+        ("regular-3", Topology::RandomRegular { degree: 3 }),
+        ("hypercube", Topology::Hypercube),
+        ("star", Topology::Star),
+        ("complete", Topology::Complete),
+    ];
+
+    println!(
+        "{:<12} {:>8} {:>12} {:>16} {:>12} {:>10}",
+        "topology", "rho", "1+4/rho^2", "peak_consensus", "final_loss", "comm_MB"
+    );
+    for (name, topo) in topologies {
+        let mut c = ExperimentConfig::default();
+        c.workers = k;
+        c.topology = *topo;
+        // Metropolis handles the irregular degrees of star/random graphs.
+        c.weighting = pdsgdm::topology::Weighting::Metropolis;
+        c.steps = 600;
+        c.eval_every = 20;
+        c.seed = 5;
+        c.workload = WorkloadConfig::Quadratic { dim: 64, heterogeneity: 2.0, noise: 0.2 };
+        c.hyper = Hyper {
+            lr: LrSchedule::Constant { eta: 0.02 },
+            mu: 0.9,
+            weight_decay: 0.0,
+            period: 8,
+            gamma: 0.4,
+        };
+        let mut exp = Experiment::build(c)?;
+        let rho = exp.rho;
+        let trace = exp.run(false);
+        let peak = trace.points.iter().map(|p| p.consensus).fold(0.0, f64::max);
+        println!(
+            "{name:<12} {rho:>8.4} {:>12.1} {peak:>16.4e} {:>12.4} {:>10.2}",
+            1.0 + 4.0 / (rho * rho),
+            trace.final_loss(),
+            trace.total_comm_mb(),
+        );
+    }
+    println!(
+        "\nTheorem 1: consensus error is O(eta^2 p^2 G^2 (1 + 4/rho^2)) — the\n\
+         peak_consensus column should shrink as rho grows."
+    );
+    Ok(())
+}

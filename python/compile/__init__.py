@@ -1,0 +1,5 @@
+"""Build-time-only package: L2 JAX model + L1 Pallas kernels + AOT export.
+
+Nothing in here is imported at runtime — ``make artifacts`` runs
+``compile.aot`` once, and the Rust binary consumes the HLO text files.
+"""

@@ -1,0 +1,120 @@
+"""AOT export: lower the L2/L1 computations to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the Rust runtime
+(rust/src/runtime/) loads these with ``HloModuleProto::from_text_file``
+and never touches python again.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which this image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Artifacts (per model config <cfg>):
+  train_step_<cfg>.hlo.txt  (params f32[d], tokens i32[B,S+1]) -> (loss, grad)
+  momentum_<cfg>.hlo.txt    (eta,mu f32[1], x,m,g f32[d])      -> (x', m')
+  mix_k<K>_<cfg>.hlo.txt    (w f32[K,K], xs f32[K,d])          -> xs'
+plus a manifest ``<cfg>.meta.json`` with shapes the Rust side validates
+against its config.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import mix as mix_kernel
+from compile.kernels import momentum as momentum_kernel
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via the stablehlo -> XlaComputation hop."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) // 1024} KiB)")
+
+
+def emit_config(cfg: model.ModelConfig, ks, out_dir):
+    d = model.param_count(cfg)
+    print(f"[{cfg.name}] d={d} B={cfg.batch} S={cfg.seq_len} K={ks}")
+
+    params = jax.ShapeDtypeStruct((d,), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    emit(
+        functools.partial(model.train_step, cfg),
+        (params, tokens),
+        os.path.join(out_dir, f"train_step_{cfg.name}.hlo.txt"),
+    )
+
+    scalar = jax.ShapeDtypeStruct((1,), jnp.float32)
+    vec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    emit(
+        lambda x, m, g, eta, mu: momentum_kernel.momentum_update(x, m, g, eta, mu),
+        (vec, vec, vec, scalar, scalar),
+        os.path.join(out_dir, f"momentum_{cfg.name}.hlo.txt"),
+    )
+
+    for k in ks:
+        w = jax.ShapeDtypeStruct((k, k), jnp.float32)
+        xs = jax.ShapeDtypeStruct((k, d), jnp.float32)
+        emit(
+            lambda w, xs: mix_kernel.mix(w, xs),
+            (w, xs),
+            os.path.join(out_dir, f"mix_k{k}_{cfg.name}.hlo.txt"),
+        )
+
+    meta = {
+        "name": cfg.name,
+        "d": d,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "mix_ks": ks,
+        "layout": [
+            {"name": n, "offset": o, "shape": list(s)}
+            for n, o, s in model.param_layout(cfg)[0]
+        ],
+    }
+    meta_path = os.path.join(out_dir, f"{cfg.name}.meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  wrote {meta_path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,e2e",
+                    help="comma-separated names from model.CONFIGS")
+    ap.add_argument("--ks", default="4,8",
+                    help="worker counts K to emit mix artifacts for")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    ks = [int(k) for k in args.ks.split(",")]
+    for name in args.configs.split(","):
+        emit_config(model.CONFIGS[name], ks, args.out_dir)
+    # A sentinel so `make` can cheaply check freshness.
+    open(os.path.join(args.out_dir, ".stamp"), "w").write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

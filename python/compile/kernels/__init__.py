@@ -1,0 +1,7 @@
+"""L1 — Pallas kernels for the paper's compute hot-spots.
+
+``matmul``   — tiled MXU-style matmul (transformer MLP)
+``momentum`` — fused heavy-ball update, paper Eq. (8)
+``mix``      — gossip mixing X' = W @ X, paper Eq. (4)
+``ref``      — pure-jnp oracles the pytest suite checks against
+"""

@@ -1,0 +1,117 @@
+"""Tiled matmul Pallas kernel — the transformer's MLP hot-spot (L1).
+
+Hardware adaptation (the paper trained ResNets on P40/CUDA; see
+DESIGN.md §Hardware-Adaptation): instead of CUDA threadblock tiles in
+shared memory we tile for the TPU memory hierarchy —
+
+  * a (i, j, k) grid of blocks; the (bm, bk) and (bk, bn) operand tiles
+    and the (bm, bn) fp32 output/accumulator tile all live in VMEM,
+  * the k-axis is the innermost grid dimension and the output BlockSpec
+    does not depend on it, so the output tile stays resident in VMEM
+    across the whole reduction (Pallas output revisiting) — the TPU
+    analogue of a CUDA shared-memory accumulator,
+  * block shapes default to multiples of the 128x128 MXU face.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  The kernel is
+numerically identical either way; correctness is asserted against
+``ref.matmul_ref`` by python/tests/test_matmul_kernel.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: o_tile (+)= x_tile @ y_tile in fp32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def pick_block(dim, preferred):
+    """Largest divisor of ``dim`` that is <= ``preferred``.
+
+    Keeps every tile exact (no ragged edges / masking) — the model picks
+    128-friendly shapes, the hypothesis tests sweep adversarial ones.
+    """
+    b = max(1, min(dim, preferred))
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_blocked(x, y, *, bm=128, bn=128, bk=128):
+    """``x @ y`` via the tiled Pallas kernel; returns f32 (m, n).
+
+    Raw (non-differentiable) entry point — tests sweep block shapes
+    through here.  The model uses :func:`matmul`, which adds the VJP.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {y.shape}"
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = pick_block(k, bk)
+
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable tiled-Pallas matmul (default 128-blocks).
+
+    ``pallas_call`` has no built-in transpose rule, so the VJP is spelled
+    out — and routes through the same kernel, so the backward pass of the
+    transformer MLP also runs on the L1 hot-spot:
+
+        dX = dO @ Y^T,   dY = X^T @ dO
+    """
+    return matmul_blocked(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_blocked(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    return (
+        matmul_blocked(g, y.T).astype(x.dtype),
+        matmul_blocked(x.T, g).astype(y.dtype),
+    )
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm=128, bn=128, bk=128, in_dtype_bytes=4):
+    """Estimated VMEM footprint of one grid step (operands + accumulator).
+
+    Used by the DESIGN.md/EXPERIMENTS.md §Perf roofline estimate — the
+    interpret-mode CPU path has no real VMEM, so this is the number we
+    report for the TPU target.
+    """
+    return (bm * bk + bk * bn) * in_dtype_bytes + bm * bn * 4

@@ -1,0 +1,60 @@
+"""Gossip-mixing Pallas kernel (L1) — paper Eq. (4) communication step.
+
+Computes X' = W @ X where X is the f32[K, d] matrix of stacked worker
+iterates (row k = worker k) and W is the K x K doubly-stochastic mixing
+matrix, i.e. row k of the output is  sum_j w_kj x_j  — exactly Line 6 of
+Algorithm 1.
+
+This is a tall-skinny matmul: K (<= 64 in all our experiments) is tiny
+compared to d (millions), so the kernel tiles only the d axis; each grid
+step holds all K rows of a (K, bd) slab plus the full W in VMEM and
+issues one (K x K) @ (K x bd) MXU contraction.  One HBM pass over X.
+
+Correctness vs ``ref.mix_ref``: python/tests/test_mix_kernel.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_kernel(w_ref, x_ref, o_ref):
+    """One d-block: o_slab = W @ x_slab with fp32 accumulation."""
+    o_ref[...] = jnp.dot(
+        w_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def pick_block(d, preferred):
+    """Largest divisor of ``d`` <= preferred (exact tiles along d)."""
+    b = max(1, min(d, preferred))
+    while d % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bd",))
+def mix(w, xs, *, bd=16384):
+    """X' = W @ X via the d-tiled Pallas kernel; returns f32[K, d].
+
+    w: f32[K, K]; xs: f32[K, d].  Default bd=16384 with K=8 gives
+    (8*16384 in + 8*16384 out + 64 W) * 4B ~= 1 MiB VMEM per step.
+    """
+    kk, k2 = w.shape
+    k3, d = xs.shape
+    assert kk == k2 == k3, f"mix shape mismatch: W {w.shape}, X {xs.shape}"
+    blk = pick_block(d, bd)
+
+    return pl.pallas_call(
+        _mix_kernel,
+        grid=(d // blk,),
+        in_specs=[
+            pl.BlockSpec((kk, kk), lambda i: (0, 0)),
+            pl.BlockSpec((kk, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((kk, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((kk, d), jnp.float32),
+        interpret=True,
+    )(w, xs)

@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package is checked against the corresponding
+function here by ``python/tests/`` (exact math, no Pallas, no tiling) —
+this file is the single source of truth for what the kernels compute.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain matmul with fp32 accumulation: ``x @ y``.
+
+    x: (m, k), y: (k, n) -> (m, n).  Inputs may be f32 or bf16; the
+    accumulation (and output) are f32, matching the kernel's MXU-style
+    fp32 accumulator.
+    """
+    return jnp.matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def momentum_ref(x, m, g, eta, mu):
+    """Paper Eq. (8): fused heavy-ball momentum update.
+
+        m' = mu * m + g
+        x' = x - eta * m'
+
+    x, m, g: flat f32[d]; eta, mu: scalars.  Returns (x', m').
+    """
+    m_new = mu * m + g
+    x_new = x - eta * m_new
+    return x_new, m_new
+
+
+def mix_ref(w, xs):
+    """Paper Eq. (4) gossip step over the stacked iterate matrix.
+
+    ``xs`` is f32[K, d] with row k = worker k's parameter vector;
+    ``w`` is the K x K doubly-stochastic mixing matrix.  Row k of the
+    result is  sum_j w[k, j] * xs[j]  ==  (W @ X) with X = xs.
+    """
+    return jnp.matmul(
+        w.astype(jnp.float32), xs.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,199 @@
+"""L2 — decoder-only transformer over a *flat* parameter vector.
+
+The paper's problem statement (Eq. 1) treats the model as a single vector
+x in R^d per worker; the Rust coordinator (L3) does the same — momentum,
+gossip mixing, and compression are all vector ops over f32[d].  So the
+model here is parameterized by one flat f32[d] array, and the layout
+(offset, shape) of every tensor is a static table derived from the config.
+
+Forward pass: token embedding (tied LM head) -> L pre-LN blocks of
+causal multi-head attention + GELU MLP -> final LN -> logits -> mean
+next-token cross-entropy.  The MLP matmuls route through the L1 Pallas
+``kernels.matmul`` kernel so the paper's compute hot-spot lowers into the
+same HLO artifact the Rust runtime executes.
+
+``train_step(cfg, params, tokens)`` returns ``(loss, grad)`` via
+``jax.value_and_grad`` — one fused fwd+bwd HLO, no python anywhere near
+the L3 request path.
+"""
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul as matmul_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyper-parameters (fixed per AOT artifact)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int  # per-worker micro-batch
+
+    @property
+    def head_dim(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Config registry — names referenced by aot.py, the Rust config system,
+# and the examples.  ``tiny`` keeps pytest fast; ``e2e`` is the
+# end-to-end driver's model (see EXPERIMENTS.md for the CPU-budget
+# scaling note vs the paper's ResNet50/ImageNet run).
+CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=64, d_model=32, n_layers=2,
+                        n_heads=2, d_ff=64, seq_len=16, batch=2),
+    "small": ModelConfig("small", vocab=512, d_model=128, n_layers=2,
+                         n_heads=4, d_ff=512, seq_len=64, batch=4),
+    "e2e": ModelConfig("e2e", vocab=1024, d_model=256, n_layers=4,
+                       n_heads=8, d_ff=1024, seq_len=128, batch=4),
+}
+
+
+def param_layout(cfg: ModelConfig):
+    """Static (name, offset, shape) table for the flat vector.
+
+    Layout order is stable and documented — the Rust side re-derives
+    sizes from the same scheme (rust/src/runtime/artifacts.rs) for
+    checkpointing and initialization.
+    """
+    entries = []
+    off = 0
+
+    def add(name, shape):
+        nonlocal off
+        entries.append((name, off, shape))
+        off += math.prod(shape)
+
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    add("embed", (V, D))  # token embedding, tied as the LM head
+    add("pos", (cfg.seq_len, D))  # learned positions
+    for i in range(cfg.n_layers):
+        add(f"l{i}.ln1.scale", (D,))
+        add(f"l{i}.ln1.bias", (D,))
+        add(f"l{i}.attn.wqkv", (D, 3 * D))
+        add(f"l{i}.attn.bqkv", (3 * D,))
+        add(f"l{i}.attn.wo", (D, D))
+        add(f"l{i}.attn.bo", (D,))
+        add(f"l{i}.ln2.scale", (D,))
+        add(f"l{i}.ln2.bias", (D,))
+        add(f"l{i}.mlp.w1", (D, F))
+        add(f"l{i}.mlp.b1", (F,))
+        add(f"l{i}.mlp.w2", (F, D))
+        add(f"l{i}.mlp.b2", (D,))
+    add("lnf.scale", (D,))
+    add("lnf.bias", (D,))
+    return entries, off
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total d = dim of the flat parameter vector."""
+    return param_layout(cfg)[1]
+
+
+def unflatten(cfg: ModelConfig, flat):
+    """Flat f32[d] -> dict of named tensors (static slices, trace-safe)."""
+    entries, total = param_layout(cfg)
+    assert flat.shape == (total,), (flat.shape, total)
+    out = {}
+    for name, off, shape in entries:
+        n = math.prod(shape)
+        out[name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> jnp.ndarray:
+    """GPT-2-style init, returned as the flat vector."""
+    entries, total = param_layout(cfg)
+    chunks = []
+    for name, _off, shape in entries:
+        key, sub = jax.random.split(key)
+        if name.endswith((".bias", ".bqkv", ".bo", ".b1", ".b2")):
+            val = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(".scale"):
+            val = jnp.ones(shape, jnp.float32)
+        elif name in ("embed", "pos"):
+            val = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:  # weight matrices: 1/sqrt(fan_in), residual branches damped
+            val = jax.random.normal(sub, shape, jnp.float32) / math.sqrt(shape[0])
+            if name.endswith((".wo", ".w2")):
+                val = val / math.sqrt(2 * cfg.n_layers)
+        chunks.append(val.reshape(-1))
+    flat = jnp.concatenate(chunks)
+    assert flat.shape == (total,)
+    return flat
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _mlp(cfg, x, w1, b1, w2, b2):
+    """GELU MLP; the two matmuls are the L1 Pallas kernel."""
+    B, S, D = x.shape
+    h = matmul_kernel.matmul(x.reshape(B * S, D), w1) + b1
+    h = jax.nn.gelu(h)
+    o = matmul_kernel.matmul(h, w2) + b2
+    return o.reshape(B, S, D)
+
+
+def _attention(cfg, x, wqkv, bqkv, wo, bo):
+    """Causal multi-head self-attention (plain jnp — XLA fuses this fine;
+    the paper's hot-spot budget goes to the MLP matmuls)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    qkv = jnp.einsum("bsd,de->bse", x, wqkv) + bqkv
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    att = jnp.where(mask, att, jnp.float32(-1e30))
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, D)
+    return jnp.einsum("bsd,de->bse", o, wo) + bo
+
+
+def forward(cfg: ModelConfig, flat, tokens):
+    """tokens i32[B, S] -> logits f32[B, S, V]."""
+    p = unflatten(cfg, flat)
+    B, S = tokens.shape
+    x = p["embed"][tokens] + p["pos"][:S]
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"l{i}.ln1.scale"], p[f"l{i}.ln1.bias"])
+        x = x + _attention(cfg, h, p[f"l{i}.attn.wqkv"], p[f"l{i}.attn.bqkv"],
+                           p[f"l{i}.attn.wo"], p[f"l{i}.attn.bo"])
+        h = _layer_norm(x, p[f"l{i}.ln2.scale"], p[f"l{i}.ln2.bias"])
+        x = x + _mlp(cfg, h, p[f"l{i}.mlp.w1"], p[f"l{i}.mlp.b1"],
+                     p[f"l{i}.mlp.w2"], p[f"l{i}.mlp.b2"])
+    x = _layer_norm(x, p["lnf.scale"], p["lnf.bias"])
+    return jnp.einsum("bsd,vd->bsv", x, p["embed"])  # tied head
+
+
+def loss_fn(cfg: ModelConfig, flat, tokens):
+    """Mean next-token cross-entropy; tokens i32[B, S+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, flat, tokens):
+    """(loss f32[], grad f32[d]) — the single artifact the Rust L3 runs."""
+    loss, grad = jax.value_and_grad(functools.partial(loss_fn, cfg))(flat, tokens)
+    return loss, grad

@@ -1,0 +1,16 @@
+"""Shared pytest fixtures/settings for the kernel + model suite."""
+
+import os
+import sys
+
+# Tests run from python/ (``cd python && pytest tests``) or the repo root;
+# make ``compile`` importable either way.
+_here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _here not in sys.path:
+    sys.path.insert(0, _here)
+
+from hypothesis import settings
+
+# Pallas interpret mode is slow; keep example counts modest but real.
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")

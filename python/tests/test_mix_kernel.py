@@ -1,0 +1,70 @@
+"""L1 gossip-mixing kernel vs the oracle — paper Eq. (4) / Alg. 1 line 6."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import mix as mx
+from compile.kernels import ref
+
+
+def _ring_w(k):
+    """Ring mixing matrix (1/3, 1/3, 1/3), the paper's experimental topology."""
+    w = np.zeros((k, k), np.float32)
+    for i in range(k):
+        w[i, i] = 1 / 3
+        w[i, (i - 1) % k] += 1 / 3
+        w[i, (i + 1) % k] += 1 / 3
+    return w
+
+
+@given(
+    k=st.integers(1, 16),
+    d=st.integers(1, 2000),
+    bd=st.sampled_from([1, 17, 256, 16384]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mix_matches_ref(k, d, bd, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.random((k, k)).astype(np.float32)
+    w = w / w.sum(axis=1, keepdims=True)
+    xs = rng.standard_normal((k, d)).astype(np.float32)
+    got = mx.mix(jnp.array(w), jnp.array(xs), bd=bd)
+    want = ref.mix_ref(w, xs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@given(k=st.sampled_from([3, 4, 8, 16]), d=st.integers(1, 512),
+       seed=st.integers(0, 2**31 - 1))
+def test_mix_preserves_average(k, d, seed):
+    """Doubly-stochastic W preserves the worker average — the invariant
+    behind Eq. (18)/(45): x̄ evolves as if no communication happened."""
+    rng = np.random.default_rng(seed)
+    xs = rng.standard_normal((k, d)).astype(np.float32)
+    w = _ring_w(k)
+    out = np.asarray(mx.mix(jnp.array(w), jnp.array(xs)))
+    np.testing.assert_allclose(out.mean(axis=0), xs.mean(axis=0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mix_identity_w_is_noop():
+    xs = np.random.default_rng(0).standard_normal((8, 100)).astype(np.float32)
+    out = mx.mix(jnp.eye(8, dtype=jnp.float32), jnp.array(xs))
+    np.testing.assert_allclose(np.asarray(out), xs, rtol=1e-6)
+
+
+def test_mix_consensus_contraction():
+    """Repeated ring mixing contracts consensus error by (1-rho) per round
+    (Lemma 1): ||X W - X̄|| <= (1-rho) ||X - X̄||."""
+    k = 8
+    w = _ring_w(k)
+    evals = np.sort(np.abs(np.linalg.eigvalsh(w)))
+    rho = 1 - evals[-2]
+    rng = np.random.default_rng(3)
+    xs = rng.standard_normal((k, 64)).astype(np.float32)
+    dev = xs - xs.mean(0, keepdims=True)
+    before = np.linalg.norm(dev)
+    mixed = np.asarray(mx.mix(jnp.array(w), jnp.array(xs)))
+    after = np.linalg.norm(mixed - mixed.mean(0, keepdims=True))
+    assert after <= (1 - rho) * before + 1e-4

@@ -1,0 +1,118 @@
+"""L2 transformer: shapes, layout, loss sanity, gradient correctness."""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+CFG = model.CONFIGS["tiny"]
+
+
+def _params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _tokens(seed=1, seq=None):
+    seq = CFG.seq_len if seq is None else seq
+    return jax.random.randint(jax.random.PRNGKey(seed),
+                              (CFG.batch, seq), 0, CFG.vocab)
+
+
+def test_layout_is_contiguous_and_complete():
+    entries, total = model.param_layout(CFG)
+    off = 0
+    for name, o, shape in entries:
+        assert o == off, f"{name} not contiguous"
+        off += math.prod(shape)
+    assert off == total == model.param_count(CFG)
+
+
+def test_layout_names_unique():
+    entries, _ = model.param_layout(CFG)
+    names = [n for n, _, _ in entries]
+    assert len(names) == len(set(names))
+
+
+def test_unflatten_roundtrip():
+    flat = _params()
+    p = model.unflatten(CFG, flat)
+    rebuilt = jnp.concatenate([p[n].reshape(-1)
+                               for n, _, _ in model.param_layout(CFG)[0]])
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(flat))
+
+
+def test_init_statistics():
+    flat = _params()
+    p = model.unflatten(CFG, flat)
+    assert float(jnp.abs(p["l0.attn.bqkv"]).max()) == 0.0
+    np.testing.assert_allclose(np.asarray(p["l0.ln1.scale"]), 1.0)
+    # embeddings ~ N(0, 0.02)
+    assert 0.01 < float(jnp.std(p["embed"])) < 0.03
+
+
+def test_forward_shape_and_finite():
+    logits = model.forward(CFG, _params(), _tokens())
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_log_vocab():
+    """Random init => loss ~= ln(V) (uniform next-token distribution)."""
+    loss = model.loss_fn(CFG, _params(), _tokens(seq=CFG.seq_len + 1))
+    assert abs(float(loss) - math.log(CFG.vocab)) < 0.5
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    flat = _params()
+    toks = np.asarray(_tokens())
+    logits_a = np.asarray(model.forward(CFG, flat, jnp.array(toks)))
+    toks2 = toks.copy()
+    toks2[:, -1] = (toks2[:, -1] + 1) % CFG.vocab
+    logits_b = np.asarray(model.forward(CFG, flat, jnp.array(toks2)))
+    np.testing.assert_allclose(logits_a[:, :-1], logits_b[:, :-1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_train_step_gradient_matches_numerical():
+    flat = _params()
+    toks = _tokens(seq=CFG.seq_len + 1)
+    loss, grad = model.train_step(CFG, flat, toks)
+    assert grad.shape == flat.shape
+    assert bool(jnp.all(jnp.isfinite(grad)))
+    f = functools.partial(model.loss_fn, CFG)
+    d = flat.shape[0]
+    rng = np.random.default_rng(0)
+    eps = 1e-3
+    for i in rng.integers(0, d, size=5):
+        e = jnp.zeros(d).at[i].set(eps)
+        num = (f(flat + e, toks) - f(flat - e, toks)) / (2 * eps)
+        assert abs(float(num) - float(grad[i])) < 5e-3, i
+
+
+def test_gradient_descent_reduces_loss():
+    """A few plain-SGD steps on one batch must reduce the loss."""
+    flat = _params()
+    toks = _tokens(seq=CFG.seq_len + 1)
+    loss0, _ = model.train_step(CFG, flat, toks)
+    for _ in range(5):
+        _, grad = model.train_step(CFG, flat, toks)
+        flat = flat - 0.5 * grad
+    loss1, _ = model.train_step(CFG, flat, toks)
+    assert float(loss1) < float(loss0)
+
+
+@pytest.mark.parametrize("name", ["tiny", "small", "e2e"])
+def test_all_configs_have_valid_layouts(name):
+    cfg = model.CONFIGS[name]
+    entries, total = model.param_layout(cfg)
+    assert total > 0
+    assert cfg.d_model % cfg.n_heads == 0
+    # tied head: no separate lm_head entry
+    assert not any(n == "lm_head" for n, _, _ in entries)

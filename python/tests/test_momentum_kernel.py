@@ -1,0 +1,64 @@
+"""L1 fused momentum kernel vs the oracle — paper Eq. (8)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import momentum as mo
+from compile.kernels import ref
+
+
+def _vecs(d, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(d).astype(np.float32) for _ in range(3))
+
+
+@given(
+    d=st.integers(1, 5000),
+    block=st.sampled_from([1, 64, 1000, 65536]),
+    eta=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.999),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_momentum_matches_ref(d, block, eta, mu, seed):
+    x, m, g = _vecs(d, seed)
+    xo, mo_ = mo.momentum_update(
+        jnp.array(x), jnp.array(m), jnp.array(g),
+        jnp.array([eta], np.float32), jnp.array([mu], np.float32),
+        block=block,
+    )
+    xr, mr = ref.momentum_ref(x, m, g, np.float32(eta), np.float32(mu))
+    np.testing.assert_allclose(np.asarray(xo), np.asarray(xr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(mo_), np.asarray(mr), rtol=1e-5, atol=1e-5)
+
+
+def test_momentum_zero_mu_is_plain_sgd():
+    """mu=0 must reduce Eq. (8) to vanilla SGD: x' = x - eta*g, m' = g."""
+    x, m, g = _vecs(257, 7)
+    xo, mn = mo.momentum_update(
+        jnp.array(x), jnp.array(m), jnp.array(g),
+        jnp.array([0.5], np.float32), jnp.array([0.0], np.float32))
+    np.testing.assert_allclose(np.asarray(mn), g, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(xo), x - 0.5 * g, rtol=1e-5, atol=1e-6)
+
+
+def test_momentum_accumulates_geometric_series():
+    """t steps with constant g: m_t = g * (1-mu^t)/(1-mu) (Lemma 3 setup)."""
+    d, mu, eta, steps = 64, 0.9, 0.01, 20
+    g = np.ones(d, np.float32)
+    x = np.zeros(d, np.float32)
+    m = np.zeros(d, np.float32)
+    for _ in range(steps):
+        xo, mn = mo.momentum_update(
+            jnp.array(x), jnp.array(m), jnp.array(g),
+            jnp.array([eta], np.float32), jnp.array([mu], np.float32))
+        x, m = np.asarray(xo), np.asarray(mn)
+    expect = (1 - mu**steps) / (1 - mu)
+    np.testing.assert_allclose(m, expect, rtol=1e-4)
+    # and the Lemma 3 bound ||m||^2 <= G^2/(1-mu)^2 with G = ||g||:
+    assert np.linalg.norm(m) <= np.linalg.norm(g) / (1 - mu) + 1e-4
+
+
+def test_hbm_traffic_is_minimal():
+    d = 1_000_000
+    assert mo.hbm_traffic_bytes(d) == 5 * 4 * d

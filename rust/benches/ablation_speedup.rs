@@ -1,0 +1,83 @@
+//! **Corollary 1/2 ablation** — linear speedup in the number of workers.
+//!
+//! The theorems say: with η = O(√(K/T)) and p = O(T^{1/4}/K^τ), τ > 3/4,
+//! the rate is O(1/√(KT)) — K workers are K times as fast. On the
+//! noiseless-optimum quadratic (f* = 0) we measure, per K ∈ {1,2,4,8,16}:
+//!
+//!   * the stationary loss floor at fixed η (Theorem 1's ησ²L/(1-μ)K
+//!     terms => floor ∝ 1/K), and
+//!   * iterations to reach a fixed loss under the Corollary 1 η(K)
+//!     schedule (=> steps ∝ 1/K).
+//!
+//! Run with `cargo bench --bench ablation_speedup`.
+
+mod common;
+
+use pdsgdm::config::WorkloadConfig;
+use pdsgdm::coordinator::Experiment;
+use pdsgdm::optim::LrSchedule;
+
+fn main() {
+    let ks = [1usize, 2, 4, 8, 16];
+    let steps = 3000u64;
+
+    println!("# ablation_speedup: stationary floor vs K (fixed eta)");
+    println!("k,floor_loss,floor_x_k,steps_to_0.2,comm_mb");
+    let mut floors = Vec::new();
+    let mut rows = Vec::new();
+    for &k in &ks {
+        let mut c = common::paper_config(steps, "quadratic");
+        c.algorithm = "pd-sgdm".into();
+        c.workers = k;
+        c.eval_every = 50;
+        c.workload = WorkloadConfig::Quadratic { dim: 64, heterogeneity: 0.0, noise: 2.0 };
+        c.hyper.lr = LrSchedule::Constant { eta: 0.02 };
+        c.hyper.period = 4;
+        let mut exp = Experiment::build(c).unwrap();
+        let trace = exp.run(false);
+        let tail: Vec<f64> = trace
+            .points
+            .iter()
+            .filter(|p| p.step >= steps / 2)
+            .map(|p| p.loss)
+            .collect();
+        let floor = tail.iter().sum::<f64>() / tail.len() as f64;
+        let t_hit = trace
+            .steps_to_loss(0.2)
+            .map(|t| t.to_string())
+            .unwrap_or_else(|| "never".into());
+        println!(
+            "{k},{floor:.5},{:.4},{t_hit},{:.2}",
+            floor * k as f64,
+            trace.total_comm_mb()
+        );
+        rows.push((k, floor));
+        floors.push(floor * k as f64);
+    }
+    // linear speedup check: floor * K should be ~constant
+    let fmax = floors.iter().cloned().fold(f64::MIN, f64::max);
+    let fmin = floors.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "\ncheck: floor*K constancy ratio max/min = {:.2} (linear speedup <= ~2.0)  {}",
+        fmax / fmin,
+        if fmax / fmin <= 2.0 { "OK" } else { "MISMATCH" }
+    );
+
+    // tau sweep: p = T^{1/4}/K^tau — Remark 1 says tau > 3/4 keeps the
+    // linear-speedup term dominant; small tau lets the topology term bite.
+    println!("\n# ablation_speedup: Remark 1 tau sweep (K=8)");
+    println!("tau,p,final_loss,comm_mb");
+    let t_total = 3000u64;
+    for tau in [0.25f64, 0.5, 0.75, 1.0] {
+        let p = ((t_total as f64).powf(0.25) / (8f64).powf(tau)).round().max(1.0) as u64;
+        let mut c = common::paper_config(t_total, "quadratic");
+        c.algorithm = "pd-sgdm".into();
+        c.workers = 8;
+        c.workload = WorkloadConfig::Quadratic { dim: 64, heterogeneity: 1.0, noise: 0.5 };
+        c.hyper.lr = LrSchedule::Corollary1 { eta0: 1.0, k: 8, total_steps: t_total };
+        c.hyper.period = p;
+        let mut exp = Experiment::build(c).unwrap();
+        let trace = exp.run(false);
+        println!("{tau},{p},{:.5},{:.2}", trace.final_loss(), trace.total_comm_mb());
+    }
+}

@@ -1,0 +1,61 @@
+//! Shared helpers for the figure benches: paper-style configs and the
+//! CSV/console reporting contract (every bench prints the series the
+//! corresponding paper figure plots, then writes it to bench_out/).
+
+use pdsgdm::algorithms::Hyper;
+use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
+use pdsgdm::coordinator::Experiment;
+use pdsgdm::metrics::{self, Trace};
+use pdsgdm::optim::LrSchedule;
+
+/// The paper's §5.1 skeleton scaled to this testbed: K=8 ring, mu=0.9,
+/// weight decay 1e-4, step-decay LR (x0.1 at 50%/75%), batch 16 — with
+/// the MLP-on-blobs CIFAR-10 proxy ("resnet20 stand-in") or the logistic
+/// ("resnet50 stand-in", convex => smoother curves like ImageNet's).
+pub fn paper_config(steps: u64, workload: &str) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.workers = 8;
+    c.steps = steps;
+    c.eval_every = (steps / 30).max(1);
+    c.seed = 2020;
+    c.workload = match workload {
+        "mlp" => WorkloadConfig::Mlp { n: 4000, dim: 32, classes: 10, hidden: 64, batch: 16 },
+        "logistic" => WorkloadConfig::Logistic { n: 4000, dim: 64, classes: 10, batch: 16, l2: 1e-4 },
+        "quadratic" => WorkloadConfig::Quadratic { dim: 64, heterogeneity: 1.0, noise: 0.5 },
+        other => panic!("unknown workload {other}"),
+    };
+    c.hyper = Hyper {
+        lr: LrSchedule::paper_cifar(0.1, steps),
+        mu: 0.9,
+        weight_decay: 1e-4,
+        period: 4,
+        gamma: 0.4,
+    };
+    c
+}
+
+/// Run one configured experiment and relabel its trace.
+pub fn run_labeled(cfg: ExperimentConfig, label: &str) -> Trace {
+    let mut exp = match Experiment::build(cfg) {
+        Ok(e) => e,
+        Err(e) => panic!("build {label}: {e}"),
+    };
+    let mut trace = exp.run(false);
+    trace.label = label.to_string();
+    trace
+}
+
+/// Print the full series as CSV to stdout (the figure's data), plus the
+/// summary table, and persist to bench_out/<name>.csv.
+pub fn report(name: &str, traces: &[Trace]) {
+    println!("# {name}: series (CSV)");
+    println!("{}", Trace::csv_header());
+    for t in traces {
+        print!("{}", t.to_csv_rows());
+    }
+    println!("\n# {name}: summary");
+    print!("{}", metrics::summary_table(traces));
+    let path = format!("bench_out/{name}.csv");
+    metrics::write_csv(std::path::Path::new(&path), traces).expect("write csv");
+    println!("# -> {path}\n");
+}

@@ -1,0 +1,47 @@
+//! **Figure 1** — convergence & generalization of PD-SGDM.
+//!
+//! Paper: training loss vs iterations (a: ResNet20/CIFAR-10,
+//! b: ResNet50/ImageNet) and test accuracy vs epochs (c, d), comparing
+//! PD-SGDM with p ∈ {4, 8, 16} against centralized momentum SGD
+//! (C-SGDM). Expected shape (paper's claim): all four curves converge to
+//! ~the same loss and final accuracy — periodic communication is free.
+//!
+//! Here: (a, c) on the MLP proxy, (b, d) on the logistic proxy
+//! (DESIGN.md §2 substitution). Run with `cargo bench --bench
+//! fig1_convergence`.
+
+mod common;
+
+fn main() {
+    let steps = 2000;
+    for (panel, workload) in [("fig1a_c", "mlp"), ("fig1b_d", "logistic")] {
+        let mut traces = Vec::new();
+
+        let mut c = common::paper_config(steps, workload);
+        c.algorithm = "c-sgdm".into();
+        traces.push(common::run_labeled(c, "c-sgdm"));
+
+        for p in [4u64, 8, 16] {
+            let mut c = common::paper_config(steps, workload);
+            c.algorithm = "pd-sgdm".into();
+            c.hyper.period = p;
+            traces.push(common::run_labeled(c, &format!("pd-sgdm(p={p})")));
+        }
+        common::report(panel, &traces);
+
+        // The figure's claim, asserted: every PD-SGDM curve lands within
+        // a small band of C-SGDM on both loss and accuracy.
+        let base_loss = traces[0].final_loss();
+        let base_acc = traces[0].final_accuracy();
+        for t in &traces[1..] {
+            let dl = (t.final_loss() - base_loss).abs();
+            let da = (t.final_accuracy() - base_acc).abs();
+            println!(
+                "check {panel} {}: |Δloss| = {dl:.4} (≤0.25), |Δacc| = {da:.4} (≤0.08)  {}",
+                t.label,
+                if dl <= 0.25 && da <= 0.08 { "OK" } else { "MISMATCH" }
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,63 @@
+//! **Figure 2** — accuracy vs communication cost (MB).
+//!
+//! Paper: (a, b) PD-SGDM with p ∈ {4, 8, 16}: larger p reaches the same
+//! accuracy with proportionally less traffic. (c, d) CPD-SGDM (sign, p ∈
+//! {4, 8, 16}) vs PD-SGDM(p=16): compression wins by a further ~32x per
+//! round, so CPD-SGDM dominates even the cheapest full-precision run.
+//!
+//! The x-axis here is the byte-exact wire accounting of comm::Network
+//! (compressed payloads use each operator's true codec size). Run with
+//! `cargo bench --bench fig2_comm_cost`.
+
+mod common;
+
+fn main() {
+    let steps = 2000;
+
+    // (a, b): PD-SGDM accuracy-vs-MB for p in {4, 8, 16}.
+    for (panel, workload) in [("fig2a", "mlp"), ("fig2b", "logistic")] {
+        let mut traces = Vec::new();
+        for p in [4u64, 8, 16] {
+            let mut c = common::paper_config(steps, workload);
+            c.algorithm = "pd-sgdm".into();
+            c.hyper.period = p;
+            traces.push(common::run_labeled(c, &format!("pd-sgdm(p={p})")));
+        }
+        common::report(panel, &traces);
+        // claim: total MB halves as p doubles, accuracy unchanged
+        let mb: Vec<f64> = traces.iter().map(|t| t.total_comm_mb()).collect();
+        println!(
+            "check {panel}: MB(p=4)/MB(p=8) = {:.2} (≈2), MB(p=8)/MB(p=16) = {:.2} (≈2)\n",
+            mb[0] / mb[1],
+            mb[1] / mb[2]
+        );
+    }
+
+    // (c, d): CPD-SGDM(sign) vs the cheapest full-precision PD-SGDM(p=16).
+    for (panel, workload) in [("fig2c", "mlp"), ("fig2d", "logistic")] {
+        let mut traces = Vec::new();
+        let mut c = common::paper_config(steps, workload);
+        c.algorithm = "pd-sgdm".into();
+        c.hyper.period = 16;
+        traces.push(common::run_labeled(c, "pd-sgdm(p=16)"));
+        for p in [4u64, 8, 16] {
+            let mut c = common::paper_config(steps, workload);
+            c.algorithm = "cpd-sgdm".into();
+            c.compressor = Some("sign".into());
+            c.hyper.period = p;
+            traces.push(common::run_labeled(c, &format!("cpd-sgdm(p={p},sign)")));
+        }
+        common::report(panel, &traces);
+        let full = traces[0].total_comm_mb();
+        for t in &traces[1..] {
+            println!(
+                "check {panel} {}: {:.2} MB vs pd-sgdm(p=16) {full:.2} MB -> {:.1}x less, acc Δ = {:+.4}",
+                t.label,
+                t.total_comm_mb(),
+                full / t.total_comm_mb(),
+                t.final_accuracy() - traces[0].final_accuracy()
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,133 @@
+//! **Hot-path microbenchmarks** — the L3 kernels EXPERIMENTS.md §Perf
+//! tracks: momentum update, gossip mixing, and every compression
+//! operator, at the e2e model size (d = 3.45M) and a 16M "GPT-2-small
+//! slice" size. Also times one XLA train_step / momentum / mix artifact
+//! execution when artifacts are present, so the L3-vs-L2 cost split is
+//! visible.
+//!
+//! Run with `cargo bench --bench hotpath`.
+
+use std::time::Duration;
+
+use pdsgdm::benchlib::{bench, black_box, report};
+use pdsgdm::comm::Network;
+use pdsgdm::compress::{Compressor, Identity, Qsgd, RandK, Sign, TopK};
+use pdsgdm::optim::MomentumState;
+use pdsgdm::rng::Xoshiro256;
+use pdsgdm::topology::{mixing_matrix, Topology, Weighting};
+
+const BUDGET: Duration = Duration::from_millis(400);
+
+fn bench_momentum(d: usize) {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut x = rng.normal_vec(d, 1.0);
+    let g = rng.normal_vec(d, 1.0);
+    let mut st = MomentumState::new(d, 0.9, 1e-4);
+    let stats = bench(3, BUDGET, || {
+        st.step(&mut x, &g, 0.01);
+        black_box(x[0]);
+    });
+    report(
+        &format!("momentum_step d={d}"),
+        &stats,
+        Some((d as f64, "param")),
+    );
+}
+
+fn bench_gossip(k: usize, d: usize) {
+    let g = Topology::Ring.build(k, 0);
+    let w = mixing_matrix(&g, Weighting::UniformDegree);
+    let gossip = pdsgdm::algorithms::GossipState::new(w);
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let mut xs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+    let mut net = Network::new(&g);
+    let stats = bench(2, BUDGET, || {
+        black_box(gossip.mix(&mut xs, &mut net));
+    });
+    report(
+        &format!("gossip_mix K={k} d={d}"),
+        &stats,
+        Some(((k * d) as f64, "param")),
+    );
+}
+
+fn bench_compressors(d: usize) {
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let x = rng.normal_vec(d, 1.0);
+    let ops: Vec<(&str, Box<dyn Compressor>)> = vec![
+        ("sign", Box::new(Sign)),
+        ("top0.01", Box::new(TopK { ratio: 0.01 })),
+        ("rand0.01", Box::new(RandK { ratio: 0.01 })),
+        ("qsgd4", Box::new(Qsgd { levels: 4 })),
+        ("identity", Box::new(Identity)),
+    ];
+    for (name, op) in ops {
+        let mut r = rng.fork(7);
+        let stats = bench(2, BUDGET, || {
+            black_box(op.compress(&x, &mut r).wire_bytes);
+        });
+        report(
+            &format!("compress/{name} d={d}"),
+            &stats,
+            Some((d as f64, "elem")),
+        );
+    }
+}
+
+fn bench_xla_artifacts() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("tiny.meta.json").exists() {
+        println!("(skipping XLA artifact benches: run `make artifacts`)");
+        return;
+    }
+    let rt = pdsgdm::runtime::Runtime::new(dir).expect("runtime");
+    for model in ["tiny", "e2e"] {
+        let Ok(step) = rt.train_step(model) else {
+            continue;
+        };
+        let m = step.manifest.clone();
+        let params = m.init_params(1);
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let tokens: Vec<i32> = (0..m.batch * (m.seq_len + 1))
+            .map(|_| rng.below(m.vocab) as i32)
+            .collect();
+        let stats = bench(1, Duration::from_millis(if m.d > 1_000_000 { 100 } else { 400 }), || {
+            black_box(step.run(&params, &tokens).expect("exec").0);
+        });
+        let flops = 6.0 * m.d as f64 * (m.batch * m.seq_len) as f64;
+        report(
+            &format!("xla_train_step model={model} d={}", m.d),
+            &stats,
+            Some((flops, "flop")),
+        );
+
+        let mstep = rt.momentum_step(model).expect("momentum");
+        let mut r2 = Xoshiro256::seed_from_u64(5);
+        let (x, mm, g) = (
+            r2.normal_vec(m.d, 1.0),
+            r2.normal_vec(m.d, 1.0),
+            r2.normal_vec(m.d, 1.0),
+        );
+        let stats = bench(1, BUDGET, || {
+            black_box(mstep.run(&x, &mm, &g, 0.01, 0.9).expect("exec").0[0]);
+        });
+        report(
+            &format!("xla_momentum model={model} d={}", m.d),
+            &stats,
+            Some((m.d as f64, "param")),
+        );
+    }
+}
+
+fn main() {
+    println!("# hotpath microbenchmarks (median over repeated runs)\n");
+    for d in [3_454_464usize, 16_000_000] {
+        bench_momentum(d);
+    }
+    for (k, d) in [(8usize, 3_454_464usize), (16, 1_000_000)] {
+        bench_gossip(k, d);
+    }
+    bench_compressors(3_454_464);
+    println!();
+    bench_xla_artifacts();
+}

@@ -1,0 +1,530 @@
+//! Baseline algorithms the paper compares against (or that its related
+//! work section positions PD-SGDM/CPD-SGDM relative to). Implemented from
+//! their original papers — no stubs — so the figure benches can reproduce
+//! "who wins by how much" faithfully.
+
+use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
+use crate::comm::Network;
+use crate::compress::Compressor;
+use crate::grad::GradientSource;
+use crate::linalg::{self, Mat};
+use crate::optim::MomentumState;
+use crate::rng::Xoshiro256;
+
+// ---------------------------------------------------------------------------
+// D-SGD (Lian et al. 2017): plain decentralized SGD, gossip every step.
+// ---------------------------------------------------------------------------
+
+pub struct DSgd {
+    hyper: Hyper,
+    xs: Vec<Vec<f32>>,
+    gossip: GossipState,
+}
+
+impl DSgd {
+    pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper) -> Self {
+        assert_eq!(w.rows, k);
+        Self { xs: vec![x0; k], gossip: GossipState::new(w), hyper }
+    }
+}
+
+impl Algorithm for DSgd {
+    fn name(&self) -> String {
+        "d-sgd".into()
+    }
+
+    fn k(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
+        let eta = self.hyper.lr.eta(t);
+        let mut loss_sum = 0.0;
+        for (k, x) in self.xs.iter_mut().enumerate() {
+            let (loss, g) = source.grad(k, x);
+            loss_sum += loss;
+            linalg::axpy(-eta, &g, x);
+        }
+        let bytes = self.gossip.mix(&mut self.xs, net);
+        StepStats { mean_loss: loss_sum / self.k() as f64, communicated: true, bytes }
+    }
+
+    fn params(&self, k: usize) -> &[f32] {
+        &self.xs[k]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PD-SGD (Li et al. 2019): local SGD + periodic gossip, no momentum.
+// ---------------------------------------------------------------------------
+
+pub struct PdSgd {
+    hyper: Hyper,
+    xs: Vec<Vec<f32>>,
+    gossip: GossipState,
+}
+
+impl PdSgd {
+    pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper) -> Self {
+        assert_eq!(w.rows, k);
+        Self { xs: vec![x0; k], gossip: GossipState::new(w), hyper }
+    }
+}
+
+impl Algorithm for PdSgd {
+    fn name(&self) -> String {
+        format!("pd-sgd(p={})", self.hyper.period)
+    }
+
+    fn k(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
+        let eta = self.hyper.lr.eta(t);
+        let mut loss_sum = 0.0;
+        for (k, x) in self.xs.iter_mut().enumerate() {
+            let (loss, g) = source.grad(k, x);
+            loss_sum += loss;
+            linalg::axpy(-eta, &g, x);
+        }
+        let mut stats = StepStats { mean_loss: loss_sum / self.k() as f64, ..Default::default() };
+        if (t + 1) % self.hyper.period == 0 {
+            stats.bytes = self.gossip.mix(&mut self.xs, net);
+            stats.communicated = true;
+        }
+        stats
+    }
+
+    fn params(&self, k: usize) -> &[f32] {
+        &self.xs[k]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D-SGDM (Yu et al. 2019): decentralized momentum SGD, gossip every step.
+// With `gossip_momentum = true` the momentum buffers are mixed too —
+// the double-payload variant the paper's Related Work criticizes.
+// ---------------------------------------------------------------------------
+
+pub struct DSgdm {
+    hyper: Hyper,
+    xs: Vec<Vec<f32>>,
+    moms: Vec<MomentumState>,
+    gossip: GossipState,
+    gossip_momentum: bool,
+}
+
+impl DSgdm {
+    pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper, gossip_momentum: bool) -> Self {
+        assert_eq!(w.rows, k);
+        let d = x0.len();
+        Self {
+            xs: vec![x0; k],
+            moms: (0..k)
+                .map(|_| MomentumState::new(d, hyper.mu, hyper.weight_decay))
+                .collect(),
+            gossip: GossipState::new(w),
+            hyper,
+            gossip_momentum,
+        }
+    }
+}
+
+impl Algorithm for DSgdm {
+    fn name(&self) -> String {
+        if self.gossip_momentum { "d-sgdm+m".into() } else { "d-sgdm".into() }
+    }
+
+    fn k(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
+        let eta = self.hyper.lr.eta(t);
+        let mut loss_sum = 0.0;
+        for (k, (x, mom)) in self.xs.iter_mut().zip(self.moms.iter_mut()).enumerate() {
+            let (loss, g) = source.grad(k, x);
+            loss_sum += loss;
+            mom.step(x, &g, eta);
+        }
+        let mut bytes = self.gossip.mix(&mut self.xs, net);
+        if self.gossip_momentum {
+            let mut ms: Vec<Vec<f32>> = self.moms.iter().map(|m| m.m.clone()).collect();
+            bytes += self.gossip.mix(&mut ms, net);
+            for (mom, m) in self.moms.iter_mut().zip(ms) {
+                mom.m = m;
+            }
+        }
+        StepStats { mean_loss: loss_sum / self.k() as f64, communicated: true, bytes }
+    }
+
+    fn params(&self, k: usize) -> &[f32] {
+        &self.xs[k]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// C-SGDM: centralized momentum SGD — the Figure 1 comparator. All-reduce
+// the average gradient every step, keep one global iterate. Byte
+// accounting: parameter-server model, every worker uploads its gradient
+// and downloads the average (2 * 4d bytes per worker per step).
+// ---------------------------------------------------------------------------
+
+pub struct CSgdm {
+    hyper: Hyper,
+    k: usize,
+    x: Vec<f32>,
+    mom: MomentumState,
+}
+
+impl CSgdm {
+    pub fn new(k: usize, x0: Vec<f32>, hyper: Hyper) -> Self {
+        let d = x0.len();
+        Self { k, x: x0, mom: MomentumState::new(d, hyper.mu, hyper.weight_decay), hyper }
+    }
+}
+
+impl Algorithm for CSgdm {
+    fn name(&self) -> String {
+        "c-sgdm".into()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn step(&mut self, t: u64, source: &mut dyn GradientSource, _net: &mut Network) -> StepStats {
+        let eta = self.hyper.lr.eta(t);
+        let mut loss_sum = 0.0;
+        let mut gsum = vec![0.0f32; self.x.len()];
+        for k in 0..self.k {
+            let (loss, g) = source.grad(k, &self.x);
+            loss_sum += loss;
+            linalg::axpy(1.0, &g, &mut gsum);
+        }
+        linalg::scale(1.0 / self.k as f32, &mut gsum);
+        self.mom.step(&mut self.x, &gsum, eta);
+        StepStats {
+            mean_loss: loss_sum / self.k as f64,
+            communicated: true,
+            bytes: (2 * 4 * self.x.len() * self.k) as u64,
+        }
+    }
+
+    fn params(&self, _k: usize) -> &[f32] {
+        &self.x
+    }
+
+    fn avg_params(&self) -> Vec<f32> {
+        self.x.clone()
+    }
+
+    fn consensus_error(&self) -> f64 {
+        0.0 // single global iterate by construction
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CHOCO-SGD (Koloskova et al. 2019): compressed gossip + plain SGD,
+// communication every step. Exactly CPD-SGDM's comm protocol with p=1
+// and mu=0 — implemented by embedding a CpdSgdm configured that way, so
+// the two provably share one code path.
+// ---------------------------------------------------------------------------
+
+pub struct ChocoSgd {
+    inner: super::CpdSgdm,
+}
+
+impl ChocoSgd {
+    pub fn new(
+        k: usize,
+        x0: Vec<f32>,
+        w: Mat,
+        hyper: Hyper,
+        compressor: Box<dyn Compressor>,
+        seed: u64,
+    ) -> Self {
+        let choco_hyper = Hyper { mu: 0.0, period: 1, ..hyper };
+        Self { inner: super::CpdSgdm::new(k, x0, w, choco_hyper, compressor, seed) }
+    }
+}
+
+impl Algorithm for ChocoSgd {
+    fn name(&self) -> String {
+        format!("choco-sgd[{}]", self.inner.name())
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
+        self.inner.step(t, source, net)
+    }
+
+    fn params(&self, k: usize) -> &[f32] {
+        self.inner.params(k)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeepSqueeze (Tang et al. 2019): error-feedback compression — each
+// worker compresses its iterate plus accumulated compression error, and
+// the *compressed* values are gossip-averaged:
+//
+//     v_k = x_{t+1/2}^(k) + e_k
+//     c_k = Q(v_k);  e_k = v_k − c_k
+//     x_{t+1}^(k) = x_{t+1/2}^(k) + Σ_j w_kj c_j − c_k
+//
+// (the last line applies the mixing to compressed values while keeping
+// the local residual, per the DeepSqueeze recursion).
+// ---------------------------------------------------------------------------
+
+pub struct DeepSqueeze {
+    hyper: Hyper,
+    xs: Vec<Vec<f32>>,
+    errs: Vec<Vec<f32>>,
+    gossip: GossipState,
+    compressor: Box<dyn Compressor>,
+    rng: Xoshiro256,
+}
+
+impl DeepSqueeze {
+    pub fn new(
+        k: usize,
+        x0: Vec<f32>,
+        w: Mat,
+        hyper: Hyper,
+        compressor: Box<dyn Compressor>,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(w.rows, k);
+        let d = x0.len();
+        Self {
+            xs: vec![x0; k],
+            errs: vec![vec![0.0; d]; k],
+            gossip: GossipState::new(w),
+            compressor,
+            hyper,
+            rng: Xoshiro256::seed_from_u64(seed),
+        }
+    }
+
+    fn comm_round(&mut self, net: &mut Network) -> u64 {
+        let k = self.k();
+        let w = &self.gossip.w;
+        let before = net.total_bytes;
+        let mut cs: Vec<Vec<f32>> = Vec::with_capacity(k);
+        for i in 0..k {
+            let v: Vec<f32> = self.xs[i]
+                .iter()
+                .zip(&self.errs[i])
+                .map(|(&x, &e)| x + e)
+                .collect();
+            let c = self.compressor.compress(&v, &mut self.rng);
+            // e_k = v - c_k
+            for ((e, &vv), &cc) in self.errs[i].iter_mut().zip(&v).zip(&c.dense) {
+                *e = vv - cc;
+            }
+            net.broadcast(i, &c.dense, c.wire_bytes);
+            cs.push(c.dense);
+        }
+        for i in 0..k {
+            let _ = net.recv_all(i);
+        }
+        for i in 0..k {
+            // x_i += Σ_j w_ij c_j − c_i
+            let mut mixc = vec![0.0f32; self.xs[i].len()];
+            for j in 0..k {
+                let wij = w[(i, j)] as f32;
+                if wij != 0.0 {
+                    linalg::axpy(wij, &cs[j], &mut mixc);
+                }
+            }
+            linalg::axpy(-1.0, &cs[i], &mut mixc);
+            linalg::axpy(1.0, &mixc, &mut self.xs[i]);
+        }
+        net.end_round();
+        net.total_bytes - before
+    }
+}
+
+impl Algorithm for DeepSqueeze {
+    fn name(&self) -> String {
+        format!("deepsqueeze(Q={})", self.compressor.name())
+    }
+
+    fn k(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
+        let eta = self.hyper.lr.eta(t);
+        let mut loss_sum = 0.0;
+        for (k, x) in self.xs.iter_mut().enumerate() {
+            let (loss, g) = source.grad(k, x);
+            loss_sum += loss;
+            linalg::axpy(-eta, &g, x);
+        }
+        let mut stats = StepStats { mean_loss: loss_sum / self.k() as f64, ..Default::default() };
+        if (t + 1) % self.hyper.period == 0 {
+            stats.bytes = self.comm_round(net);
+            stats.communicated = true;
+        }
+        stats
+    }
+
+    fn params(&self, k: usize) -> &[f32] {
+        &self.xs[k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Sign;
+    use crate::grad::{GradientSource, Quadratic};
+    use crate::optim::LrSchedule;
+    use crate::topology::{mixing_matrix, Topology, Weighting};
+
+    fn ring(k: usize) -> (Mat, Network) {
+        let g = Topology::Ring.build(k, 0);
+        (mixing_matrix(&g, Weighting::UniformDegree), Network::new(&g))
+    }
+
+    fn hyper(eta: f32, p: u64) -> Hyper {
+        Hyper {
+            lr: LrSchedule::Constant { eta },
+            mu: 0.9,
+            weight_decay: 0.0,
+            period: p,
+            gamma: 0.4,
+        }
+    }
+
+    fn final_gap(algo: &mut dyn Algorithm, seed: u64, steps: u64) -> f64 {
+        let k = algo.k();
+        let mut src = Quadratic::new(k, 12, 1.0, 0.05, seed);
+        let opt = src.optimum();
+        let g = Topology::Ring.build(k, 0);
+        let mut net = Network::new(&g);
+        for t in 0..steps {
+            algo.step(t, &mut src, &mut net);
+        }
+        crate::linalg::dist(&algo.avg_params(), &opt)
+    }
+
+    #[test]
+    fn all_baselines_converge_on_quadratic() {
+        let k = 8;
+        let x0 = Quadratic::new(k, 12, 1.0, 0.05, 77).init(1);
+        let (w, _) = ring(k);
+        let cases: Vec<(Box<dyn Algorithm>, f64)> = vec![
+            (Box::new(DSgd::new(k, x0.clone(), w.clone(), hyper(0.1, 1))), 0.3),
+            (Box::new(PdSgd::new(k, x0.clone(), w.clone(), hyper(0.1, 4))), 0.3),
+            (Box::new(DSgdm::new(k, x0.clone(), w.clone(), hyper(0.02, 1), false)), 0.3),
+            (Box::new(DSgdm::new(k, x0.clone(), w.clone(), hyper(0.02, 1), true)), 0.3),
+            (Box::new(CSgdm::new(k, x0.clone(), hyper(0.02, 1))), 0.3),
+            (Box::new(ChocoSgd::new(k, x0.clone(), w.clone(), hyper(0.1, 1), Box::new(Sign), 1)), 0.4),
+            (Box::new(DeepSqueeze::new(k, x0.clone(), w.clone(), hyper(0.05, 1), Box::new(Sign), 2)), 0.5),
+        ];
+        for (mut algo, tol) in cases {
+            let name = algo.name();
+            let gap = final_gap(algo.as_mut(), 77, 2500);
+            assert!(gap < tol, "{name}: gap {gap} >= {tol}");
+        }
+    }
+
+    #[test]
+    fn csgdm_workers_share_one_iterate() {
+        let k = 4;
+        let mut src = Quadratic::new(k, 6, 1.0, 0.1, 5);
+        let g = Topology::Ring.build(k, 0);
+        let mut net = Network::new(&g);
+        let mut algo = CSgdm::new(k, src.init(0), hyper(0.05, 1));
+        algo.step(0, &mut src, &mut net);
+        assert_eq!(algo.params(0), algo.params(3));
+        assert_eq!(algo.consensus_error(), 0.0);
+    }
+
+    #[test]
+    fn csgdm_bytes_scale_with_k_and_d() {
+        let mut src = Quadratic::new(4, 100, 1.0, 0.1, 6);
+        let g = Topology::Ring.build(4, 0);
+        let mut net = Network::new(&g);
+        let mut algo = CSgdm::new(4, src.init(0), hyper(0.05, 1));
+        let s = algo.step(0, &mut src, &mut net);
+        assert_eq!(s.bytes, 2 * 4 * 100 * 4);
+    }
+
+    #[test]
+    fn dsgdm_momentum_gossip_doubles_bytes() {
+        let k = 6;
+        let x0 = vec![0.0f32; 50];
+        let (w, mut net_a) = ring(k);
+        let mut src = Quadratic::new(k, 50, 1.0, 0.1, 7);
+        let mut a = DSgdm::new(k, x0.clone(), w.clone(), hyper(0.01, 1), false);
+        let sa = a.step(0, &mut src, &mut net_a);
+        let (_, mut net_b) = ring(k);
+        let mut b = DSgdm::new(k, x0, w, hyper(0.01, 1), true);
+        let sb = b.step(0, &mut src, &mut net_b);
+        assert_eq!(sb.bytes, 2 * sa.bytes, "[23]'s x+m payload is exactly 2x");
+    }
+
+    #[test]
+    fn pd_sgd_is_pd_sgdm_with_zero_momentum() {
+        // Same trajectories when mu=0 and the gradient stream is
+        // deterministic (noise=0).
+        let k = 4;
+        let x0 = vec![0.5f32; 8];
+        let (w, mut net_a) = ring(k);
+        let (w2, mut net_b) = ring(k);
+        let mut src_a = Quadratic::new(k, 8, 1.0, 0.0, 8);
+        let mut src_b = Quadratic::new(k, 8, 1.0, 0.0, 8);
+        let mut a = PdSgd::new(k, x0.clone(), w, hyper(0.05, 4));
+        let mut b = super::super::PdSgdm::new(
+            k,
+            x0,
+            w2,
+            Hyper { mu: 0.0, ..hyper(0.05, 4) },
+        );
+        for t in 0..40 {
+            a.step(t, &mut src_a, &mut net_a);
+            b.step(t, &mut src_b, &mut net_b);
+        }
+        for kk in 0..k {
+            crate::testing::assert_allclose(a.params(kk), b.params(kk), 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn dsgd_matches_pdsgd_p1() {
+        let k = 4;
+        let x0 = vec![0.1f32; 8];
+        let (w, mut net_a) = ring(k);
+        let (w2, mut net_b) = ring(k);
+        let mut src_a = Quadratic::new(k, 8, 1.0, 0.0, 9);
+        let mut src_b = Quadratic::new(k, 8, 1.0, 0.0, 9);
+        let mut a = DSgd::new(k, x0.clone(), w, hyper(0.05, 1));
+        let mut b = PdSgd::new(k, x0, w2, hyper(0.05, 1));
+        for t in 0..25 {
+            a.step(t, &mut src_a, &mut net_a);
+            b.step(t, &mut src_b, &mut net_b);
+        }
+        for kk in 0..k {
+            crate::testing::assert_allclose(a.params(kk), b.params(kk), 1e-6, 1e-7);
+        }
+    }
+
+    #[test]
+    fn deepsqueeze_error_feedback_accumulates_residual() {
+        let k = 4;
+        let (w, mut net) = ring(k);
+        let mut src = Quadratic::new(k, 16, 1.0, 0.0, 10);
+        let mut algo = DeepSqueeze::new(k, src.init(3), w, hyper(0.02, 1), Box::new(Sign), 3);
+        algo.step(0, &mut src, &mut net);
+        let err_norm: f64 = algo.errs.iter().map(|e| crate::linalg::norm(e)).sum();
+        assert!(err_norm > 0.0, "sign compression must leave a residual");
+    }
+}

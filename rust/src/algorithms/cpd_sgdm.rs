@@ -1,0 +1,368 @@
+//! **Algorithm 2 — CPD-SGDM** (the paper's communication-efficient variant).
+//!
+//! Local updates are identical to Algorithm 1; communication rounds
+//! exchange δ-contraction-compressed differences against auxiliary
+//! copies x̂ (CHOCO-style error feedback) instead of raw parameters:
+//!
+//! ```text
+//! (line 6)  x_{t+1}^(k) = x_{t+1/2}^(k) + γ Σ_j w_kj (x̂_t^(j) − x̂_t^(k))
+//! (line 7)  q_t^(k) = Q(x_{t+1}^(k) − x̂_t^(k))
+//! (line 8)  send q^(k), receive q^(j) for j ∈ N_k
+//! (line 9)  x̂_{t+1}^(j) = x̂_t^(j) + q_t^(j)
+//! ```
+//!
+//! Every worker holds x̂ copies for itself and its neighbors; because all
+//! copies of x̂^(j) receive exactly the same q^(j) stream they stay
+//! identical, so the simulator stores one canonical x̂ per worker (the
+//! standard CHOCO implementation trick) while still exchanging every
+//! q over the byte-metered network with the compressor's real wire size.
+
+use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
+use crate::comm::Network;
+use crate::compress::Compressor;
+use crate::grad::GradientSource;
+use crate::linalg::{self, Mat};
+use crate::optim::MomentumState;
+use crate::rng::Xoshiro256;
+
+pub struct CpdSgdm {
+    hyper: Hyper,
+    xs: Vec<Vec<f32>>,
+    /// Canonical auxiliary iterates x̂^(k) (shared view, see module doc).
+    hats: Vec<Vec<f32>>,
+    moms: Vec<MomentumState>,
+    gossip: GossipState,
+    compressor: Box<dyn Compressor>,
+    rng: Xoshiro256,
+}
+
+impl CpdSgdm {
+    pub fn new(
+        k: usize,
+        x0: Vec<f32>,
+        w: Mat,
+        hyper: Hyper,
+        compressor: Box<dyn Compressor>,
+        seed: u64,
+    ) -> Self {
+        assert!(hyper.gamma > 0.0, "consensus step size must be positive");
+        assert_eq!(w.rows, k);
+        let d = x0.len();
+        Self {
+            xs: vec![x0; k],
+            hats: vec![vec![0.0; d]; k], // x̂_0 = 0 per CHOCO convention
+            moms: (0..k)
+                .map(|_| MomentumState::new(d, hyper.mu, hyper.weight_decay))
+                .collect(),
+            gossip: GossipState::new(w),
+            compressor,
+            hyper,
+            rng: Xoshiro256::seed_from_u64(seed),
+        }
+    }
+
+    /// ||x^(k) − x̂^(k)||² averaged over workers — the compression residual
+    /// tracked by the Theorem 2 analysis (Lemma 6's second term).
+    pub fn hat_residual(&self) -> f64 {
+        self.xs
+            .iter()
+            .zip(&self.hats)
+            .map(|(x, h)| {
+                let e = linalg::dist(x, h);
+                e * e
+            })
+            .sum::<f64>()
+            / self.k() as f64
+    }
+
+    fn comm_round(&mut self, net: &mut Network) -> u64 {
+        let k = self.k();
+        let w = &self.gossip.w;
+        let gamma = self.hyper.gamma;
+        let before = net.total_bytes;
+
+        // Line 6: consensus correction from the (shared) auxiliary state.
+        for i in 0..k {
+            // Σ_j w_ij (x̂_j − x̂_i); w row sums to 1 so this equals
+            // Σ_j w_ij x̂_j − x̂_i.
+            let mut corr = vec![0.0f32; self.xs[i].len()];
+            for j in 0..k {
+                let wij = w[(i, j)] as f32;
+                if wij != 0.0 {
+                    linalg::axpy(wij, &self.hats[j], &mut corr);
+                }
+            }
+            linalg::axpy(-1.0, &self.hats[i], &mut corr);
+            linalg::axpy(gamma, &corr, &mut self.xs[i]);
+        }
+
+        // Line 7-8: compress the difference and exchange it. The payload
+        // is the *compressed* message — its wire size comes from the
+        // operator's codec, which is where the Figure 2 savings appear.
+        let mut qs: Vec<Vec<f32>> = Vec::with_capacity(k);
+        for i in 0..k {
+            let diff: Vec<f32> = self.xs[i]
+                .iter()
+                .zip(&self.hats[i])
+                .map(|(&a, &b)| a - b)
+                .collect();
+            let q = self.compressor.compress(&diff, &mut self.rng);
+            net.broadcast(i, &q.dense, q.wire_bytes);
+            qs.push(q.dense);
+        }
+        // Drain mailboxes (receivers would apply q^(j) to their x̂^(j)
+        // copies; the canonical x̂ update below is equivalent).
+        for i in 0..k {
+            let _ = net.recv_all(i);
+        }
+        // Line 9: every copy of x̂^(j) absorbs q^(j).
+        for (hat, q) in self.hats.iter_mut().zip(&qs) {
+            linalg::axpy(1.0, q, hat);
+        }
+        net.end_round();
+        net.total_bytes - before
+    }
+}
+
+impl Algorithm for CpdSgdm {
+    fn name(&self) -> String {
+        format!(
+            "cpd-sgdm(p={},Q={},γ={})",
+            self.hyper.period,
+            self.compressor.name(),
+            self.hyper.gamma
+        )
+    }
+
+    fn k(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
+        let eta = self.hyper.lr.eta(t);
+        let mut loss_sum = 0.0;
+        // Lines 2-4: identical to Algorithm 1.
+        for (k, (x, mom)) in self.xs.iter_mut().zip(self.moms.iter_mut()).enumerate() {
+            let (loss, g) = source.grad(k, x);
+            loss_sum += loss;
+            mom.step(x, &g, eta);
+        }
+        let mut stats = StepStats {
+            mean_loss: loss_sum / self.k() as f64,
+            ..Default::default()
+        };
+        // Lines 5-13.
+        if (t + 1) % self.hyper.period == 0 {
+            stats.bytes = self.comm_round(net);
+            stats.communicated = true;
+        }
+        stats
+    }
+
+    fn params(&self, k: usize) -> &[f32] {
+        &self.xs[k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, Sign, TopK};
+    use crate::grad::Quadratic;
+    use crate::optim::LrSchedule;
+    use crate::topology::{mixing_matrix, Topology, Weighting};
+
+    fn ring(k: usize) -> (Mat, Network) {
+        let g = Topology::Ring.build(k, 0);
+        (mixing_matrix(&g, Weighting::UniformDegree), Network::new(&g))
+    }
+
+    fn hyper(eta: f32, p: u64, gamma: f32) -> Hyper {
+        Hyper {
+            lr: LrSchedule::Constant { eta },
+            mu: 0.9,
+            weight_decay: 0.0,
+            period: p,
+            gamma,
+        }
+    }
+
+    #[test]
+    fn average_iterate_evolves_like_pd_sgdm() {
+        // Eq. (44)/(45): the communication step never changes x̄, so x̄
+        // follows exactly the same recursion as Algorithm 1. With zero
+        // gradient noise and the same seed, x̄ trajectories coincide.
+        let k = 6;
+        let (w, mut net) = ring(k);
+        let (w2, mut net2) = ring(k);
+        let x0 = Quadratic::new(k, 10, 1.0, 0.0, 3).init(1);
+        let mut cpd = CpdSgdm::new(k, x0.clone(), w, hyper(0.05, 4, 0.4), Box::new(Sign), 1);
+        let mut pd = super::super::PdSgdm::new(k, x0, w2, hyper(0.05, 4, 0.4));
+        // NOTE: identical iterates also require identical gradients; on a
+        // *noiseless* quadratic grad depends only on x, but x diverges
+        // between the two algorithms after the first comm round. So we
+        // check the invariant directly instead: within one algorithm,
+        // x̄ before and after a comm round is unchanged.
+        let mut src = Quadratic::new(k, 10, 1.0, 0.0, 3);
+        for t in 0..3 {
+            cpd.step(t, &mut src, &mut net);
+            pd.step(t, &mut src, &mut net2);
+        }
+        let xbar_before = cpd.avg_params();
+        // t=3 triggers the round; isolate the comm part by zeroing lr.
+        let mut frozen = CpdSgdm::new(
+            k,
+            vec![0.0; 10],
+            ring(k).0,
+            hyper(0.0, 1, 0.4),
+            Box::new(Sign),
+            7,
+        );
+        frozen.xs = cpd.xs.clone();
+        frozen.hats = cpd.hats.clone();
+        let mut net3 = ring(k).1;
+        frozen.comm_round(&mut net3);
+        let xbar_after = frozen.avg_params();
+        crate::testing::assert_allclose(&xbar_after, &xbar_before, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn converges_near_optimum_with_sign_compression() {
+        let k = 8;
+        let mut src = Quadratic::new(k, 16, 1.0, 0.05, 5);
+        let opt = src.optimum();
+        let (w, mut net) = ring(k);
+        // paper-style step decay to cut the stochastic floor at the end
+        let lr = crate::optim::LrSchedule::StepDecay {
+            eta0: 0.02,
+            factor: 0.1,
+            milestones: vec![0.5, 0.75],
+            total_steps: 2500,
+        };
+        let h = Hyper { lr, ..hyper(0.02, 4, 0.4) };
+        let mut algo = CpdSgdm::new(k, src.init(2), w, h, Box::new(Sign), 2);
+        for t in 0..2500 {
+            algo.step(t, &mut src, &mut net);
+        }
+        let err = crate::linalg::dist(&algo.avg_params(), &opt);
+        assert!(err < 0.35, "x̄ is {err} from x*");
+    }
+
+    #[test]
+    fn converges_with_topk_compression() {
+        let k = 8;
+        let mut src = Quadratic::new(k, 16, 1.0, 0.05, 6);
+        let opt = src.optimum();
+        let (w, mut net) = ring(k);
+        let mut algo = CpdSgdm::new(
+            k,
+            src.init(3),
+            w,
+            hyper(0.02, 4, 0.3),
+            Box::new(TopK { ratio: 0.25 }),
+            3,
+        );
+        for t in 0..3000 {
+            algo.step(t, &mut src, &mut net);
+        }
+        let err = crate::linalg::dist(&algo.avg_params(), &opt);
+        assert!(err < 0.5, "x̄ is {err} from x*");
+    }
+
+    #[test]
+    fn hat_residual_shrinks_during_training() {
+        let k = 4;
+        let mut src = Quadratic::new(k, 8, 0.5, 0.0, 7);
+        let (w, mut net) = ring(k);
+        let mut algo = CpdSgdm::new(k, src.init(4), w, hyper(0.02, 2, 0.4), Box::new(Sign), 4);
+        for t in 0..100 {
+            algo.step(t, &mut src, &mut net);
+        }
+        let early = algo.hat_residual();
+        for t in 100..2000 {
+            algo.step(t, &mut src, &mut net);
+        }
+        let late = algo.hat_residual();
+        assert!(late < early, "x̂ residual should contract: {early} -> {late}");
+    }
+
+    #[test]
+    fn sign_compression_sends_far_fewer_bytes_than_full_precision() {
+        let k = 8;
+        let d = 10_000;
+        let mut src = Quadratic::new(k, d, 1.0, 0.1, 8);
+        let (w, mut net) = ring(k);
+        let mut algo = CpdSgdm::new(k, src.init(5), w, hyper(0.01, 4, 0.4), Box::new(Sign), 5);
+        for t in 0..8 {
+            algo.step(t, &mut src, &mut net);
+        }
+        let compressed = net.total_bytes;
+        // full-precision comparator over the same schedule
+        let (w2, mut net2) = ring(k);
+        let mut full = super::super::PdSgdm::new(k, src.init(5), w2, hyper(0.01, 4, 0.4));
+        for t in 0..8 {
+            full.step(t, &mut src, &mut net2);
+        }
+        let dense = net2.total_bytes;
+        assert!(
+            dense as f64 / compressed as f64 > 25.0,
+            "sign should be ~32x smaller: {dense} vs {compressed}"
+        );
+    }
+
+    #[test]
+    fn identity_compressor_with_gamma_one_matches_full_gossip_fixed_point() {
+        // With Q = identity and γ = 1, one comm round after x̂ has caught
+        // up reproduces exact W-mixing: x ← x + (W−I) x̂ = W x when x̂ = x.
+        let k = 5;
+        let (w, mut net) = ring(k);
+        let mut algo = CpdSgdm::new(
+            k,
+            vec![0.0; 4],
+            w.clone(),
+            hyper(0.0, 1, 1.0),
+            Box::new(Identity),
+            6,
+        );
+        // set distinct worker states; run one round to sync x̂ = x
+        for (i, x) in algo.xs.iter_mut().enumerate() {
+            for (c, v) in x.iter_mut().enumerate() {
+                *v = (i * 4 + c) as f32;
+            }
+        }
+        // round 1 with x̂=0: x unchanged (correction 0), x̂ <- x exactly.
+        let xs_snapshot = algo.xs.clone();
+        algo.comm_round(&mut net);
+        for (h, x) in algo.hats.iter().zip(&xs_snapshot) {
+            crate::testing::assert_allclose(h, x, 1e-6, 1e-7);
+        }
+        // round 2: x ← x + (Wx̂ − x̂) = W x.
+        let expect: Vec<Vec<f32>> = (0..k)
+            .map(|i| {
+                (0..4)
+                    .map(|c| (0..k).map(|j| w[(i, j)] as f32 * xs_snapshot[j][c]).sum())
+                    .collect()
+            })
+            .collect();
+        algo.comm_round(&mut net);
+        for (got, want) in algo.xs.iter().zip(&expect) {
+            crate::testing::assert_allclose(got, want, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn respects_period_schedule() {
+        let k = 4;
+        let mut src = Quadratic::new(k, 8, 1.0, 0.1, 9);
+        let (w, mut net) = ring(k);
+        let mut algo = CpdSgdm::new(k, src.init(6), w, hyper(0.01, 8, 0.4), Box::new(Sign), 7);
+        let stats: Vec<StepStats> = (0..24).map(|t| algo.step(t, &mut src, &mut net)).collect();
+        let comm: Vec<usize> = stats
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.communicated)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(comm, vec![7, 15, 23]);
+    }
+}

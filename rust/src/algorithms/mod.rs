@@ -1,0 +1,161 @@
+//! The paper's algorithms and their baselines.
+//!
+//! | struct | paper / reference | momentum | comm schedule | payload |
+//! |---|---|---|---|---|
+//! | [`PdSgdm`]      | **Algorithm 1** (this paper)        | yes | every p steps | full x |
+//! | [`CpdSgdm`]     | **Algorithm 2** (this paper)        | yes | every p steps | Q(x−x̂) |
+//! | [`DSgd`]        | D-SGD, Lian et al. 2017 [12]        | no  | every step    | full x |
+//! | [`PdSgd`]       | PD-SGD / local SGD, Li et al. [11]  | no  | every p steps | full x |
+//! | [`DSgdm`]       | momentum gossip, Yu et al. [23]     | yes | every step    | x (+m) |
+//! | [`CSgdm`]       | centralized momentum SGD (C-SGDM)   | yes | every step    | grad up+down |
+//! | [`ChocoSgd`]    | CHOCO-SGD, Koloskova et al. [8,9]   | no  | every step    | Q(x−x̂) |
+//! | [`DeepSqueeze`] | DeepSqueeze, Tang et al. [21]       | no  | every step    | Q(x+e) |
+//!
+//! All decentralized algorithms drive a byte-metered [`crate::comm::Network`]
+//! and may only exchange data along topology edges; every struct
+//! implements [`Algorithm`], so the drivers in [`crate::coordinator`] and
+//! every figure bench are generic over the whole table.
+
+mod baselines;
+mod cpd_sgdm;
+mod gossip;
+mod pd_sgdm;
+
+pub use baselines::{CSgdm, ChocoSgd, DSgd, DSgdm, DeepSqueeze, PdSgd};
+pub use cpd_sgdm::CpdSgdm;
+pub use gossip::GossipState;
+pub use pd_sgdm::PdSgdm;
+
+use crate::comm::Network;
+use crate::grad::GradientSource;
+
+/// Shared hyper-parameters (paper §5.1 defaults where applicable).
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    /// Learning-rate schedule (paper: 0.1 with step decay).
+    pub lr: crate::optim::LrSchedule,
+    /// Momentum coefficient mu (paper: 0.9).
+    pub mu: f32,
+    /// Weight decay (paper: 1e-4).
+    pub weight_decay: f32,
+    /// Communication period p (paper sweeps 4, 8, 16).
+    pub period: u64,
+    /// Consensus step size gamma for compressed variants
+    /// (paper: 0.4 CIFAR-10 / 0.5 ImageNet).
+    pub gamma: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Self {
+            lr: crate::optim::LrSchedule::Constant { eta: 0.1 },
+            mu: 0.9,
+            weight_decay: 0.0,
+            period: 4,
+            gamma: 0.4,
+        }
+    }
+}
+
+/// Per-step observability record returned by [`Algorithm::step`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// Mean minibatch loss across workers at this step.
+    pub mean_loss: f64,
+    /// Whether a communication round happened this step.
+    pub communicated: bool,
+    /// Wire bytes this step added (all links, all workers).
+    pub bytes: u64,
+}
+
+/// A decentralized (or centralized-baseline) training algorithm over K
+/// workers, advanced one synchronous global iteration at a time.
+pub trait Algorithm {
+    fn name(&self) -> String;
+
+    /// Number of workers.
+    fn k(&self) -> usize;
+
+    /// Execute global iteration `t`: every worker draws a stochastic
+    /// gradient at its own iterate from `source` and performs the
+    /// algorithm's local update + (scheduled) communication over `net`.
+    fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats;
+
+    /// Worker k's current iterate x_t^(k).
+    fn params(&self, k: usize) -> &[f32];
+
+    /// The averaged iterate x̄_t the paper's theorems track.
+    fn avg_params(&self) -> Vec<f32> {
+        crate::linalg::mean_of(&(0..self.k()).map(|k| self.params(k).to_vec()).collect::<Vec<_>>())
+    }
+
+    /// Consensus error Σ_k ||x_k − x̄||² (bounded by Lemma 5/6).
+    fn consensus_error(&self) -> f64 {
+        let xs: Vec<Vec<f32>> = (0..self.k()).map(|k| self.params(k).to_vec()).collect();
+        crate::linalg::consensus_error(&xs)
+    }
+}
+
+/// Construct any algorithm in the table by name — the config system and
+/// CLI route through this.
+pub fn by_name(
+    name: &str,
+    k: usize,
+    x0: Vec<f32>,
+    w: crate::linalg::Mat,
+    hyper: Hyper,
+    compressor: Option<Box<dyn crate::compress::Compressor>>,
+    seed: u64,
+) -> Option<Box<dyn Algorithm>> {
+    let comp = || compressor_or_sign(compressor_opt_clone(&compressor));
+    match name {
+        "pd-sgdm" => Some(Box::new(PdSgdm::new(k, x0, w, hyper))),
+        "cpd-sgdm" => Some(Box::new(CpdSgdm::new(k, x0, w, hyper, comp(), seed))),
+        "d-sgd" => Some(Box::new(DSgd::new(k, x0, w, hyper))),
+        "pd-sgd" => Some(Box::new(PdSgd::new(k, x0, w, hyper))),
+        "d-sgdm" => Some(Box::new(DSgdm::new(k, x0, w, hyper, false))),
+        "d-sgdm-pm" => Some(Box::new(DSgdm::new(k, x0, w, hyper, true))),
+        "c-sgdm" => Some(Box::new(CSgdm::new(k, x0, hyper))),
+        "choco-sgd" => Some(Box::new(ChocoSgd::new(k, x0, w, hyper, comp(), seed))),
+        "deepsqueeze" => Some(Box::new(DeepSqueeze::new(k, x0, w, hyper, comp(), seed))),
+        _ => None,
+    }
+}
+
+/// All algorithm names `by_name` accepts (for CLI help and sweeps).
+pub const ALL_NAMES: &[&str] = &[
+    "pd-sgdm", "cpd-sgdm", "d-sgd", "pd-sgd", "d-sgdm", "d-sgdm-pm",
+    "c-sgdm", "choco-sgd", "deepsqueeze",
+];
+
+fn compressor_opt_clone(
+    c: &Option<Box<dyn crate::compress::Compressor>>,
+) -> Option<Box<dyn crate::compress::Compressor>> {
+    // Compressors are tiny value types; re-parse by name to clone.
+    c.as_ref().and_then(|c| crate::compress::parse(&c.name()))
+}
+
+fn compressor_or_sign(
+    c: Option<Box<dyn crate::compress::Compressor>>,
+) -> Box<dyn crate::compress::Compressor> {
+    c.unwrap_or_else(|| Box::new(crate::compress::Sign))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{mixing_matrix, Topology, Weighting};
+
+    #[test]
+    fn by_name_builds_every_algorithm() {
+        for name in ALL_NAMES {
+            let g = Topology::Ring.build(4, 0);
+            let w = mixing_matrix(&g, Weighting::UniformDegree);
+            let a = by_name(name, 4, vec![0.0; 8], w, Hyper::default(), None, 1)
+                .unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(a.k(), 4);
+            assert!(!a.name().is_empty());
+        }
+        assert!(by_name("nope", 2, vec![], crate::linalg::Mat::eye(2), Hyper::default(), None, 0).is_none());
+    }
+}

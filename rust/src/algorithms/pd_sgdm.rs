@@ -1,0 +1,253 @@
+//! **Algorithm 1 — PD-SGDM** (the paper's primary contribution).
+//!
+//! Each worker runs the heavy-ball update Eq. (8) locally:
+//!
+//! ```text
+//! m_t^(k)       = mu * m_{t-1}^(k) + grad F(x_t^(k); xi_t^(k))
+//! x_{t+1/2}^(k) = x_t^(k) - eta * m_t^(k)
+//! ```
+//!
+//! and when `mod(t+1, p) == 0` gossip-averages the intermediate iterates
+//! with its topology neighbors (Alg. 1 line 6):
+//!
+//! ```text
+//! x_{t+1}^(k) = Σ_{j∈N_k} w_kj x_{t+1/2}^(j)
+//! ```
+//!
+//! otherwise `x_{t+1} = x_{t+1/2}`. Momentum buffers are **local** — they
+//! are never communicated (that is the difference from Yu et al. [23],
+//! which doubles the payload; see `DSgdm` with `gossip_momentum=true`).
+
+use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
+use crate::comm::Network;
+use crate::grad::GradientSource;
+use crate::linalg::Mat;
+use crate::optim::MomentumState;
+
+pub struct PdSgdm {
+    hyper: Hyper,
+    xs: Vec<Vec<f32>>,
+    moms: Vec<MomentumState>,
+    gossip: GossipState,
+}
+
+impl PdSgdm {
+    /// All workers start from the same `x0` (Alg. 1 input).
+    pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper) -> Self {
+        assert!(hyper.period >= 1, "p >= 1 (p=1 degenerates to D-SGDM)");
+        assert_eq!(w.rows, k);
+        let d = x0.len();
+        Self {
+            xs: vec![x0; k],
+            moms: (0..k)
+                .map(|_| MomentumState::new(d, hyper.mu, hyper.weight_decay))
+                .collect(),
+            gossip: GossipState::new(w),
+            hyper,
+        }
+    }
+
+    /// ||m_t^(k)||² of worker k (Lemma 3 diagnostics).
+    pub fn momentum_norm_sq(&self, k: usize) -> f64 {
+        self.moms[k].momentum_norm_sq()
+    }
+
+    /// Overwrite one worker's iterate — used only by failure-injection
+    /// tests (simulating corruption); not part of the algorithm.
+    pub fn set_params_for_test(&mut self, k: usize, x: Vec<f32>) {
+        assert_eq!(x.len(), self.xs[k].len());
+        self.xs[k] = x;
+    }
+}
+
+impl Algorithm for PdSgdm {
+    fn name(&self) -> String {
+        format!("pd-sgdm(p={})", self.hyper.period)
+    }
+
+    fn k(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
+        let eta = self.hyper.lr.eta(t);
+        let mut loss_sum = 0.0;
+        // Lines 2-4: local momentum step on every worker.
+        for (k, (x, mom)) in self.xs.iter_mut().zip(self.moms.iter_mut()).enumerate() {
+            let (loss, g) = source.grad(k, x);
+            loss_sum += loss;
+            mom.step(x, &g, eta);
+        }
+        // Lines 5-9: periodic gossip on the intermediate iterates.
+        let mut stats = StepStats {
+            mean_loss: loss_sum / self.k() as f64,
+            ..Default::default()
+        };
+        if (t + 1) % self.hyper.period == 0 {
+            stats.bytes = self.gossip.mix(&mut self.xs, net);
+            stats.communicated = true;
+        }
+        stats
+    }
+
+    fn params(&self, k: usize) -> &[f32] {
+        &self.xs[k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::Quadratic;
+    use crate::optim::LrSchedule;
+    use crate::topology::{mixing_matrix, Topology, Weighting};
+
+    fn ring_w(k: usize) -> Mat {
+        mixing_matrix(&Topology::Ring.build(k, 0), Weighting::UniformDegree)
+    }
+
+    fn run(
+        algo: &mut dyn Algorithm,
+        source: &mut dyn GradientSource,
+        net: &mut Network,
+        steps: u64,
+    ) -> Vec<StepStats> {
+        (0..steps).map(|t| algo.step(t, source, net)).collect()
+    }
+
+    #[test]
+    fn communicates_exactly_every_p_steps() {
+        let k = 4;
+        let mut src = Quadratic::new(k, 8, 1.0, 0.1, 1);
+        let g = Topology::Ring.build(k, 0);
+        let mut net = Network::new(&g);
+        let hyper = Hyper { period: 4, ..Default::default() };
+        let mut algo = PdSgdm::new(k, src.init(0), ring_w(k), hyper);
+        let stats = run(&mut algo, &mut src, &mut net, 16);
+        let comm_steps: Vec<usize> = stats
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.communicated)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(comm_steps, vec![3, 7, 11, 15]); // mod(t+1, 4) == 0
+        assert_eq!(net.rounds, 4);
+        assert!(stats.iter().all(|s| s.communicated == (s.bytes > 0)));
+    }
+
+    #[test]
+    fn converges_near_quadratic_optimum() {
+        let k = 8;
+        let mut src = Quadratic::new(k, 16, 1.0, 0.05, 2);
+        let opt = src.optimum();
+        let g = Topology::Ring.build(k, 0);
+        let mut net = Network::new(&g);
+        let hyper = Hyper {
+            lr: LrSchedule::Constant { eta: 0.02 },
+            mu: 0.9,
+            period: 4,
+            ..Default::default()
+        };
+        let mut algo = PdSgdm::new(k, src.init(3), ring_w(k), hyper);
+        run(&mut algo, &mut src, &mut net, 1500);
+        let xbar = algo.avg_params();
+        let err = crate::linalg::dist(&xbar, &opt);
+        assert!(err < 0.25, "x̄ is {err} from x*");
+    }
+
+    #[test]
+    fn momentum_accelerates_over_plain_sgd() {
+        // On a noiseless quadratic, mu=0.9 reaches a given gap in fewer
+        // iterations than mu=0 at the same (stable) step size.
+        let k = 4;
+        let gap_after = |mu: f32| -> f64 {
+            let mut src = Quadratic::new(k, 16, 1.0, 0.0, 4);
+            let opt = src.optimum();
+            let g = Topology::Ring.build(k, 0);
+            let mut net = Network::new(&g);
+            let hyper = Hyper {
+                lr: LrSchedule::Constant { eta: 0.01 },
+                mu,
+                period: 4,
+                ..Default::default()
+            };
+            let mut algo = PdSgdm::new(k, src.init(5), ring_w(k), hyper);
+            run(&mut algo, &mut src, &mut net, 300);
+            crate::linalg::dist(&algo.avg_params(), &opt)
+        };
+        assert!(gap_after(0.9) < 0.5 * gap_after(0.0));
+    }
+
+    #[test]
+    fn consensus_error_bounded_by_lemma5_shape() {
+        // Lemma 5: Σ_k ||x_k − x̄||² <= 2 η² p² G² K (1 + 4/ρ²) / (1-μ)².
+        // We verify the *measured* consensus error respects the bound
+        // with G = max observed grad norm.
+        let k = 8;
+        let mut src = Quadratic::new(k, 8, 2.0, 0.1, 6);
+        let graph = Topology::Ring.build(k, 0);
+        let w = ring_w(k);
+        let rho = crate::linalg::spectral_gap(&w, 1);
+        let mut net = Network::new(&graph);
+        let (eta, mu, p) = (0.05f64, 0.9f64, 8u64);
+        let hyper = Hyper {
+            lr: LrSchedule::Constant { eta: eta as f32 },
+            mu: mu as f32,
+            period: p,
+            ..Default::default()
+        };
+        let mut algo = PdSgdm::new(k, src.init(7), w, hyper);
+        let mut max_g_sq: f64 = 0.0;
+        let mut max_consensus: f64 = 0.0;
+        for t in 0..400 {
+            // track worker gradient norms (for G)
+            for kk in 0..k {
+                let (_, g) = src.grad(kk, algo.params(kk));
+                max_g_sq = max_g_sq.max(crate::linalg::dot(&g, &g));
+            }
+            algo.step(t, &mut src, &mut net);
+            max_consensus = max_consensus.max(algo.consensus_error());
+        }
+        let bound = 2.0 * eta * eta * (p * p) as f64 * max_g_sq * k as f64
+            * (1.0 + 4.0 / (rho * rho))
+            / (1.0 - mu).powi(2);
+        assert!(
+            max_consensus <= bound,
+            "consensus {max_consensus} exceeds Lemma 5 bound {bound}"
+        );
+        assert!(max_consensus > 0.0, "workers should disagree between rounds");
+    }
+
+    #[test]
+    fn larger_p_sends_fewer_bytes() {
+        let k = 8;
+        let bytes_for = |p: u64| -> u64 {
+            let mut src = Quadratic::new(k, 32, 1.0, 0.1, 8);
+            let g = Topology::Ring.build(k, 0);
+            let mut net = Network::new(&g);
+            let hyper = Hyper { period: p, ..Default::default() };
+            let mut algo = PdSgdm::new(k, src.init(9), ring_w(k), hyper);
+            run(&mut algo, &mut src, &mut net, 64);
+            net.total_bytes
+        };
+        let (b4, b8, b16) = (bytes_for(4), bytes_for(8), bytes_for(16));
+        assert_eq!(b4, 2 * b8);
+        assert_eq!(b8, 2 * b16);
+    }
+
+    #[test]
+    fn workers_agree_immediately_after_complete_graph_round() {
+        // With the complete topology, one gossip round = exact averaging.
+        let k = 5;
+        let mut src = Quadratic::new(k, 6, 1.0, 0.2, 10);
+        let g = Topology::Complete.build(k, 0);
+        let w = mixing_matrix(&g, Weighting::UniformDegree);
+        let mut net = Network::new(&g);
+        let hyper = Hyper { period: 2, ..Default::default() };
+        let mut algo = PdSgdm::new(k, src.init(11), w, hyper);
+        algo.step(0, &mut src, &mut net); // local only
+        assert!(algo.consensus_error() > 0.0);
+        algo.step(1, &mut src, &mut net); // communication step
+        assert!(algo.consensus_error() < 1e-9);
+    }
+}

@@ -1,0 +1,170 @@
+//! Theoretical-bound evaluators for Theorems 1–2 and Corollaries 1–2.
+//!
+//! These turn the paper's convergence statements into executable
+//! predictions: given problem constants (L, σ, G, f(x₀)−f*) and run
+//! parameters (K, T, η, μ, p, ρ, δ), compute the right-hand sides the
+//! experiments can be checked against. Used by the ablation benches and
+//! the docs; the Lemma 5 consensus bound is additionally asserted
+//! step-by-step in `algorithms::pd_sgdm` tests.
+
+/// Problem-level constants of Assumptions 2–4 plus the initial gap.
+#[derive(Clone, Copy, Debug)]
+pub struct ProblemConstants {
+    /// Smoothness L (Assumption 2).
+    pub l_smooth: f64,
+    /// Gradient-variance bound σ² (Assumption 3).
+    pub sigma_sq: f64,
+    /// Second-moment bound G² with ‖∇F‖² ≤ G² (Assumption 4).
+    pub g_sq: f64,
+    /// f(x₀) − f*.
+    pub init_gap: f64,
+}
+
+/// Run-level parameters shared by both theorems.
+#[derive(Clone, Copy, Debug)]
+pub struct RunParams {
+    pub workers: usize,
+    pub steps: u64,
+    pub eta: f64,
+    pub mu: f64,
+    pub period: u64,
+    /// Spectral gap ρ of the mixing matrix.
+    pub rho: f64,
+}
+
+impl RunParams {
+    /// Theorem 1/2 step-size condition η < (1−μ)²/(2L).
+    pub fn eta_admissible(&self, c: &ProblemConstants) -> bool {
+        self.eta < (1.0 - self.mu).powi(2) / (2.0 * c.l_smooth)
+    }
+}
+
+/// Theorem 1 RHS: the bound on (1/T) Σ‖∇f(x̄_t)‖² for PD-SGDM.
+///
+/// (2(1−μ)(f(x₀)−f*))/(ηT) + μησ²L/((1−μ)²K) + ησ²L/((1−μ)K)
+///   + 2η²p²G²L²/(1−μ)² · (1 + 4/ρ²)
+pub fn theorem1_bound(c: &ProblemConstants, r: &RunParams) -> f64 {
+    let (k, t) = (r.workers as f64, r.steps as f64);
+    let om = 1.0 - r.mu;
+    let p2 = (r.period * r.period) as f64;
+    2.0 * om * c.init_gap / (r.eta * t)
+        + r.mu * r.eta * c.sigma_sq * c.l_smooth / (om * om * k)
+        + r.eta * c.sigma_sq * c.l_smooth / (om * k)
+        + 2.0 * r.eta * r.eta * p2 * c.g_sq * c.l_smooth * c.l_smooth / (om * om)
+            * (1.0 + 4.0 / (r.rho * r.rho))
+}
+
+/// Theorem 2's effective gap α = ρ²δ/82 for CPD-SGDM.
+pub fn alpha(rho: f64, delta: f64) -> f64 {
+    rho * rho * delta / 82.0
+}
+
+/// Theorem 2 RHS — identical structure with (1+4/ρ²) → (1+4/α²) and the
+/// consensus coefficient 2 → 4.
+pub fn theorem2_bound(c: &ProblemConstants, r: &RunParams, delta: f64) -> f64 {
+    let (k, t) = (r.workers as f64, r.steps as f64);
+    let om = 1.0 - r.mu;
+    let p2 = (r.period * r.period) as f64;
+    let a = alpha(r.rho, delta);
+    2.0 * om * c.init_gap / (r.eta * t)
+        + r.mu * r.eta * c.sigma_sq * c.l_smooth / (om * om * k)
+        + r.eta * c.sigma_sq * c.l_smooth / (om * k)
+        + 4.0 * r.eta * r.eta * p2 * c.g_sq * c.l_smooth * c.l_smooth / (om * om)
+            * (1.0 + 4.0 / (a * a))
+}
+
+/// Lemma 5: bound on Σ_k ‖x_k − x̄‖² for PD-SGDM.
+pub fn lemma5_consensus_bound(c: &ProblemConstants, r: &RunParams) -> f64 {
+    let om = 1.0 - r.mu;
+    2.0 * r.eta * r.eta * ((r.period * r.period) as f64) * c.g_sq * (r.workers as f64)
+        / (om * om)
+        * (1.0 + 4.0 / (r.rho * r.rho))
+}
+
+/// Corollary 1 parameter schedule: η = √(K/T), p = T^{1/4}/K^τ (≥1).
+pub fn corollary1_schedule(k: usize, t: u64, tau: f64) -> (f64, u64) {
+    let eta = ((k as f64) / (t as f64)).sqrt();
+    let p = ((t as f64).powf(0.25) / (k as f64).powf(tau)).max(1.0).round() as u64;
+    (eta, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts() -> ProblemConstants {
+        ProblemConstants { l_smooth: 1.5, sigma_sq: 4.0, g_sq: 25.0, init_gap: 10.0 }
+    }
+
+    fn params() -> RunParams {
+        RunParams { workers: 8, steps: 10_000, eta: 0.002, mu: 0.9, period: 4, rho: 0.25 }
+    }
+
+    #[test]
+    fn eta_condition() {
+        let c = consts();
+        assert!(params().eta_admissible(&c));
+        let mut r = params();
+        r.eta = 0.01; // (1-0.9)^2/(2*1.5) = 0.0033
+        assert!(!r.eta_admissible(&c));
+    }
+
+    #[test]
+    fn theorem1_monotonicities() {
+        // The bound must grow with p, shrink with rho and K, and shrink
+        // in T — the qualitative content of Theorem 1.
+        let c = consts();
+        let base = theorem1_bound(&c, &params());
+        let mut r = params();
+        r.period = 16;
+        assert!(theorem1_bound(&c, &r) > base);
+        let mut r = params();
+        r.rho = 1.0;
+        assert!(theorem1_bound(&c, &r) < base);
+        let mut r = params();
+        r.workers = 64;
+        assert!(theorem1_bound(&c, &r) < base);
+        let mut r = params();
+        r.steps = 1_000_000;
+        assert!(theorem1_bound(&c, &r) < base);
+    }
+
+    #[test]
+    fn theorem2_dominates_theorem1() {
+        // Same parameters, δ < 1: compressed communication can only widen
+        // the bound (α ≤ ρ and coefficient 4 ≥ 2).
+        let c = consts();
+        let r = params();
+        assert!(theorem2_bound(&c, &r, 0.5) > theorem1_bound(&c, &r));
+        // ... and improves as δ -> 1
+        assert!(theorem2_bound(&c, &r, 0.9) < theorem2_bound(&c, &r, 0.1));
+    }
+
+    #[test]
+    fn alpha_formula() {
+        assert!((alpha(0.5, 0.4) - 0.25 * 0.4 / 82.0).abs() < 1e-15);
+        assert!(alpha(1.0, 1.0) < 1.0, "paper: alpha < 1 always");
+    }
+
+    #[test]
+    fn lemma5_matches_hand_computation() {
+        let c = consts();
+        let r = params();
+        let expect = 2.0 * 0.002f64.powi(2) * 16.0 * 25.0 * 8.0 / 0.1f64.powi(2)
+            * (1.0 + 4.0 / 0.0625);
+        assert!((lemma5_consensus_bound(&c, &r) - expect).abs() < 1e-9 * expect);
+    }
+
+    #[test]
+    fn corollary1_schedule_shapes() {
+        let (eta, p) = corollary1_schedule(8, 10_000, 0.75);
+        assert!((eta - (8.0f64 / 10_000.0).sqrt()).abs() < 1e-12);
+        assert!(p >= 1);
+        // larger tau => smaller p
+        let (_, p_small_tau) = corollary1_schedule(8, 10_000, 0.25);
+        assert!(p_small_tau >= p);
+        // K=1 => p = T^{1/4}
+        let (_, p1) = corollary1_schedule(1, 10_000, 0.75);
+        assert_eq!(p1, 10);
+    }
+}

@@ -1,0 +1,110 @@
+//! In-crate benchmark harness (no criterion in this offline environment).
+//!
+//! Two kinds of benchmarks live under `benches/`:
+//!
+//! 1. **Figure benches** — regenerate a paper figure's series; they use
+//!    the sim driver + [`crate::metrics`] and print CSV. Timing is not
+//!    the point there.
+//! 2. **Hot-path benches** — measure throughput of the L3 kernels
+//!    (gossip, compression, momentum); they use [`bench`] below, which
+//!    reports min/median/p95 over warmed-up timed runs — the numbers in
+//!    EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    /// Throughput in "units/s" given units of work per iteration.
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "min {:>10.3?}  median {:>10.3?}  p95 {:>10.3?}  ({} iters)",
+            self.min, self.median, self.p95, self.iters
+        )
+    }
+}
+
+/// Run `body` repeatedly: `warmup` untimed runs, then timed runs until
+/// `budget` elapses (at least 5, at most 10_000).
+pub fn bench<F: FnMut()>(warmup: usize, budget: Duration, mut body: F) -> BenchStats {
+    for _ in 0..warmup {
+        body();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < budget || samples.len() < 5) && samples.len() < 10_000 {
+        let t0 = Instant::now();
+        body();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let n = samples.len();
+    BenchStats {
+        iters: n,
+        min: samples[0],
+        median: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        mean: samples.iter().sum::<Duration>() / n as u32,
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (std::hint::black_box stabilized — thin alias for bench ergonomics).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Pretty-print one bench row: `name  stats  [throughput]`.
+pub fn report(name: &str, stats: &BenchStats, throughput: Option<(f64, &str)>) {
+    match throughput {
+        Some((units, unit_name)) => println!(
+            "{name:<44} {stats}  {:.3e} {unit_name}/s",
+            stats.throughput(units)
+        ),
+        None => println!("{name:<44} {stats}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_at_least_five_samples() {
+        let stats = bench(1, Duration::from_millis(1), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(stats.iters >= 5);
+        assert!(stats.min <= stats.median && stats.median <= stats.p95);
+    }
+
+    #[test]
+    fn throughput_is_positive() {
+        let stats = bench(0, Duration::from_millis(1), || {
+            black_box(vec![0u8; 1024]);
+        });
+        assert!(stats.throughput(1024.0) > 0.0);
+    }
+
+    #[test]
+    fn display_is_nonempty() {
+        let stats = bench(0, Duration::from_millis(1), || {});
+        assert!(!format!("{stats}").is_empty());
+    }
+}

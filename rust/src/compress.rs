@@ -1,0 +1,471 @@
+//! δ-contraction compression operators (paper Definition 1) + wire codecs.
+//!
+//! CPD-SGDM (Algorithm 2) communicates `q = Q(x - x̂)` where `Q` satisfies
+//! `||x - Q(x)||^2 <= (1 - δ) ||x||^2` for some δ in (0, 1]. This module
+//! implements the operators the compression literature (and the paper's
+//! experiments) use:
+//!
+//! * [`Sign`] — scaled sign compression (the paper's choice, after
+//!   signSGD [5]): `Q(x) = (||x||_1 / d) · sign(x)`, δ = ||x||_1² / (d·||x||²).
+//! * [`TopK`] — keep the k largest-magnitude coordinates, δ = k/d.
+//! * [`RandK`] — keep k uniformly random coordinates (rescaled variant is
+//!   unbiased but *not* a contraction, so we use the plain projection).
+//! * [`Qsgd`] — stochastic s-level quantization (QSGD [3]).
+//! * [`Identity`] — δ = 1, turning CPD-SGDM into exact-communication
+//!   gossip (used by tests to cross-check against PD-SGDM-style mixing).
+//!
+//! Every operator reports `encoded_bytes` — the wire size its
+//! [`CompressedVec`] needs — which drives the communication-cost x-axes
+//! of Figure 2.
+
+use crate::rng::Xoshiro256;
+
+/// A compressed vector: the decode target plus its wire cost.
+#[derive(Clone, Debug)]
+pub struct CompressedVec {
+    /// Dense decode of Q(x) (the simulator applies it directly).
+    pub dense: Vec<f32>,
+    /// Bytes this message would occupy on the wire with the operator's
+    /// natural encoding (bitmaps / index+value pairs / packed levels).
+    pub wire_bytes: usize,
+}
+
+/// A δ-contraction operator Q: R^d -> R^d (paper Definition 1).
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Apply Q. `rng` is used only by stochastic operators.
+    fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> CompressedVec;
+
+    /// The operator's contraction parameter δ (a priori lower bound;
+    /// `measured_delta` checks it empirically).
+    fn delta(&self, d: usize) -> f64;
+
+    /// Wire bytes for a d-dim message (without materializing one).
+    fn encoded_bytes(&self, d: usize) -> usize;
+
+    /// True for operators whose Definition-1 contraction holds in
+    /// expectation over their internal randomness (RandK, QSGD) rather
+    /// than per-sample (Sign, TopK, Identity).
+    fn is_stochastic(&self) -> bool {
+        false
+    }
+}
+
+/// Empirical 1 - ||x - Q(x)||²/||x||² for a concrete x (>= delta() must
+/// hold; property-tested in every operator's test module).
+pub fn measured_delta(c: &dyn Compressor, x: &[f32], rng: &mut Xoshiro256) -> f64 {
+    let q = c.compress(x, rng);
+    let nx: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+    if nx == 0.0 {
+        return 1.0;
+    }
+    let err: f64 = x
+        .iter()
+        .zip(&q.dense)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    1.0 - err / nx
+}
+
+/// Scaled sign compression: Q(x) = (||x||_1 / d) sign(x).
+///
+/// Wire format: one f32 scale + d-bit sign bitmap => 4 + ceil(d/8) bytes,
+/// a ~32x reduction. This is the operator the paper's experiments use.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sign;
+
+impl Compressor for Sign {
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn compress(&self, x: &[f32], _rng: &mut Xoshiro256) -> CompressedVec {
+        let d = x.len();
+        let l1: f64 = x.iter().map(|&v| (v as f64).abs()).sum();
+        let scale = (l1 / d.max(1) as f64) as f32;
+        let dense = x
+            .iter()
+            .map(|&v| if v >= 0.0 { scale } else { -scale })
+            .collect();
+        CompressedVec { dense, wire_bytes: self.encoded_bytes(d) }
+    }
+
+    fn delta(&self, d: usize) -> f64 {
+        // ||x||_1^2 / (d ||x||_2^2) >= 1/d always; equality when x is
+        // 1-sparse. Typical gradients are dense, giving δ near 1 — the
+        // paper's Definition 1 needs only δ > 0.
+        1.0 / d.max(1) as f64
+    }
+
+    fn encoded_bytes(&self, d: usize) -> usize {
+        4 + d.div_ceil(8)
+    }
+}
+
+/// Top-k sparsification: keep the k largest |x_i|, zero the rest. δ = k/d.
+///
+/// Wire format: k * (4-byte index + 4-byte value).
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    /// Fraction of coordinates kept, in (0, 1].
+    pub ratio: f64,
+}
+
+impl TopK {
+    pub fn k_for(&self, d: usize) -> usize {
+        ((self.ratio * d as f64).ceil() as usize).clamp(1, d.max(1))
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("top{:.3}", self.ratio)
+    }
+
+    fn compress(&self, x: &[f32], _rng: &mut Xoshiro256) -> CompressedVec {
+        let d = x.len();
+        let k = self.k_for(d);
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.select_nth_unstable_by(k.saturating_sub(1).min(d.saturating_sub(1)), |&a, &b| {
+            x[b].abs().partial_cmp(&x[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut dense = vec![0.0f32; d];
+        for &i in &idx[..k.min(d)] {
+            dense[i] = x[i];
+        }
+        CompressedVec { dense, wire_bytes: self.encoded_bytes(d) }
+    }
+
+    fn delta(&self, d: usize) -> f64 {
+        self.k_for(d) as f64 / d.max(1) as f64
+    }
+
+    fn encoded_bytes(&self, d: usize) -> usize {
+        self.k_for(d) * 8
+    }
+}
+
+/// Random-k sparsification (projection form; δ = k/d in expectation and
+/// the projection never expands, so Definition 1 holds per-sample with
+/// δ_sample >= 0; we report the expectation).
+#[derive(Clone, Copy, Debug)]
+pub struct RandK {
+    pub ratio: f64,
+}
+
+impl RandK {
+    pub fn k_for(&self, d: usize) -> usize {
+        ((self.ratio * d as f64).ceil() as usize).clamp(1, d.max(1))
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("rand{:.3}", self.ratio)
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> CompressedVec {
+        let d = x.len();
+        let k = self.k_for(d);
+        let keep = rng.sample_indices(d, k);
+        let mut dense = vec![0.0f32; d];
+        for &i in &keep {
+            dense[i] = x[i];
+        }
+        CompressedVec { dense, wire_bytes: self.encoded_bytes(d) }
+    }
+
+    fn delta(&self, d: usize) -> f64 {
+        self.k_for(d) as f64 / d.max(1) as f64
+    }
+
+    fn encoded_bytes(&self, d: usize) -> usize {
+        self.k_for(d) * 8
+    }
+
+    fn is_stochastic(&self) -> bool {
+        true
+    }
+}
+
+/// QSGD-style stochastic quantization with `levels` levels per sign,
+/// damped into contraction form.
+///
+/// Raw QSGD `R(x)_i = ||x|| sign(x_i) xi_i` (xi quantizes |x_i|/||x||
+/// stochastically to multiples of 1/levels) is unbiased with variance
+/// `E||R(x)-x||² <= ω ||x||²`, ω = min(d/levels², √d/levels)
+/// (Alistarh et al. 2017) — which can *expand*, so it is not itself a
+/// Definition-1 contraction. Following the CHOCO-SGD treatment we emit
+/// the damped operator `Q(x) = R(x)/(1+ω)`, a δ-contraction in
+/// expectation with δ = 1/(1+ω). Wire: 4-byte norm +
+/// d·⌈log2(2·levels+1)⌉ bits.
+#[derive(Clone, Copy, Debug)]
+pub struct Qsgd {
+    pub levels: u32,
+}
+
+impl Qsgd {
+    fn omega(&self, d: usize) -> f64 {
+        let s = self.levels as f64;
+        let dd = d.max(1) as f64;
+        (dd / (s * s)).min(dd.sqrt() / s)
+    }
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> String {
+        format!("qsgd{}", self.levels)
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> CompressedVec {
+        let d = x.len();
+        let nrm = (x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()).sqrt();
+        if nrm == 0.0 {
+            return CompressedVec { dense: vec![0.0; d], wire_bytes: self.encoded_bytes(d) };
+        }
+        let s = self.levels as f64;
+        let damp = 1.0 / (1.0 + self.omega(d));
+        let dense = x
+            .iter()
+            .map(|&v| {
+                let r = (v as f64).abs() / nrm * s; // in [0, s]
+                let low = r.floor();
+                let p = r - low;
+                let level = if rng.next_f64() < p { low + 1.0 } else { low };
+                (damp * nrm * (level / s) * (v as f64).signum()) as f32
+            })
+            .collect();
+        CompressedVec { dense, wire_bytes: self.encoded_bytes(d) }
+    }
+
+    fn delta(&self, d: usize) -> f64 {
+        1.0 / (1.0 + self.omega(d))
+    }
+
+    fn encoded_bytes(&self, d: usize) -> usize {
+        let bits_per = (2.0 * self.levels as f64 + 1.0).log2().ceil() as usize;
+        4 + (d * bits_per).div_ceil(8)
+    }
+
+    fn is_stochastic(&self) -> bool {
+        true
+    }
+}
+
+/// No-op compression (δ = 1): turns Algorithm 2 into exact communication.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "identity".into()
+    }
+
+    fn compress(&self, x: &[f32], _rng: &mut Xoshiro256) -> CompressedVec {
+        CompressedVec { dense: x.to_vec(), wire_bytes: self.encoded_bytes(x.len()) }
+    }
+
+    fn delta(&self, _d: usize) -> f64 {
+        1.0
+    }
+
+    fn encoded_bytes(&self, d: usize) -> usize {
+        4 * d
+    }
+}
+
+/// Parse "sign" | "top0.01" | "rand0.05" | "qsgd4" | "identity".
+pub fn parse(spec: &str) -> Option<Box<dyn Compressor>> {
+    if spec == "sign" {
+        return Some(Box::new(Sign));
+    }
+    if spec == "identity" || spec == "none" {
+        return Some(Box::new(Identity));
+    }
+    if let Some(r) = spec.strip_prefix("top") {
+        return r.parse().ok().filter(|&r| r > 0.0 && r <= 1.0).map(|ratio| {
+            Box::new(TopK { ratio }) as Box<dyn Compressor>
+        });
+    }
+    if let Some(r) = spec.strip_prefix("rand") {
+        return r.parse().ok().filter(|&r| r > 0.0 && r <= 1.0).map(|ratio| {
+            Box::new(RandK { ratio }) as Box<dyn Compressor>
+        });
+    }
+    if let Some(l) = spec.strip_prefix("qsgd") {
+        return l.parse().ok().filter(|&l| l >= 1).map(|levels| {
+            Box::new(Qsgd { levels }) as Box<dyn Compressor>
+        });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    fn operators() -> Vec<Box<dyn Compressor>> {
+        vec![
+            Box::new(Sign),
+            Box::new(TopK { ratio: 0.1 }),
+            Box::new(RandK { ratio: 0.1 }),
+            Box::new(Qsgd { levels: 4 }),
+            Box::new(Identity),
+        ]
+    }
+
+    #[test]
+    fn prop_delta_contraction_holds() {
+        // Definition 1 (the paper's only requirement on Q): for every
+        // operator and random x, ||x - Q(x)||² <= (1 - δ)||x||², i.e.
+        // measured_delta >= advertised delta. Deterministic operators
+        // must satisfy it per-sample; stochastic ones (RandK/QSGD) in
+        // expectation over Q's randomness, so we average 200 draws.
+        forall(0xC0FFEE, 25, |rng| {
+            let d = 1 + rng.below(400);
+            let sigma = [0.01f32, 1.0, 100.0][rng.below(3)];
+            let x = rng.normal_vec(d, sigma);
+            for c in operators() {
+                let adv = c.delta(d);
+                let meas = if c.is_stochastic() {
+                    let n = 200;
+                    (0..n).map(|_| measured_delta(c.as_ref(), &x, rng)).sum::<f64>() / n as f64
+                } else {
+                    measured_delta(c.as_ref(), &x, rng)
+                };
+                let tol = if c.is_stochastic() { 0.05 * (1.0 - adv).max(adv) } else { 1e-4 };
+                assert!(
+                    meas >= adv - tol,
+                    "{}: measured {meas} < advertised {adv} (d={d})",
+                    c.name()
+                );
+                assert!(meas <= 1.0 + 1e-6, "{}: {meas}", c.name());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_never_expands() {
+        // Deterministic projections/sign never expand the error beyond
+        // ||x||² per-sample; stochastic operators obey it in expectation.
+        forall(7, 30, |rng| {
+            let d = 1 + rng.below(300);
+            let x = rng.normal_vec(d, 1.0);
+            let nx: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+            for c in operators() {
+                let err_of = |rng: &mut Xoshiro256| -> f64 {
+                    let q = c.compress(&x, rng);
+                    x.iter().zip(&q.dense).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum()
+                };
+                let err = if c.is_stochastic() {
+                    let n = 100;
+                    (0..n).map(|_| err_of(rng)).sum::<f64>() / n as f64
+                } else {
+                    err_of(rng)
+                };
+                assert!(err <= nx * 1.05 + 1e-9, "{} expanded error: {err} vs {nx}", c.name());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_zero_maps_to_zero() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let x = vec![0.0f32; 128];
+        for c in operators() {
+            let q = c.compress(&x, &mut rng);
+            assert!(q.dense.iter().all(|&v| v == 0.0), "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn sign_wire_is_one_bit_per_coord() {
+        assert_eq!(Sign.encoded_bytes(800), 4 + 100);
+        // vs 3200 bytes dense: ~32x reduction, matching the paper's claim
+        assert!(Identity.encoded_bytes(800) / Sign.encoded_bytes(800) >= 30);
+    }
+
+    #[test]
+    fn sign_preserves_signs_and_scale() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let x = vec![3.0f32, -1.0, 2.0, -2.0];
+        let q = Sign.compress(&x, &mut rng);
+        let scale = (3.0 + 1.0 + 2.0 + 2.0) / 4.0;
+        assert_eq!(q.dense, vec![scale, -scale, scale, -scale]);
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x = vec![0.1f32, -5.0, 0.2, 4.0, -0.3];
+        let q = TopK { ratio: 0.4 }.compress(&x, &mut rng); // k = 2
+        assert_eq!(q.dense, vec![0.0, -5.0, 0.0, 4.0, 0.0]);
+        assert_eq!(q.wire_bytes, 16);
+    }
+
+    #[test]
+    fn topk_delta_is_k_over_d() {
+        let c = TopK { ratio: 0.25 };
+        assert!((c.delta(100) - 0.25).abs() < 1e-12);
+        assert_eq!(c.k_for(100), 25);
+        assert_eq!(c.k_for(3), 1);
+    }
+
+    #[test]
+    fn randk_keeps_exactly_k() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let x = vec![1.0f32; 50];
+        let q = RandK { ratio: 0.2 }.compress(&x, &mut rng);
+        let nz = q.dense.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nz, 10);
+    }
+
+    #[test]
+    fn qsgd_mean_is_damped_input() {
+        // The raw quantizer is unbiased; the contraction form divides by
+        // (1+omega), so the sample mean must approach x/(1+omega).
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let x = vec![0.7f32, -0.3, 0.1, 0.9];
+        let c = Qsgd { levels: 2 };
+        let damp = 1.0 / (1.0 + c.omega(4));
+        let mut acc = vec![0.0f64; 4];
+        let n = 20_000;
+        for _ in 0..n {
+            let q = c.compress(&x, &mut rng);
+            for (a, &v) in acc.iter_mut().zip(&q.dense) {
+                *a += v as f64;
+            }
+        }
+        for (a, &xi) in acc.iter().zip(&x) {
+            assert!((a / n as f64 - damp * xi as f64).abs() < 0.02, "{a} vs {xi}");
+        }
+    }
+
+    #[test]
+    fn qsgd_wire_bits() {
+        // levels=1 => 3 symbols => 2 bits/coord
+        assert_eq!(Qsgd { levels: 1 }.encoded_bytes(16), 4 + 4);
+    }
+
+    #[test]
+    fn parse_specs() {
+        for spec in ["sign", "top0.01", "rand0.5", "qsgd8", "identity"] {
+            let c = parse(spec).unwrap_or_else(|| panic!("{spec}"));
+            assert!(!c.name().is_empty());
+        }
+        assert!(parse("top0").is_none());
+        assert!(parse("garbage").is_none());
+        assert!(parse("qsgd0").is_none());
+    }
+
+    #[test]
+    fn identity_roundtrips_exactly() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let x = rng.normal_vec(333, 2.0);
+        let q = Identity.compress(&x, &mut rng);
+        assert_eq!(q.dense, x);
+        assert_eq!(q.wire_bytes, 4 * 333);
+    }
+}

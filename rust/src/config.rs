@@ -1,0 +1,567 @@
+//! Configuration system: a TOML-subset parser + the typed experiment
+//! config the CLI, examples, and benches all consume.
+//!
+//! No `toml`/`serde` crates exist in this offline environment, so the
+//! parser is in-crate. Supported grammar (everything the configs in
+//! `configs/` use): `[section]` tables, `key = value` with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments.
+//! Unknown keys are rejected (catches typos in experiment sweeps).
+
+use std::collections::BTreeMap;
+
+use crate::algorithms::Hyper;
+use crate::comm::CostModel;
+use crate::data::Sharding;
+use crate::optim::LrSchedule;
+use crate::topology::{Topology, Weighting};
+
+// ---------------------------------------------------------------------------
+// TOML subset
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` flat map.
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+/// Parse the TOML subset; keys are returned as `section.key` (keys before
+/// any `[section]` have no prefix).
+pub fn parse_toml(src: &str) -> Result<TomlDoc, String> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let value = parse_value(val.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        if doc.insert(full.clone(), value).is_some() {
+            return Err(format!("line {}: duplicate key {full}", lineno + 1));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<_>, _> = split_top_level(inner).iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Typed experiment config
+// ---------------------------------------------------------------------------
+
+/// Which gradient oracle an experiment uses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadConfig {
+    Quadratic { dim: usize, heterogeneity: f32, noise: f32 },
+    Logistic { n: usize, dim: usize, classes: usize, batch: usize, l2: f32 },
+    Mlp { n: usize, dim: usize, classes: usize, hidden: usize, batch: usize },
+    /// The XLA transformer on the synthetic Markov corpus.
+    Transformer { model: String, artifacts_dir: String },
+}
+
+/// The full experiment description (one `configs/*.toml` file).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub algorithm: String,
+    pub workers: usize,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub seed: u64,
+    pub topology: Topology,
+    pub weighting: Weighting,
+    pub sharding: Sharding,
+    pub hyper: Hyper,
+    pub compressor: Option<String>,
+    pub workload: WorkloadConfig,
+    pub cost_model: CostModel,
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "experiment".into(),
+            algorithm: "pd-sgdm".into(),
+            workers: 8,
+            steps: 1000,
+            eval_every: 50,
+            seed: 42,
+            topology: Topology::Ring,
+            weighting: Weighting::UniformDegree,
+            sharding: Sharding::Iid,
+            hyper: Hyper::default(),
+            compressor: None,
+            workload: WorkloadConfig::Mlp { n: 4000, dim: 32, classes: 10, hidden: 64, batch: 16 },
+            cost_model: CostModel::default(),
+            out_dir: "bench_out".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml_str(src: &str) -> Result<Self, String> {
+        let doc = parse_toml(src)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::from_toml_str(&src)
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let mut cfg = ExperimentConfig::default();
+        let mut seen = std::collections::BTreeSet::new();
+        let known = [
+            "name", "algorithm", "workers", "steps", "eval_every", "seed",
+            "topology", "weighting", "sharding.kind", "sharding.alpha",
+            "hyper.eta", "hyper.mu", "hyper.weight_decay", "hyper.period",
+            "hyper.gamma", "hyper.lr_schedule", "hyper.lr_milestones",
+            "compressor",
+            "workload.kind", "workload.dim", "workload.heterogeneity",
+            "workload.noise", "workload.n", "workload.classes",
+            "workload.hidden", "workload.batch", "workload.l2",
+            "workload.model", "workload.artifacts_dir",
+            "cost.alpha", "cost.beta", "cost.step_seconds",
+            "out_dir",
+        ];
+        for key in doc.keys() {
+            if !known.contains(&key.as_str()) {
+                return Err(format!("unknown config key: {key}"));
+            }
+            seen.insert(key.clone());
+        }
+
+        let get_str = |k: &str| doc.get(k).and_then(|v| v.as_str().map(str::to_string));
+        let get_usize = |k: &str| -> Result<Option<usize>, String> {
+            match doc.get(k) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_i64()
+                    .filter(|&i| i >= 0)
+                    .map(|i| Some(i as usize))
+                    .ok_or_else(|| format!("{k} must be a non-negative integer")),
+            }
+        };
+        let get_f32 = |k: &str| -> Result<Option<f32>, String> {
+            match doc.get(k) {
+                None => Ok(None),
+                Some(v) => v.as_f64().map(|f| Some(f as f32)).ok_or_else(|| format!("{k} must be a number")),
+            }
+        };
+
+        if let Some(v) = get_str("name") {
+            cfg.name = v;
+        }
+        if let Some(v) = get_str("algorithm") {
+            if !crate::algorithms::ALL_NAMES.contains(&v.as_str()) {
+                return Err(format!("unknown algorithm {v}; options: {:?}", crate::algorithms::ALL_NAMES));
+            }
+            cfg.algorithm = v;
+        }
+        if let Some(v) = get_usize("workers")? {
+            cfg.workers = v;
+        }
+        if let Some(v) = get_usize("steps")? {
+            cfg.steps = v as u64;
+        }
+        if let Some(v) = get_usize("eval_every")? {
+            cfg.eval_every = v as u64;
+        }
+        if let Some(v) = get_usize("seed")? {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = get_str("topology") {
+            cfg.topology = Topology::parse(&v).ok_or_else(|| format!("unknown topology {v}"))?;
+        }
+        if let Some(v) = get_str("weighting") {
+            cfg.weighting = match v.as_str() {
+                "uniform" => Weighting::UniformDegree,
+                "metropolis" => Weighting::Metropolis,
+                "lazy-metropolis" => Weighting::LazyMetropolis,
+                _ => return Err(format!("unknown weighting {v}")),
+            };
+        }
+        if let Some(kind) = get_str("sharding.kind") {
+            cfg.sharding = match kind.as_str() {
+                "iid" => Sharding::Iid,
+                "dirichlet" => Sharding::Dirichlet {
+                    alpha: get_f32("sharding.alpha")?.unwrap_or(0.5) as f64,
+                },
+                _ => return Err(format!("unknown sharding {kind}")),
+            };
+        }
+        // hyper
+        let eta = get_f32("hyper.eta")?.unwrap_or(0.1);
+        cfg.hyper.lr = match get_str("hyper.lr_schedule").as_deref() {
+            None | Some("constant") => LrSchedule::Constant { eta },
+            Some("step-decay") => {
+                let milestones = match doc.get("hyper.lr_milestones") {
+                    Some(TomlValue::Arr(a)) => a
+                        .iter()
+                        .map(|v| v.as_f64().ok_or("milestones must be numbers".to_string()))
+                        .collect::<Result<Vec<_>, _>>()?,
+                    None => vec![0.5, 0.75],
+                    _ => return Err("hyper.lr_milestones must be an array".into()),
+                };
+                LrSchedule::StepDecay { eta0: eta, factor: 0.1, milestones, total_steps: cfg.steps }
+            }
+            Some("corollary1") => LrSchedule::Corollary1 { eta0: eta, k: cfg.workers, total_steps: cfg.steps },
+            Some(other) => return Err(format!("unknown lr_schedule {other}")),
+        };
+        if let Some(v) = get_f32("hyper.mu")? {
+            cfg.hyper.mu = v;
+        }
+        if let Some(v) = get_f32("hyper.weight_decay")? {
+            cfg.hyper.weight_decay = v;
+        }
+        if let Some(v) = get_usize("hyper.period")? {
+            cfg.hyper.period = v.max(1) as u64;
+        }
+        if let Some(v) = get_f32("hyper.gamma")? {
+            cfg.hyper.gamma = v;
+        }
+        if let Some(v) = get_str("compressor") {
+            if crate::compress::parse(&v).is_none() {
+                return Err(format!("unknown compressor spec {v}"));
+            }
+            cfg.compressor = Some(v);
+        }
+        // workload
+        if let Some(kind) = get_str("workload.kind") {
+            cfg.workload = match kind.as_str() {
+                "quadratic" => WorkloadConfig::Quadratic {
+                    dim: get_usize("workload.dim")?.unwrap_or(64),
+                    heterogeneity: get_f32("workload.heterogeneity")?.unwrap_or(1.0),
+                    noise: get_f32("workload.noise")?.unwrap_or(0.1),
+                },
+                "logistic" => WorkloadConfig::Logistic {
+                    n: get_usize("workload.n")?.unwrap_or(4000),
+                    dim: get_usize("workload.dim")?.unwrap_or(32),
+                    classes: get_usize("workload.classes")?.unwrap_or(10),
+                    batch: get_usize("workload.batch")?.unwrap_or(16),
+                    l2: get_f32("workload.l2")?.unwrap_or(1e-4),
+                },
+                "mlp" => WorkloadConfig::Mlp {
+                    n: get_usize("workload.n")?.unwrap_or(4000),
+                    dim: get_usize("workload.dim")?.unwrap_or(32),
+                    classes: get_usize("workload.classes")?.unwrap_or(10),
+                    hidden: get_usize("workload.hidden")?.unwrap_or(64),
+                    batch: get_usize("workload.batch")?.unwrap_or(16),
+                },
+                "transformer" => WorkloadConfig::Transformer {
+                    model: get_str("workload.model").unwrap_or_else(|| "tiny".into()),
+                    artifacts_dir: get_str("workload.artifacts_dir")
+                        .unwrap_or_else(|| "artifacts".into()),
+                },
+                _ => return Err(format!("unknown workload {kind}")),
+            };
+        }
+        // cost model
+        if let Some(v) = get_f32("cost.alpha")? {
+            cfg.cost_model.alpha = v as f64;
+        }
+        if let Some(v) = get_f32("cost.beta")? {
+            cfg.cost_model.beta = v as f64;
+        }
+        if let Some(v) = get_f32("cost.step_seconds")? {
+            cfg.cost_model.step_seconds = v as f64;
+        }
+        if let Some(v) = get_str("out_dir") {
+            cfg.out_dir = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        if !(0.0..1.0).contains(&self.hyper.mu) {
+            return Err(format!("mu must be in [0,1), got {}", self.hyper.mu));
+        }
+        if self.hyper.period == 0 {
+            return Err("period must be >= 1".into());
+        }
+        if self.hyper.gamma <= 0.0 {
+            return Err("gamma must be > 0".into());
+        }
+        if self.eval_every == 0 {
+            return Err("eval_every must be >= 1".into());
+        }
+        if self.topology == Topology::Hypercube && !self.workers.is_power_of_two() {
+            return Err("hypercube topology requires workers to be a power of two".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Paper §5.1 CIFAR-10-style setup, MLP proxy workload.
+name = "fig1a"
+algorithm = "pd-sgdm"
+workers = 8
+steps = 3000
+eval_every = 100
+seed = 7
+topology = "ring"
+weighting = "uniform"
+
+[sharding]
+kind = "dirichlet"
+alpha = 0.5
+
+[hyper]
+eta = 0.1
+mu = 0.9
+weight_decay = 1e-4
+period = 4
+lr_schedule = "step-decay"
+lr_milestones = [0.5, 0.75]
+
+[workload]
+kind = "mlp"
+n = 4000
+dim = 32
+classes = 10
+hidden = 64
+batch = 16
+
+[cost]
+alpha = 5e-5
+beta = 1.25e9
+step_seconds = 0.05
+"#;
+
+    #[test]
+    fn parses_sample_config() {
+        let cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.name, "fig1a");
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.hyper.period, 4);
+        assert_eq!(cfg.hyper.mu, 0.9);
+        assert_eq!(cfg.topology, Topology::Ring);
+        assert_eq!(cfg.sharding, Sharding::Dirichlet { alpha: 0.5 });
+        match cfg.workload {
+            WorkloadConfig::Mlp { hidden: 64, batch: 16, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        assert!((cfg.hyper.lr.eta(0) - 0.1).abs() < 1e-6);
+        assert!((cfg.hyper.lr.eta(2999) - 0.001).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let err = ExperimentConfig::from_toml_str("typo_key = 3").unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_algorithm() {
+        let err = ExperimentConfig::from_toml_str(r#"algorithm = "sgd9000""#).unwrap_err();
+        assert!(err.contains("unknown algorithm"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_mu() {
+        let err = ExperimentConfig::from_toml_str("[hyper]\nmu = 1.5").unwrap_err();
+        assert!(err.contains("mu"), "{err}");
+    }
+
+    #[test]
+    fn rejects_hypercube_with_non_power_of_two() {
+        let err =
+            ExperimentConfig::from_toml_str("workers = 6\ntopology = \"hypercube\"").unwrap_err();
+        assert!(err.contains("power of two"), "{err}");
+    }
+
+    #[test]
+    fn toml_scalars() {
+        let doc = parse_toml("a = 1\nb = 2.5\nc = \"x\"\nd = true\ne = [1, 2]").unwrap();
+        assert_eq!(doc["a"], TomlValue::Int(1));
+        assert_eq!(doc["b"], TomlValue::Float(2.5));
+        assert_eq!(doc["c"], TomlValue::Str("x".into()));
+        assert_eq!(doc["d"], TomlValue::Bool(true));
+        assert_eq!(doc["e"], TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Int(2)]));
+    }
+
+    #[test]
+    fn toml_sections_and_comments() {
+        let doc = parse_toml("# top\nx = 1 # inline\n[s]\ny = \"a # not comment\"").unwrap();
+        assert_eq!(doc["x"], TomlValue::Int(1));
+        assert_eq!(doc["s.y"], TomlValue::Str("a # not comment".into()));
+    }
+
+    #[test]
+    fn toml_rejects_duplicates_and_garbage() {
+        assert!(parse_toml("a = 1\na = 2").is_err());
+        assert!(parse_toml("[unclosed").is_err());
+        assert!(parse_toml("novalue =").is_err());
+        assert!(parse_toml("= 3").is_err());
+        assert!(parse_toml("x = [1, ").is_err());
+    }
+
+    #[test]
+    fn compressor_spec_validated() {
+        let cfg = ExperimentConfig::from_toml_str(r#"compressor = "sign""#).unwrap();
+        assert_eq!(cfg.compressor.as_deref(), Some("sign"));
+        assert!(ExperimentConfig::from_toml_str(r#"compressor = "zip99""#).is_err());
+    }
+
+    #[test]
+    fn corollary1_schedule_from_config() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "workers = 4\nsteps = 10000\n[hyper]\neta = 1.0\nlr_schedule = \"corollary1\"",
+        )
+        .unwrap();
+        let expect = (4.0f64 / 10000.0).sqrt() as f32;
+        assert!((cfg.hyper.lr.eta(0) - expect).abs() < 1e-7);
+    }
+
+    #[test]
+    fn defaults_are_paper_settings() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.workers, 8); // paper: 8 workers
+        assert_eq!(cfg.topology, Topology::Ring); // paper: ring
+        assert_eq!(cfg.hyper.mu, 0.9); // paper: 0.9
+        assert!(cfg.validate().is_ok());
+    }
+}

@@ -1,0 +1,325 @@
+//! The training driver: wires config → (topology, algorithm, oracle,
+//! network) and runs the synchronous decentralized loop, recording the
+//! paper's observables at every eval point.
+//!
+//! Two entry points:
+//!
+//! * [`run`] — drive any prepared `(Algorithm, GradientSource, Network)`
+//!   triple for `steps` iterations (what the figure benches call in
+//!   sweeps).
+//! * [`Experiment`] — build all of the above from an
+//!   [`ExperimentConfig`] (what the CLI and examples use); supports all
+//!   pure-Rust workloads and, when `workload.kind = "transformer"`, the
+//!   XLA runtime path.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::algorithms::{self, Algorithm};
+use crate::comm::{CostModel, Network};
+use crate::config::{ExperimentConfig, WorkloadConfig};
+use crate::data::Blobs;
+use crate::grad::{GradientSource, Logistic, Mlp, Quadratic};
+use crate::metrics::{Trace, TracePoint};
+use crate::topology;
+
+/// Options for the driver loop.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOpts {
+    pub steps: u64,
+    pub eval_every: u64,
+    pub cost_model: CostModel,
+    /// Print progress lines to stderr.
+    pub verbose: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        Self {
+            steps: 1000,
+            eval_every: 50,
+            cost_model: CostModel::default(),
+            verbose: false,
+        }
+    }
+}
+
+/// Drive `algo` on `source` over `net` for `opts.steps` iterations.
+///
+/// At every `eval_every` boundary (and at the final step) records a
+/// [`TracePoint`] with the paper's y-axes: global loss/accuracy at the
+/// averaged iterate x̄_t, cumulative comm-MB, consensus error, and the
+/// α–β simulated wall-clock.
+pub fn run(
+    algo: &mut dyn Algorithm,
+    source: &mut dyn GradientSource,
+    net: &mut Network,
+    opts: RunOpts,
+) -> Trace {
+    let mut trace = Trace::new(algo.name());
+    let mut sim_seconds = 0.0f64;
+    // Cumulative wire bytes from StepStats: equals net.total_bytes for
+    // decentralized algorithms (they meter through the Network) and also
+    // covers centralized baselines (C-SGDM's parameter-server up+down
+    // traffic never crosses the gossip topology).
+    let mut cum_bytes = 0u64;
+    let links_per_worker = if net.k() > 1 { net.neighbors(0).len().max(1) } else { 0 };
+
+    let mut eval_and_push = |t: u64,
+                             algo: &dyn Algorithm,
+                             source: &mut dyn GradientSource,
+                             cum_bytes: u64,
+                             sim_seconds: f64,
+                             trace: &mut Trace| {
+        let xbar = algo.avg_params();
+        let m = source.eval(&xbar);
+        trace.push(TracePoint {
+            step: t,
+            loss: m.loss,
+            accuracy: m.accuracy,
+            comm_mb: cum_bytes as f64 / (1024.0 * 1024.0),
+            consensus: algo.consensus_error(),
+            grad_norm_sq: m.grad_norm_sq,
+            sim_seconds,
+        });
+    };
+
+    eval_and_push(0, algo, source, cum_bytes, sim_seconds, &mut trace);
+    for t in 0..opts.steps {
+        let stats = algo.step(t, source, net);
+        sim_seconds += opts.cost_model.step_seconds;
+        cum_bytes += stats.bytes;
+        if stats.communicated && stats.bytes > 0 {
+            let per_link = stats.bytes as usize / (algo.k().max(1) * links_per_worker.max(1));
+            sim_seconds += opts.cost_model.round_seconds(links_per_worker, per_link);
+        }
+        if (t + 1) % opts.eval_every == 0 || t + 1 == opts.steps {
+            eval_and_push(t + 1, algo, source, cum_bytes, sim_seconds, &mut trace);
+            if opts.verbose {
+                let last = trace.points.last().unwrap();
+                eprintln!(
+                    "[{}] step {:>6}  loss {:.4}  acc {:.3}  comm {:.2} MB  consensus {:.3e}",
+                    trace.label, last.step, last.loss, last.accuracy, last.comm_mb, last.consensus
+                );
+            }
+        }
+    }
+    trace
+}
+
+/// A fully-materialized experiment: algorithm + oracle + network.
+pub struct Experiment {
+    pub config: ExperimentConfig,
+    pub algo: Box<dyn Algorithm>,
+    pub source: Box<dyn GradientSource>,
+    pub net: Network,
+    /// Spectral gap of the built mixing matrix (logged with results).
+    pub rho: f64,
+}
+
+impl Experiment {
+    /// Build everything from a config. Transformer workloads require the
+    /// artifacts directory (see `make artifacts`).
+    pub fn build(config: ExperimentConfig) -> Result<Self> {
+        config.validate().map_err(|e| anyhow!(e))?;
+        let k = config.workers;
+        let (graph, w, rho) =
+            topology::build(config.topology, k, config.weighting, config.seed);
+        let net = Network::new(&graph);
+
+        let source: Box<dyn GradientSource> = match &config.workload {
+            WorkloadConfig::Quadratic { dim, heterogeneity, noise } => Box::new(
+                Quadratic::new(k, *dim, *heterogeneity, *noise, config.seed),
+            ),
+            WorkloadConfig::Logistic { n, dim, classes, batch, l2 } => {
+                let data = Blobs { n: *n, dim: *dim, classes: *classes, spread: 3.0 }
+                    .generate(config.seed);
+                Box::new(Logistic::new(data, k, config.sharding, *batch, *l2, config.seed))
+            }
+            WorkloadConfig::Mlp { n, dim, classes, hidden, batch } => {
+                let data = Blobs { n: *n, dim: *dim, classes: *classes, spread: 3.0 }
+                    .generate(config.seed);
+                Box::new(Mlp::new(
+                    data,
+                    k,
+                    config.sharding,
+                    *hidden,
+                    *batch,
+                    0.2,
+                    config.seed,
+                ))
+            }
+            WorkloadConfig::Transformer { model, artifacts_dir } => {
+                let rt = crate::runtime::Runtime::new(artifacts_dir.clone())?;
+                let step = rt.train_step(model)?;
+                // ~64 windows per worker is plenty for a few hundred steps
+                let corpus = (step.manifest.seq_len + 1) * 64 * k + (step.manifest.seq_len + 1) * 8;
+                Box::new(crate::runtime::XlaGradSource::new(step, k, corpus, config.seed)?)
+            }
+        };
+
+        let x0 = source.init(config.seed);
+        let compressor = config
+            .compressor
+            .as_deref()
+            .map(|s| crate::compress::parse(s).expect("validated by config"));
+        let algo = algorithms::by_name(
+            &config.algorithm,
+            k,
+            x0,
+            w,
+            config.hyper.clone(),
+            compressor,
+            config.seed,
+        )
+        .ok_or_else(|| anyhow!("unknown algorithm {}", config.algorithm))?;
+
+        Ok(Self { config, algo, source, net, rho })
+    }
+
+    /// Run to completion and return the trace.
+    pub fn run(&mut self, verbose: bool) -> Trace {
+        let opts = RunOpts {
+            steps: self.config.steps,
+            eval_every: self.config.eval_every,
+            cost_model: self.config.cost_model,
+            verbose,
+        };
+        run(self.algo.as_mut(), self.source.as_mut(), &mut self.net, opts)
+    }
+}
+
+/// Binary checkpoint of the averaged iterate: magic, d, then f32 LE data.
+/// (Own format — no serde in this environment; round-trip tested below.)
+pub fn save_checkpoint(path: &Path, x: &[f32]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut buf = Vec::with_capacity(8 + 8 + 4 * x.len());
+    buf.extend_from_slice(b"PDSGDM01");
+    buf.extend_from_slice(&(x.len() as u64).to_le_bytes());
+    for v in x {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, buf)?;
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path) -> Result<Vec<f32>> {
+    let buf = std::fs::read(path)?;
+    if buf.len() < 16 || &buf[..8] != b"PDSGDM01" {
+        anyhow::bail!("{path:?}: not a pdsgdm checkpoint");
+    }
+    let d = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    if buf.len() != 16 + 4 * d {
+        anyhow::bail!("{path:?}: truncated checkpoint (d={d}, len={})", buf.len());
+    }
+    Ok(buf[16..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn quick_config(algorithm: &str) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.algorithm = algorithm.into();
+        c.workers = 4;
+        c.steps = 60;
+        c.eval_every = 20;
+        c.workload = WorkloadConfig::Quadratic { dim: 16, heterogeneity: 1.0, noise: 0.05 };
+        c.hyper.lr = crate::optim::LrSchedule::Constant { eta: 0.05 };
+        c
+    }
+
+    #[test]
+    fn experiment_builds_and_runs_every_algorithm() {
+        for name in crate::algorithms::ALL_NAMES {
+            let mut exp = Experiment::build(quick_config(name)).unwrap();
+            let trace = exp.run(false);
+            // t=0 point + 3 eval points
+            assert_eq!(trace.points.len(), 4, "{name}");
+            assert!(trace.final_loss().is_finite(), "{name}");
+            assert!(
+                trace.final_loss() < trace.points[0].loss,
+                "{name}: no progress"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_comm_mb_is_monotone() {
+        let mut exp = Experiment::build(quick_config("pd-sgdm")).unwrap();
+        let trace = exp.run(false);
+        for w in trace.points.windows(2) {
+            assert!(w[1].comm_mb >= w[0].comm_mb);
+            assert!(w[1].sim_seconds >= w[0].sim_seconds);
+        }
+    }
+
+    #[test]
+    fn rho_matches_topology() {
+        let mut c = quick_config("pd-sgdm");
+        c.topology = crate::topology::Topology::Complete;
+        let exp = Experiment::build(c).unwrap();
+        assert!((exp.rho - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eval_cadence_includes_final_partial_window() {
+        let mut c = quick_config("pd-sgdm");
+        c.steps = 50;
+        c.eval_every = 20; // evals at 20, 40 and the final 50
+        let mut exp = Experiment::build(c).unwrap();
+        let trace = exp.run(false);
+        let steps: Vec<u64> = trace.points.iter().map(|p| p.step).collect();
+        assert_eq!(steps, vec![0, 20, 40, 50]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pdsgdm_ckpt_{}", std::process::id()));
+        let path = dir.join("x.ckpt");
+        let x: Vec<f32> = (0..100).map(|i| i as f32 * 0.25 - 7.0).collect();
+        save_checkpoint(&path, &x).unwrap();
+        let y = load_checkpoint(&path).unwrap();
+        assert_eq!(x, y);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_rejects_corruption() {
+        let dir = std::env::temp_dir().join(format!("pdsgdm_ckpt2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxx").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        // truncated
+        let x = vec![1.0f32; 10];
+        save_checkpoint(&path, &x).unwrap();
+        let mut buf = std::fs::read(&path).unwrap();
+        buf.truncate(buf.len() - 3);
+        std::fs::write(&path, buf).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn transformer_workload_errors_cleanly_without_artifacts() {
+        let mut c = quick_config("pd-sgdm");
+        c.workload = WorkloadConfig::Transformer {
+            model: "tiny".into(),
+            artifacts_dir: "/definitely/not/here".into(),
+        };
+        let err = match Experiment::build(c) {
+            Ok(_) => panic!("should fail without artifacts"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,350 @@
+//! Synthetic datasets + decentralized sharding.
+//!
+//! The paper trains on CIFAR-10/ImageNet; the repro band gates those, so
+//! per DESIGN.md §2 we substitute synthetic workloads that exercise the
+//! same optimizer behaviour:
+//!
+//! * [`Blobs`] — a K-class Gaussian-mixture classification set (the
+//!   "CIFAR-10 proxy" for the Figure 1/2/3 benches, consumed by the MLP
+//!   and logistic gradient sources).
+//! * [`MarkovCorpus`] — a token stream from a random sparse Markov chain
+//!   (learnable structure; the transformer's e2e workload).
+//! * [`Sharding`] — iid and Dirichlet non-iid partitions across workers,
+//!   the standard way to control inter-worker heterogeneity (the paper's
+//!   D^(k) distributions).
+
+use crate::rng::Xoshiro256;
+
+/// Dense classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub features: Vec<Vec<f32>>,
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.features.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.features.first().map(|f| f.len()).unwrap_or(0)
+    }
+}
+
+/// Gaussian blobs: `n` points, `classes` isotropic clusters in `dim`-D
+/// with inter-center distance controlled by `spread` (larger = easier).
+pub struct Blobs {
+    pub n: usize,
+    pub dim: usize,
+    pub classes: usize,
+    pub spread: f32,
+}
+
+impl Blobs {
+    pub fn generate(&self, seed: u64) -> Dataset {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let centers: Vec<Vec<f32>> = (0..self.classes)
+            .map(|_| rng.normal_vec(self.dim, self.spread))
+            .collect();
+        let mut features = Vec::with_capacity(self.n);
+        let mut labels = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let c = i % self.classes; // balanced classes
+            let mut x = rng.normal_vec(self.dim, 1.0);
+            for (xi, ci) in x.iter_mut().zip(&centers[c]) {
+                *xi += ci;
+            }
+            features.push(x);
+            labels.push(c);
+        }
+        // Shuffle so shards don't stripe by class.
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut idx);
+        Dataset {
+            features: idx.iter().map(|&i| features[i].clone()).collect(),
+            labels: idx.iter().map(|&i| labels[i]).collect(),
+            n_classes: self.classes,
+        }
+    }
+}
+
+/// Token corpus from a random sparse first-order Markov chain over a
+/// `vocab`-symbol alphabet. Each state transitions to `branching`
+/// successors with Zipf-ish probabilities, so next-token entropy is far
+/// below log(vocab) — a transformer that learns the chain drops its loss
+/// well under ln(V), which is what the e2e driver's loss curve shows.
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    pub branching: usize,
+    pub tokens: usize,
+}
+
+impl MarkovCorpus {
+    pub fn generate(&self, seed: u64) -> Vec<u32> {
+        assert!(self.branching >= 1 && self.branching <= self.vocab);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        // successor table + unnormalized Zipf weights
+        let succ: Vec<Vec<usize>> = (0..self.vocab)
+            .map(|_| rng.sample_indices(self.vocab, self.branching))
+            .collect();
+        let weights: Vec<f64> = (1..=self.branching).map(|r| 1.0 / r as f64).collect();
+        let wsum: f64 = weights.iter().sum();
+
+        let mut out = Vec::with_capacity(self.tokens);
+        let mut state = rng.below(self.vocab);
+        for _ in 0..self.tokens {
+            out.push(state as u32);
+            let mut u = rng.next_f64() * wsum;
+            let mut next = succ[state][self.branching - 1];
+            for (j, w) in weights.iter().enumerate() {
+                if u < *w {
+                    next = succ[state][j];
+                    break;
+                }
+                u -= w;
+            }
+            state = next;
+        }
+        out
+    }
+
+    /// Per-token entropy of the chain (nats) — lower bound on achievable
+    /// next-token loss (reported next to the e2e loss curve).
+    pub fn entropy_nats(&self) -> f64 {
+        let weights: Vec<f64> = (1..=self.branching).map(|r| 1.0 / r as f64).collect();
+        let wsum: f64 = weights.iter().sum();
+        -weights.iter().map(|w| (w / wsum) * (w / wsum).ln()).sum::<f64>()
+    }
+}
+
+/// How to split a dataset across K workers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sharding {
+    /// Round-robin (iid shards) — the paper's homogeneous-data setting.
+    Iid,
+    /// Dirichlet(alpha) label-skew: each class's examples are divided
+    /// among workers by a Dirichlet draw. Small alpha => heterogeneous
+    /// D^(k) (large inter-worker gradient variance).
+    Dirichlet { alpha: f64 },
+}
+
+/// Partition `data` into K index shards.
+pub fn shard_indices(data: &Dataset, k: usize, sharding: Sharding, seed: u64) -> Vec<Vec<usize>> {
+    assert!(k >= 1);
+    let mut shards = vec![Vec::new(); k];
+    match sharding {
+        Sharding::Iid => {
+            for i in 0..data.len() {
+                shards[i % k].push(i);
+            }
+        }
+        Sharding::Dirichlet { alpha } => {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            for c in 0..data.n_classes {
+                let members: Vec<usize> =
+                    (0..data.len()).filter(|&i| data.labels[i] == c).collect();
+                let probs = rng.dirichlet(alpha, k);
+                // proportional assignment with largest-remainder rounding
+                let mut cuts: Vec<usize> = probs
+                    .iter()
+                    .map(|p| (p * members.len() as f64).floor() as usize)
+                    .collect();
+                let mut assigned: usize = cuts.iter().sum();
+                while assigned < members.len() {
+                    let j = rng.below(k);
+                    cuts[j] += 1;
+                    assigned += 1;
+                }
+                let mut it = members.into_iter();
+                for (w, &cut) in cuts.iter().enumerate() {
+                    for _ in 0..cut {
+                        if let Some(i) = it.next() {
+                            shards[w].push(i);
+                        }
+                    }
+                }
+            }
+            // Guarantee no empty shard (steal from the largest).
+            for w in 0..k {
+                if shards[w].is_empty() {
+                    let biggest = (0..k).max_by_key(|&j| shards[j].len()).unwrap();
+                    let donated = shards[biggest].pop().expect("dataset too small to shard");
+                    shards[w].push(donated);
+                }
+            }
+        }
+    }
+    shards
+}
+
+/// Cyclic minibatch sampler over one worker's shard.
+#[derive(Clone, Debug)]
+pub struct BatchIter {
+    indices: Vec<usize>,
+    cursor: usize,
+    rng: Xoshiro256,
+}
+
+impl BatchIter {
+    pub fn new(indices: Vec<usize>, seed: u64) -> Self {
+        assert!(!indices.is_empty(), "empty shard");
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut idx = indices;
+        rng.shuffle(&mut idx);
+        Self { indices: idx, cursor: 0, rng }
+    }
+
+    /// Next minibatch of (up to) `b` indices; reshuffles each epoch.
+    pub fn next_batch(&mut self, b: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(b);
+        for _ in 0..b {
+            if self.cursor == self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.cursor = 0;
+            }
+            out.push(self.indices[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn blobs_shapes_and_balance() {
+        let ds = Blobs { n: 200, dim: 10, classes: 4, spread: 3.0 }.generate(1);
+        assert_eq!(ds.len(), 200);
+        assert_eq!(ds.dim(), 10);
+        for c in 0..4 {
+            let count = ds.labels.iter().filter(|&&l| l == c).count();
+            assert_eq!(count, 50);
+        }
+    }
+
+    #[test]
+    fn blobs_are_separable_when_spread_large() {
+        // nearest-center classification should beat chance easily
+        let ds = Blobs { n: 400, dim: 8, classes: 4, spread: 8.0 }.generate(2);
+        // recompute centers from the labeled data, then check 1-NN-center acc
+        let mut centers = vec![vec![0.0f64; 8]; 4];
+        let mut counts = [0usize; 4];
+        for (x, &l) in ds.features.iter().zip(&ds.labels) {
+            counts[l] += 1;
+            for (c, &xi) in centers[l].iter_mut().zip(x) {
+                *c += xi as f64;
+            }
+        }
+        for (c, n) in centers.iter_mut().zip(counts) {
+            c.iter_mut().for_each(|v| *v /= n as f64);
+        }
+        let correct = ds
+            .features
+            .iter()
+            .zip(&ds.labels)
+            .filter(|(x, &l)| {
+                let d = |c: &Vec<f64>| -> f64 {
+                    x.iter().zip(c).map(|(&a, b)| (a as f64 - b).powi(2)).sum()
+                };
+                (0..4).min_by(|&a, &b| d(&centers[a]).total_cmp(&d(&centers[b]))).unwrap() == l
+            })
+            .count();
+        assert!(correct as f64 / ds.len() as f64 > 0.9);
+    }
+
+    #[test]
+    fn markov_corpus_in_vocab_and_deterministic() {
+        let gen = MarkovCorpus { vocab: 64, branching: 4, tokens: 5000 };
+        let a = gen.generate(7);
+        let b = gen.generate(7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (t as usize) < 64));
+        assert_eq!(a.len(), 5000);
+    }
+
+    #[test]
+    fn markov_entropy_below_log_vocab() {
+        let gen = MarkovCorpus { vocab: 1024, branching: 4, tokens: 0 };
+        assert!(gen.entropy_nats() < (1024f64).ln());
+        assert!(gen.entropy_nats() > 0.0);
+        // branching=1 chain is deterministic
+        let det = MarkovCorpus { vocab: 8, branching: 1, tokens: 0 };
+        assert!(det.entropy_nats().abs() < 1e-12);
+    }
+
+    #[test]
+    fn markov_bigram_structure_exists() {
+        // each state should have at most `branching` distinct successors
+        let gen = MarkovCorpus { vocab: 32, branching: 3, tokens: 20_000 };
+        let toks = gen.generate(9);
+        let mut succ = vec![std::collections::BTreeSet::new(); 32];
+        for w in toks.windows(2) {
+            succ[w[0] as usize].insert(w[1]);
+        }
+        assert!(succ.iter().all(|s| s.len() <= 3));
+    }
+
+    #[test]
+    fn prop_shards_partition_dataset() {
+        // Both sharders produce an exact partition: disjoint, covering.
+        forall(21, 20, |rng| {
+            let k = 1 + rng.below(8);
+            let n = k * (5 + rng.below(40));
+            let ds = Blobs { n, dim: 4, classes: 5, spread: 2.0 }.generate(rng.next_u64());
+            for sharding in [Sharding::Iid, Sharding::Dirichlet { alpha: 0.5 }] {
+                let shards = shard_indices(&ds, k, sharding, rng.next_u64());
+                let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+                all.sort_unstable();
+                assert_eq!(all, (0..n).collect::<Vec<_>>(), "{sharding:?}");
+                assert!(shards.iter().all(|s| !s.is_empty()), "{sharding:?} empty shard");
+            }
+        });
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_skews_labels() {
+        let ds = Blobs { n: 4000, dim: 2, classes: 10, spread: 1.0 }.generate(3);
+        let iid = shard_indices(&ds, 8, Sharding::Iid, 0);
+        let skew = shard_indices(&ds, 8, Sharding::Dirichlet { alpha: 0.1 }, 0);
+        // label-distribution total variation from uniform, averaged over workers
+        let tv = |shards: &Vec<Vec<usize>>| -> f64 {
+            shards
+                .iter()
+                .map(|s| {
+                    let mut hist = vec![0.0f64; 10];
+                    for &i in s {
+                        hist[ds.labels[i]] += 1.0;
+                    }
+                    let n: f64 = hist.iter().sum();
+                    hist.iter().map(|h| (h / n - 0.1).abs()).sum::<f64>() / 2.0
+                })
+                .sum::<f64>()
+                / shards.len() as f64
+        };
+        assert!(tv(&skew) > 3.0 * tv(&iid), "skew {} iid {}", tv(&skew), tv(&iid));
+    }
+
+    #[test]
+    fn batch_iter_cycles_with_reshuffle() {
+        let mut it = BatchIter::new(vec![10, 11, 12], 1);
+        let mut seen = Vec::new();
+        for _ in 0..4 {
+            seen.extend(it.next_batch(2));
+        }
+        assert_eq!(seen.len(), 8);
+        assert!(seen.iter().all(|i| (10..13).contains(i)));
+        // each element appears >= 2 times across ~2.67 epochs
+        for v in 10..13 {
+            assert!(seen.iter().filter(|&&x| x == v).count() >= 2);
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! # pdsgdm — Periodic Decentralized Momentum SGD
+//!
+//! Reproduction of Gao & Huang (2020), *"Periodic Stochastic Gradient
+//! Descent with Momentum for Decentralized Training"*, as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the decentralized-training coordinator:
+//!   topologies & mixing matrices ([`topology`]), δ-contraction
+//!   compression ([`compress`]), the simulated byte-metered network
+//!   ([`comm`]), the paper's two algorithms plus six baselines
+//!   ([`algorithms`]), gradient oracles ([`grad`]), the PJRT runtime that
+//!   executes the AOT-compiled JAX/Pallas artifacts ([`runtime`]), and
+//!   the training driver ([`coordinator`]).
+//! * **L2 (python/compile/model.py)** — a flat-parameter-vector decoder
+//!   transformer whose fused fwd+bwd is AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots (tiled matmul, fused momentum, gossip mixing).
+//!
+//! Python runs only at `make artifacts`; the binary is self-contained.
+//!
+//! See DESIGN.md for the paper -> module map and EXPERIMENTS.md for
+//! reproduced figures.
+
+pub mod algorithms;
+pub mod analysis;
+pub mod benchlib;
+pub mod comm;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod grad;
+pub mod json;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+pub mod topology;

@@ -1,0 +1,485 @@
+//! Dense vector/matrix primitives used by every layer of the coordinator.
+//!
+//! The paper's state objects are flat vectors `x in R^d` (one per worker)
+//! and small `K x K` mixing matrices, so this module provides exactly
+//! that: cache-friendly `f32` slice kernels (the L3 hot path — see
+//! EXPERIMENTS.md §Perf) plus a small row-major [`Mat`] with the
+//! spectral machinery (power iteration on `W - 11^T/K`) needed to compute
+//! the paper's spectral gap `rho = 1 - |lambda_2|`.
+
+/// y += a * x (the classic axpy). Hot path: momentum + consensus updates.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // 4-way unrolled so LLVM reliably autovectorizes without a SIMD crate.
+    let n = x.len();
+    let chunks = n / 4;
+    let (x4, xr) = x.split_at(chunks * 4);
+    let (y4, yr) = y.split_at_mut(chunks * 4);
+    for (xc, yc) in x4.chunks_exact(4).zip(y4.chunks_exact_mut(4)) {
+        yc[0] += a * xc[0];
+        yc[1] += a * xc[1];
+        yc[2] += a * xc[2];
+        yc[3] += a * xc[3];
+    }
+    for (xi, yi) in xr.iter().zip(yr.iter_mut()) {
+        *yi += a * xi;
+    }
+}
+
+/// y = a * x + b * y (scaled blend, used by momentum: m = mu*m + g).
+#[inline]
+pub fn axpby(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
+/// dst = Σ_i terms[i].0 · terms[i].1 in ONE pass over memory — the fused
+/// gossip accumulator (§Perf: one write pass instead of scale + per-term
+/// axpy read-modify-writes).
+pub fn weighted_sum_into(dst: &mut [f32], terms: &[(f32, &[f32])]) {
+    for (_, x) in terms {
+        debug_assert_eq!(x.len(), dst.len());
+    }
+    match terms {
+        [] => dst.iter_mut().for_each(|v| *v = 0.0),
+        [(a, x)] => {
+            for (d, xi) in dst.iter_mut().zip(*x) {
+                *d = a * xi;
+            }
+        }
+        [(a, x), (b, y)] => {
+            for ((d, xi), yi) in dst.iter_mut().zip(*x).zip(*y) {
+                *d = a * xi + b * yi;
+            }
+        }
+        [(a, x), (b, y), (c, z)] => {
+            // ring topology fast path: self + two neighbors
+            for (((d, xi), yi), zi) in dst.iter_mut().zip(*x).zip(*y).zip(*z) {
+                *d = a * xi + b * yi + c * zi;
+            }
+        }
+        [first @ (a, x), rest @ ..] => {
+            let _ = first;
+            for (d, xi) in dst.iter_mut().zip(*x) {
+                *d = a * xi;
+            }
+            for (w, y) in rest {
+                axpy(*w, y, dst);
+            }
+        }
+    }
+}
+
+/// Allocating form of [`weighted_sum_into`] that skips the zero-fill a
+/// `vec![0.0; d]` destination would pay (collect from an exact-size
+/// iterator writes each element exactly once).
+pub fn weighted_sum(terms: &[(f32, &[f32])], d: usize) -> Vec<f32> {
+    match terms {
+        [(a, x), (b, y), (c, z)] => {
+            // ring fast path: self + two neighbors, single fused pass
+            debug_assert!(x.len() == d && y.len() == d && z.len() == d);
+            x.iter()
+                .zip(*y)
+                .zip(*z)
+                .map(|((xi, yi), zi)| a * xi + b * yi + c * zi)
+                .collect()
+        }
+        [(a, x), (b, y)] => {
+            debug_assert!(x.len() == d && y.len() == d);
+            x.iter().zip(*y).map(|(xi, yi)| a * xi + b * yi).collect()
+        }
+        _ => {
+            let mut out = vec![0.0f32; d];
+            weighted_sum_into(&mut out, terms);
+            out
+        }
+    }
+}
+
+/// x *= a.
+#[inline]
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Dot product with f64 accumulation (d is in the millions; f32
+/// accumulation loses ~3 digits there).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+/// Euclidean norm (f64 accumulation).
+#[inline]
+pub fn norm(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ||x - y||_2.
+pub fn dist(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// out = mean of the rows (each `xs[k]` is a worker's x_k).
+pub fn mean_of(xs: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!xs.is_empty());
+    let d = xs[0].len();
+    let mut out = vec![0.0f32; d];
+    for x in xs {
+        axpy(1.0, x, &mut out);
+    }
+    scale(1.0 / xs.len() as f32, &mut out);
+    out
+}
+
+/// Consensus error `sum_k ||x_k - x_bar||^2` — the quantity bounded by
+/// the paper's Lemma 5 / Lemma 6.
+pub fn consensus_error(xs: &[Vec<f32>]) -> f64 {
+    let xbar = mean_of(xs);
+    xs.iter()
+        .map(|x| {
+            let e = dist(x, &xbar);
+            e * e
+        })
+        .sum()
+}
+
+/// Small dense row-major matrix (K x K mixing matrices, covariances).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// C = A B.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Row-stochastic check: W 1 = 1.
+    pub fn rows_sum_to_one(&self, tol: f64) -> bool {
+        (0..self.rows).all(|i| (self.row(i).iter().sum::<f64>() - 1.0).abs() <= tol)
+    }
+
+    /// Column-stochastic check: 1^T W = 1^T.
+    pub fn cols_sum_to_one(&self, tol: f64) -> bool {
+        (0..self.cols).all(|j| {
+            ((0..self.rows).map(|i| self[(i, j)]).sum::<f64>() - 1.0).abs() <= tol
+        })
+    }
+
+    /// Doubly-stochastic per the paper's Assumption 1 (plus symmetry and
+    /// entries in [0,1]).
+    pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
+        self.is_symmetric(tol)
+            && self.rows_sum_to_one(tol)
+            && self.cols_sum_to_one(tol)
+            && self.data.iter().all(|&w| (-tol..=1.0 + tol).contains(&w))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// |lambda_2(W)| for a symmetric doubly-stochastic W, via power iteration
+/// on the deflated operator `W - (1/K) 1 1^T` (whose leading eigenvalue
+/// is exactly lambda_2 of W, per the paper's Lemma 1).
+pub fn second_eigenvalue_magnitude(w: &Mat, iters: usize, seed: u64) -> f64 {
+    assert_eq!(w.rows, w.cols);
+    let n = w.rows;
+    if n == 1 {
+        return 0.0;
+    }
+    let mut rng = crate::rng::Xoshiro256::seed_from_u64(seed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    // Deflate the all-ones eigenvector and normalize.
+    let deflate = |v: &mut Vec<f64>| {
+        let mean = v.iter().sum::<f64>() / n as f64;
+        for vi in v.iter_mut() {
+            *vi -= mean;
+        }
+        let nrm = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+        for vi in v.iter_mut() {
+            *vi /= nrm;
+        }
+    };
+    deflate(&mut v);
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let mut wv = w.matvec(&v);
+        deflate(&mut wv);
+        // Rayleigh quotient |v^T W v| on the deflated subspace.
+        let wv2 = w.matvec(&wv);
+        lambda = wv.iter().zip(&wv2).map(|(a, b)| a * b).sum::<f64>().abs();
+        v = wv;
+    }
+    lambda.min(1.0)
+}
+
+/// Spectral gap rho = 1 - |lambda_2(W)| (paper §3.2).
+pub fn spectral_gap(w: &Mat, seed: u64) -> f64 {
+    1.0 - second_eigenvalue_magnitude(w, 400, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn axpy_matches_scalar() {
+        let x: Vec<f32> = (0..103).map(|i| i as f32 * 0.5).collect();
+        let mut y: Vec<f32> = (0..103).map(|i| -(i as f32)).collect();
+        let want: Vec<f32> = x.iter().zip(&y).map(|(a, b)| b + 2.5 * a).collect();
+        axpy(2.5, &x, &mut y);
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn axpby_momentum_form() {
+        // m = mu*m + g  is  axpby(1.0, g, mu, m)
+        let g = vec![1.0f32, 2.0, 3.0];
+        let mut m = vec![10.0f32, 20.0, 30.0];
+        axpby(1.0, &g, 0.9, &mut m);
+        assert_eq!(m, vec![10.0, 20.0, 30.0].iter().map(|v| v * 0.9).zip(&g).map(|(a, b)| a + b).collect::<Vec<f32>>());
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let x = vec![3.0f32, 4.0];
+        assert!((norm(&x) - 5.0).abs() < 1e-12);
+        assert!((dot(&x, &x) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_and_consensus() {
+        let xs = vec![vec![0.0f32, 2.0], vec![2.0, 0.0]];
+        assert_eq!(mean_of(&xs), vec![1.0, 1.0]);
+        // each worker deviates by sqrt(2) => total 2 + 2 = 4
+        assert!((consensus_error(&xs) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn consensus_error_zero_at_consensus() {
+        let xs = vec![vec![1.5f32; 7]; 4];
+        assert!(consensus_error(&xs) < 1e-12);
+    }
+
+    #[test]
+    fn mat_matvec_and_matmul() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        let b = a.matmul(&Mat::eye(2));
+        assert_eq!(b, a);
+        let t = a.transpose();
+        assert_eq!(t[(0, 1)], 3.0);
+    }
+
+    #[test]
+    fn stochastic_checks() {
+        let w = Mat::from_rows(&[
+            vec![0.5, 0.5, 0.0],
+            vec![0.5, 0.0, 0.5],
+            vec![0.0, 0.5, 0.5],
+        ]);
+        assert!(w.is_doubly_stochastic(1e-12));
+        let bad = Mat::from_rows(&[vec![0.9, 0.0], vec![0.1, 1.0]]);
+        assert!(!bad.is_doubly_stochastic(1e-12));
+    }
+
+    #[test]
+    fn second_eigenvalue_of_complete_graph() {
+        // W = (1/K) 1 1^T has lambda_2 = 0 => rho = 1.
+        let k = 6;
+        let w = Mat::from_rows(&vec![vec![1.0 / k as f64; k]; k]);
+        let l2 = second_eigenvalue_magnitude(&w, 200, 1);
+        assert!(l2 < 1e-8, "l2={l2}");
+        assert!((spectral_gap(&w, 1) - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn second_eigenvalue_of_identity() {
+        // W = I is disconnected: lambda_2 = 1 => rho = 0.
+        let w = Mat::eye(5);
+        let l2 = second_eigenvalue_magnitude(&w, 200, 2);
+        assert!((l2 - 1.0).abs() < 1e-9, "l2={l2}");
+    }
+
+    #[test]
+    fn second_eigenvalue_matches_known_ring() {
+        // Ring with (1/3,1/3,1/3) weights: lambda_j = (1+2cos(2 pi j/K))/3.
+        let k = 8usize;
+        let mut w = Mat::zeros(k, k);
+        for i in 0..k {
+            w[(i, i)] = 1.0 / 3.0;
+            w[(i, (i + 1) % k)] += 1.0 / 3.0;
+            w[(i, (i + k - 1) % k)] += 1.0 / 3.0;
+        }
+        let expect = (0..k)
+            .map(|j| ((1.0 + 2.0 * (2.0 * std::f64::consts::PI * j as f64 / k as f64).cos()) / 3.0).abs())
+            .filter(|_| true)
+            .fold(0.0f64, |acc, v| if (v - 1.0).abs() < 1e-12 { acc } else { acc.max(v) });
+        let got = second_eigenvalue_magnitude(&w, 500, 3);
+        assert!((got - expect).abs() < 1e-6, "got {got} want {expect}");
+    }
+
+    #[test]
+    fn power_iteration_seed_invariance() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        // random symmetric doubly-stochastic-ish: lazy metropolis of a random graph
+        let k = 10;
+        let mut w = Mat::eye(k);
+        for _ in 0..15 {
+            let i = rng.below(k);
+            let j = rng.below(k);
+            if i == j {
+                continue;
+            }
+            let eps = 0.02;
+            w[(i, i)] -= eps;
+            w[(j, j)] -= eps;
+            w[(i, j)] += eps;
+            w[(j, i)] += eps;
+        }
+        let a = second_eigenvalue_magnitude(&w, 2000, 1);
+        let b = second_eigenvalue_magnitude(&w, 2000, 99);
+        // near-degenerate spectra converge slowly; 1e-4 is ample for the
+        // rho values the experiments consume.
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[cfg(test)]
+mod weighted_sum_tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn prop_weighted_sum_matches_naive() {
+        forall(0x5E5, 30, |rng| {
+            let d = 1 + rng.below(200);
+            let n_terms = rng.below(5);
+            let vecs: Vec<Vec<f32>> = (0..n_terms).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let weights: Vec<f32> = (0..n_terms).map(|_| rng.normal_f32()).collect();
+            let terms: Vec<(f32, &[f32])> =
+                weights.iter().zip(&vecs).map(|(&w, v)| (w, v.as_slice())).collect();
+            let naive: Vec<f32> = (0..d)
+                .map(|i| terms.iter().map(|(w, v)| w * v[i]).sum())
+                .collect();
+            let got = weighted_sum(&terms, d);
+            crate::testing::assert_allclose(&got, &naive, 1e-5, 1e-6);
+            let mut into = vec![9.9f32; d];
+            weighted_sum_into(&mut into, &terms);
+            crate::testing::assert_allclose(&into, &naive, 1e-5, 1e-6);
+        });
+    }
+
+    #[test]
+    fn empty_terms_zero_out() {
+        let mut dst = vec![1.0f32; 4];
+        weighted_sum_into(&mut dst, &[]);
+        assert_eq!(dst, vec![0.0; 4]);
+        assert_eq!(weighted_sum(&[], 3), vec![0.0; 3]);
+    }
+}

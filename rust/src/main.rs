@@ -1,0 +1,264 @@
+//! `pdsgdm` — CLI launcher for the decentralized-training coordinator.
+//!
+//! Subcommands:
+//!
+//! * `train --config <file.toml> [--verbose] [--out <csv>]`
+//!   run one experiment from a config file, print the summary row, dump
+//!   the trace CSV and a final checkpoint.
+//! * `train [--algo A] [--workers K] [--steps T] [--period P] ...`
+//!   the same without a file, using flag overrides on the defaults.
+//! * `topology --kind ring --workers 8` — print W and its spectral gap.
+//! * `inspect --artifacts DIR --model NAME` — validate artifacts and show
+//!   the model manifest (d, layout, mix Ks).
+//! * `algorithms` — list implemented algorithms.
+//!
+//! (Arg parsing is in-crate: no clap in this offline build environment.)
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+use pdsgdm::config::ExperimentConfig;
+use pdsgdm::coordinator::{save_checkpoint, Experiment};
+use pdsgdm::metrics;
+use pdsgdm::topology::{mixing_matrix, Topology, Weighting};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = Flags::parse(rest)?;
+    match cmd.as_str() {
+        "train" => cmd_train(flags),
+        "topology" => cmd_topology(flags),
+        "inspect" => cmd_inspect(flags),
+        "algorithms" => {
+            for name in pdsgdm::algorithms::ALL_NAMES {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other}; try `pdsgdm help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "pdsgdm — Periodic Decentralized Momentum SGD (Gao & Huang 2020)\n\
+         \n\
+         USAGE:\n\
+           pdsgdm train   [--config FILE] [--algo NAME] [--workers K] [--steps T]\n\
+                          [--period P] [--eta F] [--mu F] [--gamma F] [--topology T]\n\
+                          [--compressor SPEC] [--workload W] [--seed N]\n\
+                          [--out CSV] [--ckpt FILE] [--verbose]\n\
+           pdsgdm topology --kind ring|chain|complete|star|torus|hypercube|regular-D\n\
+                          [--workers K] [--weighting uniform|metropolis|lazy-metropolis]\n\
+           pdsgdm inspect  [--artifacts DIR] [--model NAME]\n\
+           pdsgdm algorithms\n\
+         \n\
+         Workloads: quadratic | logistic | mlp | transformer (needs `make artifacts`).\n\
+         Compressors: sign | topR | randR | qsgdL | identity (R ratio, L levels)."
+    );
+}
+
+/// `--key value` / `--flag` parser.
+struct Flags {
+    map: BTreeMap<String, String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {a}"))?;
+            let boolean = ["verbose"].contains(&key);
+            if boolean {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+                map.insert(key.to_string(), val.clone());
+                i += 2;
+            }
+        }
+        Ok(Self { map })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("--{key}: cannot parse {v}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+}
+
+fn cmd_train(flags: Flags) -> Result<()> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path)).map_err(|e| anyhow!(e))?,
+        None => ExperimentConfig::default(),
+    };
+    // Flag overrides.
+    if let Some(a) = flags.get("algo") {
+        if !pdsgdm::algorithms::ALL_NAMES.contains(&a) {
+            bail!("unknown algorithm {a}; see `pdsgdm algorithms`");
+        }
+        cfg.algorithm = a.to_string();
+    }
+    if let Some(k) = flags.get_parse("workers")? {
+        cfg.workers = k;
+    }
+    if let Some(t) = flags.get_parse("steps")? {
+        cfg.steps = t;
+    }
+    if let Some(p) = flags.get_parse("period")? {
+        cfg.hyper.period = p;
+    }
+    if let Some(e) = flags.get_parse::<f32>("eta")? {
+        cfg.hyper.lr = pdsgdm::optim::LrSchedule::Constant { eta: e };
+    }
+    if let Some(m) = flags.get_parse("mu")? {
+        cfg.hyper.mu = m;
+    }
+    if let Some(g) = flags.get_parse("gamma")? {
+        cfg.hyper.gamma = g;
+    }
+    if let Some(s) = flags.get_parse("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(t) = flags.get("topology") {
+        cfg.topology = Topology::parse(t).ok_or_else(|| anyhow!("unknown topology {t}"))?;
+    }
+    if let Some(c) = flags.get("compressor") {
+        if pdsgdm::compress::parse(c).is_none() {
+            bail!("unknown compressor {c}");
+        }
+        cfg.compressor = Some(c.to_string());
+    }
+    if let Some(w) = flags.get("workload") {
+        cfg.workload = match w {
+            "quadratic" => pdsgdm::config::WorkloadConfig::Quadratic {
+                dim: 64,
+                heterogeneity: 1.0,
+                noise: 0.1,
+            },
+            "logistic" => pdsgdm::config::WorkloadConfig::Logistic {
+                n: 4000,
+                dim: 32,
+                classes: 10,
+                batch: 16,
+                l2: 1e-4,
+            },
+            "mlp" => pdsgdm::config::WorkloadConfig::Mlp {
+                n: 4000,
+                dim: 32,
+                classes: 10,
+                hidden: 64,
+                batch: 16,
+            },
+            "transformer" => pdsgdm::config::WorkloadConfig::Transformer {
+                model: flags.get("model").unwrap_or("tiny").to_string(),
+                artifacts_dir: flags.get("artifacts").unwrap_or("artifacts").to_string(),
+            },
+            other => bail!("unknown workload {other}"),
+        };
+    }
+    cfg.validate().map_err(|e| anyhow!(e))?;
+
+    eprintln!(
+        "building: {} | K={} {:?} | p={} mu={} | workload={:?}",
+        cfg.algorithm, cfg.workers, cfg.topology, cfg.hyper.period, cfg.hyper.mu, cfg.workload
+    );
+    let mut exp = Experiment::build(cfg)?;
+    eprintln!("spectral gap rho = {:.4}", exp.rho);
+    let trace = exp.run(flags.has("verbose"));
+    print!("{}", metrics::summary_table(std::slice::from_ref(&trace)));
+
+    if let Some(out) = flags.get("out") {
+        metrics::write_csv(Path::new(out), std::slice::from_ref(&trace))?;
+        eprintln!("trace -> {out}");
+    }
+    if let Some(ckpt) = flags.get("ckpt") {
+        save_checkpoint(Path::new(ckpt), &exp.algo.avg_params())?;
+        eprintln!("checkpoint -> {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_topology(flags: Flags) -> Result<()> {
+    let kind = flags.get("kind").unwrap_or("ring");
+    let k: usize = flags.get_parse("workers")?.unwrap_or(8);
+    let topo = Topology::parse(kind).ok_or_else(|| anyhow!("unknown topology {kind}"))?;
+    let weighting = match flags.get("weighting").unwrap_or("uniform") {
+        "uniform" => Weighting::UniformDegree,
+        "metropolis" => Weighting::Metropolis,
+        "lazy-metropolis" => Weighting::LazyMetropolis,
+        other => bail!("unknown weighting {other}"),
+    };
+    let g = topo.build(k, flags.get_parse("seed")?.unwrap_or(0));
+    let w = mixing_matrix(&g, weighting);
+    let rho = pdsgdm::linalg::spectral_gap(&w, 1);
+    println!("topology: {kind}  K={k}  edges={}  rho={rho:.6}", g.edge_count());
+    println!("Theorem 1 consensus amplification (1 + 4/rho^2) = {:.2}", 1.0 + 4.0 / (rho * rho));
+    println!("W =");
+    for i in 0..k {
+        let row: Vec<String> = (0..k).map(|j| format!("{:.3}", w[(i, j)])).collect();
+        println!("  [{}]", row.join(" "));
+    }
+    Ok(())
+}
+
+fn cmd_inspect(flags: Flags) -> Result<()> {
+    let dir = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
+    let model = flags.get("model").unwrap_or("tiny");
+    let rt = pdsgdm::runtime::Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let m = rt.manifest(model)?;
+    println!(
+        "model {}: d={} vocab={} seq={} batch={} layers={} mix_ks={:?}",
+        m.name, m.d, m.vocab, m.seq_len, m.batch, m.n_layers, m.mix_ks
+    );
+    println!("layout ({} tensors):", m.layout.len());
+    for e in &m.layout {
+        println!("  {:<18} offset {:>9}  shape {:?}", e.name, e.offset, e.shape);
+    }
+    // compile-check all three artifact kinds
+    let _ = rt.train_step(model)?;
+    println!("train_step_{model}.hlo.txt: compiles OK");
+    let _ = rt.momentum_step(model)?;
+    println!("momentum_{model}.hlo.txt: compiles OK");
+    for k in &m.mix_ks {
+        let _ = rt.mix_step(model, *k)?;
+        println!("mix_k{k}_{model}.hlo.txt: compiles OK");
+    }
+    Ok(())
+}

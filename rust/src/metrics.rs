@@ -1,0 +1,213 @@
+//! Experiment observability: training traces, CSV/JSONL sinks.
+//!
+//! Every figure bench and example records a [`Trace`] — the series of
+//! (iteration, loss, accuracy, comm-MB, consensus error, simulated
+//! seconds) points that map one-to-one onto the paper's plot axes —
+//! and dumps it as CSV (for plotting) and/or JSONL (for tooling).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::json::{obj, Json};
+
+/// One evaluation point along a training run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TracePoint {
+    /// Global iteration t.
+    pub step: u64,
+    /// Full-data global loss f(x̄_t).
+    pub loss: f64,
+    /// Held-out accuracy (0 for regression problems).
+    pub accuracy: f64,
+    /// Cumulative communication, MiB (Figure 2 x-axis).
+    pub comm_mb: f64,
+    /// Σ_k ||x_k − x̄||² (Lemma 5/6 diagnostics).
+    pub consensus: f64,
+    /// ||∇f(x̄)||² (the theorems' left-hand side).
+    pub grad_norm_sq: f64,
+    /// Simulated wall-clock under the α–β cost model.
+    pub sim_seconds: f64,
+}
+
+/// A labeled training run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub label: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.points.last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.points.last().map(|p| p.accuracy).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_comm_mb(&self) -> f64 {
+        self.points.last().map(|p| p.comm_mb).unwrap_or(0.0)
+    }
+
+    /// First step at which loss drops below `target` (linear-speedup
+    /// ablation metric); None if never reached.
+    pub fn steps_to_loss(&self, target: f64) -> Option<u64> {
+        self.points.iter().find(|p| p.loss <= target).map(|p| p.step)
+    }
+
+    /// Best (minimum) loss along the run — robust to end-of-run noise.
+    pub fn best_loss(&self) -> f64 {
+        self.points.iter().map(|p| p.loss).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn csv_header() -> &'static str {
+        "label,step,loss,accuracy,comm_mb,consensus,grad_norm_sq,sim_seconds"
+    }
+
+    pub fn to_csv_rows(&self) -> String {
+        let mut s = String::new();
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{},{:.6e},{:.4},{:.4},{:.6e},{:.6e},{:.3}\n",
+                self.label, p.step, p.loss, p.accuracy, p.comm_mb, p.consensus,
+                p.grad_norm_sq, p.sim_seconds
+            ));
+        }
+        s
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::new();
+        for p in &self.points {
+            let rec = obj(vec![
+                ("label", Json::Str(self.label.clone())),
+                ("step", Json::Num(p.step as f64)),
+                ("loss", Json::Num(p.loss)),
+                ("accuracy", Json::Num(p.accuracy)),
+                ("comm_mb", Json::Num(p.comm_mb)),
+                ("consensus", Json::Num(p.consensus)),
+                ("grad_norm_sq", Json::Num(p.grad_norm_sq)),
+                ("sim_seconds", Json::Num(p.sim_seconds)),
+            ]);
+            s.push_str(&rec.to_string_compact());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Write a set of traces as one CSV file (header + all rows).
+pub fn write_csv(path: &Path, traces: &[Trace]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", Trace::csv_header())?;
+    for t in traces {
+        f.write_all(t.to_csv_rows().as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Console table: one row per trace with the headline numbers — this is
+/// the "same rows the paper reports" output of each figure bench.
+pub fn summary_table(traces: &[Trace]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<34} {:>12} {:>10} {:>12} {:>14}\n",
+        "run", "final_loss", "final_acc", "comm_MB", "consensus"
+    ));
+    for t in traces {
+        let last = t.points.last().copied().unwrap_or_default();
+        s.push_str(&format!(
+            "{:<34} {:>12.4} {:>10.4} {:>12.2} {:>14.4e}\n",
+            t.label, last.loss, last.accuracy, last.comm_mb, last.consensus
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut t = Trace::new("pd-sgdm(p=4)");
+        for i in 0..5 {
+            t.push(TracePoint {
+                step: i * 10,
+                loss: 2.0 / (i + 1) as f64,
+                accuracy: 0.2 * i as f64,
+                comm_mb: i as f64,
+                consensus: 1e-3,
+                grad_norm_sq: 0.5,
+                sim_seconds: i as f64 * 0.1,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn accessors() {
+        let t = sample();
+        assert_eq!(t.final_loss(), 0.4);
+        assert_eq!(t.final_accuracy(), 0.8);
+        assert_eq!(t.total_comm_mb(), 4.0);
+        assert_eq!(t.best_loss(), 0.4);
+        assert_eq!(t.steps_to_loss(1.0), Some(10));
+        assert_eq!(t.steps_to_loss(0.01), None);
+    }
+
+    #[test]
+    fn csv_roundtrip_field_count() {
+        let t = sample();
+        let rows = t.to_csv_rows();
+        for line in rows.lines() {
+            assert_eq!(line.split(',').count(), Trace::csv_header().split(',').count());
+        }
+    }
+
+    #[test]
+    fn jsonl_parses_back() {
+        let t = sample();
+        for line in t.to_jsonl().lines() {
+            let v = crate::json::Json::parse(line).unwrap();
+            assert_eq!(v.get("label").unwrap().as_str(), Some("pd-sgdm(p=4)"));
+            assert!(v.get("loss").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn write_csv_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("pdsgdm_test_{}", std::process::id()));
+        let path = dir.join("deep/nested/out.csv");
+        write_csv(&path, &[sample()]).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("label,step"));
+        assert_eq!(content.lines().count(), 6);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn summary_has_one_row_per_trace() {
+        let s = summary_table(&[sample(), sample()]);
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.contains("pd-sgdm(p=4)"));
+    }
+
+    #[test]
+    fn empty_trace_is_safe() {
+        let t = Trace::new("empty");
+        assert!(t.final_loss().is_nan());
+        assert_eq!(t.total_comm_mb(), 0.0);
+        assert_eq!(summary_table(&[t]).lines().count(), 2);
+    }
+}

@@ -1,0 +1,215 @@
+//! Local-optimizer substrate: momentum buffers, LR schedules, weight decay.
+//!
+//! The inner loop of both paper algorithms (Alg. 1/2 lines 2–4) is the
+//! heavy-ball update Eq. (8):
+//!
+//! ```text
+//! m_t       = mu * m_{t-1} + g_t
+//! x_{t+1/2} = x_t - eta_t * m_t
+//! ```
+//!
+//! [`MomentumState::step`] is the fused in-process version of the L1
+//! Pallas kernel (`python/compile/kernels/momentum.py`); the XLA path in
+//! `runtime::MomentumStep` executes the compiled artifact instead. Both
+//! compute identical math — cross-checked by rust/tests/runtime_integration.rs.
+
+use crate::linalg;
+
+/// Per-worker momentum buffer + hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct MomentumState {
+    pub mu: f32,
+    pub weight_decay: f32,
+    pub m: Vec<f32>,
+}
+
+impl MomentumState {
+    pub fn new(d: usize, mu: f32, weight_decay: f32) -> Self {
+        assert!((0.0..1.0).contains(&mu), "paper requires 0 <= mu < 1");
+        assert!(weight_decay >= 0.0);
+        Self { mu, weight_decay, m: vec![0.0; d] }
+    }
+
+    /// Fused Eq. (8) update of `x` in place given gradient `g`.
+    /// Weight decay enters the gradient (g + wd * x), matching the
+    /// PyTorch SGD the paper's experiments used.
+    pub fn step(&mut self, x: &mut [f32], g: &[f32], eta: f32) {
+        debug_assert_eq!(x.len(), self.m.len());
+        debug_assert_eq!(g.len(), self.m.len());
+        let (mu, wd) = (self.mu, self.weight_decay);
+        for ((xi, mi), gi) in x.iter_mut().zip(self.m.iter_mut()).zip(g) {
+            let grad = gi + wd * *xi;
+            let m_new = mu * *mi + grad;
+            *mi = m_new;
+            *xi -= eta * m_new;
+        }
+    }
+
+    /// ||m||^2 — Lemma 3 bounds this by G^2/(1-mu)^2.
+    pub fn momentum_norm_sq(&self) -> f64 {
+        linalg::dot(&self.m, &self.m)
+    }
+
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+/// Learning-rate schedules. The paper uses step decay (x0.1 at epoch
+/// 150/225 of 300 for CIFAR-10); `Corollary1` implements the theoretical
+/// eta = eta0 * sqrt(K/T) constant rate used in the speedup ablation.
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant { eta: f32 },
+    /// eta0 decayed by `factor` at each fraction of total_steps in
+    /// `milestones` (paper: factor=0.1, milestones=[0.5, 0.75]).
+    StepDecay { eta0: f32, factor: f32, milestones: Vec<f64>, total_steps: u64 },
+    /// eta = eta0 * sqrt(K / T): the Corollary 1/2 rate.
+    Corollary1 { eta0: f32, k: usize, total_steps: u64 },
+    /// Linear warmup into a constant rate.
+    Warmup { eta: f32, warmup_steps: u64 },
+}
+
+impl LrSchedule {
+    pub fn eta(&self, t: u64) -> f32 {
+        match self {
+            LrSchedule::Constant { eta } => *eta,
+            LrSchedule::StepDecay { eta0, factor, milestones, total_steps } => {
+                let frac = t as f64 / (*total_steps).max(1) as f64;
+                let decays = milestones.iter().filter(|&&m| frac >= m).count() as i32;
+                eta0 * factor.powi(decays)
+            }
+            LrSchedule::Corollary1 { eta0, k, total_steps } => {
+                eta0 * ((*k as f64 / (*total_steps).max(1) as f64).sqrt() as f32)
+            }
+            LrSchedule::Warmup { eta, warmup_steps } => {
+                if t < *warmup_steps {
+                    eta * (t + 1) as f32 / *warmup_steps as f32
+                } else {
+                    *eta
+                }
+            }
+        }
+    }
+
+    /// The paper's CIFAR-10 schedule scaled to `total_steps`.
+    pub fn paper_cifar(eta0: f32, total_steps: u64) -> Self {
+        LrSchedule::StepDecay { eta0, factor: 0.1, milestones: vec![0.5, 0.75], total_steps }
+    }
+}
+
+/// Theorem 1/2 step-size condition: eta < (1-mu)^2 / (2L).
+pub fn theorem_eta_bound(mu: f32, l_smooth: f32) -> f32 {
+    (1.0 - mu).powi(2) / (2.0 * l_smooth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, forall};
+
+    #[test]
+    fn step_matches_reference_formula() {
+        let mut st = MomentumState::new(3, 0.9, 0.0);
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        let g = vec![0.5f32, -0.5, 1.0];
+        st.step(&mut x, &g, 0.1);
+        // m = g, x = x0 - 0.1 g
+        assert_allclose(&st.m, &g, 1e-6, 0.0);
+        assert_allclose(&x, &[0.95, 2.05, 2.9], 1e-6, 0.0);
+        st.step(&mut x, &g, 0.1);
+        // m = 0.9 g + g = 1.9 g
+        assert_allclose(&st.m, &[0.95, -0.95, 1.9], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn weight_decay_enters_gradient() {
+        let mut st = MomentumState::new(1, 0.0, 0.1);
+        let mut x = vec![10.0f32];
+        st.step(&mut x, &[0.0], 1.0);
+        // g_eff = 0 + 0.1 * 10 = 1 => x = 9
+        assert_allclose(&x, &[9.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn prop_momentum_norm_bounded_lemma3() {
+        // Lemma 3: with ||g||^2 <= G^2, ||m_t||^2 <= G^2/(1-mu)^2.
+        forall(11, 30, |rng| {
+            let d = 1 + rng.below(64);
+            let mu = 0.5 + 0.4 * rng.next_f32();
+            let g_bound = 1.0f64;
+            let mut st = MomentumState::new(d, mu, 0.0);
+            let mut x = vec![0.0f32; d];
+            for _ in 0..200 {
+                // gradient with ||g|| <= 1
+                let mut g = rng.normal_vec(d, 1.0);
+                let n = crate::linalg::norm(&g).max(1e-9);
+                g.iter_mut().for_each(|v| *v /= n as f32);
+                st.step(&mut x, &g, 0.01);
+            }
+            let bound = g_bound / (1.0 - mu as f64).powi(2);
+            assert!(
+                st.momentum_norm_sq() <= bound * 1.0001,
+                "||m||^2 = {} > {}",
+                st.momentum_norm_sq(),
+                bound
+            );
+        });
+    }
+
+    #[test]
+    fn mu_zero_is_plain_sgd() {
+        let mut st = MomentumState::new(2, 0.0, 0.0);
+        let mut x = vec![1.0f32, 1.0];
+        st.step(&mut x, &[2.0, 4.0], 0.5);
+        assert_allclose(&x, &[0.0, -1.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mu")]
+    fn mu_one_rejected() {
+        MomentumState::new(1, 1.0, 0.0);
+    }
+
+    #[test]
+    fn step_decay_schedule_matches_paper_shape() {
+        let s = LrSchedule::paper_cifar(0.1, 300);
+        assert!((s.eta(0) - 0.1).abs() < 1e-9);
+        assert!((s.eta(149) - 0.1).abs() < 1e-9);
+        assert!((s.eta(150) - 0.01).abs() < 1e-9);
+        assert!((s.eta(225) - 0.001).abs() < 1e-9);
+        assert!((s.eta(299) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corollary1_rate_scales_with_k() {
+        let t = 10_000;
+        let e1 = LrSchedule::Corollary1 { eta0: 1.0, k: 1, total_steps: t }.eta(0);
+        let e4 = LrSchedule::Corollary1 { eta0: 1.0, k: 4, total_steps: t }.eta(0);
+        assert!((e4 / e1 - 2.0).abs() < 1e-5, "sqrt(K) scaling");
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let s = LrSchedule::Warmup { eta: 1.0, warmup_steps: 10 };
+        assert!(s.eta(0) < s.eta(5));
+        assert!((s.eta(10) - 1.0).abs() < 1e-9);
+        assert!((s.eta(100) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theorem_bound_shrinks_with_momentum() {
+        assert!(theorem_eta_bound(0.9, 1.0) < theorem_eta_bound(0.5, 1.0));
+        assert!((theorem_eta_bound(0.0, 1.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_zeroes_momentum() {
+        let mut st = MomentumState::new(4, 0.9, 0.0);
+        let mut x = vec![0.0f32; 4];
+        st.step(&mut x, &[1.0; 4], 0.1);
+        assert!(st.momentum_norm_sq() > 0.0);
+        st.reset();
+        assert_eq!(st.momentum_norm_sq(), 0.0);
+    }
+}

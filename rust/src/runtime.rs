@@ -1,0 +1,499 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The request path is pure Rust: `make artifacts` ran python once to
+//! lower L2 (transformer fwd+bwd, which embeds the L1 Pallas kernels) to
+//! HLO **text**; this module parses that text
+//! (`HloModuleProto::from_text_file` — the text parser reassigns the
+//! 64-bit instruction ids jax ≥ 0.5 emits that xla_extension 0.5.1's
+//! proto path rejects), compiles it on the PJRT CPU client once at
+//! startup, and then executes it from the training loop with zero python.
+//!
+//! Exposed executables (signatures fixed by `python/compile/aot.py`):
+//!
+//! * [`TrainStep`]    — (params f32[d], tokens i32[B,S+1]) → (loss, grad)
+//! * [`MomentumStep`] — (x, m, g f32[d], eta, mu f32[1]) → (x', m')
+//! * [`MixStep`]      — (w f32[K,K], xs f32[K,d]) → xs'
+//!
+//! plus [`XlaGradSource`], which adapts `TrainStep` + the Markov corpus
+//! to the [`crate::grad::GradientSource`] trait so the coordinator and
+//! all algorithms run unchanged on the real model.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::{BatchIter, MarkovCorpus};
+use crate::grad::{EvalMetrics, GradientSource};
+use crate::json::Json;
+use crate::rng::Xoshiro256;
+
+/// One entry of the flat-parameter layout (mirrors model.param_layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `artifacts/<cfg>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub d: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_layers: usize,
+    pub mix_ks: Vec<usize>,
+    pub layout: Vec<LayoutEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let src = std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?;
+        let v = Json::parse(&src).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let need_usize = |k: &str| -> Result<usize> {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let layout = v
+            .get("layout")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing layout"))?
+            .iter()
+            .map(|e| -> Result<LayoutEntry> {
+                Ok(LayoutEntry {
+                    name: e
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("layout entry missing name"))?
+                        .to_string(),
+                    offset: e
+                        .get("offset")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("layout entry missing offset"))?,
+                    shape: e
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("layout entry missing shape"))?
+                        .iter()
+                        .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad shape")))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let m = Self {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest missing name"))?
+                .to_string(),
+            d: need_usize("d")?,
+            vocab: need_usize("vocab")?,
+            seq_len: need_usize("seq_len")?,
+            batch: need_usize("batch")?,
+            n_layers: need_usize("n_layers")?,
+            mix_ks: v
+                .get("mix_ks")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            layout,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-check the layout covers [0, d) contiguously — the same
+    /// invariant python/tests/test_model.py asserts on the python side.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for e in &self.layout {
+            if e.offset != off {
+                bail!("layout entry {} at offset {} expected {off}", e.name, e.offset);
+            }
+            off += e.numel();
+        }
+        if off != self.d {
+            bail!("layout covers {off} of d={}", self.d);
+        }
+        Ok(())
+    }
+
+    /// GPT-2-style init from the layout (statistically matches
+    /// model.init_params; exact values differ — the RNGs differ — which
+    /// is fine: workers only need *a* common x_0).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut out = vec![0.0f32; self.d];
+        for e in &self.layout {
+            let dst = &mut out[e.offset..e.offset + e.numel()];
+            let name = e.name.as_str();
+            if name.ends_with(".bias") || name.ends_with(".bqkv") || name.ends_with(".bo")
+                || name.ends_with(".b1") || name.ends_with(".b2")
+            {
+                // zeros
+            } else if name.ends_with(".scale") {
+                dst.iter_mut().for_each(|v| *v = 1.0);
+            } else if name == "embed" || name == "pos" {
+                dst.iter_mut().for_each(|v| *v = rng.normal_f32() * 0.02);
+            } else {
+                let fan_in = e.shape[0] as f64;
+                let mut s = (1.0 / fan_in).sqrt() as f32;
+                if name.ends_with(".wo") || name.ends_with(".w2") {
+                    s /= (2.0 * self.n_layers as f64).sqrt() as f32;
+                }
+                dst.iter_mut().for_each(|v| *v = rng.normal_f32() * s);
+            }
+        }
+        out
+    }
+}
+
+/// A compiled HLO artifact on the PJRT CPU client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT client + artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = artifacts_dir.into();
+        if !dir.is_dir() {
+            bail!(
+                "artifacts directory {dir:?} not found — run `make artifacts` first"
+            );
+        }
+        Ok(Self { client: xla::PjRtClient::cpu()?, dir })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self, model: &str) -> Result<Manifest> {
+        Manifest::load(&self.dir.join(format!("{model}.meta.json")))
+    }
+
+    fn compile(&self, file: &str) -> Result<Executable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(Executable { exe: self.client.compile(&comp)? })
+    }
+
+    pub fn train_step(&self, model: &str) -> Result<TrainStep> {
+        let manifest = self.manifest(model)?;
+        let exe = self.compile(&format!("train_step_{model}.hlo.txt"))?;
+        Ok(TrainStep { exe, manifest })
+    }
+
+    pub fn momentum_step(&self, model: &str) -> Result<MomentumStep> {
+        let manifest = self.manifest(model)?;
+        let exe = self.compile(&format!("momentum_{model}.hlo.txt"))?;
+        Ok(MomentumStep { exe, d: manifest.d })
+    }
+
+    pub fn mix_step(&self, model: &str, k: usize) -> Result<MixStep> {
+        let manifest = self.manifest(model)?;
+        if !manifest.mix_ks.contains(&k) {
+            bail!(
+                "no mix artifact for K={k} (available: {:?}); re-run `make artifacts` with --ks",
+                manifest.mix_ks
+            );
+        }
+        let exe = self.compile(&format!("mix_k{k}_{model}.hlo.txt"))?;
+        Ok(MixStep { exe, k, d: manifest.d })
+    }
+}
+
+fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// The fused fwd+bwd of the L2 transformer: (params, tokens) → (loss, grad).
+pub struct TrainStep {
+    exe: Executable,
+    pub manifest: Manifest,
+}
+
+impl TrainStep {
+    /// Execute one training step. `tokens` is row-major [batch, seq_len+1].
+    pub fn run(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let m = &self.manifest;
+        if params.len() != m.d {
+            bail!("params len {} != d {}", params.len(), m.d);
+        }
+        let expect_tokens = m.batch * (m.seq_len + 1);
+        if tokens.len() != expect_tokens {
+            bail!("tokens len {} != B*(S+1) = {expect_tokens}", tokens.len());
+        }
+        let p = literal_f32(params, &[m.d as i64])?;
+        let t = xla::Literal::vec1(tokens).reshape(&[m.batch as i64, (m.seq_len + 1) as i64])?;
+        let result = self.exe.exe.execute::<xla::Literal>(&[p, t])?[0][0].to_literal_sync()?;
+        let (loss_lit, grad_lit) = result.to_tuple2()?;
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        let grad = grad_lit.to_vec::<f32>()?;
+        Ok((loss, grad))
+    }
+}
+
+/// The fused L1 momentum kernel artifact: (x, m, g, eta, mu) → (x', m').
+pub struct MomentumStep {
+    exe: Executable,
+    pub d: usize,
+}
+
+impl MomentumStep {
+    pub fn run(
+        &self,
+        x: &[f32],
+        m: &[f32],
+        g: &[f32],
+        eta: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if x.len() != self.d || m.len() != self.d || g.len() != self.d {
+            bail!("momentum operand length mismatch (d={})", self.d);
+        }
+        let args = [
+            literal_f32(x, &[self.d as i64])?,
+            literal_f32(m, &[self.d as i64])?,
+            literal_f32(g, &[self.d as i64])?,
+            literal_f32(&[eta], &[1])?,
+            literal_f32(&[mu], &[1])?,
+        ];
+        let result = self.exe.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (x_new, m_new) = result.to_tuple2()?;
+        Ok((x_new.to_vec::<f32>()?, m_new.to_vec::<f32>()?))
+    }
+}
+
+/// The L1 gossip-mix kernel artifact: (w, xs) → W·X over stacked iterates.
+pub struct MixStep {
+    exe: Executable,
+    pub k: usize,
+    pub d: usize,
+}
+
+impl MixStep {
+    /// `w` is row-major [K,K]; `xs` row-major [K,d]. Returns mixed [K,d].
+    pub fn run(&self, w: &[f32], xs: &[f32]) -> Result<Vec<f32>> {
+        if w.len() != self.k * self.k {
+            bail!("w len {} != K*K", w.len());
+        }
+        if xs.len() != self.k * self.d {
+            bail!("xs len {} != K*d", xs.len());
+        }
+        let wl = literal_f32(w, &[self.k as i64, self.k as i64])?;
+        let xl = literal_f32(xs, &[self.k as i64, self.d as i64])?;
+        let result = self.exe.exe.execute::<xla::Literal>(&[wl, xl])?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+}
+
+/// Adapts the XLA transformer to [`GradientSource`]: K workers sharing
+/// one compiled `TrainStep`, each with its own contiguous shard of a
+/// Markov-corpus token stream and its own batch sampler.
+pub struct XlaGradSource {
+    step: TrainStep,
+    tokens: Vec<u32>,
+    /// Per-worker [start, end) shard bounds into `tokens`.
+    shards: Vec<(usize, usize)>,
+    samplers: Vec<BatchIter>,
+    /// Held-out window (tail of the corpus) for eval.
+    eval_windows: Vec<usize>,
+    k: usize,
+}
+
+impl XlaGradSource {
+    pub fn new(step: TrainStep, k: usize, corpus_tokens: usize, seed: u64) -> Result<Self> {
+        let m = &step.manifest;
+        let window = m.seq_len + 1;
+        let gen = MarkovCorpus { vocab: m.vocab, branching: 4, tokens: corpus_tokens };
+        let tokens = gen.generate(seed);
+        let n_eval = (corpus_tokens / 10).max(window * 4);
+        let train_len = corpus_tokens - n_eval;
+        if train_len / k < window * 4 {
+            bail!("corpus too small: {corpus_tokens} tokens over {k} workers");
+        }
+        let per = train_len / k;
+        let shards: Vec<(usize, usize)> = (0..k).map(|i| (i * per, (i + 1) * per)).collect();
+        let samplers = shards
+            .iter()
+            .enumerate()
+            .map(|(i, &(lo, hi))| {
+                BatchIter::new((lo..hi - window).collect(), seed ^ (0x77 + i as u64))
+            })
+            .collect();
+        let eval_windows = (train_len..corpus_tokens - window).step_by(window).collect();
+        Ok(Self { step, tokens, shards, samplers, eval_windows, k })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.step.manifest
+    }
+
+    fn batch_tokens(&mut self, worker: usize) -> Vec<i32> {
+        let m = &self.step.manifest;
+        let window = m.seq_len + 1;
+        let starts = self.samplers[worker].next_batch(m.batch);
+        let mut out = Vec::with_capacity(m.batch * window);
+        for s in starts {
+            out.extend(self.tokens[s..s + window].iter().map(|&t| t as i32));
+        }
+        out
+    }
+}
+
+impl GradientSource for XlaGradSource {
+    fn dim(&self) -> usize {
+        self.step.manifest.d
+    }
+
+    fn workers(&self) -> usize {
+        self.k
+    }
+
+    fn grad(&mut self, worker: usize, x: &[f32]) -> (f64, Vec<f32>) {
+        let toks = self.batch_tokens(worker);
+        let (loss, grad) = self
+            .step
+            .run(x, &toks)
+            .expect("train_step execution failed");
+        (loss as f64, grad)
+    }
+
+    fn eval(&mut self, x: &[f32]) -> EvalMetrics {
+        // Average loss over a few held-out windows (batched).
+        let m = &self.step.manifest;
+        let window = m.seq_len + 1;
+        let mut losses = Vec::new();
+        for chunk in self.eval_windows.chunks(m.batch).take(4) {
+            if chunk.len() < m.batch {
+                break;
+            }
+            let mut toks = Vec::with_capacity(m.batch * window);
+            for &s in chunk {
+                toks.extend(self.tokens[s..s + window].iter().map(|&t| t as i32));
+            }
+            if let Ok((loss, _)) = self.step.run(x, &toks) {
+                losses.push(loss as f64);
+            }
+        }
+        let loss = if losses.is_empty() {
+            f64::NAN
+        } else {
+            losses.iter().sum::<f64>() / losses.len() as f64
+        };
+        EvalMetrics { loss, accuracy: 0.0, grad_norm_sq: 0.0 }
+    }
+
+    fn init(&self, seed: u64) -> Vec<f32> {
+        self.step.manifest.init_params(seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Manifest logic is testable without artifacts; the load-and-execute
+    // path is covered by rust/tests/runtime_integration.rs (gated on the
+    // artifacts directory existing).
+
+    fn manifest_json() -> String {
+        r#"{
+          "name": "t", "d": 10, "vocab": 8, "d_model": 2, "n_layers": 1,
+          "n_heads": 1, "d_ff": 4, "seq_len": 4, "batch": 2, "mix_ks": [4],
+          "layout": [
+            {"name": "embed", "offset": 0, "shape": [4, 2]},
+            {"name": "l0.ln1.scale", "offset": 8, "shape": [1]},
+            {"name": "l0.ln1.bias", "offset": 9, "shape": [1]}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn manifest_parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("pdsgdm_mani_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.meta.json");
+        std::fs::write(&p, manifest_json()).unwrap();
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.d, 10);
+        assert_eq!(m.layout.len(), 3);
+        assert_eq!(m.layout[0].numel(), 8);
+        assert_eq!(m.mix_ks, vec![4]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_rejects_gapped_layout() {
+        let dir = std::env::temp_dir().join(format!("pdsgdm_mani2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.meta.json");
+        std::fs::write(
+            &p,
+            r#"{"name":"b","d":5,"vocab":2,"seq_len":1,"batch":1,"n_layers":1,
+               "layout":[{"name":"a","offset":0,"shape":[2]},
+                          {"name":"c","offset":3,"shape":[2]}]}"#,
+        )
+        .unwrap();
+        let err = Manifest::load(&p).unwrap_err().to_string();
+        assert!(err.contains("expected 2"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn init_params_follows_layout_rules() {
+        let m = Manifest {
+            name: "t".into(),
+            d: 12,
+            vocab: 4,
+            seq_len: 4,
+            batch: 1,
+            n_layers: 2,
+            mix_ks: vec![],
+            layout: vec![
+                LayoutEntry { name: "embed".into(), offset: 0, shape: vec![4, 2] },
+                LayoutEntry { name: "l0.ln1.scale".into(), offset: 8, shape: vec![2] },
+                LayoutEntry { name: "l0.ln1.bias".into(), offset: 10, shape: vec![2] },
+            ],
+        };
+        let x = m.init_params(3);
+        assert_eq!(x.len(), 12);
+        // embeddings small-normal
+        assert!(x[..8].iter().any(|&v| v != 0.0));
+        assert!(x[..8].iter().all(|&v| v.abs() < 0.2));
+        // scale ones, bias zeros
+        assert_eq!(&x[8..10], &[1.0, 1.0]);
+        assert_eq!(&x[10..12], &[0.0, 0.0]);
+        // deterministic
+        assert_eq!(m.init_params(3), x);
+        assert_ne!(m.init_params(4)[..8], x[..8]);
+    }
+
+    #[test]
+    fn runtime_requires_artifact_dir() {
+        let err = match Runtime::new("/nonexistent/path") {
+            Ok(_) => panic!("should fail"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

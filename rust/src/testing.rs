@@ -1,0 +1,101 @@
+//! Minimal in-crate property-testing harness.
+//!
+//! No `proptest` crate exists in this offline build environment, so the
+//! repo carries its own: [`forall`] runs a closure against many seeded
+//! random cases and, on failure, reports the case index + derived seed so
+//! the exact case replays with `forall_case`. Generation is driven by the
+//! deterministic [`crate::rng::Xoshiro256`], so failures are always
+//! reproducible.
+
+use crate::rng::Xoshiro256;
+
+/// Run `body` against `cases` independently-seeded RNG streams derived
+/// from `seed`. Panics (re-raising the inner panic message) identify the
+/// failing case and its replay seed.
+pub fn forall<F: FnMut(&mut Xoshiro256)>(seed: u64, cases: usize, mut body: F) {
+    for case in 0..cases {
+        let case_seed = case_seed(seed, case);
+        let mut rng = Xoshiro256::seed_from_u64(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} (replay: forall_case({seed:#x}, {case})): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case reported by [`forall`].
+pub fn forall_case<F: FnOnce(&mut Xoshiro256)>(seed: u64, case: usize, body: F) {
+    let mut rng = Xoshiro256::seed_from_u64(case_seed(seed, case));
+    body(&mut rng);
+}
+
+fn case_seed(seed: u64, case: usize) -> u64 {
+    // SplitMix-style avalanche so consecutive cases are decorrelated.
+    let mut z = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^ (z >> 31)
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "index {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut n = 0;
+        forall(1, 25, |_rng| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn forall_reports_failing_case() {
+        let err = std::panic::catch_unwind(|| {
+            forall(2, 50, |rng| {
+                assert!(rng.next_f64() < 0.9, "drew a big one");
+            })
+        })
+        .expect_err("should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("property failed at case"), "{msg}");
+        assert!(msg.contains("drew a big one"), "{msg}");
+    }
+
+    #[test]
+    fn replay_reproduces_case_stream() {
+        let mut first: Option<u64> = None;
+        forall_case(0xABCD, 3, |rng| first = Some(rng.next_u64()));
+        let mut again: Option<u64> = None;
+        forall_case(0xABCD, 3, |rng| again = Some(rng.next_u64()));
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn allclose_passes_and_fails() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-6);
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6)
+        });
+        assert!(r.is_err());
+    }
+}

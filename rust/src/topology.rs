@@ -1,0 +1,396 @@
+//! Decentralized-training topologies and their mixing matrices.
+//!
+//! The paper models the worker fleet as an undirected graph `G = (V, W)`
+//! with a symmetric doubly-stochastic `W` (Assumption 1); all convergence
+//! constants enter through the spectral gap `rho = 1 - |lambda_2(W)|`
+//! (Lemma 1). This module builds the standard families — the paper's
+//! ring, plus chain/complete/star/2-D torus/hypercube/random-regular for
+//! the topology ablation — and two weighting schemes (uniform-degree as
+//! used in the paper's 1/3-ring, and Metropolis–Hastings for irregular
+//! graphs).
+
+use crate::linalg::{self, Mat};
+use crate::rng::Xoshiro256;
+
+/// Undirected simple graph on `[0, k)` as adjacency lists.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub k: usize,
+    adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    pub fn empty(k: usize) -> Self {
+        Self { k, adj: vec![Vec::new(); k] }
+    }
+
+    pub fn add_edge(&mut self, i: usize, j: usize) {
+        assert!(i != j && i < self.k && j < self.k, "bad edge ({i},{j})");
+        if !self.adj[i].contains(&j) {
+            self.adj[i].push(j);
+            self.adj[j].push(i);
+        }
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// Connectivity via BFS — every topology we hand to an algorithm must
+    /// be connected or consensus is impossible (rho = 0).
+    pub fn is_connected(&self) -> bool {
+        if self.k == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.k];
+        let mut queue = vec![0usize];
+        seen[0] = true;
+        while let Some(i) = queue.pop() {
+            for &j in &self.adj[i] {
+                if !seen[j] {
+                    seen[j] = true;
+                    queue.push(j);
+                }
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}
+
+/// Topology families. `Ring` with K=8 is the paper's experimental setup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Cycle: worker k talks to k±1 (mod K). The paper's setup.
+    Ring,
+    /// Path: like Ring without the wrap-around edge (worst-case rho).
+    Chain,
+    /// All-to-all. rho = 1: decentralized == centralized averaging.
+    Complete,
+    /// Hub-and-spoke around worker 0.
+    Star,
+    /// 2-D torus on an r x c grid (requires K = r*c with r,c >= 2).
+    Torus2d,
+    /// Hypercube (requires K a power of two).
+    Hypercube,
+    /// Random d-regular graph (configuration model with retries).
+    RandomRegular { degree: usize },
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> Option<Topology> {
+        match s {
+            "ring" => Some(Topology::Ring),
+            "chain" => Some(Topology::Chain),
+            "complete" | "full" => Some(Topology::Complete),
+            "star" => Some(Topology::Star),
+            "torus" | "torus2d" => Some(Topology::Torus2d),
+            "hypercube" => Some(Topology::Hypercube),
+            _ => s.strip_prefix("regular-").and_then(|d| {
+                d.parse().ok().map(|degree| Topology::RandomRegular { degree })
+            }),
+        }
+    }
+
+    pub fn build(self, k: usize, seed: u64) -> Graph {
+        assert!(k >= 1, "need at least one worker");
+        let mut g = Graph::empty(k);
+        if k == 1 {
+            return g;
+        }
+        match self {
+            Topology::Ring => {
+                for i in 0..k {
+                    g.add_edge(i, (i + 1) % k);
+                }
+            }
+            Topology::Chain => {
+                for i in 0..k - 1 {
+                    g.add_edge(i, i + 1);
+                }
+            }
+            Topology::Complete => {
+                for i in 0..k {
+                    for j in (i + 1)..k {
+                        g.add_edge(i, j);
+                    }
+                }
+            }
+            Topology::Star => {
+                for i in 1..k {
+                    g.add_edge(0, i);
+                }
+            }
+            Topology::Torus2d => {
+                let (r, c) = torus_dims(k).expect("torus requires K = r*c, r,c >= 2");
+                for i in 0..r {
+                    for j in 0..c {
+                        let id = i * c + j;
+                        g.add_edge(id, i * c + (j + 1) % c);
+                        g.add_edge(id, ((i + 1) % r) * c + j);
+                    }
+                }
+            }
+            Topology::Hypercube => {
+                assert!(k.is_power_of_two(), "hypercube requires K = 2^n");
+                let bits = k.trailing_zeros();
+                for i in 0..k {
+                    for b in 0..bits {
+                        let j = i ^ (1 << b);
+                        if j > i {
+                            g.add_edge(i, j);
+                        }
+                    }
+                }
+            }
+            Topology::RandomRegular { degree } => {
+                g = random_regular(k, degree, seed);
+            }
+        }
+        debug_assert!(g.is_connected(), "{self:?} built a disconnected graph");
+        g
+    }
+}
+
+/// Factor K as r*c with both >= 2 and as square as possible.
+fn torus_dims(k: usize) -> Option<(usize, usize)> {
+    let mut best = None;
+    let mut r = (k as f64).sqrt() as usize;
+    while r >= 2 {
+        if k % r == 0 && k / r >= 2 {
+            best = Some((r, k / r));
+            break;
+        }
+        r -= 1;
+    }
+    best
+}
+
+/// Configuration-model random d-regular graph; retries until simple and
+/// connected (fast for the K <= 64 sizes we use).
+fn random_regular(k: usize, degree: usize, seed: u64) -> Graph {
+    assert!(degree >= 2 && degree < k && (k * degree) % 2 == 0,
+            "invalid (K={k}, degree={degree}) for a regular graph");
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    'attempt: for _ in 0..10_000 {
+        let mut stubs: Vec<usize> = (0..k).flat_map(|i| std::iter::repeat(i).take(degree)).collect();
+        rng.shuffle(&mut stubs);
+        let mut g = Graph::empty(k);
+        for pair in stubs.chunks(2) {
+            let (a, b) = (pair[0], pair[1]);
+            if a == b || g.neighbors(a).contains(&b) {
+                continue 'attempt; // multi-edge or loop: resample
+            }
+            g.add_edge(a, b);
+        }
+        if g.is_connected() {
+            return g;
+        }
+    }
+    panic!("failed to sample a connected {degree}-regular graph on {k} nodes");
+}
+
+/// Mixing-weight schemes for turning a graph into W.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Weighting {
+    /// w_ij = 1/(deg_max + 1) off-diagonal, remainder on the diagonal.
+    /// For the ring this is the paper's (1/3, 1/3, 1/3).
+    UniformDegree,
+    /// Metropolis–Hastings: w_ij = 1/(1 + max(deg_i, deg_j)); always
+    /// doubly stochastic on irregular graphs (star, random).
+    Metropolis,
+    /// Lazy Metropolis: (I + W_mh)/2 — guarantees lambda_n > 0 so
+    /// |lambda_2| is the relevant eigenvalue even on bipartite graphs.
+    LazyMetropolis,
+}
+
+/// Build the doubly-stochastic mixing matrix for `g` under `scheme`.
+pub fn mixing_matrix(g: &Graph, scheme: Weighting) -> Mat {
+    let k = g.k;
+    let mut w = Mat::zeros(k, k);
+    if k == 1 {
+        w[(0, 0)] = 1.0;
+        return w;
+    }
+    match scheme {
+        Weighting::UniformDegree => {
+            let dmax = (0..k).map(|i| g.degree(i)).max().unwrap();
+            let wij = 1.0 / (dmax as f64 + 1.0);
+            for i in 0..k {
+                for &j in g.neighbors(i) {
+                    w[(i, j)] = wij;
+                }
+                w[(i, i)] = 1.0 - wij * g.degree(i) as f64;
+            }
+        }
+        Weighting::Metropolis | Weighting::LazyMetropolis => {
+            for i in 0..k {
+                for &j in g.neighbors(i) {
+                    w[(i, j)] = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+                }
+            }
+            for i in 0..k {
+                let off: f64 = (0..k).filter(|&j| j != i).map(|j| w[(i, j)]).sum();
+                w[(i, i)] = 1.0 - off;
+            }
+            if scheme == Weighting::LazyMetropolis {
+                for i in 0..k {
+                    for j in 0..k {
+                        w[(i, j)] *= 0.5;
+                    }
+                    w[(i, i)] += 0.5;
+                }
+            }
+        }
+    }
+    debug_assert!(w.is_doubly_stochastic(1e-9));
+    w
+}
+
+/// Convenience: (graph, W, rho) for a named topology.
+pub fn build(topology: Topology, k: usize, scheme: Weighting, seed: u64) -> (Graph, Mat, f64) {
+    let g = topology.build(k, seed);
+    let w = mixing_matrix(&g, scheme);
+    let rho = linalg::spectral_gap(&w, seed ^ 0xA5A5);
+    (g, w, rho)
+}
+
+/// W as row-major f32, the form the XLA mix artifact and the in-process
+/// gossip kernels consume.
+pub fn w_to_f32(w: &Mat) -> Vec<f32> {
+    w.data.iter().map(|&x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TOPOS: &[(Topology, usize)] = &[
+        (Topology::Ring, 8),
+        (Topology::Chain, 8),
+        (Topology::Complete, 8),
+        (Topology::Star, 8),
+        (Topology::Torus2d, 8),
+        (Topology::Hypercube, 8),
+        (Topology::RandomRegular { degree: 3 }, 8),
+    ];
+
+    #[test]
+    fn all_topologies_connected() {
+        for &(t, k) in TOPOS {
+            assert!(t.build(k, 1).is_connected(), "{t:?}");
+        }
+    }
+
+    #[test]
+    fn ring_degrees_are_two() {
+        let g = Topology::Ring.build(8, 0);
+        for i in 0..8 {
+            assert_eq!(g.degree(i), 2);
+        }
+        assert_eq!(g.edge_count(), 8);
+    }
+
+    #[test]
+    fn paper_ring_weights_are_one_third() {
+        let g = Topology::Ring.build(8, 0);
+        let w = mixing_matrix(&g, Weighting::UniformDegree);
+        for i in 0..8 {
+            assert!((w[(i, i)] - 1.0 / 3.0).abs() < 1e-12);
+            assert!((w[(i, (i + 1) % 8)] - 1.0 / 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn all_weightings_doubly_stochastic_on_all_topologies() {
+        // Property test (Assumption 1): every (topology, weighting) pair
+        // yields symmetric doubly-stochastic W with entries in [0,1].
+        for &(t, k) in TOPOS {
+            let g = t.build(k, 3);
+            for scheme in [Weighting::UniformDegree, Weighting::Metropolis, Weighting::LazyMetropolis] {
+                let w = mixing_matrix(&g, scheme);
+                assert!(w.is_doubly_stochastic(1e-9), "{t:?} {scheme:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_gap_ordering_matches_theory() {
+        // complete > hypercube/torus > ring > chain for K=16.
+        let gap = |t: Topology| build(t, 16, Weighting::UniformDegree, 5).2;
+        let complete = gap(Topology::Complete);
+        let hyper = gap(Topology::Hypercube);
+        let ring = gap(Topology::Ring);
+        let chain = gap(Topology::Chain);
+        assert!(complete > hyper && hyper > ring && ring > chain,
+                "complete={complete} hyper={hyper} ring={ring} chain={chain}");
+        assert!((complete - 1.0).abs() < 1e-6);
+        assert!(chain > 0.0);
+    }
+
+    #[test]
+    fn ring8_gap_closed_form() {
+        // rho = 1 - (1 + 2cos(2π/8))/3 for the 1/3-ring.
+        let (_, _, rho) = build(Topology::Ring, 8, Weighting::UniformDegree, 0);
+        let expect = 1.0 - (1.0 + 2.0 * (2.0 * std::f64::consts::PI / 8.0).cos()) / 3.0;
+        assert!((rho - expect).abs() < 1e-6, "rho={rho} expect={expect}");
+    }
+
+    #[test]
+    fn star_metropolis_handles_irregular_degrees() {
+        let g = Topology::Star.build(9, 0);
+        let w = mixing_matrix(&g, Weighting::Metropolis);
+        assert!(w.is_doubly_stochastic(1e-9));
+        // leaf-leaf weight must be zero (no edge)
+        assert_eq!(w[(1, 2)], 0.0);
+    }
+
+    #[test]
+    fn random_regular_is_regular_and_seeded() {
+        let g1 = Topology::RandomRegular { degree: 4 }.build(16, 42);
+        let g2 = Topology::RandomRegular { degree: 4 }.build(16, 42);
+        for i in 0..16 {
+            assert_eq!(g1.degree(i), 4);
+            assert_eq!(g1.neighbors(i), g2.neighbors(i), "seeded determinism");
+        }
+    }
+
+    #[test]
+    fn torus_dims_reasonable() {
+        assert_eq!(torus_dims(8), Some((2, 4)));
+        assert_eq!(torus_dims(16), Some((4, 4)));
+        assert_eq!(torus_dims(7), None);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Topology::parse("ring"), Some(Topology::Ring));
+        assert_eq!(Topology::parse("regular-3"), Some(Topology::RandomRegular { degree: 3 }));
+        assert_eq!(Topology::parse("nope"), None);
+    }
+
+    #[test]
+    fn k1_degenerates_to_identity() {
+        let (_, w, rho) = build(Topology::Ring, 1, Weighting::UniformDegree, 0);
+        assert_eq!(w[(0, 0)], 1.0);
+        assert!((rho - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixing_preserves_mean_numerically() {
+        // W x̄-preservation, the invariant behind Eq. (18).
+        let (_, w, _) = build(Topology::Torus2d, 12, Weighting::Metropolis, 7);
+        let x: Vec<f64> = (0..12).map(|i| (i * i) as f64).collect();
+        let y = w.matvec(&x);
+        let mx: f64 = x.iter().sum::<f64>() / 12.0;
+        let my: f64 = y.iter().sum::<f64>() / 12.0;
+        assert!((mx - my).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,159 @@
+//! End-to-end CLI tests: run the built `pdsgdm` binary as a user would.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pdsgdm"))
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = bin().args(args).output().expect("spawn pdsgdm");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, stdout, _) = run(&["help"]);
+    assert!(ok);
+    for needle in ["train", "topology", "inspect", "algorithms"] {
+        assert!(stdout.contains(needle), "missing {needle}:\n{stdout}");
+    }
+}
+
+#[test]
+fn algorithms_lists_all() {
+    let (ok, stdout, _) = run(&["algorithms"]);
+    assert!(ok);
+    for name in pdsgdm::algorithms::ALL_NAMES {
+        assert!(stdout.contains(name), "{name} missing");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"), "{stderr}");
+}
+
+#[test]
+fn topology_prints_w_and_rho() {
+    let (ok, stdout, _) = run(&["topology", "--kind", "ring", "--workers", "8"]);
+    assert!(ok);
+    assert!(stdout.contains("rho="), "{stdout}");
+    assert!(stdout.contains("0.333"), "ring weights should be 1/3:\n{stdout}");
+    assert!(stdout.contains("edges=8"), "{stdout}");
+}
+
+#[test]
+fn topology_rejects_unknown_kind() {
+    let (ok, _, stderr) = run(&["topology", "--kind", "mobius"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown topology"), "{stderr}");
+}
+
+#[test]
+fn train_quadratic_quick_run_writes_outputs() {
+    let dir = std::env::temp_dir().join(format!("pdsgdm_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("trace.csv");
+    let ckpt = dir.join("final.ckpt");
+    let (ok, stdout, stderr) = run(&[
+        "train",
+        "--workload", "quadratic",
+        "--algo", "pd-sgdm",
+        "--workers", "4",
+        "--steps", "100",
+        "--period", "4",
+        "--eta", "0.05",
+        "--out", csv.to_str().unwrap(),
+        "--ckpt", ckpt.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("pd-sgdm(p=4)"), "{stdout}");
+    let content = std::fs::read_to_string(&csv).unwrap();
+    assert!(content.lines().count() > 2, "{content}");
+    let x = pdsgdm::coordinator::load_checkpoint(&ckpt).unwrap();
+    assert_eq!(x.len(), 64); // quadratic CLI workload dim
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn train_rejects_bad_flags() {
+    let (ok, _, stderr) = run(&["train", "--algo", "nope"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown algorithm"), "{stderr}");
+    let (ok2, _, stderr2) = run(&["train", "--steps"]);
+    assert!(!ok2);
+    assert!(stderr2.contains("needs a value"), "{stderr2}");
+    let (ok3, _, stderr3) = run(&["train", "--compressor", "zip"]);
+    assert!(!ok3);
+    assert!(stderr3.contains("unknown compressor"), "{stderr3}");
+}
+
+#[test]
+fn train_from_config_file() {
+    let dir = std::env::temp_dir().join(format!("pdsgdm_cli_cfg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("exp.toml");
+    std::fs::write(
+        &cfg,
+        r#"
+name = "cli-test"
+algorithm = "cpd-sgdm"
+workers = 4
+steps = 60
+eval_every = 20
+compressor = "sign"
+[workload]
+kind = "quadratic"
+dim = 16
+[hyper]
+eta = 0.02
+period = 4
+"#,
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = run(&["train", "--config", cfg.to_str().unwrap()]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("cpd-sgdm"), "{stdout}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn inspect_validates_artifacts_when_present() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("tiny.meta.json").exists() {
+        eprintln!("skipping inspect test: run `make artifacts` first");
+        return;
+    }
+    let (ok, stdout, stderr) = run(&[
+        "inspect",
+        "--artifacts", artifacts.to_str().unwrap(),
+        "--model", "tiny",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("compiles OK"), "{stdout}");
+    assert!(stdout.contains("d=19712"), "{stdout}");
+}
+
+#[test]
+fn shipped_config_files_parse_and_validate() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut n = 0;
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let cfg = pdsgdm::config::ExperimentConfig::from_file(&path)
+            .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        cfg.validate().unwrap();
+        n += 1;
+    }
+    assert!(n >= 4, "expected the shipped example configs, found {n}");
+}

@@ -1,0 +1,239 @@
+//! Cross-module convergence tests: the paper's qualitative claims, each
+//! checked on the pure-Rust workloads through the full coordinator path
+//! (config -> Experiment -> run -> Trace).
+
+use pdsgdm::algorithms::Hyper;
+use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
+use pdsgdm::coordinator::Experiment;
+use pdsgdm::data::Sharding;
+use pdsgdm::optim::LrSchedule;
+use pdsgdm::topology::Topology;
+
+fn base_config() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.workers = 8;
+    c.steps = 600;
+    c.eval_every = 100;
+    c.seed = 13;
+    c.workload = WorkloadConfig::Mlp { n: 1600, dim: 16, classes: 4, hidden: 24, batch: 16 };
+    c.hyper = Hyper {
+        lr: LrSchedule::Constant { eta: 0.1 },
+        mu: 0.9,
+        weight_decay: 0.0,
+        period: 4,
+        gamma: 0.4,
+    };
+    c
+}
+
+/// Paper Fig. 1 claim: PD-SGDM with p in {4,8,16} converges to ~the same
+/// loss as C-SGDM (periodic communication does not hurt convergence).
+#[test]
+fn fig1_claim_pd_sgdm_matches_c_sgdm_loss() {
+    let mut losses = Vec::new();
+    for (algo, p) in [("c-sgdm", 1), ("pd-sgdm", 4), ("pd-sgdm", 8), ("pd-sgdm", 16)] {
+        let mut c = base_config();
+        c.algorithm = algo.into();
+        c.hyper.period = p;
+        let trace = Experiment::build(c).unwrap().run(false);
+        losses.push((format!("{algo}(p={p})"), trace.final_loss()));
+    }
+    let c_sgdm = losses[0].1;
+    for (name, l) in &losses[1..] {
+        assert!(
+            (l - c_sgdm).abs() < 0.25,
+            "{name} final loss {l} too far from c-sgdm {c_sgdm}"
+        );
+    }
+}
+
+/// Paper Fig. 1(c,d) claim: final test accuracy is ~unchanged across p.
+#[test]
+fn fig1_claim_accuracy_insensitive_to_p() {
+    let mut accs = Vec::new();
+    for p in [4u64, 8, 16] {
+        let mut c = base_config();
+        c.hyper.period = p;
+        let trace = Experiment::build(c).unwrap().run(false);
+        accs.push(trace.final_accuracy());
+    }
+    let max = accs.iter().cloned().fold(f64::MIN, f64::max);
+    let min = accs.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max - min < 0.08, "accuracy spread too wide: {accs:?}");
+    assert!(min > 0.7, "model failed to learn: {accs:?}");
+}
+
+/// Paper Fig. 2(a,b) claim: larger p reaches the same accuracy with less
+/// communication.
+#[test]
+fn fig2_claim_larger_p_less_comm() {
+    let mut rows = Vec::new();
+    for p in [4u64, 8, 16] {
+        let mut c = base_config();
+        c.hyper.period = p;
+        let trace = Experiment::build(c).unwrap().run(false);
+        rows.push((p, trace.total_comm_mb(), trace.final_accuracy()));
+    }
+    assert!(rows[0].1 > 1.9 * rows[1].1, "{rows:?}");
+    assert!(rows[1].1 > 1.9 * rows[2].1, "{rows:?}");
+    for (_, _, acc) in &rows {
+        assert!(*acc > 0.7, "{rows:?}");
+    }
+}
+
+/// Paper Fig. 3 claim: CPD-SGDM (sign) converges to ~the same loss as
+/// full-precision PD-SGDM while communicating far fewer bytes.
+#[test]
+fn fig3_claim_compression_matches_full_precision() {
+    let mut c_full = base_config();
+    c_full.algorithm = "pd-sgdm".into();
+    c_full.hyper.period = 4;
+    let full = Experiment::build(c_full).unwrap().run(false);
+
+    let mut c_cpd = base_config();
+    c_cpd.algorithm = "cpd-sgdm".into();
+    c_cpd.hyper.period = 4;
+    c_cpd.compressor = Some("sign".into());
+    let cpd = Experiment::build(c_cpd).unwrap().run(false);
+
+    assert!(
+        (cpd.final_loss() - full.final_loss()).abs() < 0.3,
+        "cpd {} vs full {}",
+        cpd.final_loss(),
+        full.final_loss()
+    );
+    assert!(
+        full.total_comm_mb() / cpd.total_comm_mb() > 20.0,
+        "sign should cut bytes ~32x: full {} MB vs cpd {} MB",
+        full.total_comm_mb(),
+        cpd.total_comm_mb()
+    );
+}
+
+/// Theorem 1's σ²/K terms: with heterogeneity 0 (f* = 0) and constant η,
+/// the stationary loss floor of PD-SGDM scales ~1/K — the substance of
+/// the linear-speedup claim (Corollary 1). K=8's floor must be well under
+/// half of K=2's.
+#[test]
+fn corollary1_claim_noise_floor_scales_inversely_with_k() {
+    let floor = |k: usize| -> f64 {
+        let mut c = base_config();
+        c.workers = k;
+        c.steps = 2000;
+        c.eval_every = 100;
+        c.workload = WorkloadConfig::Quadratic { dim: 32, heterogeneity: 0.0, noise: 2.0 };
+        c.hyper.lr = LrSchedule::Constant { eta: 0.02 };
+        c.hyper.period = 4;
+        let trace = Experiment::build(c).unwrap().run(false);
+        // stationary floor = mean loss over the second half of the run
+        let tail: Vec<f64> = trace
+            .points
+            .iter()
+            .filter(|p| p.step >= 1000)
+            .map(|p| p.loss)
+            .collect();
+        tail.iter().sum::<f64>() / tail.len() as f64
+    };
+    let f2 = floor(2);
+    let f8 = floor(8);
+    assert!(
+        f8 < 0.5 * f2,
+        "K=8 floor {f8} should be well under half of K=2 floor {f2}"
+    );
+}
+
+/// Theorem 1 claim (shape): consensus error grows with p and shrinks with
+/// rho (chain vs complete).
+#[test]
+fn theorem1_claim_consensus_scales_with_p_and_rho() {
+    let consensus = |p: u64, topo: Topology| -> f64 {
+        let mut c = base_config();
+        c.steps = 200;
+        c.eval_every = 10;
+        c.topology = topo;
+        c.hyper.period = p;
+        c.workload = WorkloadConfig::Quadratic { dim: 32, heterogeneity: 2.0, noise: 0.2 };
+        c.hyper.lr = LrSchedule::Constant { eta: 0.02 };
+        let trace = Experiment::build(c).unwrap().run(false);
+        trace.points.iter().map(|pt| pt.consensus).fold(0.0, f64::max)
+    };
+    let ring_p4 = consensus(4, Topology::Ring);
+    let ring_p16 = consensus(16, Topology::Ring);
+    let complete_p4 = consensus(4, Topology::Complete);
+    assert!(ring_p16 > ring_p4, "larger p => more drift: {ring_p16} vs {ring_p4}");
+    assert!(complete_p4 < ring_p4, "larger rho => less drift: {complete_p4} vs {ring_p4}");
+}
+
+/// Non-iid robustness: PD-SGDM still learns under Dirichlet(0.3) skew.
+#[test]
+fn pd_sgdm_survives_non_iid_sharding() {
+    let mut c = base_config();
+    c.sharding = Sharding::Dirichlet { alpha: 0.3 };
+    c.steps = 800;
+    let trace = Experiment::build(c).unwrap().run(false);
+    assert!(trace.final_accuracy() > 0.6, "acc {}", trace.final_accuracy());
+}
+
+/// Failure-injection: a worker whose iterate is corrupted mid-run is
+/// pulled back by gossip (decentralized averaging is self-stabilizing as
+/// long as subsequent gradients are sane).
+#[test]
+fn gossip_recovers_from_one_bad_update() {
+    use pdsgdm::algorithms::{Algorithm, PdSgdm};
+    use pdsgdm::comm::Network;
+    use pdsgdm::grad::{GradientSource, Quadratic};
+    use pdsgdm::topology::{mixing_matrix, Weighting};
+
+    let k = 8;
+    let mut src = Quadratic::new(k, 16, 1.0, 0.05, 3);
+    let g = Topology::Ring.build(k, 0);
+    let w = mixing_matrix(&g, Weighting::UniformDegree);
+    let mut net = Network::new(&g);
+    let hyper = Hyper {
+        lr: LrSchedule::Constant { eta: 0.02 },
+        period: 4,
+        ..Hyper::default()
+    };
+    let mut algo = PdSgdm::new(k, src.init(1), w, hyper);
+    for t in 0..200 {
+        algo.step(t, &mut src, &mut net);
+    }
+    let healthy = src.eval(&algo.avg_params()).loss;
+    // corrupt worker 3's iterate (simulates a bad batch / bit flip)
+    let mut corrupted = algo.params(3).to_vec();
+    for v in corrupted.iter_mut().take(8) {
+        *v += 50.0;
+    }
+    algo.set_params_for_test(3, corrupted);
+    let spiked = src.eval(&algo.avg_params()).loss;
+    assert!(spiked > healthy * 2.0, "corruption should hurt: {spiked} vs {healthy}");
+    // continue training; consensus + fresh gradients must re-converge
+    for t in 200..1400 {
+        algo.step(t, &mut src, &mut net);
+    }
+    let recovered = src.eval(&algo.avg_params()).loss;
+    assert!(
+        recovered < spiked * 0.05,
+        "did not recover: healthy {healthy}, spiked {spiked}, recovered {recovered}"
+    );
+}
+
+/// Regression: centralized C-SGDM's parameter-server traffic must appear
+/// in the trace's comm_mb even though it bypasses the gossip Network.
+#[test]
+fn csgdm_comm_bytes_are_traced() {
+    let mut c = base_config();
+    c.algorithm = "c-sgdm".into();
+    c.steps = 50;
+    c.eval_every = 25;
+    let trace = Experiment::build(c).unwrap().run(false);
+    // 2 * 4 bytes * d * K per step
+    assert!(trace.total_comm_mb() > 0.0);
+    let d = 24 * 16 + 24 + 4 * 24 + 4; // mlp dim for base_config
+    let expect = (50u64 * 2 * 4 * d as u64 * 8) as f64 / (1024.0 * 1024.0);
+    assert!(
+        (trace.total_comm_mb() - expect).abs() < 1e-6,
+        "{} vs {expect}",
+        trace.total_comm_mb()
+    );
+}
