@@ -1,57 +1,171 @@
-//! **Hot-path microbenchmarks** — the L3 kernels EXPERIMENTS.md §Perf
-//! tracks: momentum update, gossip mixing, and every compression
-//! operator, at the e2e model size (d = 3.45M) and a 16M "GPT-2-small
-//! slice" size. Also times one XLA train_step / momentum / mix artifact
-//! execution when artifacts are present, so the L3-vs-L2 cost split is
-//! visible.
+//! **Hot-path benchmarks** — the numbers EXPERIMENTS.md §Perf tracks,
+//! emitted both as console rows and machine-readable records in
+//! `BENCH_hotpath.json` at the repo root (the tracked perf trajectory).
 //!
-//! Run with `cargo bench --bench hotpath`.
+//! Sections:
+//!
+//! 1. `algo_step` — END-TO-END `Algorithm::step` throughput of PD-SGDM on
+//!    the MLP oracle at K ∈ {1, 4, 8, 16}, sequential vs the parallel
+//!    [`pdsgdm::engine::LocalStepEngine`], including the K-scaling
+//!    speedup and a bit-identical-trace determinism check. This is the
+//!    paper's "linear speedup in K" claim measured on this machine.
+//! 2. L3 micro-kernels: momentum update, gossip mixing, and every
+//!    compression operator at the e2e model size (d = 3.45M) and a 16M
+//!    "GPT-2-small slice".
+//! 3. One XLA train_step / momentum execution when artifacts are present
+//!    AND the crate was built with `--features pjrt`, so the L3-vs-L2
+//!    cost split is visible.
+//!
+//! Run with `cargo bench --bench hotpath` (append `-- --smoke` for the
+//! CI-speed mode: same code paths, shrunken sizes/budgets, records
+//! written to BENCH_hotpath_smoke.json instead so the tracked
+//! trajectory is never clobbered by non-comparable numbers).
 
 use std::time::Duration;
 
-use pdsgdm::benchlib::{bench, black_box, report};
+use pdsgdm::algorithms::{Algorithm, Hyper, PdSgdm};
+use pdsgdm::benchlib::{bench, black_box, budget, report, smoke, stats_json, JsonSink};
 use pdsgdm::comm::Network;
 use pdsgdm::compress::{Compressor, Identity, Qsgd, RandK, Sign, TopK};
-use pdsgdm::optim::MomentumState;
+use pdsgdm::data::{Blobs, Sharding};
+use pdsgdm::grad::{GradientSource, Mlp};
+use pdsgdm::json::Json;
+use pdsgdm::optim::{LrSchedule, MomentumState};
 use pdsgdm::rng::Xoshiro256;
 use pdsgdm::topology::{mixing_matrix, Topology, Weighting};
 
-const BUDGET: Duration = Duration::from_millis(400);
+// ---------------------------------------------------------------------------
+// Section 1: end-to-end algo.step K-scaling
+// ---------------------------------------------------------------------------
 
-fn bench_momentum(d: usize) {
+/// Fresh (algorithm, oracle, network) triple for the K-scaling bench —
+/// identical seeds per call so sequential/parallel runs see identical
+/// randomness.
+fn algo_setup(k: usize, parallel: bool) -> (PdSgdm, Mlp, Network) {
+    let (n, dim, classes, hidden, batch) = if smoke() {
+        (512, 16, 4, 32, 16)
+    } else {
+        (4096, 64, 10, 256, 64)
+    };
+    let data = Blobs { n, dim, classes, spread: 3.0 }.generate(2020);
+    let src = Mlp::new(data, k, Sharding::Iid, hidden, batch, 0.0, 7);
+    let graph = Topology::Ring.build(k, 0);
+    let w = mixing_matrix(&graph, Weighting::UniformDegree);
+    let net = Network::new(&graph);
+    let hyper = Hyper {
+        lr: LrSchedule::Constant { eta: 0.05 },
+        mu: 0.9,
+        weight_decay: 1e-4,
+        period: 4,
+        gamma: 0.4,
+    };
+    let mut algo = PdSgdm::new(k, src.init(1), w, hyper);
+    algo.set_parallel(parallel);
+    (algo, src, net)
+}
+
+/// Run `steps` fresh iterations; return (per-step mean losses, final
+/// per-worker iterates) for the determinism cross-check.
+fn algo_trace(k: usize, parallel: bool, steps: u64) -> (Vec<f64>, Vec<Vec<f32>>) {
+    let (mut algo, mut src, mut net) = algo_setup(k, parallel);
+    let losses = (0..steps)
+        .map(|t| algo.step(t, &mut src, &mut net).mean_loss)
+        .collect();
+    let xs = (0..k).map(|w| algo.params(w).to_vec()).collect();
+    (losses, xs)
+}
+
+fn bench_algo_step(sink: &mut JsonSink) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("\n## algo_step end-to-end K-scaling (pd-sgdm on MLP oracle, {cores} cores)\n");
+    for k in [1usize, 4, 8, 16] {
+        // Determinism first: the parallel engine must reproduce the
+        // sequential trace bit-for-bit (ISSUE 1 acceptance criterion).
+        let (l_seq, x_seq) = algo_trace(k, false, 8);
+        let (l_par, x_par) = algo_trace(k, true, 8);
+        let bit_identical = l_seq.iter().zip(&l_par).all(|(a, b)| a.to_bits() == b.to_bits())
+            && x_seq.iter().zip(&x_par).all(|(a, b)| {
+                a.iter().zip(b).all(|(p, q)| p.to_bits() == q.to_bits())
+            });
+        assert!(bit_identical, "K={k}: parallel trace diverged from sequential");
+
+        let mut median_seq_ns = 0.0f64;
+        for parallel in [false, true] {
+            let (mut algo, mut src, mut net) = algo_setup(k, parallel);
+            let d = src.dim();
+            let mut t = 0u64;
+            let stats = bench(if smoke() { 1 } else { 2 }, budget(), || {
+                black_box(algo.step(t, &mut src, &mut net).mean_loss);
+                t += 1;
+            });
+            let mode = if parallel { "parallel" } else { "sequential" };
+            report(
+                &format!("algo_step[pd-sgdm] K={k} d={d} {mode}"),
+                &stats,
+                Some(((k * d) as f64, "worker-param")),
+            );
+            let median_ns = stats.median.as_nanos() as f64;
+            let mut fields = vec![
+                ("algo", Json::Str("pd-sgdm".into())),
+                ("workload", Json::Str("mlp".into())),
+                ("k", Json::Num(k as f64)),
+                ("d", Json::Num(d as f64)),
+                ("cores", Json::Num(cores as f64)),
+                ("mode", Json::Str(mode.into())),
+            ];
+            fields.extend(stats_json(&stats, Some((k * d) as f64)));
+            if parallel {
+                let speedup = median_seq_ns / median_ns.max(1.0);
+                fields.push(("speedup_vs_seq", Json::Num(speedup)));
+                fields.push(("bit_identical", Json::Bool(bit_identical)));
+                println!(
+                    "  -> K={k}: parallel speedup {speedup:.2}x over sequential \
+                     (bit-identical trace: {bit_identical})"
+                );
+            } else {
+                median_seq_ns = median_ns;
+            }
+            sink.push("algo_step", fields);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Section 2: L3 micro-kernels
+// ---------------------------------------------------------------------------
+
+fn bench_momentum(d: usize, sink: &mut JsonSink) {
     let mut rng = Xoshiro256::seed_from_u64(1);
     let mut x = rng.normal_vec(d, 1.0);
     let g = rng.normal_vec(d, 1.0);
     let mut st = MomentumState::new(d, 0.9, 1e-4);
-    let stats = bench(3, BUDGET, || {
+    let stats = bench(3, budget(), || {
         st.step(&mut x, &g, 0.01);
         black_box(x[0]);
     });
-    report(
-        &format!("momentum_step d={d}"),
-        &stats,
-        Some((d as f64, "param")),
-    );
+    report(&format!("momentum_step d={d}"), &stats, Some((d as f64, "param")));
+    let mut fields = vec![("d", Json::Num(d as f64))];
+    fields.extend(stats_json(&stats, Some(d as f64)));
+    sink.push("momentum_step", fields);
 }
 
-fn bench_gossip(k: usize, d: usize) {
+fn bench_gossip(k: usize, d: usize, sink: &mut JsonSink) {
     let g = Topology::Ring.build(k, 0);
     let w = mixing_matrix(&g, Weighting::UniformDegree);
     let gossip = pdsgdm::algorithms::GossipState::new(w);
     let mut rng = Xoshiro256::seed_from_u64(2);
     let mut xs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
     let mut net = Network::new(&g);
-    let stats = bench(2, BUDGET, || {
+    let stats = bench(2, budget(), || {
         black_box(gossip.mix(&mut xs, &mut net));
     });
-    report(
-        &format!("gossip_mix K={k} d={d}"),
-        &stats,
-        Some(((k * d) as f64, "param")),
-    );
+    report(&format!("gossip_mix K={k} d={d}"), &stats, Some(((k * d) as f64, "param")));
+    let mut fields = vec![("k", Json::Num(k as f64)), ("d", Json::Num(d as f64))];
+    fields.extend(stats_json(&stats, Some((k * d) as f64)));
+    sink.push("gossip_mix", fields);
 }
 
-fn bench_compressors(d: usize) {
+fn bench_compressors(d: usize, sink: &mut JsonSink) {
     let mut rng = Xoshiro256::seed_from_u64(3);
     let x = rng.normal_vec(d, 1.0);
     let ops: Vec<(&str, Box<dyn Compressor>)> = vec![
@@ -63,18 +177,28 @@ fn bench_compressors(d: usize) {
     ];
     for (name, op) in ops {
         let mut r = rng.fork(7);
-        let stats = bench(2, BUDGET, || {
+        let stats = bench(2, budget(), || {
             black_box(op.compress(&x, &mut r).wire_bytes);
         });
-        report(
-            &format!("compress/{name} d={d}"),
-            &stats,
-            Some((d as f64, "elem")),
-        );
+        report(&format!("compress/{name} d={d}"), &stats, Some((d as f64, "elem")));
+        let mut fields = vec![
+            ("operator", Json::Str(name.into())),
+            ("d", Json::Num(d as f64)),
+        ];
+        fields.extend(stats_json(&stats, Some(d as f64)));
+        sink.push("compress", fields);
     }
 }
 
-fn bench_xla_artifacts() {
+// ---------------------------------------------------------------------------
+// Section 3: XLA artifacts (pjrt builds only)
+// ---------------------------------------------------------------------------
+
+fn bench_xla_artifacts(sink: &mut JsonSink) {
+    if !pdsgdm::runtime::HAS_PJRT {
+        println!("(skipping XLA artifact benches: built without the pjrt feature)");
+        return;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("tiny.meta.json").exists() {
         println!("(skipping XLA artifact benches: run `make artifacts`)");
@@ -100,6 +224,12 @@ fn bench_xla_artifacts() {
             &stats,
             Some((flops, "flop")),
         );
+        let mut fields = vec![
+            ("model", Json::Str(model.into())),
+            ("d", Json::Num(m.d as f64)),
+        ];
+        fields.extend(stats_json(&stats, Some(flops)));
+        sink.push("xla_train_step", fields);
 
         let mstep = rt.momentum_step(model).expect("momentum");
         let mut r2 = Xoshiro256::seed_from_u64(5);
@@ -108,7 +238,7 @@ fn bench_xla_artifacts() {
             r2.normal_vec(m.d, 1.0),
             r2.normal_vec(m.d, 1.0),
         );
-        let stats = bench(1, BUDGET, || {
+        let stats = bench(1, budget(), || {
             black_box(mstep.run(&x, &mm, &g, 0.01, 0.9).expect("exec").0[0]);
         });
         report(
@@ -116,18 +246,43 @@ fn bench_xla_artifacts() {
             &stats,
             Some((m.d as f64, "param")),
         );
+        let mut fields = vec![
+            ("model", Json::Str(model.into())),
+            ("d", Json::Num(m.d as f64)),
+        ];
+        fields.extend(stats_json(&stats, Some(m.d as f64)));
+        sink.push("xla_momentum", fields);
     }
 }
 
 fn main() {
-    println!("# hotpath microbenchmarks (median over repeated runs)\n");
-    for d in [3_454_464usize, 16_000_000] {
-        bench_momentum(d);
+    let mode = if smoke() { " [--smoke]" } else { "" };
+    println!("# hotpath benchmarks (median over repeated runs){mode}\n");
+    // Smoke runs use shrunken sizes whose numbers are not comparable to
+    // the tracked trajectory — keep them in a separate file so a local
+    // `-- --smoke` never clobbers full-run records.
+    let out_name = if smoke() { "BENCH_hotpath_smoke.json" } else { "BENCH_hotpath.json" };
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(out_name);
+    let mut sink = JsonSink::new(&out);
+
+    bench_algo_step(&mut sink);
+
+    println!("\n## L3 micro-kernels\n");
+    let (d_e2e, d_big) = if smoke() { (100_000usize, 200_000usize) } else { (3_454_464, 16_000_000) };
+    for d in [d_e2e, d_big] {
+        bench_momentum(d, &mut sink);
     }
-    for (k, d) in [(8usize, 3_454_464usize), (16, 1_000_000)] {
-        bench_gossip(k, d);
+    let gossip_cases: [(usize, usize); 2] =
+        if smoke() { [(8, 50_000), (16, 25_000)] } else { [(8, 3_454_464), (16, 1_000_000)] };
+    for (k, d) in gossip_cases {
+        bench_gossip(k, d, &mut sink);
     }
-    bench_compressors(3_454_464);
+    bench_compressors(d_e2e, &mut sink);
     println!();
-    bench_xla_artifacts();
+    bench_xla_artifacts(&mut sink);
+
+    match sink.flush() {
+        Ok(path) => println!("\n{} records -> {}", sink.len(), path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out.display()),
+    }
 }

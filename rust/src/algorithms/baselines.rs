@@ -6,6 +6,7 @@
 use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
 use crate::comm::Network;
 use crate::compress::Compressor;
+use crate::engine::{LocalStepEngine, LocalUpdate};
 use crate::grad::GradientSource;
 use crate::linalg::{self, Mat};
 use crate::optim::MomentumState;
@@ -19,12 +20,19 @@ pub struct DSgd {
     hyper: Hyper,
     xs: Vec<Vec<f32>>,
     gossip: GossipState,
+    engine: LocalStepEngine,
 }
 
 impl DSgd {
     pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper) -> Self {
         assert_eq!(w.rows, k);
-        Self { xs: vec![x0; k], gossip: GossipState::new(w), hyper }
+        let d = x0.len();
+        Self {
+            xs: vec![x0; k],
+            gossip: GossipState::new(w),
+            engine: LocalStepEngine::new(k, d),
+            hyper,
+        }
     }
 }
 
@@ -39,18 +47,17 @@ impl Algorithm for DSgd {
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
         let eta = self.hyper.lr.eta(t);
-        let mut loss_sum = 0.0;
-        for (k, x) in self.xs.iter_mut().enumerate() {
-            let (loss, g) = source.grad(k, x);
-            loss_sum += loss;
-            linalg::axpy(-eta, &g, x);
-        }
+        let mean_loss = self.engine.local_step(source, &mut self.xs, LocalUpdate::Sgd { eta });
         let bytes = self.gossip.mix(&mut self.xs, net);
-        StepStats { mean_loss: loss_sum / self.k() as f64, communicated: true, bytes }
+        StepStats { mean_loss, communicated: true, bytes }
     }
 
     fn params(&self, k: usize) -> &[f32] {
         &self.xs[k]
+    }
+
+    fn set_parallel(&mut self, on: bool) {
+        self.engine.set_parallel(on);
     }
 }
 
@@ -62,12 +69,19 @@ pub struct PdSgd {
     hyper: Hyper,
     xs: Vec<Vec<f32>>,
     gossip: GossipState,
+    engine: LocalStepEngine,
 }
 
 impl PdSgd {
     pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper) -> Self {
         assert_eq!(w.rows, k);
-        Self { xs: vec![x0; k], gossip: GossipState::new(w), hyper }
+        let d = x0.len();
+        Self {
+            xs: vec![x0; k],
+            gossip: GossipState::new(w),
+            engine: LocalStepEngine::new(k, d),
+            hyper,
+        }
     }
 }
 
@@ -82,13 +96,8 @@ impl Algorithm for PdSgd {
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
         let eta = self.hyper.lr.eta(t);
-        let mut loss_sum = 0.0;
-        for (k, x) in self.xs.iter_mut().enumerate() {
-            let (loss, g) = source.grad(k, x);
-            loss_sum += loss;
-            linalg::axpy(-eta, &g, x);
-        }
-        let mut stats = StepStats { mean_loss: loss_sum / self.k() as f64, ..Default::default() };
+        let mean_loss = self.engine.local_step(source, &mut self.xs, LocalUpdate::Sgd { eta });
+        let mut stats = StepStats { mean_loss, ..Default::default() };
         if (t + 1) % self.hyper.period == 0 {
             stats.bytes = self.gossip.mix(&mut self.xs, net);
             stats.communicated = true;
@@ -98,6 +107,10 @@ impl Algorithm for PdSgd {
 
     fn params(&self, k: usize) -> &[f32] {
         &self.xs[k]
+    }
+
+    fn set_parallel(&mut self, on: bool) {
+        self.engine.set_parallel(on);
     }
 }
 
@@ -112,6 +125,7 @@ pub struct DSgdm {
     xs: Vec<Vec<f32>>,
     moms: Vec<MomentumState>,
     gossip: GossipState,
+    engine: LocalStepEngine,
     gossip_momentum: bool,
 }
 
@@ -125,6 +139,7 @@ impl DSgdm {
                 .map(|_| MomentumState::new(d, hyper.mu, hyper.weight_decay))
                 .collect(),
             gossip: GossipState::new(w),
+            engine: LocalStepEngine::new(k, d),
             hyper,
             gossip_momentum,
         }
@@ -142,25 +157,31 @@ impl Algorithm for DSgdm {
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
         let eta = self.hyper.lr.eta(t);
-        let mut loss_sum = 0.0;
-        for (k, (x, mom)) in self.xs.iter_mut().zip(self.moms.iter_mut()).enumerate() {
-            let (loss, g) = source.grad(k, x);
-            loss_sum += loss;
-            mom.step(x, &g, eta);
-        }
+        let mean_loss = self.engine.local_step(
+            source,
+            &mut self.xs,
+            LocalUpdate::Momentum { moms: &mut self.moms, eta },
+        );
         let mut bytes = self.gossip.mix(&mut self.xs, net);
         if self.gossip_momentum {
-            let mut ms: Vec<Vec<f32>> = self.moms.iter().map(|m| m.m.clone()).collect();
+            // Move the momentum buffers through the mix and back —
+            // no per-step clone of K d-length vectors.
+            let mut ms: Vec<Vec<f32>> =
+                self.moms.iter_mut().map(|m| std::mem::take(&mut m.m)).collect();
             bytes += self.gossip.mix(&mut ms, net);
             for (mom, m) in self.moms.iter_mut().zip(ms) {
                 mom.m = m;
             }
         }
-        StepStats { mean_loss: loss_sum / self.k() as f64, communicated: true, bytes }
+        StepStats { mean_loss, communicated: true, bytes }
     }
 
     fn params(&self, k: usize) -> &[f32] {
         &self.xs[k]
+    }
+
+    fn set_parallel(&mut self, on: bool) {
+        self.engine.set_parallel(on);
     }
 }
 
@@ -176,12 +197,22 @@ pub struct CSgdm {
     k: usize,
     x: Vec<f32>,
     mom: MomentumState,
+    engine: LocalStepEngine,
+    /// Preallocated average-gradient buffer (zero-allocation step).
+    gavg: Vec<f32>,
 }
 
 impl CSgdm {
     pub fn new(k: usize, x0: Vec<f32>, hyper: Hyper) -> Self {
         let d = x0.len();
-        Self { k, x: x0, mom: MomentumState::new(d, hyper.mu, hyper.weight_decay), hyper }
+        Self {
+            k,
+            x: x0,
+            mom: MomentumState::new(d, hyper.mu, hyper.weight_decay),
+            engine: LocalStepEngine::new(k, d),
+            gavg: vec![0.0; d],
+            hyper,
+        }
     }
 }
 
@@ -196,20 +227,21 @@ impl Algorithm for CSgdm {
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, _net: &mut Network) -> StepStats {
         let eta = self.hyper.lr.eta(t);
-        let mut loss_sum = 0.0;
-        let mut gsum = vec![0.0f32; self.x.len()];
-        for k in 0..self.k {
-            let (loss, g) = source.grad(k, &self.x);
-            loss_sum += loss;
-            linalg::axpy(1.0, &g, &mut gsum);
-        }
-        linalg::scale(1.0 / self.k as f32, &mut gsum);
-        self.mom.step(&mut self.x, &gsum, eta);
+        // All K workers evaluate their minibatch gradient at the single
+        // global iterate (in parallel when the source splits); the
+        // engine averages them in worker order straight into the
+        // preallocated buffer, then the server takes one momentum step.
+        let mean_loss = self.engine.grad_at_shared_mean_into(source, &self.x, &mut self.gavg);
+        self.mom.step(&mut self.x, &self.gavg, eta);
         StepStats {
-            mean_loss: loss_sum / self.k as f64,
+            mean_loss,
             communicated: true,
             bytes: (2 * 4 * self.x.len() * self.k) as u64,
         }
+    }
+
+    fn set_parallel(&mut self, on: bool) {
+        self.engine.set_parallel(on);
     }
 
     fn params(&self, _k: usize) -> &[f32] {
@@ -266,6 +298,10 @@ impl Algorithm for ChocoSgd {
     fn params(&self, k: usize) -> &[f32] {
         self.inner.params(k)
     }
+
+    fn set_parallel(&mut self, on: bool) {
+        self.inner.set_parallel(on);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -287,6 +323,7 @@ pub struct DeepSqueeze {
     errs: Vec<Vec<f32>>,
     gossip: GossipState,
     compressor: Box<dyn Compressor>,
+    engine: LocalStepEngine,
     rng: Xoshiro256,
 }
 
@@ -306,6 +343,7 @@ impl DeepSqueeze {
             errs: vec![vec![0.0; d]; k],
             gossip: GossipState::new(w),
             compressor,
+            engine: LocalStepEngine::new(k, d),
             hyper,
             rng: Xoshiro256::seed_from_u64(seed),
         }
@@ -361,13 +399,8 @@ impl Algorithm for DeepSqueeze {
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
         let eta = self.hyper.lr.eta(t);
-        let mut loss_sum = 0.0;
-        for (k, x) in self.xs.iter_mut().enumerate() {
-            let (loss, g) = source.grad(k, x);
-            loss_sum += loss;
-            linalg::axpy(-eta, &g, x);
-        }
-        let mut stats = StepStats { mean_loss: loss_sum / self.k() as f64, ..Default::default() };
+        let mean_loss = self.engine.local_step(source, &mut self.xs, LocalUpdate::Sgd { eta });
+        let mut stats = StepStats { mean_loss, ..Default::default() };
         if (t + 1) % self.hyper.period == 0 {
             stats.bytes = self.comm_round(net);
             stats.communicated = true;
@@ -377,6 +410,10 @@ impl Algorithm for DeepSqueeze {
 
     fn params(&self, k: usize) -> &[f32] {
         &self.xs[k]
+    }
+
+    fn set_parallel(&mut self, on: bool) {
+        self.engine.set_parallel(on);
     }
 }
 

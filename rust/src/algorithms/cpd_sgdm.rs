@@ -20,6 +20,7 @@
 use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
 use crate::comm::Network;
 use crate::compress::Compressor;
+use crate::engine::{LocalStepEngine, LocalUpdate};
 use crate::grad::GradientSource;
 use crate::linalg::{self, Mat};
 use crate::optim::MomentumState;
@@ -33,6 +34,7 @@ pub struct CpdSgdm {
     moms: Vec<MomentumState>,
     gossip: GossipState,
     compressor: Box<dyn Compressor>,
+    engine: LocalStepEngine,
     rng: Xoshiro256,
 }
 
@@ -56,6 +58,7 @@ impl CpdSgdm {
                 .collect(),
             gossip: GossipState::new(w),
             compressor,
+            engine: LocalStepEngine::new(k, d),
             hyper,
             rng: Xoshiro256::seed_from_u64(seed),
         }
@@ -140,17 +143,13 @@ impl Algorithm for CpdSgdm {
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
         let eta = self.hyper.lr.eta(t);
-        let mut loss_sum = 0.0;
-        // Lines 2-4: identical to Algorithm 1.
-        for (k, (x, mom)) in self.xs.iter_mut().zip(self.moms.iter_mut()).enumerate() {
-            let (loss, g) = source.grad(k, x);
-            loss_sum += loss;
-            mom.step(x, &g, eta);
-        }
-        let mut stats = StepStats {
-            mean_loss: loss_sum / self.k() as f64,
-            ..Default::default()
-        };
+        // Lines 2-4: identical to Algorithm 1 (shared parallel engine).
+        let mean_loss = self.engine.local_step(
+            source,
+            &mut self.xs,
+            LocalUpdate::Momentum { moms: &mut self.moms, eta },
+        );
+        let mut stats = StepStats { mean_loss, ..Default::default() };
         // Lines 5-13.
         if (t + 1) % self.hyper.period == 0 {
             stats.bytes = self.comm_round(net);
@@ -161,6 +160,10 @@ impl Algorithm for CpdSgdm {
 
     fn params(&self, k: usize) -> &[f32] {
         &self.xs[k]
+    }
+
+    fn set_parallel(&mut self, on: bool) {
+        self.engine.set_parallel(on);
     }
 }
 

@@ -79,7 +79,15 @@ pub trait Algorithm {
     /// Execute global iteration `t`: every worker draws a stochastic
     /// gradient at its own iterate from `source` and performs the
     /// algorithm's local update + (scheduled) communication over `net`.
+    /// The per-worker phase (Alg. 1/2 lines 2–4) runs through the shared
+    /// [`crate::engine::LocalStepEngine`].
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats;
+
+    /// Toggle the parallel local-step engine. Parallel and sequential
+    /// modes produce bit-identical traces (see
+    /// rust/tests/engine_determinism.rs); sequential exists for
+    /// profiling baselines and the determinism tests themselves.
+    fn set_parallel(&mut self, _on: bool) {}
 
     /// Worker k's current iterate x_t^(k).
     fn params(&self, k: usize) -> &[f32];

@@ -20,6 +20,7 @@
 
 use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
 use crate::comm::Network;
+use crate::engine::{LocalStepEngine, LocalUpdate};
 use crate::grad::GradientSource;
 use crate::linalg::Mat;
 use crate::optim::MomentumState;
@@ -29,6 +30,7 @@ pub struct PdSgdm {
     xs: Vec<Vec<f32>>,
     moms: Vec<MomentumState>,
     gossip: GossipState,
+    engine: LocalStepEngine,
 }
 
 impl PdSgdm {
@@ -43,6 +45,7 @@ impl PdSgdm {
                 .map(|_| MomentumState::new(d, hyper.mu, hyper.weight_decay))
                 .collect(),
             gossip: GossipState::new(w),
+            engine: LocalStepEngine::new(k, d),
             hyper,
         }
     }
@@ -71,18 +74,14 @@ impl Algorithm for PdSgdm {
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
         let eta = self.hyper.lr.eta(t);
-        let mut loss_sum = 0.0;
-        // Lines 2-4: local momentum step on every worker.
-        for (k, (x, mom)) in self.xs.iter_mut().zip(self.moms.iter_mut()).enumerate() {
-            let (loss, g) = source.grad(k, x);
-            loss_sum += loss;
-            mom.step(x, &g, eta);
-        }
+        // Lines 2-4: local momentum step on every worker (parallel engine).
+        let mean_loss = self.engine.local_step(
+            source,
+            &mut self.xs,
+            LocalUpdate::Momentum { moms: &mut self.moms, eta },
+        );
         // Lines 5-9: periodic gossip on the intermediate iterates.
-        let mut stats = StepStats {
-            mean_loss: loss_sum / self.k() as f64,
-            ..Default::default()
-        };
+        let mut stats = StepStats { mean_loss, ..Default::default() };
         if (t + 1) % self.hyper.period == 0 {
             stats.bytes = self.gossip.mix(&mut self.xs, net);
             stats.communicated = true;
@@ -92,6 +91,10 @@ impl Algorithm for PdSgdm {
 
     fn params(&self, k: usize) -> &[f32] {
         &self.xs[k]
+    }
+
+    fn set_parallel(&mut self, on: bool) {
+        self.engine.set_parallel(on);
     }
 }
 

@@ -10,7 +10,10 @@
 //!    reports min/median/p95 over warmed-up timed runs — the numbers in
 //!    EXPERIMENTS.md §Perf.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::json::{obj, Json};
 
 /// Timing statistics over repeated runs.
 #[derive(Clone, Copy, Debug)]
@@ -81,6 +84,73 @@ pub fn report(name: &str, stats: &BenchStats, throughput: Option<(f64, &str)>) {
     }
 }
 
+/// Whether the bench binary was invoked with `--smoke`
+/// (`cargo bench --bench hotpath -- --smoke`): CI-speed mode — shrunken
+/// problem sizes + short timing budgets, same code paths.
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// The [`bench`] timing budget honoring `--smoke`.
+pub fn budget() -> Duration {
+    if smoke() { Duration::from_millis(40) } else { Duration::from_millis(400) }
+}
+
+/// JSON form of one timing result (`*_ns` integers, median-based
+/// throughput when `units_per_iter` is given).
+pub fn stats_json(stats: &BenchStats, units_per_iter: Option<f64>) -> Vec<(&'static str, Json)> {
+    let mut pairs = vec![
+        ("iters", Json::Num(stats.iters as f64)),
+        ("min_ns", Json::Num(stats.min.as_nanos() as f64)),
+        ("median_ns", Json::Num(stats.median.as_nanos() as f64)),
+        ("p95_ns", Json::Num(stats.p95.as_nanos() as f64)),
+        ("mean_ns", Json::Num(stats.mean.as_nanos() as f64)),
+    ];
+    if let Some(units) = units_per_iter {
+        pairs.push(("throughput_per_s", Json::Num(stats.throughput(units))));
+    }
+    pairs
+}
+
+/// Accumulates machine-readable bench records and flushes them as one
+/// JSON document (`{"smoke": bool, "results": [...]}`) — the repo's
+/// tracked perf trajectory (BENCH_hotpath.json; see EXPERIMENTS.md §Perf).
+pub struct JsonSink {
+    path: PathBuf,
+    entries: Vec<Json>,
+}
+
+impl JsonSink {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into(), entries: Vec::new() }
+    }
+
+    /// Record one result: a `bench` name plus arbitrary fields.
+    pub fn push(&mut self, bench_name: &str, fields: Vec<(&str, Json)>) {
+        let mut pairs = vec![("bench", Json::Str(bench_name.to_string()))];
+        pairs.extend(fields);
+        self.entries.push(obj(pairs));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Write the document; returns the path it wrote to.
+    pub fn flush(&self) -> std::io::Result<&std::path::Path> {
+        let doc = obj(vec![
+            ("smoke", Json::Bool(smoke())),
+            ("results", Json::Arr(self.entries.clone())),
+        ]);
+        std::fs::write(&self.path, doc.to_string_compact() + "\n")?;
+        Ok(&self.path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +176,29 @@ mod tests {
     fn display_is_nonempty() {
         let stats = bench(0, Duration::from_millis(1), || {});
         assert!(!format!("{stats}").is_empty());
+    }
+
+    #[test]
+    fn json_sink_roundtrips_through_parser() {
+        let stats = bench(0, Duration::from_millis(1), || {
+            black_box((0..64).sum::<u64>());
+        });
+        let path = std::env::temp_dir()
+            .join(format!("pdsgdm_bench_{}.json", std::process::id()));
+        let mut sink = JsonSink::new(&path);
+        assert!(sink.is_empty());
+        let mut fields = vec![("k", Json::Num(8.0))];
+        fields.extend(stats_json(&stats, Some(1000.0)));
+        sink.push("algo_step", fields);
+        assert_eq!(sink.len(), 1);
+        sink.flush().unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let results = doc.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("bench").and_then(Json::as_str), Some("algo_step"));
+        assert_eq!(results[0].get("k").and_then(Json::as_usize), Some(8));
+        assert!(results[0].get("median_ns").and_then(Json::as_f64).is_some());
+        assert!(results[0].get("throughput_per_s").and_then(Json::as_f64).is_some());
+        std::fs::remove_file(&path).unwrap();
     }
 }

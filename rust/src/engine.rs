@@ -1,0 +1,388 @@
+//! The parallel local-step engine: one implementation of Alg. 1/2
+//! lines 2–4 (per-worker gradient + local update) shared by every
+//! algorithm in [`crate::algorithms`].
+//!
+//! The paper's headline claim is linear speedup in the number of workers
+//! K, which only materializes if the K local steps actually run
+//! concurrently (Lian et al. 2017; Wang et al. 2024). The engine owns
+//! one preallocated `d`-length gradient buffer per worker and, when the
+//! oracle can split into per-worker shards
+//! ([`GradientSource::split_workers`]), fans the gradient + momentum
+//! phase out over `std::thread::scope` — no extra dependencies, no
+//! locks: worker `k` touches only `xs[k]`, `bufs[k]`, `moms[k]`, and its
+//! own RNG/sampler shard, so there are no data races *by construction*.
+//!
+//! **Determinism contract:** the parallel and sequential paths produce
+//! bit-identical iterates and losses. Each worker's randomness lives in
+//! its own stream, every buffer is per-worker, and the mean loss is
+//! reduced in worker order in both paths. The contract is enforced by
+//! rust/tests/engine_determinism.rs across all of
+//! [`crate::algorithms::ALL_NAMES`].
+//!
+//! Sources that cannot split (e.g. [`crate::runtime::XlaGradSource`]'s
+//! single shared PJRT executable) fall back to the sequential
+//! allocation-free path transparently.
+
+use crate::grad::{GradientSource, WorkerGrad};
+use crate::linalg;
+use crate::optim::MomentumState;
+
+/// What each worker does with its freshly drawn gradient.
+pub enum LocalUpdate<'a> {
+    /// Heavy-ball Eq. (8): `m = mu*m + (g + wd*x); x -= eta*m`.
+    Momentum { moms: &'a mut [MomentumState], eta: f32 },
+    /// Plain SGD: `x -= eta * g` (the no-momentum baselines).
+    Sgd { eta: f32 },
+}
+
+/// Per-worker slice of a [`LocalUpdate`], movable onto a worker thread.
+enum WorkerUpdate<'a> {
+    Momentum(&'a mut MomentumState, f32),
+    Sgd(f32),
+}
+
+impl WorkerUpdate<'_> {
+    fn apply(&mut self, x: &mut [f32], g: &[f32]) {
+        match self {
+            WorkerUpdate::Momentum(mom, eta) => mom.step(x, g, *eta),
+            WorkerUpdate::Sgd(eta) => linalg::axpy(-*eta, g, x),
+        }
+    }
+}
+
+/// Below this dimension, scoped-thread spawn+join (tens of µs per
+/// worker) costs more than the gradient it parallelizes, so the engine
+/// defaults to the sequential path. Explicit [`LocalStepEngine::
+/// set_parallel`]`(true)` overrides — the determinism tests force the
+/// threaded path at tiny d on purpose.
+const PARALLEL_MIN_DIM: usize = 4096;
+
+/// Owns the per-worker gradient buffers and the threading policy.
+///
+/// Buffers are **lazy**: the K per-worker buffers materialize only when
+/// a path that truly needs K gradients alive at once runs (the
+/// scoped-thread parallel fan-out). Sequential paths consume each
+/// worker's gradient immediately after drawing it, so they reuse ONE
+/// scratch buffer — a non-splittable source like the XLA transformer
+/// (d in the millions) never pays K×d resident memory.
+pub struct LocalStepEngine {
+    /// Dimension d every buffer is sized to on first use.
+    d: usize,
+    /// Per-worker gradient buffers (parallel paths only); empty until
+    /// first needed, then written in place every step.
+    bufs: Vec<Vec<f32>>,
+    /// Single reusable gradient buffer for the sequential path.
+    scratch: Vec<f32>,
+    parallel: bool,
+}
+
+impl LocalStepEngine {
+    /// Engine for K workers in dimension d. Parallelism defaults on when
+    /// the host has more than one core AND the per-worker work is large
+    /// enough to amortize thread spawns (d >= [`PARALLEL_MIN_DIM`]);
+    /// flipping it never changes results, only wall-clock.
+    pub fn new(k: usize, d: usize) -> Self {
+        let parallel = d >= PARALLEL_MIN_DIM
+            && std::thread::available_parallelism()
+                .map(|n| n.get() > 1)
+                .unwrap_or(false);
+        Self { d, bufs: vec![Vec::new(); k], scratch: Vec::new(), parallel }
+    }
+
+    /// Sequential-only engine (profiling / determinism baselines).
+    pub fn sequential(k: usize, d: usize) -> Self {
+        Self { d, bufs: vec![Vec::new(); k], scratch: Vec::new(), parallel: false }
+    }
+
+    pub fn set_parallel(&mut self, on: bool) {
+        self.parallel = on;
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.parallel
+    }
+
+    fn ensure_bufs(bufs: &mut [Vec<f32>], d: usize) {
+        for b in bufs.iter_mut() {
+            if b.len() != d {
+                b.resize(d, 0.0);
+            }
+        }
+    }
+
+    /// Alg. 1/2 lines 2–4: every worker draws a stochastic gradient at
+    /// its own iterate `xs[k]` and applies `update`. Returns the mean
+    /// minibatch loss across workers.
+    pub fn local_step(
+        &mut self,
+        source: &mut dyn GradientSource,
+        xs: &mut [Vec<f32>],
+        update: LocalUpdate<'_>,
+    ) -> f64 {
+        let k = xs.len();
+        assert_eq!(self.bufs.len(), k, "engine sized for a different K");
+        let mut ups: Vec<WorkerUpdate<'_>> = match update {
+            LocalUpdate::Momentum { moms, eta } => {
+                assert_eq!(moms.len(), k);
+                moms.iter_mut().map(|m| WorkerUpdate::Momentum(m, eta)).collect()
+            }
+            LocalUpdate::Sgd { eta } => (0..k).map(|_| WorkerUpdate::Sgd(eta)).collect(),
+        };
+        let losses = if self.parallel && k > 1 {
+            Self::try_parallel(source, xs, &mut self.bufs, self.d, &mut ups)
+        } else {
+            None
+        };
+        let losses = match losses {
+            Some(l) => l,
+            None => {
+                if self.scratch.len() != self.d {
+                    self.scratch.resize(self.d, 0.0);
+                }
+                Self::run_sequential(source, xs, &mut self.scratch, &mut ups)
+            }
+        };
+        losses.iter().sum::<f64>() / k as f64
+    }
+
+    /// Centralized-baseline variant: every worker draws its gradient at
+    /// the SAME shared iterate `x`, and their average `(1/K) Σ_w g_w`
+    /// (accumulated in worker order) is written into `mean_out`.
+    /// Returns the mean minibatch loss.
+    ///
+    /// The sequential path accumulates through the single scratch buffer
+    /// — one gradient alive at a time, exactly the pre-engine memory
+    /// profile — while the parallel path (split sources only) fans out
+    /// into the per-worker buffers first. Both reduce in worker order,
+    /// so the result is bit-identical either way.
+    pub fn grad_at_shared_mean_into(
+        &mut self,
+        source: &mut dyn GradientSource,
+        x: &[f32],
+        mean_out: &mut [f32],
+    ) -> f64 {
+        let k = self.bufs.len();
+        assert_eq!(mean_out.len(), self.d);
+        assert!(k >= 1);
+        let losses: Vec<f64>;
+        if self.parallel && k > 1 {
+            if let Some(l) = Self::try_parallel_shared(source, x, &mut self.bufs, self.d) {
+                mean_out.copy_from_slice(&self.bufs[0]);
+                for g in &self.bufs[1..] {
+                    linalg::axpy(1.0, g, mean_out);
+                }
+                linalg::scale(1.0 / k as f32, mean_out);
+                return l.iter().sum::<f64>() / k as f64;
+            }
+        }
+        if self.scratch.len() != self.d {
+            self.scratch.resize(self.d, 0.0);
+        }
+        losses = (0..k)
+            .map(|w| {
+                let loss = source.grad_into(w, x, &mut self.scratch);
+                if w == 0 {
+                    mean_out.copy_from_slice(&self.scratch);
+                } else {
+                    linalg::axpy(1.0, &self.scratch, mean_out);
+                }
+                loss
+            })
+            .collect();
+        linalg::scale(1.0 / k as f32, mean_out);
+        losses.iter().sum::<f64>() / k as f64
+    }
+
+    fn run_sequential(
+        source: &mut dyn GradientSource,
+        xs: &mut [Vec<f32>],
+        scratch: &mut [f32],
+        ups: &mut [WorkerUpdate<'_>],
+    ) -> Vec<f64> {
+        xs.iter_mut()
+            .zip(ups.iter_mut())
+            .enumerate()
+            .map(|(w, (x, up))| {
+                let loss = source.grad_into(w, x, scratch);
+                up.apply(x, scratch);
+                loss
+            })
+            .collect()
+    }
+
+    /// `None` if the source does not split; otherwise one scoped thread
+    /// per worker, each owning (shard, x_k, buf_k, update_k). Buffers
+    /// are materialized only after the split succeeds, so non-splittable
+    /// sources never allocate them.
+    fn try_parallel(
+        source: &mut dyn GradientSource,
+        xs: &mut [Vec<f32>],
+        bufs: &mut [Vec<f32>],
+        d: usize,
+        ups: &mut [WorkerUpdate<'_>],
+    ) -> Option<Vec<f64>> {
+        let workers = source.split_workers()?;
+        assert_eq!(workers.len(), xs.len(), "split_workers() must yield K shards");
+        Self::ensure_bufs(bufs, d);
+        Some(std::thread::scope(|s| {
+            let handles: Vec<_> = workers
+                .into_iter()
+                .zip(xs.iter_mut())
+                .zip(bufs.iter_mut())
+                .zip(ups.iter_mut())
+                .map(|(((mut shard, x), buf), up)| {
+                    s.spawn(move || {
+                        let loss = shard.grad_into(x, buf);
+                        up.apply(x, buf);
+                        loss
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("worker thread panicked"))
+                .collect()
+        }))
+    }
+
+    fn try_parallel_shared(
+        source: &mut dyn GradientSource,
+        x: &[f32],
+        bufs: &mut [Vec<f32>],
+        d: usize,
+    ) -> Option<Vec<f64>> {
+        let workers = source.split_workers()?;
+        assert_eq!(workers.len(), bufs.len(), "split_workers() must yield K shards");
+        Self::ensure_bufs(bufs, d);
+        Some(std::thread::scope(|s| {
+            let handles: Vec<_> = workers
+                .into_iter()
+                .zip(bufs.iter_mut())
+                .map(|(mut shard, buf)| s.spawn(move || shard.grad_into(x, buf)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("worker thread panicked"))
+                .collect()
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::Quadratic;
+
+    fn setup(k: usize, d: usize, noise: f32, seed: u64) -> (Quadratic, Vec<Vec<f32>>) {
+        let src = Quadratic::new(k, d, 1.0, noise, seed);
+        let xs: Vec<Vec<f32>> = (0..k).map(|i| src.init(seed ^ i as u64)).collect();
+        (src, xs)
+    }
+
+    fn run_mode(parallel: bool, momentum: bool) -> (Vec<Vec<f32>>, Vec<f64>) {
+        let (k, d) = (4, 33);
+        let (mut src, mut xs) = setup(k, d, 0.1, 77);
+        let mut engine = if parallel {
+            let mut e = LocalStepEngine::new(k, d);
+            e.set_parallel(true);
+            e
+        } else {
+            LocalStepEngine::sequential(k, d)
+        };
+        let mut moms: Vec<MomentumState> =
+            (0..k).map(|_| MomentumState::new(d, 0.9, 0.0)).collect();
+        let mut losses = Vec::new();
+        for _ in 0..7 {
+            let update = if momentum {
+                LocalUpdate::Momentum { moms: &mut moms, eta: 0.05 }
+            } else {
+                LocalUpdate::Sgd { eta: 0.05 }
+            };
+            losses.push(engine.local_step(&mut src, &mut xs, update));
+        }
+        (xs, losses)
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        for momentum in [false, true] {
+            let (xs_seq, l_seq) = run_mode(false, momentum);
+            let (xs_par, l_par) = run_mode(true, momentum);
+            let bitwise = xs_seq.iter().zip(&xs_par).all(|(a, b)| {
+                a.iter().zip(b).all(|(p, q)| p.to_bits() == q.to_bits())
+            });
+            assert!(bitwise, "momentum={momentum}: iterates diverged");
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&l_seq), bits(&l_par), "momentum={momentum}: losses diverged");
+        }
+    }
+
+    #[test]
+    fn sgd_update_matches_manual_axpy() {
+        let (k, d) = (3, 10);
+        let (mut src, mut xs) = setup(k, d, 0.0, 5);
+        let (mut src2, xs2) = setup(k, d, 0.0, 5);
+        let mut engine = LocalStepEngine::sequential(k, d);
+        engine.local_step(&mut src, &mut xs, LocalUpdate::Sgd { eta: 0.1 });
+        for (w, x0) in xs2.iter().enumerate() {
+            let (_, g) = src2.grad(w, x0);
+            let mut want = x0.clone();
+            linalg::axpy(-0.1, &g, &mut want);
+            assert_eq!(xs[w], want);
+        }
+    }
+
+    #[test]
+    fn grad_at_shared_mean_matches_manual_average() {
+        let (k, d) = (3, 10);
+        let (mut src, _) = setup(k, d, 0.0, 6);
+        let (mut src2, _) = setup(k, d, 0.0, 6);
+        let x = src.init(2);
+        let mut engine = LocalStepEngine::sequential(k, d);
+        let mut mean = vec![9.9f32; d]; // dirty: must be overwritten
+        let loss = engine.grad_at_shared_mean_into(&mut src, &x, &mut mean);
+        assert!(loss.is_finite());
+        // manual reference: sum in worker order, then scale by 1/k
+        let mut want = src2.grad(0, &x).1;
+        for w in 1..k {
+            let (_, g) = src2.grad(w, &x);
+            linalg::axpy(1.0, &g, &mut want);
+        }
+        linalg::scale(1.0 / k as f32, &mut want);
+        assert_eq!(mean, want);
+    }
+
+    #[test]
+    fn small_dims_default_to_sequential_but_override_works() {
+        let e = LocalStepEngine::new(4, 8);
+        assert!(!e.is_parallel(), "tiny d must not pay thread spawns by default");
+        let mut e = LocalStepEngine::new(4, 8);
+        e.set_parallel(true);
+        assert!(e.is_parallel());
+    }
+
+    #[test]
+    fn grad_at_shared_mean_parallel_matches_sequential_bitwise() {
+        let (k, d) = (4, 12);
+        let (mut src, _) = setup(k, d, 0.1, 8);
+        let (mut src2, _) = setup(k, d, 0.1, 8);
+        let x = src.init(1);
+        let mut par = LocalStepEngine::new(k, d);
+        par.set_parallel(true);
+        let mut mean_par = vec![0.0f32; d];
+        let loss_par = par.grad_at_shared_mean_into(&mut src, &x, &mut mean_par);
+        let mut seq = LocalStepEngine::sequential(k, d);
+        let mut mean_seq = vec![0.0f32; d];
+        let loss_seq = seq.grad_at_shared_mean_into(&mut src2, &x, &mut mean_seq);
+        assert_eq!(loss_par.to_bits(), loss_seq.to_bits());
+        assert_eq!(mean_par, mean_seq);
+    }
+
+    #[test]
+    #[should_panic(expected = "different K")]
+    fn engine_rejects_mismatched_k() {
+        let (mut src, mut xs) = setup(3, 4, 0.0, 9);
+        let mut engine = LocalStepEngine::new(2, 4);
+        engine.local_step(&mut src, &mut xs, LocalUpdate::Sgd { eta: 0.1 });
+    }
+}

@@ -15,6 +15,29 @@
 //! * [`Mlp`] — 1-hidden-layer tanh MLP with manual backprop on blobs
 //!   (non-convex — the paper's setting; stands in for ResNet20/CIFAR-10
 //!   in the Figure 1–3 benches per DESIGN.md §2).
+//!
+//! ## The hot path (DESIGN.md §4, EXPERIMENTS.md §Perf)
+//!
+//! Two properties make the K-worker inner loop fast:
+//!
+//! 1. **Zero-allocation gradients** — [`GradientSource::grad_into`]
+//!    overwrites a caller-owned `d`-length buffer instead of returning a
+//!    fresh `Vec<f32>` per call (d is in the millions for the e2e
+//!    workloads; the old allocate-per-grad path was one malloc + page
+//!    fault sweep per worker per step).
+//! 2. **Splittable worker state** — [`GradientSource::split_workers`]
+//!    fractures the oracle into per-worker [`WorkerGrad`] handles that
+//!    borrow the shared read-only problem data and *disjoint* mutable
+//!    state (each worker's RNG stream / batch sampler), so
+//!    [`crate::engine::LocalStepEngine`] can run them on scoped threads
+//!    with no locks and no data races *by construction*. Sources that
+//!    cannot split (the single shared PJRT executable) return `None` and
+//!    the engine falls back to the sequential path.
+//!
+//! Determinism: each worker owns an independent, explicitly seeded RNG
+//! stream, so the parallel and sequential schedules consume identical
+//! randomness and produce bit-identical iterates (asserted by
+//! rust/tests/engine_determinism.rs).
 
 use crate::data::{shard_indices, BatchIter, Dataset, Sharding};
 use crate::rng::Xoshiro256;
@@ -30,6 +53,17 @@ pub struct EvalMetrics {
     pub grad_norm_sq: f64,
 }
 
+/// One worker's handle into a split oracle: shared problem data +
+/// exclusively-owned worker-local state (RNG stream, batch sampler).
+/// `Send` so the engine can move each handle onto its own scoped thread.
+pub trait WorkerGrad: Send {
+    /// Overwrite `out` with this worker's stochastic gradient at `x`;
+    /// returns the minibatch loss. Must be allocation-free in `d` and
+    /// must consume exactly the same per-worker randomness as the
+    /// sequential [`GradientSource::grad_into`] path.
+    fn grad_into(&mut self, x: &[f32], out: &mut [f32]) -> f64;
+}
+
 /// A stochastic first-order oracle over K workers.
 pub trait GradientSource {
     /// Dimension d of the flat parameter vector.
@@ -38,15 +72,32 @@ pub trait GradientSource {
     /// Number of workers K this source shards across.
     fn workers(&self) -> usize;
 
-    /// Stochastic (minibatch) gradient of `f^(worker)` at `x`.
+    /// Stochastic (minibatch) gradient of `f^(worker)` at `x`, written
+    /// into `out` (fully overwritten; `out.len() == dim()`). Returns the
+    /// minibatch loss. This is the allocation-free hot path.
+    fn grad_into(&mut self, worker: usize, x: &[f32], out: &mut [f32]) -> f64;
+
+    /// Allocating convenience form of [`GradientSource::grad_into`].
     /// Returns (minibatch loss, gradient).
-    fn grad(&mut self, worker: usize, x: &[f32]) -> (f64, Vec<f32>);
+    fn grad(&mut self, worker: usize, x: &[f32]) -> (f64, Vec<f32>) {
+        let mut g = vec![0.0f32; self.dim()];
+        let loss = self.grad_into(worker, x, &mut g);
+        (loss, g)
+    }
 
     /// Full-data global metrics at `x` (used for the figure y-axes).
     fn eval(&mut self, x: &[f32]) -> EvalMetrics;
 
     /// Initial parameter vector (same x_0 on every worker, per Alg. 1).
     fn init(&self, seed: u64) -> Vec<f32>;
+
+    /// Split into per-worker oracles with disjoint mutable state for the
+    /// parallel engine. `None` (the default) means the source cannot
+    /// split — e.g. [`crate::runtime::XlaGradSource`]'s single shared
+    /// PJRT executable — and the engine runs the sequential adapter.
+    fn split_workers(&mut self) -> Option<Vec<Box<dyn WorkerGrad + '_>>> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -67,7 +118,46 @@ pub struct Quadratic {
     /// Per-worker optima b_k (heterogeneity = inter-worker spread of b_k).
     b: Vec<Vec<f32>>,
     pub noise: f32,
-    rng: Xoshiro256,
+    /// One independent noise stream per worker, so the parallel engine's
+    /// schedule cannot perturb the randomness any worker sees.
+    rngs: Vec<Xoshiro256>,
+}
+
+/// Shared gradient kernel for the sequential path and the split workers:
+/// writes `a ⊙ (x − b) + noise` into `out`, returns the minibatch loss.
+fn quad_grad_into(
+    a: &[f32],
+    b: &[f32],
+    noise: f32,
+    rng: &mut Xoshiro256,
+    x: &[f32],
+    out: &mut [f32],
+) -> f64 {
+    debug_assert_eq!(x.len(), out.len());
+    let mut loss = 0.0f64;
+    for (((o, &xi), &ai), &bi) in out.iter_mut().zip(x).zip(a).zip(b) {
+        let e = xi - bi;
+        let mut g = ai * e;
+        if noise > 0.0 {
+            g += rng.normal_f32() * noise;
+        }
+        *o = g;
+        loss += 0.5 * ai as f64 * (e as f64) * (e as f64);
+    }
+    loss
+}
+
+struct QuadraticWorker<'a> {
+    a: &'a [f32],
+    b: &'a [f32],
+    noise: f32,
+    rng: &'a mut Xoshiro256,
+}
+
+impl WorkerGrad for QuadraticWorker<'_> {
+    fn grad_into(&mut self, x: &[f32], out: &mut [f32]) -> f64 {
+        quad_grad_into(self.a, self.b, self.noise, self.rng, x, out)
+    }
 }
 
 impl Quadratic {
@@ -79,7 +169,8 @@ impl Quadratic {
             .map(|_| (0..d).map(|_| 0.5 + rng.next_f32()).collect()) // [0.5, 1.5]
             .collect();
         let b = (0..k).map(|_| rng.normal_vec(d, heterogeneity)).collect();
-        Self { k, d, a, b, noise, rng: rng.fork(1) }
+        let rngs = (0..k).map(|i| rng.fork(1 + i as u64)).collect();
+        Self { k, d, a, b, noise, rngs }
     }
 
     /// Closed-form global minimizer of (1/K) Σ f^(k).
@@ -108,14 +199,6 @@ impl Quadratic {
             .flat_map(|row| row.iter())
             .fold(0.0f32, |acc, &v| acc.max(v))
     }
-
-    fn exact_grad(&self, worker: usize, x: &[f32]) -> Vec<f32> {
-        x.iter()
-            .zip(&self.a[worker])
-            .zip(&self.b[worker])
-            .map(|((&xi, &ai), &bi)| ai * (xi - bi))
-            .collect()
-    }
 }
 
 impl GradientSource for Quadratic {
@@ -127,20 +210,15 @@ impl GradientSource for Quadratic {
         self.k
     }
 
-    fn grad(&mut self, worker: usize, x: &[f32]) -> (f64, Vec<f32>) {
-        let mut g = self.exact_grad(worker, x);
-        if self.noise > 0.0 {
-            for gi in g.iter_mut() {
-                *gi += self.rng.normal_f32() * self.noise;
-            }
-        }
-        let loss: f64 = x
-            .iter()
-            .zip(&self.a[worker])
-            .zip(&self.b[worker])
-            .map(|((&xi, &ai), &bi)| 0.5 * ai as f64 * ((xi - bi) as f64).powi(2))
-            .sum();
-        (loss, g)
+    fn grad_into(&mut self, worker: usize, x: &[f32], out: &mut [f32]) -> f64 {
+        quad_grad_into(
+            &self.a[worker],
+            &self.b[worker],
+            self.noise,
+            &mut self.rngs[worker],
+            x,
+            out,
+        )
     }
 
     fn eval(&mut self, x: &[f32]) -> EvalMetrics {
@@ -164,6 +242,16 @@ impl GradientSource for Quadratic {
 
     fn init(&self, seed: u64) -> Vec<f32> {
         Xoshiro256::seed_from_u64(seed).normal_vec(self.d, 1.0)
+    }
+
+    fn split_workers(&mut self) -> Option<Vec<Box<dyn WorkerGrad + '_>>> {
+        let noise = self.noise;
+        let Self { a, b, rngs, .. } = self;
+        let mut v: Vec<Box<dyn WorkerGrad + '_>> = Vec::with_capacity(rngs.len());
+        for ((a, b), rng) in a.iter().zip(b.iter()).zip(rngs.iter_mut()) {
+            v.push(Box::new(QuadraticWorker { a: a.as_slice(), b: b.as_slice(), noise, rng }));
+        }
+        Some(v)
     }
 }
 
@@ -199,6 +287,57 @@ pub struct Logistic {
     pub l2: f32,
 }
 
+/// Gradient/loss over explicit indices, written into `out` (overwritten).
+/// Shared by the sequential path, the split workers, and `eval`.
+fn logistic_loss_grad_into(
+    data: &Dataset,
+    l2: f32,
+    x: &[f32],
+    indices: &[usize],
+    out: &mut [f32],
+) -> f64 {
+    let (din, c) = (data.dim(), data.n_classes);
+    debug_assert_eq!(out.len(), c * din + c);
+    out.iter_mut().for_each(|g| *g = 0.0);
+    let mut loss = 0.0;
+    let mut logits = vec![0.0f64; c]; // per-call scratch, reused per sample
+    for &i in indices {
+        let feat = &data.features[i];
+        let label = data.labels[i];
+        for (j, l) in logits.iter_mut().enumerate() {
+            let row = &x[j * din..(j + 1) * din];
+            *l = crate::linalg::dot(row, feat) + x[c * din + j] as f64;
+        }
+        loss += softmax_xent(&mut logits, label);
+        for j in 0..c {
+            let coef = (logits[j] - if j == label { 1.0 } else { 0.0 }) as f32;
+            let grow = &mut out[j * din..(j + 1) * din];
+            crate::linalg::axpy(coef, feat, grow);
+            out[c * din + j] += coef;
+        }
+    }
+    let n = indices.len().max(1) as f32;
+    out.iter_mut().for_each(|g| *g /= n);
+    if l2 > 0.0 {
+        crate::linalg::axpy(l2, x, out);
+    }
+    loss / n as f64
+}
+
+struct LogisticWorker<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    l2: f32,
+    sampler: &'a mut BatchIter,
+}
+
+impl WorkerGrad for LogisticWorker<'_> {
+    fn grad_into(&mut self, x: &[f32], out: &mut [f32]) -> f64 {
+        let idx = self.sampler.next_batch(self.batch);
+        logistic_loss_grad_into(self.data, self.l2, x, &idx, out)
+    }
+}
+
 impl Logistic {
     pub fn new(data: Dataset, k: usize, sharding: Sharding, batch: usize, l2: f32, seed: u64) -> Self {
         let idx = shard_indices(&data, k, sharding, seed);
@@ -218,34 +357,11 @@ impl Logistic {
         self.data.n_classes
     }
 
-    /// loss + grad over an explicit index set.
+    /// loss + grad over an explicit index set (allocating form).
     fn loss_grad_at(&self, x: &[f32], indices: &[usize]) -> (f64, Vec<f32>) {
-        let (din, c) = (self.dim_in(), self.classes());
-        let mut grad = vec![0.0f32; self.dim_total()];
-        let mut loss = 0.0;
-        for &i in indices {
-            let feat = &self.data.features[i];
-            let label = self.data.labels[i];
-            let mut logits: Vec<f64> = (0..c)
-                .map(|j| {
-                    let row = &x[j * din..(j + 1) * din];
-                    crate::linalg::dot(row, feat) + x[c * din + j] as f64
-                })
-                .collect();
-            loss += softmax_xent(&mut logits, label);
-            for j in 0..c {
-                let coef = (logits[j] - if j == label { 1.0 } else { 0.0 }) as f32;
-                let grow = &mut grad[j * din..(j + 1) * din];
-                crate::linalg::axpy(coef, feat, grow);
-                grad[c * din + j] += coef;
-            }
-        }
-        let n = indices.len().max(1) as f32;
-        grad.iter_mut().for_each(|g| *g /= n);
-        if self.l2 > 0.0 {
-            crate::linalg::axpy(self.l2, x, &mut grad);
-        }
-        (loss / n as f64, grad)
+        let mut g = vec![0.0f32; self.dim_total()];
+        let loss = logistic_loss_grad_into(&self.data, self.l2, x, indices, &mut g);
+        (loss, g)
     }
 
     fn dim_total(&self) -> usize {
@@ -283,9 +399,9 @@ impl GradientSource for Logistic {
         self.k
     }
 
-    fn grad(&mut self, worker: usize, x: &[f32]) -> (f64, Vec<f32>) {
+    fn grad_into(&mut self, worker: usize, x: &[f32], out: &mut [f32]) -> f64 {
         let batch = self.shards[worker].next_batch(self.batch);
-        self.loss_grad_at(x, &batch)
+        logistic_loss_grad_into(&self.data, self.l2, x, &batch, out)
     }
 
     fn eval(&mut self, x: &[f32]) -> EvalMetrics {
@@ -300,6 +416,17 @@ impl GradientSource for Logistic {
 
     fn init(&self, _seed: u64) -> Vec<f32> {
         vec![0.0; self.dim_total()] // convex: zero init is standard
+    }
+
+    fn split_workers(&mut self) -> Option<Vec<Box<dyn WorkerGrad + '_>>> {
+        let (batch, l2) = (self.batch, self.l2);
+        let Self { data, shards, .. } = self;
+        let data: &Dataset = data;
+        let mut v: Vec<Box<dyn WorkerGrad + '_>> = Vec::with_capacity(shards.len());
+        for sampler in shards.iter_mut() {
+            v.push(Box::new(LogisticWorker { data, batch, l2, sampler }));
+        }
+        Some(v)
     }
 }
 
@@ -316,6 +443,102 @@ pub struct Mlp {
     k: usize,
     pub hidden: usize,
     pub batch: usize,
+}
+
+/// fwd+bwd over explicit indices, written into `out` (overwritten);
+/// `indices` map into `data` offset by the holdout size. Shared by the
+/// sequential path, the split workers, and `eval`. Per-sample scratch
+/// (activations, logit deltas) is hoisted out of the sample loop, so the
+/// only allocations are O(hidden + classes) per *call*, never O(d).
+fn mlp_loss_grad_into(
+    data: &Dataset,
+    hidden_units: usize,
+    x: &[f32],
+    indices: &[usize],
+    offset: usize,
+    out: &mut [f32],
+) -> f64 {
+    let (din, h, c) = (data.dim(), hidden_units, data.n_classes);
+    debug_assert_eq!(out.len(), h * din + h + c * h + c);
+    let (w1, rest) = x.split_at(h * din);
+    let (b1, rest) = rest.split_at(h);
+    let (w2, b2) = rest.split_at(c * h);
+    debug_assert_eq!(b2.len(), c);
+    out.iter_mut().for_each(|g| *g = 0.0);
+    let mut loss = 0.0;
+    let mut hidden = vec![0.0f64; h];
+    let mut logits = vec![0.0f64; c];
+    let mut dlogits = vec![0.0f64; c];
+    let mut dhidden = vec![0.0f64; h];
+    for &i0 in indices {
+        let i = i0 + offset;
+        let feat = &data.features[i];
+        let label = data.labels[i];
+        // fwd
+        for (j, a) in hidden.iter_mut().enumerate() {
+            *a = (crate::linalg::dot(&w1[j * din..(j + 1) * din], feat) + b1[j] as f64).tanh();
+        }
+        for (j, l) in logits.iter_mut().enumerate() {
+            *l = w2[j * h..(j + 1) * h]
+                .iter()
+                .zip(&hidden)
+                .map(|(&w, &a)| w as f64 * a)
+                .sum::<f64>()
+                + b2[j] as f64;
+        }
+        loss += softmax_xent(&mut logits, label);
+        // bwd: dlogits = p - onehot
+        for (j, dl) in dlogits.iter_mut().enumerate() {
+            *dl = logits[j] - if j == label { 1.0 } else { 0.0 };
+        }
+        // grads of W2, b2; accumulate dhidden
+        dhidden.iter_mut().for_each(|v| *v = 0.0);
+        {
+            let (gw1, rest) = out.split_at_mut(h * din);
+            let (_gb1, rest) = rest.split_at_mut(h);
+            let (gw2, gb2) = rest.split_at_mut(c * h);
+            let _ = gw1;
+            for j in 0..c {
+                let dj = dlogits[j];
+                gb2[j] += dj as f32;
+                for (l, (&a, dh)) in hidden.iter().zip(dhidden.iter_mut()).enumerate() {
+                    gw2[j * h + l] += (dj * a) as f32;
+                    *dh += dj * w2[j * h + l] as f64;
+                }
+            }
+        }
+        // tanh' = 1 - a^2
+        for (dh, a) in dhidden.iter_mut().zip(hidden.iter()) {
+            *dh *= 1.0 - *a * *a;
+        }
+        {
+            let (gw1, rest) = out.split_at_mut(h * din);
+            let (gb1, _rest) = rest.split_at_mut(h);
+            for j in 0..h {
+                gb1[j] += dhidden[j] as f32;
+                let row = &mut gw1[j * din..(j + 1) * din];
+                crate::linalg::axpy(dhidden[j] as f32, feat, row);
+            }
+        }
+    }
+    let n = indices.len().max(1) as f32;
+    out.iter_mut().for_each(|g| *g /= n);
+    loss / n as f64
+}
+
+struct MlpWorker<'a> {
+    data: &'a Dataset,
+    hidden: usize,
+    batch: usize,
+    offset: usize,
+    sampler: &'a mut BatchIter,
+}
+
+impl WorkerGrad for MlpWorker<'_> {
+    fn grad_into(&mut self, x: &[f32], out: &mut [f32]) -> f64 {
+        let idx = self.sampler.next_batch(self.batch);
+        mlp_loss_grad_into(self.data, self.hidden, x, &idx, self.offset, out)
+    }
 }
 
 impl Mlp {
@@ -369,71 +592,11 @@ impl Mlp {
         (w1, b1, w2, b2)
     }
 
-    /// fwd+bwd over explicit indices; `train_indices` maps into
-    /// `self.data` offset by the holdout size.
+    /// Allocating form of the fwd+bwd over explicit indices.
     fn loss_grad_at(&self, x: &[f32], indices: &[usize], offset: usize) -> (f64, Vec<f32>) {
-        let (din, h, c) = (self.din(), self.hidden, self.classes());
-        let (w1, b1, w2, b2) = self.split(x);
-        let mut grad = vec![0.0f32; self.dim_total()];
-        let mut loss = 0.0;
-        for &i0 in indices {
-            let i = i0 + offset;
-            let feat = &self.data.features[i];
-            let label = self.data.labels[i];
-            // fwd
-            let mut hidden: Vec<f64> = (0..h)
-                .map(|j| {
-                    (crate::linalg::dot(&w1[j * din..(j + 1) * din], feat) + b1[j] as f64).tanh()
-                })
-                .collect();
-            let mut logits: Vec<f64> = (0..c)
-                .map(|j| {
-                    w2[j * h..(j + 1) * h]
-                        .iter()
-                        .zip(&hidden)
-                        .map(|(&w, &a)| w as f64 * a)
-                        .sum::<f64>()
-                        + b2[j] as f64
-                })
-                .collect();
-            loss += softmax_xent(&mut logits, label);
-            // bwd: dlogits = p - onehot
-            let dlogits: Vec<f64> = (0..c)
-                .map(|j| logits[j] - if j == label { 1.0 } else { 0.0 })
-                .collect();
-            // grads of W2, b2; accumulate dhidden
-            let mut dhidden = vec![0.0f64; h];
-            {
-                let (gw1, rest) = grad.split_at_mut(h * din);
-                let (_gb1, rest) = rest.split_at_mut(h);
-                let (gw2, gb2) = rest.split_at_mut(c * h);
-                let _ = gw1;
-                for j in 0..c {
-                    let dj = dlogits[j];
-                    gb2[j] += dj as f32;
-                    for (l, (&a, dh)) in hidden.iter().zip(dhidden.iter_mut()).enumerate() {
-                        gw2[j * h + l] += (dj * a) as f32;
-                        *dh += dj * w2[j * h + l] as f64;
-                    }
-                }
-            }
-            // tanh' = 1 - a^2
-            for (dh, a) in dhidden.iter_mut().zip(hidden.iter_mut()) {
-                *dh *= 1.0 - *a * *a;
-            }
-            {
-                let (gw1, rest) = grad.split_at_mut(h * din);
-                let (gb1, _rest) = rest.split_at_mut(h);
-                for j in 0..h {
-                    gb1[j] += dhidden[j] as f32;
-                    let row = &mut gw1[j * din..(j + 1) * din];
-                    crate::linalg::axpy(dhidden[j] as f32, feat, row);
-                }
-            }
-        }
-        let n = indices.len().max(1) as f32;
-        grad.iter_mut().for_each(|g| *g /= n);
-        (loss / n as f64, grad)
+        let mut g = vec![0.0f32; self.dim_total()];
+        let loss = mlp_loss_grad_into(&self.data, self.hidden, x, indices, offset, &mut g);
+        (loss, g)
     }
 
     pub fn accuracy_on(&self, x: &[f32], indices: &[usize]) -> f64 {
@@ -487,9 +650,9 @@ impl GradientSource for Mlp {
         self.k
     }
 
-    fn grad(&mut self, worker: usize, x: &[f32]) -> (f64, Vec<f32>) {
+    fn grad_into(&mut self, worker: usize, x: &[f32], out: &mut [f32]) -> f64 {
         let batch = self.shards[worker].next_batch(self.batch);
-        self.loss_grad_at(x, &batch, self.holdout.len())
+        mlp_loss_grad_into(&self.data, self.hidden, x, &batch, self.holdout.len(), out)
     }
 
     fn eval(&mut self, x: &[f32]) -> EvalMetrics {
@@ -513,6 +676,17 @@ impl GradientSource for Mlp {
         x.extend((0..c * h).map(|_| rng.normal_f32() * s2));
         x.extend(std::iter::repeat(0.0f32).take(c));
         x
+    }
+
+    fn split_workers(&mut self) -> Option<Vec<Box<dyn WorkerGrad + '_>>> {
+        let (hidden, batch, offset) = (self.hidden, self.batch, self.holdout.len());
+        let Self { data, shards, .. } = self;
+        let data: &Dataset = data;
+        let mut v: Vec<Box<dyn WorkerGrad + '_>> = Vec::with_capacity(shards.len());
+        for sampler in shards.iter_mut() {
+            v.push(Box::new(MlpWorker { data, hidden, batch, offset, sampler }));
+        }
+        Some(v)
     }
 }
 
@@ -562,6 +736,19 @@ mod tests {
     }
 
     #[test]
+    fn quadratic_noise_streams_are_per_worker() {
+        // Worker 1's draws must not depend on how often worker 0 drew —
+        // the invariant the parallel engine relies on.
+        let x = vec![0.0f32; 6];
+        let mut a = Quadratic::new(2, 6, 1.0, 0.3, 9);
+        let (_, _) = a.grad(0, &x); // interleaved extra draw on worker 0
+        let (_, g1_a) = a.grad(1, &x);
+        let mut b = Quadratic::new(2, 6, 1.0, 0.3, 9);
+        let (_, g1_b) = b.grad(1, &x);
+        assert_eq!(g1_a, g1_b, "worker 1 stream perturbed by worker 0 draws");
+    }
+
+    #[test]
     fn quadratic_l_smooth_bounds_curvature() {
         let q = Quadratic::new(4, 16, 1.0, 0.0, 4);
         let l = q.l_smooth();
@@ -580,11 +767,67 @@ mod tests {
         });
     }
 
+    // --- the grad_into / split_workers contract ---
+
+    #[test]
+    fn grad_into_matches_allocating_grad() {
+        // Two identically-seeded sources, one driven through grad(), one
+        // through grad_into(): bit-identical output.
+        let x = Xoshiro256::seed_from_u64(5).normal_vec(12, 1.0);
+        let mut a = Quadratic::new(3, 12, 1.0, 0.2, 11);
+        let mut b = Quadratic::new(3, 12, 1.0, 0.2, 11);
+        for w in 0..3 {
+            let (la, ga) = a.grad(w, &x);
+            let mut gb = vec![9.9f32; 12]; // dirty buffer: must be overwritten
+            let lb = b.grad_into(w, &x, &mut gb);
+            assert_eq!(la.to_bits(), lb.to_bits(), "worker {w} loss");
+            assert_eq!(ga, gb, "worker {w} grad");
+        }
+    }
+
+    #[test]
+    fn split_workers_match_sequential_streams() {
+        // For every pure-Rust oracle: a split worker draws exactly the
+        // stream the sequential grad_into path would.
+        fn check(mut seq: Box<dyn GradientSource>, mut par: Box<dyn GradientSource>, x: &[f32]) {
+            let d = seq.dim();
+            let k = seq.workers();
+            let mut seq_out = vec![0.0f32; d];
+            let seq_losses: Vec<f64> = (0..k)
+                .map(|w| seq.grad_into(w, x, &mut seq_out))
+                .collect();
+            // (keep only the last worker's grad for the bit check below)
+            let workers = par.split_workers().expect("pure-Rust oracles split");
+            assert_eq!(workers.len(), k);
+            let mut par_out = vec![0.0f32; d];
+            let mut par_losses = Vec::new();
+            for mut w in workers {
+                par_losses.push(w.grad_into(x, &mut par_out));
+            }
+            for (a, b) in seq_losses.iter().zip(&par_losses) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(seq_out, par_out, "last worker's gradient differs");
+        }
+        let xq = Xoshiro256::seed_from_u64(6).normal_vec(10, 1.0);
+        check(
+            Box::new(Quadratic::new(4, 10, 1.0, 0.1, 21)),
+            Box::new(Quadratic::new(4, 10, 1.0, 0.1, 21)),
+            &xq,
+        );
+        let lg = |s| Box::new(Logistic::new(blobs(90), 3, Sharding::Iid, 16, 0.01, s));
+        let xl = Xoshiro256::seed_from_u64(7).normal_vec(lg(22).dim(), 0.5);
+        check(lg(22), lg(22), &xl);
+        let mk = |s| Box::new(Mlp::new(blobs(90), 3, Sharding::Iid, 8, 16, 0.1, s));
+        let xm = Xoshiro256::seed_from_u64(8).normal_vec(mk(23).dim(), 0.5);
+        check(mk(23), mk(23), &xm);
+    }
+
     // --- logistic ---
 
     #[test]
     fn logistic_grad_matches_numerical() {
-        let mut lg = Logistic::new(blobs(60), 2, Sharding::Iid, 60, 0.01, 5);
+        let lg = Logistic::new(blobs(60), 2, Sharding::Iid, 60, 0.01, 5);
         let mut rng = Xoshiro256::seed_from_u64(6);
         let x = rng.normal_vec(lg.dim(), 0.5);
         let all: Vec<usize> = (0..lg.data.len()).collect();

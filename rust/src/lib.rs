@@ -8,9 +8,11 @@
 //!   topologies & mixing matrices ([`topology`]), δ-contraction
 //!   compression ([`compress`]), the simulated byte-metered network
 //!   ([`comm`]), the paper's two algorithms plus six baselines
-//!   ([`algorithms`]), gradient oracles ([`grad`]), the PJRT runtime that
-//!   executes the AOT-compiled JAX/Pallas artifacts ([`runtime`]), and
-//!   the training driver ([`coordinator`]).
+//!   ([`algorithms`]) all driven through the parallel local-step engine
+//!   ([`engine`]), gradient oracles ([`grad`]), the PJRT runtime that
+//!   executes the AOT-compiled JAX/Pallas artifacts ([`runtime`],
+//!   feature-gated behind `pjrt`), and the training driver
+//!   ([`coordinator`]).
 //! * **L2 (python/compile/model.py)** — a flat-parameter-vector decoder
 //!   transformer whose fused fwd+bwd is AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
@@ -29,6 +31,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod grad;
 pub mod json;
 pub mod linalg;

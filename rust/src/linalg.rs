@@ -27,11 +27,26 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// y = a * x + b * y (scaled blend, used by momentum: m = mu*m + g).
+/// y = a * x + b * y (scaled blend). This is the standalone form of the
+/// momentum recurrence `m = mu*m + g` — [`crate::optim::MomentumState::step`]
+/// fuses that recurrence with the weight-decay and iterate updates in
+/// one pass, so this kernel serves optimizer variants and analysis code.
+/// 4-way unrolled exactly like [`axpy`] so LLVM reliably autovectorizes
+/// without a SIMD crate.
 #[inline]
 pub fn axpby(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+    let n = x.len();
+    let chunks = n / 4;
+    let (x4, xr) = x.split_at(chunks * 4);
+    let (y4, yr) = y.split_at_mut(chunks * 4);
+    for (xc, yc) in x4.chunks_exact(4).zip(y4.chunks_exact_mut(4)) {
+        yc[0] = a * xc[0] + b * yc[0];
+        yc[1] = a * xc[1] + b * yc[1];
+        yc[2] = a * xc[2] + b * yc[2];
+        yc[3] = a * xc[3] + b * yc[3];
+    }
+    for (xi, yi) in xr.iter().zip(yr.iter_mut()) {
         *yi = a * xi + b * *yi;
     }
 }
@@ -346,6 +361,19 @@ mod tests {
     }
 
     #[test]
+    fn axpby_matches_scalar_across_remainder_lengths() {
+        // Cover the unrolled body plus every 0..3 remainder arm.
+        for n in [0usize, 1, 3, 4, 7, 8, 103] {
+            let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 3.0).collect();
+            let y0: Vec<f32> = (0..n).map(|i| -(i as f32) * 0.5 + 1.0).collect();
+            let want: Vec<f32> = x.iter().zip(&y0).map(|(xi, yi)| 1.7 * xi + -0.3 * yi).collect();
+            let mut y = y0.clone();
+            axpby(1.7, &x, -0.3, &mut y);
+            assert_eq!(y, want, "n={n}");
+        }
+    }
+
+    #[test]
     fn dot_and_norm() {
         let x = vec![3.0f32, 4.0];
         assert!((norm(&x) - 5.0).abs() < 1e-12);
@@ -481,5 +509,36 @@ mod weighted_sum_tests {
         weighted_sum_into(&mut dst, &[]);
         assert_eq!(dst, vec![0.0; 4]);
         assert_eq!(weighted_sum(&[], 3), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn four_and_more_terms_hit_the_fallback_arm() {
+        // The >= 4-term arm (first-term overwrite + axpy per rest) is what
+        // dense mixing rows (complete/star topologies in gossip) execute;
+        // check it against the naive formula at exactly 4 terms, beyond 4,
+        // and across the axpy remainder lengths.
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(0xF4);
+        for n_terms in [4usize, 5, 9] {
+            for d in [1usize, 4, 7, 33] {
+                let vecs: Vec<Vec<f32>> = (0..n_terms).map(|_| rng.normal_vec(d, 1.0)).collect();
+                let weights: Vec<f32> = (0..n_terms).map(|_| rng.normal_f32()).collect();
+                let terms: Vec<(f32, &[f32])> =
+                    weights.iter().zip(&vecs).map(|(&w, v)| (w, v.as_slice())).collect();
+                let naive: Vec<f32> = (0..d)
+                    .map(|i| {
+                        // same association order as the implementation:
+                        // ((w0*v0 + w1*v1) + w2*v2) + ...
+                        let mut acc = weights[0] * vecs[0][i];
+                        for t in 1..n_terms {
+                            acc += weights[t] * vecs[t][i];
+                        }
+                        acc
+                    })
+                    .collect();
+                let mut dst = vec![5.5f32; d]; // dirty: must be overwritten
+                weighted_sum_into(&mut dst, &terms);
+                assert_eq!(dst, naive, "n_terms={n_terms} d={d}");
+            }
+        }
     }
 }

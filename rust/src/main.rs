@@ -251,14 +251,19 @@ fn cmd_inspect(flags: Flags) -> Result<()> {
     for e in &m.layout {
         println!("  {:<18} offset {:>9}  shape {:?}", e.name, e.offset, e.shape);
     }
-    // compile-check all three artifact kinds
-    let _ = rt.train_step(model)?;
-    println!("train_step_{model}.hlo.txt: compiles OK");
-    let _ = rt.momentum_step(model)?;
-    println!("momentum_{model}.hlo.txt: compiles OK");
-    for k in &m.mix_ks {
-        let _ = rt.mix_step(model, *k)?;
-        println!("mix_k{k}_{model}.hlo.txt: compiles OK");
+    // compile-check all three artifact kinds (pjrt builds only — the
+    // stub runtime can read metadata but cannot compile HLO)
+    if pdsgdm::runtime::HAS_PJRT {
+        let _ = rt.train_step(model)?;
+        println!("train_step_{model}.hlo.txt: compiles OK");
+        let _ = rt.momentum_step(model)?;
+        println!("momentum_{model}.hlo.txt: compiles OK");
+        for k in &m.mix_ks {
+            let _ = rt.mix_step(model, *k)?;
+            println!("mix_k{k}_{model}.hlo.txt: compiles OK");
+        }
+    } else {
+        println!("(compile checks skipped: built without the `pjrt` feature)");
     }
     Ok(())
 }

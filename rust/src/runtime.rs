@@ -17,8 +17,19 @@
 //! plus [`XlaGradSource`], which adapts `TrainStep` + the Markov corpus
 //! to the [`crate::grad::GradientSource`] trait so the coordinator and
 //! all algorithms run unchanged on the real model.
+//!
+//! ## The `pjrt` feature
+//!
+//! The `xla` bindings crate is unavailable in the offline build
+//! environment, so everything that touches PJRT is gated behind the
+//! `pjrt` cargo feature. Without it this module compiles a stub with the
+//! same API whose constructors return descriptive errors — the pure-Rust
+//! workloads, tests, and benches build and run everywhere, and code that
+//! is generic over [`TrainStep`] type-checks identically in both modes.
+//! [`Manifest`] parsing/validation is feature-independent (no XLA
+//! needed), so `pdsgdm inspect` can still read artifact metadata.
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -26,6 +37,9 @@ use crate::data::{BatchIter, MarkovCorpus};
 use crate::grad::{EvalMetrics, GradientSource};
 use crate::json::Json;
 use crate::rng::Xoshiro256;
+
+/// Whether this build carries the real PJRT runtime (`--features pjrt`).
+pub const HAS_PJRT: bool = cfg!(feature = "pjrt");
 
 /// One entry of the flat-parameter layout (mirrors model.param_layout).
 #[derive(Clone, Debug, PartialEq)]
@@ -155,159 +169,283 @@ impl Manifest {
     }
 }
 
-/// A compiled HLO artifact on the PJRT CPU client.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-}
+// ---------------------------------------------------------------------------
+// Real PJRT runtime (--features pjrt, needs the `xla` dependency)
+// ---------------------------------------------------------------------------
 
-/// The PJRT client + artifact directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::path::PathBuf;
 
-impl Runtime {
-    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
-        let dir = artifacts_dir.into();
-        if !dir.is_dir() {
-            bail!(
-                "artifacts directory {dir:?} not found — run `make artifacts` first"
-            );
+    use anyhow::{anyhow, bail, Context, Result};
+
+    use super::Manifest;
+
+    /// A compiled HLO artifact on the PJRT CPU client.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The PJRT client + artifact directory.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            let dir = artifacts_dir.into();
+            if !dir.is_dir() {
+                bail!(
+                    "artifacts directory {dir:?} not found — run `make artifacts` first"
+                );
+            }
+            Ok(Self { client: xla::PjRtClient::cpu()?, dir })
         }
-        Ok(Self { client: xla::PjRtClient::cpu()?, dir })
-    }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn manifest(&self, model: &str) -> Result<Manifest> {
-        Manifest::load(&self.dir.join(format!("{model}.meta.json")))
-    }
-
-    fn compile(&self, file: &str) -> Result<Executable> {
-        let path = self.dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(Executable { exe: self.client.compile(&comp)? })
-    }
-
-    pub fn train_step(&self, model: &str) -> Result<TrainStep> {
-        let manifest = self.manifest(model)?;
-        let exe = self.compile(&format!("train_step_{model}.hlo.txt"))?;
-        Ok(TrainStep { exe, manifest })
-    }
-
-    pub fn momentum_step(&self, model: &str) -> Result<MomentumStep> {
-        let manifest = self.manifest(model)?;
-        let exe = self.compile(&format!("momentum_{model}.hlo.txt"))?;
-        Ok(MomentumStep { exe, d: manifest.d })
-    }
-
-    pub fn mix_step(&self, model: &str, k: usize) -> Result<MixStep> {
-        let manifest = self.manifest(model)?;
-        if !manifest.mix_ks.contains(&k) {
-            bail!(
-                "no mix artifact for K={k} (available: {:?}); re-run `make artifacts` with --ks",
-                manifest.mix_ks
-            );
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let exe = self.compile(&format!("mix_k{k}_{model}.hlo.txt"))?;
-        Ok(MixStep { exe, k, d: manifest.d })
+
+        pub fn manifest(&self, model: &str) -> Result<Manifest> {
+            Manifest::load(&self.dir.join(format!("{model}.meta.json")))
+        }
+
+        fn compile(&self, file: &str) -> Result<Executable> {
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(Executable { exe: self.client.compile(&comp)? })
+        }
+
+        pub fn train_step(&self, model: &str) -> Result<TrainStep> {
+            let manifest = self.manifest(model)?;
+            let exe = self.compile(&format!("train_step_{model}.hlo.txt"))?;
+            Ok(TrainStep { exe, manifest })
+        }
+
+        pub fn momentum_step(&self, model: &str) -> Result<MomentumStep> {
+            let manifest = self.manifest(model)?;
+            let exe = self.compile(&format!("momentum_{model}.hlo.txt"))?;
+            Ok(MomentumStep { exe, d: manifest.d })
+        }
+
+        pub fn mix_step(&self, model: &str, k: usize) -> Result<MixStep> {
+            let manifest = self.manifest(model)?;
+            if !manifest.mix_ks.contains(&k) {
+                bail!(
+                    "no mix artifact for K={k} (available: {:?}); re-run `make artifacts` with --ks",
+                    manifest.mix_ks
+                );
+            }
+            let exe = self.compile(&format!("mix_k{k}_{model}.hlo.txt"))?;
+            Ok(MixStep { exe, k, d: manifest.d })
+        }
+    }
+
+    fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// The fused fwd+bwd of the L2 transformer: (params, tokens) → (loss, grad).
+    pub struct TrainStep {
+        exe: Executable,
+        pub manifest: Manifest,
+    }
+
+    impl TrainStep {
+        /// Execute one training step. `tokens` is row-major [batch, seq_len+1].
+        pub fn run(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+            let m = &self.manifest;
+            if params.len() != m.d {
+                bail!("params len {} != d {}", params.len(), m.d);
+            }
+            let expect_tokens = m.batch * (m.seq_len + 1);
+            if tokens.len() != expect_tokens {
+                bail!("tokens len {} != B*(S+1) = {expect_tokens}", tokens.len());
+            }
+            let p = literal_f32(params, &[m.d as i64])?;
+            let t = xla::Literal::vec1(tokens).reshape(&[m.batch as i64, (m.seq_len + 1) as i64])?;
+            let result = self.exe.exe.execute::<xla::Literal>(&[p, t])?[0][0].to_literal_sync()?;
+            let (loss_lit, grad_lit) = result.to_tuple2()?;
+            let loss = loss_lit.to_vec::<f32>()?[0];
+            let grad = grad_lit.to_vec::<f32>()?;
+            Ok((loss, grad))
+        }
+    }
+
+    /// The fused L1 momentum kernel artifact: (x, m, g, eta, mu) → (x', m').
+    pub struct MomentumStep {
+        exe: Executable,
+        pub d: usize,
+    }
+
+    impl MomentumStep {
+        pub fn run(
+            &self,
+            x: &[f32],
+            m: &[f32],
+            g: &[f32],
+            eta: f32,
+            mu: f32,
+        ) -> Result<(Vec<f32>, Vec<f32>)> {
+            if x.len() != self.d || m.len() != self.d || g.len() != self.d {
+                bail!("momentum operand length mismatch (d={})", self.d);
+            }
+            let args = [
+                literal_f32(x, &[self.d as i64])?,
+                literal_f32(m, &[self.d as i64])?,
+                literal_f32(g, &[self.d as i64])?,
+                literal_f32(&[eta], &[1])?,
+                literal_f32(&[mu], &[1])?,
+            ];
+            let result = self.exe.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let (x_new, m_new) = result.to_tuple2()?;
+            Ok((x_new.to_vec::<f32>()?, m_new.to_vec::<f32>()?))
+        }
+    }
+
+    /// The L1 gossip-mix kernel artifact: (w, xs) → W·X over stacked iterates.
+    pub struct MixStep {
+        exe: Executable,
+        pub k: usize,
+        pub d: usize,
+    }
+
+    impl MixStep {
+        /// `w` is row-major [K,K]; `xs` row-major [K,d]. Returns mixed [K,d].
+        pub fn run(&self, w: &[f32], xs: &[f32]) -> Result<Vec<f32>> {
+            if w.len() != self.k * self.k {
+                bail!("w len {} != K*K", w.len());
+            }
+            if xs.len() != self.k * self.d {
+                bail!("xs len {} != K*d", xs.len());
+            }
+            let wl = literal_f32(w, &[self.k as i64, self.k as i64])?;
+            let xl = literal_f32(xs, &[self.k as i64, self.d as i64])?;
+            let result = self.exe.exe.execute::<xla::Literal>(&[wl, xl])?[0][0].to_literal_sync()?;
+            Ok(result.to_tuple1()?.to_vec::<f32>()?)
+        }
     }
 }
 
-fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
+// ---------------------------------------------------------------------------
+// Stub runtime (default build: no `xla` crate available)
+// ---------------------------------------------------------------------------
 
-/// The fused fwd+bwd of the L2 transformer: (params, tokens) → (loss, grad).
-pub struct TrainStep {
-    exe: Executable,
-    pub manifest: Manifest,
-}
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::PathBuf;
 
-impl TrainStep {
-    /// Execute one training step. `tokens` is row-major [batch, seq_len+1].
-    pub fn run(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
-        let m = &self.manifest;
-        if params.len() != m.d {
-            bail!("params len {} != d {}", params.len(), m.d);
+    use anyhow::{bail, Result};
+
+    use super::Manifest;
+
+    const NO_PJRT: &str = "pdsgdm was built without the `pjrt` feature, so the \
+        XLA/PJRT runtime is unavailable; provide the `xla` dependency in \
+        Cargo.toml and rebuild with `--features pjrt` (after `make artifacts`)";
+
+    /// Stub: artifact-directory handle that can read manifests but not
+    /// compile or execute.
+    pub struct Runtime {
+        dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            let dir = artifacts_dir.into();
+            if !dir.is_dir() {
+                bail!(
+                    "artifacts directory {dir:?} not found — run `make artifacts` first"
+                );
+            }
+            Ok(Self { dir })
         }
-        let expect_tokens = m.batch * (m.seq_len + 1);
-        if tokens.len() != expect_tokens {
-            bail!("tokens len {} != B*(S+1) = {expect_tokens}", tokens.len());
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without the pjrt feature)".into()
         }
-        let p = literal_f32(params, &[m.d as i64])?;
-        let t = xla::Literal::vec1(tokens).reshape(&[m.batch as i64, (m.seq_len + 1) as i64])?;
-        let result = self.exe.exe.execute::<xla::Literal>(&[p, t])?[0][0].to_literal_sync()?;
-        let (loss_lit, grad_lit) = result.to_tuple2()?;
-        let loss = loss_lit.to_vec::<f32>()?[0];
-        let grad = grad_lit.to_vec::<f32>()?;
-        Ok((loss, grad))
+
+        pub fn manifest(&self, model: &str) -> Result<Manifest> {
+            Manifest::load(&self.dir.join(format!("{model}.meta.json")))
+        }
+
+        pub fn train_step(&self, _model: &str) -> Result<TrainStep> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn momentum_step(&self, _model: &str) -> Result<MomentumStep> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn mix_step(&self, _model: &str, _k: usize) -> Result<MixStep> {
+            bail!(NO_PJRT)
+        }
+    }
+
+    /// Stub `TrainStep` — never constructible (only [`Runtime::train_step`]
+    /// could mint one and it always errors), but the type exists so code
+    /// generic over the runtime compiles unchanged.
+    pub struct TrainStep {
+        pub manifest: Manifest,
+    }
+
+    impl TrainStep {
+        pub fn run(&self, _params: &[f32], _tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+            bail!(NO_PJRT)
+        }
+    }
+
+    pub struct MomentumStep {
+        pub d: usize,
+    }
+
+    impl MomentumStep {
+        pub fn run(
+            &self,
+            _x: &[f32],
+            _m: &[f32],
+            _g: &[f32],
+            _eta: f32,
+            _mu: f32,
+        ) -> Result<(Vec<f32>, Vec<f32>)> {
+            bail!(NO_PJRT)
+        }
+    }
+
+    pub struct MixStep {
+        pub k: usize,
+        pub d: usize,
+    }
+
+    impl MixStep {
+        pub fn run(&self, _w: &[f32], _xs: &[f32]) -> Result<Vec<f32>> {
+            bail!(NO_PJRT)
+        }
     }
 }
 
-/// The fused L1 momentum kernel artifact: (x, m, g, eta, mu) → (x', m').
-pub struct MomentumStep {
-    exe: Executable,
-    pub d: usize,
-}
+pub use backend::{MixStep, MomentumStep, Runtime, TrainStep};
+#[cfg(feature = "pjrt")]
+pub use backend::Executable;
 
-impl MomentumStep {
-    pub fn run(
-        &self,
-        x: &[f32],
-        m: &[f32],
-        g: &[f32],
-        eta: f32,
-        mu: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
-        if x.len() != self.d || m.len() != self.d || g.len() != self.d {
-            bail!("momentum operand length mismatch (d={})", self.d);
-        }
-        let args = [
-            literal_f32(x, &[self.d as i64])?,
-            literal_f32(m, &[self.d as i64])?,
-            literal_f32(g, &[self.d as i64])?,
-            literal_f32(&[eta], &[1])?,
-            literal_f32(&[mu], &[1])?,
-        ];
-        let result = self.exe.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let (x_new, m_new) = result.to_tuple2()?;
-        Ok((x_new.to_vec::<f32>()?, m_new.to_vec::<f32>()?))
-    }
-}
-
-/// The L1 gossip-mix kernel artifact: (w, xs) → W·X over stacked iterates.
-pub struct MixStep {
-    exe: Executable,
-    pub k: usize,
-    pub d: usize,
-}
-
-impl MixStep {
-    /// `w` is row-major [K,K]; `xs` row-major [K,d]. Returns mixed [K,d].
-    pub fn run(&self, w: &[f32], xs: &[f32]) -> Result<Vec<f32>> {
-        if w.len() != self.k * self.k {
-            bail!("w len {} != K*K", w.len());
-        }
-        if xs.len() != self.k * self.d {
-            bail!("xs len {} != K*d", xs.len());
-        }
-        let wl = literal_f32(w, &[self.k as i64, self.k as i64])?;
-        let xl = literal_f32(xs, &[self.k as i64, self.d as i64])?;
-        let result = self.exe.exe.execute::<xla::Literal>(&[wl, xl])?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
-    }
-}
+// ---------------------------------------------------------------------------
+// GradientSource adapter (works against either backend's TrainStep)
+// ---------------------------------------------------------------------------
 
 /// Adapts the XLA transformer to [`GradientSource`]: K workers sharing
 /// one compiled `TrainStep`, each with its own contiguous shard of a
 /// Markov-corpus token stream and its own batch sampler.
+///
+/// One shared PJRT executable cannot split into `Sync` per-worker
+/// shards, so this source keeps the default `split_workers() == None`
+/// and the [`crate::engine::LocalStepEngine`] drives it through the
+/// sequential path: one shared scratch buffer (never K×d resident
+/// memory), at the cost of copying the executable's output into it —
+/// an O(d) memcpy that is negligible next to the train-step execution.
 pub struct XlaGradSource {
     step: TrainStep,
     tokens: Vec<u32>,
@@ -368,13 +506,14 @@ impl GradientSource for XlaGradSource {
         self.k
     }
 
-    fn grad(&mut self, worker: usize, x: &[f32]) -> (f64, Vec<f32>) {
+    fn grad_into(&mut self, worker: usize, x: &[f32], out: &mut [f32]) -> f64 {
         let toks = self.batch_tokens(worker);
         let (loss, grad) = self
             .step
             .run(x, &toks)
             .expect("train_step execution failed");
-        (loss as f64, grad)
+        out.copy_from_slice(&grad);
+        loss as f64
     }
 
     fn eval(&mut self, x: &[f32]) -> EvalMetrics {
@@ -413,7 +552,7 @@ mod tests {
 
     // Manifest logic is testable without artifacts; the load-and-execute
     // path is covered by rust/tests/runtime_integration.rs (gated on the
-    // artifacts directory existing).
+    // artifacts directory existing AND the pjrt feature being enabled).
 
     fn manifest_json() -> String {
         r#"{
@@ -495,5 +634,21 @@ mod tests {
             Err(e) => e.to_string(),
         };
         assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn stub_runtime_reads_manifests_but_cannot_execute() {
+        let dir = std::env::temp_dir().join(format!("pdsgdm_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.meta.json"), manifest_json()).unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        assert_eq!(rt.manifest("t").unwrap().d, 10);
+        assert!(rt.platform().contains("pjrt"));
+        let err = rt.train_step("t").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+        assert!(rt.momentum_step("t").is_err());
+        assert!(rt.mix_step("t", 4).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

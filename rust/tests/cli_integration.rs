@@ -126,6 +126,10 @@ period = 4
 
 #[test]
 fn inspect_validates_artifacts_when_present() {
+    if !pdsgdm::runtime::HAS_PJRT {
+        eprintln!("skipping inspect test: built without the pjrt feature");
+        return;
+    }
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("tiny.meta.json").exists() {
         eprintln!("skipping inspect test: run `make artifacts` first");

@@ -1,0 +1,122 @@
+//! The engine determinism contract: for EVERY algorithm in
+//! `algorithms::ALL_NAMES`, driving the local-step phase through the
+//! parallel `LocalStepEngine` must produce traces **bit-identical** to
+//! the sequential path — same per-worker iterates, same mean losses,
+//! same wire bytes. Randomness lives in per-worker streams and every
+//! buffer is per-worker, so the thread schedule has nothing to perturb;
+//! this test is the executable form of that argument.
+
+use pdsgdm::algorithms::{self, Algorithm, Hyper, StepStats};
+use pdsgdm::comm::Network;
+use pdsgdm::grad::{GradientSource, Quadratic};
+use pdsgdm::optim::LrSchedule;
+use pdsgdm::testing::forall;
+use pdsgdm::topology::{mixing_matrix, Topology, Weighting};
+
+/// Run `name` for `steps` iterations on a seeded Quadratic oracle;
+/// return (per-step stats, final per-worker iterates).
+fn run_algorithm(
+    name: &str,
+    k: usize,
+    d: usize,
+    seed: u64,
+    parallel: bool,
+    steps: u64,
+) -> (Vec<StepStats>, Vec<Vec<f32>>) {
+    let mut src = Quadratic::new(k, d, 1.0, 0.1, seed);
+    let graph = Topology::Ring.build(k, 0);
+    let w = mixing_matrix(&graph, Weighting::UniformDegree);
+    let mut net = Network::new(&graph);
+    let x0 = src.init(seed ^ 0xD5);
+    let hyper = Hyper {
+        lr: LrSchedule::Constant { eta: 0.05 },
+        mu: 0.9,
+        weight_decay: 1e-4,
+        period: 2,
+        gamma: 0.4,
+    };
+    let mut algo = algorithms::by_name(name, k, x0, w, hyper, None, seed)
+        .unwrap_or_else(|| panic!("unknown algorithm {name}"));
+    algo.set_parallel(parallel);
+    let stats = (0..steps).map(|t| algo.step(t, &mut src, &mut net)).collect();
+    let xs = (0..k).map(|i| algo.params(i).to_vec()).collect();
+    (stats, xs)
+}
+
+fn assert_bit_identical(name: &str, seq: &(Vec<StepStats>, Vec<Vec<f32>>), par: &(Vec<StepStats>, Vec<Vec<f32>>)) {
+    for (t, (s, p)) in seq.0.iter().zip(&par.0).enumerate() {
+        assert_eq!(
+            s.mean_loss.to_bits(),
+            p.mean_loss.to_bits(),
+            "{name}: mean_loss diverged at step {t} ({} vs {})",
+            s.mean_loss,
+            p.mean_loss
+        );
+        assert_eq!(s.bytes, p.bytes, "{name}: wire bytes diverged at step {t}");
+        assert_eq!(s.communicated, p.communicated, "{name}: schedule diverged at step {t}");
+    }
+    for (w, (a, b)) in seq.1.iter().zip(&par.1).enumerate() {
+        assert_eq!(a.len(), b.len(), "{name}: worker {w} dimension mismatch");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{name}: worker {w} coord {i} diverged ({x} vs {y})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_engine_is_bit_identical_for_every_algorithm() {
+    forall(0xE9619E, 6, |rng| {
+        let k = 3 + rng.below(6); // 3..=8 workers
+        let d = 1 + rng.below(48);
+        let seed = rng.next_u64();
+        for name in algorithms::ALL_NAMES {
+            let seq = run_algorithm(name, k, d, seed, false, 9);
+            let par = run_algorithm(name, k, d, seed, true, 9);
+            assert_bit_identical(name, &seq, &par);
+        }
+    });
+}
+
+#[test]
+fn parallel_engine_is_bit_identical_on_split_oracles() {
+    // The Mlp and Logistic oracles split into per-worker shards too;
+    // spot-check the paper's primary algorithm on both.
+    use pdsgdm::data::{Blobs, Sharding};
+    use pdsgdm::grad::{Logistic, Mlp};
+
+    fn run(parallel: bool, mlp: bool) -> (Vec<f64>, Vec<Vec<f32>>) {
+        let k = 4;
+        let data = Blobs { n: 240, dim: 8, classes: 3, spread: 3.0 }.generate(99);
+        let mut src: Box<dyn GradientSource> = if mlp {
+            Box::new(Mlp::new(data, k, Sharding::Iid, 12, 16, 0.1, 5))
+        } else {
+            Box::new(Logistic::new(data, k, Sharding::Iid, 16, 1e-3, 5))
+        };
+        let graph = Topology::Ring.build(k, 0);
+        let w = mixing_matrix(&graph, Weighting::UniformDegree);
+        let mut net = Network::new(&graph);
+        let x0 = src.init(3);
+        let mut algo = algorithms::by_name("pd-sgdm", k, x0, w, Hyper::default(), None, 5).unwrap();
+        algo.set_parallel(parallel);
+        let losses = (0..12).map(|t| algo.step(t, src.as_mut(), &mut net).mean_loss).collect();
+        let xs = (0..k).map(|i| algo.params(i).to_vec()).collect();
+        (losses, xs)
+    }
+
+    for mlp in [false, true] {
+        let (l_seq, x_seq) = run(false, mlp);
+        let (l_par, x_par) = run(true, mlp);
+        assert!(
+            l_seq.iter().zip(&l_par).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "mlp={mlp}: losses diverged"
+        );
+        let bitwise = x_seq.iter().zip(&x_par).all(|(a, b)| {
+            a.len() == b.len() && a.iter().zip(b).all(|(p, q)| p.to_bits() == q.to_bits())
+        });
+        assert!(bitwise, "mlp={mlp}: iterates diverged");
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal in-repo stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline (no crates.io), so the repo
+//! vendors the narrow slice of the anyhow API its coordinator actually
+//! uses: the string-backed [`Error`] type, the [`Result`] alias, the
+//! [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension trait.
+//! Error values are flattened to a single display string at construction
+//! (no source chain / backtrace machinery) — every use in this repo only
+//! ever formats the error for a human, so nothing is lost.
+
+use std::fmt;
+
+/// String-backed error value. Construct via [`Error::msg`], the
+/// [`anyhow!`] macro, or `?` on any `std::error::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Self { msg: msg.to_string() }
+    }
+
+    /// anyhow parity: wrap a concrete std error.
+    pub fn new<E: std::error::Error>(e: E) -> Self {
+        Self::msg(&e)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` prints the full context chain in real anyhow; our chain
+        // is pre-flattened into `msg`, so both forms print the same.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?` conversion from any std error. `Error` itself deliberately does
+// NOT implement `std::error::Error` (exactly like real anyhow), which is
+// what keeps this blanket impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self::msg(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(|| ..)` on any displayable error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_and_context_compose() {
+        let base: Result<()> = Err(anyhow!("base {}", 7));
+        let wrapped = base.context("outer");
+        let msg = wrapped.unwrap_err().to_string();
+        assert_eq!(msg, "outer: base 7");
+
+        fn bails(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged");
+            }
+            Ok(1)
+        }
+        assert_eq!(bails(false).unwrap(), 1);
+        assert_eq!(bails(true).unwrap_err().to_string(), "flagged");
+    }
+
+    #[test]
+    fn anyhow_accepts_displayable_expression() {
+        let s = String::from("plain string error");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "plain string error");
+        // alternate formatting prints the same flattened chain
+        assert_eq!(format!("{e:#}"), "plain string error");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::fmt::Error> = Ok(3);
+        let got = ok.with_context(|| -> String { panic!("must not evaluate") }).unwrap();
+        assert_eq!(got, 3);
+    }
+}
