@@ -9,17 +9,21 @@
 //!    [`pdsgdm::engine::LocalStepEngine`], including the K-scaling
 //!    speedup and a bit-identical-trace determinism check. This is the
 //!    paper's "linear speedup in K" claim measured on this machine.
-//! 2. L3 micro-kernels: momentum update, gossip mixing, and every
-//!    compression operator at the e2e model size (d = 3.45M) and a 16M
+//! 2. L3 micro-kernels: momentum update, gossip mixing, every
+//!    compression operator, and every wire codec (encode+decode
+//!    round-trip, asserting the `wire_bytes == encode(..).len()`
+//!    invariant) at the e2e model size (d = 3.45M) and a 16M
 //!    "GPT-2-small slice".
 //! 3. One XLA train_step / momentum execution when artifacts are present
 //!    AND the crate was built with `--features pjrt`, so the L3-vs-L2
 //!    cost split is visible.
 //!
 //! Run with `cargo bench --bench hotpath` (append `-- --smoke` for the
-//! CI-speed mode: same code paths, shrunken sizes/budgets, records
-//! written to BENCH_hotpath_smoke.json instead so the tracked
-//! trajectory is never clobbered by non-comparable numbers).
+//! CI-speed mode: same code paths, shrunken sizes/budgets). Both modes
+//! write `BENCH_hotpath.json` at the repo root — CI asserts the file
+//! exists after every smoke run — and the document's top-level
+//! `"smoke"` flag marks shrunken-size records so they are never
+//! cross-compared with full-run trajectory numbers.
 
 use std::time::Duration;
 
@@ -190,6 +194,40 @@ fn bench_compressors(d: usize, sink: &mut JsonSink) {
     }
 }
 
+fn bench_wire_codecs(d: usize, sink: &mut JsonSink) {
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let x = rng.normal_vec(d, 1.0);
+    let ops: Vec<(&str, Box<dyn Compressor>)> = vec![
+        ("sign", Box::new(Sign)),
+        ("top0.01", Box::new(TopK { ratio: 0.01 })),
+        ("rand0.01", Box::new(RandK { ratio: 0.01 })),
+        ("qsgd4", Box::new(Qsgd { levels: 4 })),
+        ("identity", Box::new(Identity)),
+    ];
+    for (name, op) in ops {
+        let mut r = rng.fork(11);
+        let q = op.compress(&x, &mut r);
+        let wire = op.encode(&q);
+        assert_eq!(wire.len(), q.wire_bytes, "{name}: wire-size invariant broken");
+        let stats = bench(2, budget(), || {
+            let enc = op.encode(&q);
+            black_box(op.decode(&enc, d).len());
+        });
+        report(
+            &format!("wire_codec/{name} d={d}"),
+            &stats,
+            Some((q.wire_bytes as f64, "wire-byte")),
+        );
+        let mut fields = vec![
+            ("operator", Json::Str(name.into())),
+            ("d", Json::Num(d as f64)),
+            ("wire_bytes", Json::Num(q.wire_bytes as f64)),
+        ];
+        fields.extend(stats_json(&stats, Some(q.wire_bytes as f64)));
+        sink.push("wire_codec", fields);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Section 3: XLA artifacts (pjrt builds only)
 // ---------------------------------------------------------------------------
@@ -258,11 +296,10 @@ fn bench_xla_artifacts(sink: &mut JsonSink) {
 fn main() {
     let mode = if smoke() { " [--smoke]" } else { "" };
     println!("# hotpath benchmarks (median over repeated runs){mode}\n");
-    // Smoke runs use shrunken sizes whose numbers are not comparable to
-    // the tracked trajectory — keep them in a separate file so a local
-    // `-- --smoke` never clobbers full-run records.
-    let out_name = if smoke() { "BENCH_hotpath_smoke.json" } else { "BENCH_hotpath.json" };
-    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(out_name);
+    // Both modes write the same tracked file (CI verifies it appears);
+    // the document's "smoke" flag marks shrunken-size records so they
+    // are never cross-compared with full-run numbers.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
     let mut sink = JsonSink::new(&out);
 
     bench_algo_step(&mut sink);
@@ -278,6 +315,7 @@ fn main() {
         bench_gossip(k, d, &mut sink);
     }
     bench_compressors(d_e2e, &mut sink);
+    bench_wire_codecs(d_e2e, &mut sink);
     println!();
     bench_xla_artifacts(&mut sink);
 

@@ -353,24 +353,32 @@ impl DeepSqueeze {
         let k = self.k();
         let w = &self.gossip.w;
         let before = net.total_bytes;
-        let mut cs: Vec<Vec<f32>> = Vec::with_capacity(k);
-        for i in 0..k {
-            let v: Vec<f32> = self.xs[i]
-                .iter()
-                .zip(&self.errs[i])
-                .map(|(&x, &e)| x + e)
-                .collect();
-            let c = self.compressor.compress(&v, &mut self.rng);
-            // e_k = v - c_k
-            for ((e, &vv), &cc) in self.errs[i].iter_mut().zip(&v).zip(&c.dense) {
-                *e = vv - cc;
-            }
-            net.broadcast(i, &c.dense, c.wire_bytes);
-            cs.push(c.dense);
-        }
-        for i in 0..k {
-            let _ = net.recv_all(i);
-        }
+        // v_k = x_k + e_k, then the shared compressed exchange (same
+        // encode → send → recv → decode path as CPD-SGDM: charged bytes
+        // are measured buffer lengths); the error update e_k = v_k − c_k
+        // happens sender-side via the on_compressed hook, while the
+        // mixing below consumes the receiver-side decodes.
+        let vs: Vec<Vec<f32>> = (0..k)
+            .map(|i| {
+                self.xs[i]
+                    .iter()
+                    .zip(&self.errs[i])
+                    .map(|(&x, &e)| x + e)
+                    .collect()
+            })
+            .collect();
+        let errs = &mut self.errs;
+        let cs = super::gossip::exchange_compressed(
+            self.compressor.as_ref(),
+            &mut self.rng,
+            net,
+            &vs,
+            |i, c| {
+                for ((e, &vv), &cc) in errs[i].iter_mut().zip(&vs[i]).zip(&c.dense) {
+                    *e = vv - cc;
+                }
+            },
+        );
         for i in 0..k {
             // x_i += Σ_j w_ij c_j − c_i
             let mut mixc = vec![0.0f32; self.xs[i].len()];
@@ -383,7 +391,6 @@ impl DeepSqueeze {
             linalg::axpy(-1.0, &cs[i], &mut mixc);
             linalg::axpy(1.0, &mixc, &mut self.xs[i]);
         }
-        net.end_round();
         net.total_bytes - before
     }
 }

@@ -15,7 +15,10 @@
 //! copies of x̂^(j) receive exactly the same q^(j) stream they stay
 //! identical, so the simulator stores one canonical x̂ per worker (the
 //! standard CHOCO implementation trick) while still exchanging every
-//! q over the byte-metered network with the compressor's real wire size.
+//! q as its **encoded wire bytes** over the byte-metered network — the
+//! x̂ update applies the receiver-side decode of those bytes, so the
+//! whole codec path (encode → send → recv → decode) runs end-to-end and
+//! the charged byte counts are actual buffer lengths.
 
 use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
 use crate::comm::Network;
@@ -99,30 +102,30 @@ impl CpdSgdm {
             linalg::axpy(gamma, &corr, &mut self.xs[i]);
         }
 
-        // Line 7-8: compress the difference and exchange it. The payload
-        // is the *compressed* message — its wire size comes from the
-        // operator's codec, which is where the Figure 2 savings appear.
-        let mut qs: Vec<Vec<f32>> = Vec::with_capacity(k);
-        for i in 0..k {
-            let diff: Vec<f32> = self.xs[i]
-                .iter()
-                .zip(&self.hats[i])
-                .map(|(&a, &b)| a - b)
-                .collect();
-            let q = self.compressor.compress(&diff, &mut self.rng);
-            net.broadcast(i, &q.dense, q.wire_bytes);
-            qs.push(q.dense);
-        }
-        // Drain mailboxes (receivers would apply q^(j) to their x̂^(j)
-        // copies; the canonical x̂ update below is equivalent).
-        for i in 0..k {
-            let _ = net.recv_all(i);
-        }
-        // Line 9: every copy of x̂^(j) absorbs q^(j).
+        // Lines 7-9: compress the differences and exchange them through
+        // the shared encode → send → recv → decode round (see
+        // `gossip::exchange_compressed`): the Figure 2 byte counters
+        // measure actual buffer lengths, and every copy of x̂^(j) absorbs
+        // the *receiver-side decode* of q^(j).
+        let diffs: Vec<Vec<f32>> = (0..k)
+            .map(|i| {
+                self.xs[i]
+                    .iter()
+                    .zip(&self.hats[i])
+                    .map(|(&a, &b)| a - b)
+                    .collect()
+            })
+            .collect();
+        let qs = super::gossip::exchange_compressed(
+            self.compressor.as_ref(),
+            &mut self.rng,
+            net,
+            &diffs,
+            |_, _| {},
+        );
         for (hat, q) in self.hats.iter_mut().zip(&qs) {
             linalg::axpy(1.0, q, hat);
         }
-        net.end_round();
         net.total_bytes - before
     }
 }

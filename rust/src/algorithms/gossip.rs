@@ -1,8 +1,64 @@
 //! Shared gossip machinery: the Eq. (4) mixing step over the byte-metered
-//! network, used by every full-precision decentralized algorithm.
+//! network (full-precision algorithms) and the compressed exchange round
+//! (CPD-SGDM / DeepSqueeze) that ships encoded codec bytes end-to-end.
+
+use std::sync::Arc;
 
 use crate::comm::Network;
+use crate::compress::{CompressedVec, Compressor};
 use crate::linalg::Mat;
+use crate::rng::Xoshiro256;
+
+/// One compressed communication round shared by CPD-SGDM and DeepSqueeze:
+/// compress each worker's vector in `inputs`, *encode it to wire bytes*,
+/// broadcast the encoded buffer to all neighbors, and return each
+/// worker's message as decoded by its receivers. What crosses the network
+/// is the codec's byte payload, so the charged byte counts are measured
+/// buffer lengths (`wire_bytes == payload.len()`).
+///
+/// `on_compressed(i, &c)` runs on the sender side before encoding —
+/// DeepSqueeze uses it for its error-feedback update. Every receiver of
+/// worker j sees identical bytes, so one decode per sender suffices; a
+/// worker's own message never crosses the wire (nor does anything in a
+/// K=1 fleet), so those are decoded from the local buffer. Ends the
+/// network round.
+pub(crate) fn exchange_compressed(
+    compressor: &dyn Compressor,
+    rng: &mut Xoshiro256,
+    net: &mut Network,
+    inputs: &[Vec<f32>],
+    mut on_compressed: impl FnMut(usize, &CompressedVec),
+) -> Vec<Vec<f32>> {
+    let k = inputs.len();
+    let d = inputs.first().map(Vec::len).unwrap_or(0);
+    let mut encoded: Vec<Arc<Vec<u8>>> = Vec::with_capacity(k);
+    for (i, v) in inputs.iter().enumerate() {
+        let c = compressor.compress(v, rng);
+        on_compressed(i, &c);
+        let bytes = Arc::new(compressor.encode(&c));
+        debug_assert_eq!(bytes.len(), c.wire_bytes, "codec wire-size invariant");
+        net.broadcast_encoded(i, Arc::clone(&bytes));
+        encoded.push(bytes);
+    }
+    let mut decoded: Vec<Option<Vec<f32>>> = (0..k).map(|_| None).collect();
+    for i in 0..k {
+        for msg in net.recv_all(i) {
+            if decoded[msg.from].is_none() {
+                let payload = msg
+                    .payload
+                    .encoded()
+                    .expect("compressed algorithms exchange encoded payloads");
+                decoded[msg.from] = Some(compressor.decode(payload, d));
+            }
+        }
+    }
+    net.end_round();
+    decoded
+        .into_iter()
+        .enumerate()
+        .map(|(j, q)| q.unwrap_or_else(|| compressor.decode(&encoded[j], d)))
+        .collect()
+}
 
 /// Mixing matrix + the exchange logic for one full-precision gossip
 /// round: every worker broadcasts its vector to its neighbors, then
@@ -41,10 +97,9 @@ impl GossipState {
         // term — zero deep copies regardless of degree.
         let mut own: Vec<std::sync::Arc<Vec<f32>>> = Vec::with_capacity(k);
         for from in 0..k {
-            let wire = 4 * xs[from].len();
             let payload = std::sync::Arc::new(std::mem::take(&mut xs[from]));
             own.push(std::sync::Arc::clone(&payload));
-            net.broadcast_shared(from, payload, wire);
+            net.broadcast_shared(from, payload);
         }
         // Phase 2: one fused weighted-sum pass per worker over
         // (self, received neighbors) — a single write sweep of memory.
@@ -53,7 +108,8 @@ impl GossipState {
             let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(1 + msgs.len());
             terms.push((self.w[(to, to)] as f32, own[to].as_slice()));
             for msg in &msgs {
-                terms.push((self.w[(to, msg.from)] as f32, msg.payload.as_slice()));
+                let x = msg.payload.dense().expect("gossip exchanges dense payloads");
+                terms.push((self.w[(to, msg.from)] as f32, x));
             }
             xs[to] = crate::linalg::weighted_sum(&terms, d);
         }

@@ -3,10 +3,12 @@
 //!
 //! The paper ran 8 GPUs with a real interconnect; the repro band (0/5)
 //! gates that hardware, so per DESIGN.md §2 we substitute an in-process
-//! network whose **accounting** is exact: every message carries the wire
-//! size its codec would use (see [`crate::compress`]), and the cost model
-//! converts (rounds, bytes) into simulated wall-clock with the standard
-//! `latency + bytes / bandwidth` α–β model. All of Figure 2's x-axes
+//! network whose **accounting** is exact: a message's wire cost is
+//! *measured from its payload* ([`Payload::wire_bytes`]) — encoded codec
+//! buffers charge their literal length, dense f32 vectors charge 4 bytes
+//! per coordinate — and the cost model converts (rounds, bytes) into
+//! simulated wall-clock with the standard `latency + bytes / bandwidth`
+//! α–β model priced at the busiest worker. All of Figure 2's x-axes
 //! (communication MB) come from these counters.
 
 use std::collections::VecDeque;
@@ -14,21 +16,64 @@ use std::sync::Arc;
 
 use crate::topology::Graph;
 
-/// A point-to-point message between neighboring workers.
+/// What a message carries across an edge.
 ///
-/// The payload is reference-counted: a broadcast to `deg` neighbors
-/// shares one buffer instead of deep-copying it per edge — at the e2e
-/// model size (d = 3.45M, 13.8 MB payloads) the per-round memcpy savings
-/// are the §Perf gossip optimization (see EXPERIMENTS.md).
+/// Payloads are reference-counted: a broadcast to `deg` neighbors shares
+/// one buffer instead of deep-copying it per edge — at the e2e model
+/// size (d = 3.45M, 13.8 MB payloads) the per-round memcpy savings are
+/// the §Perf gossip optimization (see EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Full-precision f32 vector (uncompressed gossip fast path — the
+    /// simulator skips the trivial raw-f32 serialization and charges
+    /// 4 bytes per coordinate).
+    Dense(Arc<Vec<f32>>),
+    /// Encoded wire-codec buffer (see [`crate::compress`]): exactly the
+    /// bytes a real transport would carry, so `wire_bytes == len()` by
+    /// construction.
+    Encoded(Arc<Vec<u8>>),
+}
+
+impl Payload {
+    /// Exact bytes this payload occupies on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::Dense(v) => 4 * v.len(),
+            Payload::Encoded(b) => b.len(),
+        }
+    }
+
+    /// The dense view, if this is an uncompressed payload.
+    pub fn dense(&self) -> Option<&[f32]> {
+        match self {
+            Payload::Dense(v) => Some(v),
+            Payload::Encoded(_) => None,
+        }
+    }
+
+    /// The encoded byte view, if this is a codec payload.
+    pub fn encoded(&self) -> Option<&[u8]> {
+        match self {
+            Payload::Dense(_) => None,
+            Payload::Encoded(b) => Some(b),
+        }
+    }
+}
+
+/// A point-to-point message between neighboring workers.
 #[derive(Clone, Debug)]
 pub struct Message {
     pub from: usize,
     pub to: usize,
-    /// Payload the receiver applies (already decoded — the simulator
-    /// skips the byte-level encode/decode but charges for it).
-    pub payload: Arc<Vec<f32>>,
-    /// Exact bytes this payload occupies on the wire.
-    pub wire_bytes: usize,
+    pub payload: Payload,
+}
+
+impl Message {
+    /// Exact bytes this message occupied on the wire (measured from the
+    /// payload — an invariant, not a caller-supplied claim).
+    pub fn wire_bytes(&self) -> usize {
+        self.payload.wire_bytes()
+    }
 }
 
 /// Per-destination FIFO mailboxes over the topology's edges, with
@@ -69,42 +114,55 @@ impl Network {
         &self.edges[i]
     }
 
-    /// Send `payload` from `from` to `to`; panics if (from, to) is not an
-    /// edge — decentralized algorithms may only talk to graph neighbors.
-    pub fn send(&mut self, from: usize, to: usize, payload: Vec<f32>, wire_bytes: usize) {
-        self.send_shared(from, to, Arc::new(payload), wire_bytes);
+    /// Degree of the busiest worker — the per-round link count the α–β
+    /// model prices (on irregular graphs like the star this differs from
+    /// any single node's degree, so never use `neighbors(0).len()`).
+    pub fn max_degree(&self) -> usize {
+        self.edges.iter().map(Vec::len).max().unwrap_or(0)
     }
 
-    /// Like [`Network::send`] but with a pre-shared buffer (no copy).
-    pub fn send_shared(
-        &mut self,
-        from: usize,
-        to: usize,
-        payload: Arc<Vec<f32>>,
-        wire_bytes: usize,
-    ) {
+    /// Send a dense f32 payload from `from` to `to` (wire cost 4·d).
+    pub fn send(&mut self, from: usize, to: usize, payload: Vec<f32>) {
+        self.send_payload(from, to, Payload::Dense(Arc::new(payload)));
+    }
+
+    /// Send any payload; panics if (from, to) is not an edge —
+    /// decentralized algorithms may only talk to graph neighbors. The
+    /// wire charge is measured from the payload itself.
+    pub fn send_payload(&mut self, from: usize, to: usize, payload: Payload) {
         assert!(
             self.edges[from].contains(&to),
             "({from} -> {to}) is not an edge of the topology"
         );
-        self.total_bytes += wire_bytes as u64;
-        self.bytes_sent[from] += wire_bytes as u64;
+        let wire_bytes = payload.wire_bytes() as u64;
+        self.total_bytes += wire_bytes;
+        self.bytes_sent[from] += wire_bytes;
         self.messages += 1;
-        self.inbox[to].push_back(Message { from, to, payload, wire_bytes });
+        self.inbox[to].push_back(Message { from, to, payload });
     }
 
-    /// Broadcast the same payload from `from` to all its neighbors,
+    /// Broadcast a dense payload from `from` to all its neighbors,
     /// charging wire bytes per link (gossip is point-to-point). The
     /// buffer is allocated once and shared across edges.
-    pub fn broadcast(&mut self, from: usize, payload: &[f32], wire_bytes: usize) {
-        self.broadcast_shared(from, Arc::new(payload.to_vec()), wire_bytes);
+    pub fn broadcast(&mut self, from: usize, payload: &[f32]) {
+        self.broadcast_shared(from, Arc::new(payload.to_vec()));
     }
 
-    /// Zero-copy broadcast of an already-owned buffer.
-    pub fn broadcast_shared(&mut self, from: usize, payload: Arc<Vec<f32>>, wire_bytes: usize) {
+    /// Zero-copy dense broadcast of an already-owned buffer.
+    pub fn broadcast_shared(&mut self, from: usize, payload: Arc<Vec<f32>>) {
+        self.broadcast_payload(from, Payload::Dense(payload));
+    }
+
+    /// Broadcast an encoded codec buffer; every link charges exactly
+    /// `payload.len()` bytes.
+    pub fn broadcast_encoded(&mut self, from: usize, payload: Arc<Vec<u8>>) {
+        self.broadcast_payload(from, Payload::Encoded(payload));
+    }
+
+    fn broadcast_payload(&mut self, from: usize, payload: Payload) {
         for i in 0..self.edges[from].len() {
             let to = self.edges[from][i];
-            self.send_shared(from, to, Arc::clone(&payload), wire_bytes);
+            self.send_payload(from, to, payload.clone());
         }
     }
 
@@ -127,9 +185,12 @@ impl Network {
     }
 }
 
-/// α–β communication cost model: a round in which the busiest worker
-/// sends `b` bytes over `m` links costs `alpha * m + b / beta` seconds.
-/// Defaults approximate the paper's testbed NIC (10 GbE-class).
+/// α–β communication cost model priced at the **busiest worker**: a
+/// round in which that worker sends `b` bytes over `m` links costs
+/// `alpha * m + b / beta` seconds (workers transmit in parallel; one
+/// worker's links are serialized on its NIC — conservative, matches
+/// all-neighbor gossip). Defaults approximate the paper's testbed NIC
+/// (10 GbE-class).
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
     /// Per-message latency (seconds).
@@ -151,18 +212,26 @@ impl Default for CostModel {
 }
 
 impl CostModel {
-    /// Simulated time of one communication round in which each worker
-    /// sends `bytes_per_link` over `links` links in parallel workers but
-    /// serial links (conservative, matches ring all-neighbor gossip).
-    pub fn round_seconds(&self, links: usize, bytes_per_link: usize) -> f64 {
-        links as f64 * (self.alpha + bytes_per_link as f64 / self.beta)
+    /// Simulated time of one communication round in which the busiest
+    /// worker sends `worker_bytes` bytes (its *measured* per-round
+    /// traffic, in f64 — integer division truncated small compressed
+    /// payloads to a zero bandwidth term) over `links` serial links.
+    pub fn round_seconds(&self, links: usize, worker_bytes: f64) -> f64 {
+        links as f64 * self.alpha + worker_bytes / self.beta
     }
 
-    /// Simulated time for `t` local steps with a communication round
-    /// every `p` steps.
-    pub fn simulated_seconds(&self, steps: u64, period: u64, links: usize, bytes_per_link: usize) -> f64 {
+    /// Simulated time for `steps` local steps with a communication round
+    /// every `period` steps, the busiest worker moving `worker_bytes`
+    /// per round.
+    pub fn simulated_seconds(
+        &self,
+        steps: u64,
+        period: u64,
+        links: usize,
+        worker_bytes: f64,
+    ) -> f64 {
         let rounds = steps / period.max(1);
-        steps as f64 * self.step_seconds + rounds as f64 * self.round_seconds(links, bytes_per_link)
+        steps as f64 * self.step_seconds + rounds as f64 * self.round_seconds(links, worker_bytes)
     }
 }
 
@@ -178,12 +247,12 @@ mod tests {
     #[test]
     fn send_recv_roundtrip() {
         let mut net = ring8();
-        net.send(0, 1, vec![1.0, 2.0], 8);
-        net.send(2, 1, vec![3.0], 4);
+        net.send(0, 1, vec![1.0, 2.0]);
+        net.send(2, 1, vec![3.0]);
         let msgs = net.recv_all(1);
         assert_eq!(msgs.len(), 2);
         assert_eq!(msgs[0].from, 0);
-        assert_eq!(*msgs[1].payload, vec![3.0]);
+        assert_eq!(msgs[1].payload.dense().unwrap(), &[3.0]);
         assert!(net.recv_all(1).is_empty(), "inbox drained");
     }
 
@@ -191,23 +260,48 @@ mod tests {
     #[should_panic(expected = "not an edge")]
     fn non_edge_send_panics() {
         let mut net = ring8();
-        net.send(0, 4, vec![1.0], 4); // 0 and 4 are not ring neighbors
+        net.send(0, 4, vec![1.0]); // 0 and 4 are not ring neighbors
     }
 
     #[test]
     fn byte_accounting_is_exact() {
         let mut net = ring8();
-        net.broadcast(0, &[1.0; 100], 57);
-        assert_eq!(net.total_bytes, 2 * 57); // ring degree 2
-        assert_eq!(net.bytes_sent[0], 114);
+        net.broadcast(0, &[1.0; 100]); // 400 wire bytes per link
+        assert_eq!(net.total_bytes, 2 * 400); // ring degree 2
+        assert_eq!(net.bytes_sent[0], 800);
         assert_eq!(net.messages, 2);
-        assert!((net.total_megabytes() - 114.0 / 1048576.0).abs() < 1e-12);
+        assert!((net.total_megabytes() - 800.0 / 1048576.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn encoded_payload_charges_its_length() {
+        // The tentpole invariant: wire_bytes == payload.len(), measured,
+        // not asserted by the sender.
+        let mut net = ring8();
+        let buf = Arc::new(vec![0xABu8; 57]);
+        net.broadcast_encoded(0, Arc::clone(&buf));
+        assert_eq!(net.total_bytes, 2 * 57);
+        for to in [1usize, 7] {
+            let msgs = net.recv_all(to);
+            assert_eq!(msgs.len(), 1);
+            assert_eq!(msgs[0].wire_bytes(), 57);
+            assert_eq!(msgs[0].payload.encoded().unwrap(), buf.as_slice());
+            assert!(msgs[0].payload.dense().is_none());
+        }
+        net.end_round();
+    }
+
+    #[test]
+    fn max_degree_sees_the_star_hub() {
+        let star = Network::new(&Topology::Star.build(8, 0));
+        assert_eq!(star.max_degree(), 7); // hub, not a leaf
+        assert_eq!(ring8().max_degree(), 2);
     }
 
     #[test]
     fn round_counter() {
         let mut net = ring8();
-        net.broadcast(3, &[0.0], 4);
+        net.broadcast(3, &[0.0]);
         net.recv_all(2);
         net.recv_all(4);
         net.end_round();
@@ -219,27 +313,37 @@ mod tests {
     #[should_panic(expected = "undelivered")]
     fn end_round_checks_delivery() {
         let mut net = ring8();
-        net.send(0, 1, vec![1.0], 4);
+        net.send(0, 1, vec![1.0]);
         net.end_round();
     }
 
     #[test]
     fn cost_model_scales_linearly() {
         let cm = CostModel::default();
-        let r1 = cm.round_seconds(2, 1_000_000);
-        let r2 = cm.round_seconds(2, 2_000_000);
+        let r1 = cm.round_seconds(2, 1_000_000.0);
+        let r2 = cm.round_seconds(2, 2_000_000.0);
         assert!(r2 > r1);
-        assert!((r2 - r1 - 2.0 * 1_000_000.0 / cm.beta).abs() < 1e-12);
+        assert!((r2 - r1 - 1_000_000.0 / cm.beta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_payloads_keep_a_nonzero_bandwidth_term() {
+        // Regression: integer bytes_per_link truncated (e.g. Sign at
+        // small d) to 0, silently zeroing the bandwidth term.
+        let cm = CostModel::default();
+        let latency_only = 2.0 * cm.alpha;
+        assert!(cm.round_seconds(2, 0.5) > latency_only);
+        assert!((cm.round_seconds(2, 0.5) - latency_only - 0.5 / cm.beta).abs() < 1e-18);
     }
 
     #[test]
     fn periodic_communication_saves_simulated_time() {
         // The motivation for p > 1: same steps, fewer rounds, less time.
         let cm = CostModel::default();
-        let t_p1 = cm.simulated_seconds(1000, 1, 2, 4_000_000);
-        let t_p8 = cm.simulated_seconds(1000, 8, 2, 4_000_000);
+        let t_p1 = cm.simulated_seconds(1000, 1, 2, 8_000_000.0);
+        let t_p8 = cm.simulated_seconds(1000, 8, 2, 8_000_000.0);
         assert!(t_p8 < t_p1);
         let compute_only = 1000.0 * cm.step_seconds;
-        assert!(t_p8 < compute_only + (1000 / 8 + 1) as f64 * cm.round_seconds(2, 4_000_000));
+        assert!(t_p8 < compute_only + (1000 / 8 + 1) as f64 * cm.round_seconds(2, 8_000_000.0));
     }
 }

@@ -14,20 +14,55 @@
 //! * [`Identity`] — δ = 1, turning CPD-SGDM into exact-communication
 //!   gossip (used by tests to cross-check against PD-SGDM-style mixing).
 //!
-//! Every operator reports `encoded_bytes` — the wire size its
-//! [`CompressedVec`] needs — which drives the communication-cost x-axes
-//! of Figure 2.
+//! Every operator is a real wire codec: [`Compressor::compress`] produces
+//! both the dense decode and the exact symbols its natural format packs
+//! ([`WireRepr`]), [`Compressor::encode`] serializes them to the byte
+//! buffer that actually crosses the simulated network, and
+//! [`Compressor::decode`] reconstructs the dense vector **bit-identically**
+//! (property-tested in `rust/tests/wire_roundtrip.rs`). The byte counters
+//! driving Figure 2's x-axes therefore measure real buffer lengths —
+//! `wire_bytes == encode(..).len() == encoded_bytes(d)` is an invariant,
+//! not an honor system.
+//!
+//! Wire formats (all little-endian):
+//!
+//! | operator | layout | bytes |
+//! |---|---|---|
+//! | `Sign` | f32 scale + d-bit sign bitmap | `4 + ⌈d/8⌉` |
+//! | `TopK`/`RandK` | k × (u32 index, f32 value) | `8k` |
+//! | `Qsgd` | f32 norm + d packed signed levels (⌈log2(2s+1)⌉ bits each) | `4 + ⌈d·b/8⌉` |
+//! | `Identity` | raw f32 | `4d` |
 
 use crate::rng::Xoshiro256;
 
-/// A compressed vector: the decode target plus its wire cost.
+/// A compressed vector: the dense decode target, its wire cost, and the
+/// exact symbols the operator's codec packs.
 #[derive(Clone, Debug)]
 pub struct CompressedVec {
     /// Dense decode of Q(x) (the simulator applies it directly).
     pub dense: Vec<f32>,
-    /// Bytes this message would occupy on the wire with the operator's
-    /// natural encoding (bitmaps / index+value pairs / packed levels).
+    /// Bytes this message occupies on the wire — always equal to
+    /// `encode(..).len()` for the producing operator.
     pub wire_bytes: usize,
+    /// Codec sidecar consumed by [`Compressor::encode`]; carrying the
+    /// symbols explicitly means encode never re-derives them lossily
+    /// from `dense`.
+    pub repr: WireRepr,
+}
+
+/// The operator-natural wire symbols produced by compression.
+#[derive(Clone, Debug)]
+pub enum WireRepr {
+    /// Identity: `dense` itself is the wire content (raw f32 LE).
+    Dense,
+    /// Sign: one f32 scale; per-coordinate signs are read from `dense`.
+    SignBitmap { scale: f32 },
+    /// TopK/RandK: ascending kept-coordinate indices; values are read
+    /// from `dense` (indices are stored so all-zero selections still
+    /// round-trip — `dense` alone cannot say *which* zeros were kept).
+    Sparse { indices: Vec<u32> },
+    /// QSGD: f32 L2 norm + one signed level in [-s, s] per coordinate.
+    Levels { norm: f32, symbols: Vec<i32> },
 }
 
 /// A δ-contraction operator Q: R^d -> R^d (paper Definition 1).
@@ -36,6 +71,17 @@ pub trait Compressor: Send + Sync {
 
     /// Apply Q. `rng` is used only by stochastic operators.
     fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> CompressedVec;
+
+    /// Serialize `c` into the operator's natural wire format. The
+    /// returned buffer length equals `c.wire_bytes` (and
+    /// `encoded_bytes(d)`); panics if `c` was produced by a different
+    /// operator (its [`WireRepr`] would not match).
+    fn encode(&self, c: &CompressedVec) -> Vec<u8>;
+
+    /// Inverse of [`Compressor::encode`] for a d-dimensional message:
+    /// reconstructs `c.dense` bit-identically from the wire bytes.
+    /// Panics on a payload whose length does not match `encoded_bytes(d)`.
+    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32>;
 
     /// The operator's contraction parameter δ (a priori lower bound;
     /// `measured_delta` checks it empirically).
@@ -68,6 +114,31 @@ pub fn measured_delta(c: &dyn Compressor, x: &[f32], rng: &mut Xoshiro256) -> f6
     1.0 - err / nx
 }
 
+/// (u32 index, f32 value) pair serialization shared by TopK and RandK.
+fn encode_sparse(c: &CompressedVec) -> Vec<u8> {
+    let indices = match &c.repr {
+        WireRepr::Sparse { indices } => indices,
+        _ => panic!("sparse encode needs a Sparse repr (foreign CompressedVec?)"),
+    };
+    let mut out = Vec::with_capacity(indices.len() * 8);
+    for &i in indices {
+        out.extend_from_slice(&i.to_le_bytes());
+        out.extend_from_slice(&c.dense[i as usize].to_le_bytes());
+    }
+    out
+}
+
+fn decode_sparse(bytes: &[u8], d: usize, k: usize) -> Vec<f32> {
+    assert_eq!(bytes.len(), k * 8, "sparse payload: want {} bytes, got {}", k * 8, bytes.len());
+    let mut dense = vec![0.0f32; d];
+    for pair in bytes.chunks_exact(8) {
+        let i = u32::from_le_bytes(pair[..4].try_into().unwrap()) as usize;
+        assert!(i < d, "sparse payload: index {i} out of range for d={d}");
+        dense[i] = f32::from_le_bytes(pair[4..].try_into().unwrap());
+    }
+    dense
+}
+
 /// Scaled sign compression: Q(x) = (||x||_1 / d) sign(x).
 ///
 /// Wire format: one f32 scale + d-bit sign bitmap => 4 + ceil(d/8) bytes,
@@ -88,7 +159,43 @@ impl Compressor for Sign {
             .iter()
             .map(|&v| if v >= 0.0 { scale } else { -scale })
             .collect();
-        CompressedVec { dense, wire_bytes: self.encoded_bytes(d) }
+        CompressedVec {
+            dense,
+            wire_bytes: self.encoded_bytes(d),
+            repr: WireRepr::SignBitmap { scale },
+        }
+    }
+
+    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
+        let scale = match c.repr {
+            WireRepr::SignBitmap { scale } => scale,
+            _ => panic!("sign encode needs a SignBitmap repr (foreign CompressedVec?)"),
+        };
+        let d = c.dense.len();
+        let mut out = vec![0u8; self.encoded_bytes(d)];
+        out[..4].copy_from_slice(&scale.to_le_bytes());
+        for (i, v) in c.dense.iter().enumerate() {
+            // dense is ±scale; the bitmap stores the IEEE sign bit so
+            // decode reproduces ±0.0 (and ±NaN) bit-exactly.
+            if v.is_sign_positive() {
+                out[4 + i / 8] |= 1 << (i % 8);
+            }
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
+        assert_eq!(
+            bytes.len(),
+            self.encoded_bytes(d),
+            "sign payload: want {} bytes, got {}",
+            self.encoded_bytes(d),
+            bytes.len()
+        );
+        let scale = f32::from_le_bytes(bytes[..4].try_into().unwrap());
+        (0..d)
+            .map(|i| if bytes[4 + i / 8] >> (i % 8) & 1 == 1 { scale } else { -scale })
+            .collect()
     }
 
     fn delta(&self, d: usize) -> f64 {
@@ -127,14 +234,31 @@ impl Compressor for TopK {
         let d = x.len();
         let k = self.k_for(d);
         let mut idx: Vec<usize> = (0..d).collect();
+        // total_cmp on |x_i|: a deterministic total order even with NaN
+        // gradients (NaN sorts largest, so poisoned coordinates are
+        // selected — and surfaced — instead of silently reordering).
         idx.select_nth_unstable_by(k.saturating_sub(1).min(d.saturating_sub(1)), |&a, &b| {
-            x[b].abs().partial_cmp(&x[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+            x[b].abs().total_cmp(&x[a].abs())
         });
+        let mut indices: Vec<u32> = idx[..k.min(d)].iter().map(|&i| i as u32).collect();
+        indices.sort_unstable(); // canonical ascending wire order
         let mut dense = vec![0.0f32; d];
-        for &i in &idx[..k.min(d)] {
-            dense[i] = x[i];
+        for &i in &indices {
+            dense[i as usize] = x[i as usize];
         }
-        CompressedVec { dense, wire_bytes: self.encoded_bytes(d) }
+        CompressedVec {
+            dense,
+            wire_bytes: self.encoded_bytes(d),
+            repr: WireRepr::Sparse { indices },
+        }
+    }
+
+    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
+        encode_sparse(c)
+    }
+
+    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
+        decode_sparse(bytes, d, self.k_for(d))
     }
 
     fn delta(&self, d: usize) -> f64 {
@@ -168,12 +292,26 @@ impl Compressor for RandK {
     fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> CompressedVec {
         let d = x.len();
         let k = self.k_for(d);
-        let keep = rng.sample_indices(d, k);
+        let mut indices: Vec<u32> =
+            rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
+        indices.sort_unstable(); // canonical ascending wire order
         let mut dense = vec![0.0f32; d];
-        for &i in &keep {
-            dense[i] = x[i];
+        for &i in &indices {
+            dense[i as usize] = x[i as usize];
         }
-        CompressedVec { dense, wire_bytes: self.encoded_bytes(d) }
+        CompressedVec {
+            dense,
+            wire_bytes: self.encoded_bytes(d),
+            repr: WireRepr::Sparse { indices },
+        }
+    }
+
+    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
+        encode_sparse(c)
+    }
+
+    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
+        decode_sparse(bytes, d, self.k_for(d))
     }
 
     fn delta(&self, d: usize) -> f64 {
@@ -211,6 +349,20 @@ impl Qsgd {
         let dd = d.max(1) as f64;
         (dd / (s * s)).min(dd.sqrt() / s)
     }
+
+    fn bits_per_symbol(&self) -> usize {
+        (2.0 * self.levels as f64 + 1.0).log2().ceil() as usize
+    }
+
+    /// Dense value of one signed level — the single dequantization rule
+    /// shared by `compress` and `decode`, so the wire round-trip is
+    /// bit-identical by construction. `norm` is the f32 the wire carries
+    /// (quantizing against the full-precision f64 norm would make the
+    /// receiver's reconstruction differ in the last bit).
+    fn dequant(&self, norm: f32, d: usize, symbol: i32) -> f32 {
+        let damp = 1.0 / (1.0 + self.omega(d));
+        (damp * norm as f64 * (symbol as f64 / self.levels as f64)) as f32
+    }
 }
 
 impl Compressor for Qsgd {
@@ -220,23 +372,81 @@ impl Compressor for Qsgd {
 
     fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> CompressedVec {
         let d = x.len();
-        let nrm = (x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()).sqrt();
-        if nrm == 0.0 {
-            return CompressedVec { dense: vec![0.0; d], wire_bytes: self.encoded_bytes(d) };
+        let wire_bytes = self.encoded_bytes(d);
+        let nrm2: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        if nrm2 == 0.0 {
+            return CompressedVec {
+                dense: vec![0.0; d],
+                wire_bytes,
+                repr: WireRepr::Levels { norm: 0.0, symbols: vec![0; d] },
+            };
         }
+        let norm = nrm2.sqrt() as f32;
         let s = self.levels as f64;
-        let damp = 1.0 / (1.0 + self.omega(d));
+        let mut symbols = Vec::with_capacity(d);
         let dense = x
             .iter()
             .map(|&v| {
-                let r = (v as f64).abs() / nrm * s; // in [0, s]
+                let r = (v as f64).abs() / norm as f64 * s; // in [0, s(1+ε)]
                 let low = r.floor();
-                let p = r - low;
-                let level = if rng.next_f64() < p { low + 1.0 } else { low };
-                (damp * nrm * (level / s) * (v as f64).signum()) as f32
+                let level = if rng.next_f64() < r - low { low + 1.0 } else { low };
+                // f32-rounding of the norm can push r past s; clamp so the
+                // symbol stays in the packed alphabet [-s, s].
+                let level = level.min(s) as i32;
+                let symbol = if v < 0.0 { -level } else { level };
+                symbols.push(symbol);
+                self.dequant(norm, d, symbol)
             })
             .collect();
-        CompressedVec { dense, wire_bytes: self.encoded_bytes(d) }
+        CompressedVec { dense, wire_bytes, repr: WireRepr::Levels { norm, symbols } }
+    }
+
+    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
+        let (norm, symbols) = match &c.repr {
+            WireRepr::Levels { norm, symbols } => (*norm, symbols),
+            _ => panic!("qsgd encode needs a Levels repr (foreign CompressedVec?)"),
+        };
+        let d = c.dense.len();
+        let bits = self.bits_per_symbol();
+        let s = self.levels as i32;
+        let mut out = vec![0u8; self.encoded_bytes(d)];
+        out[..4].copy_from_slice(&norm.to_le_bytes());
+        for (i, &sym) in symbols.iter().enumerate() {
+            debug_assert!((-s..=s).contains(&sym), "symbol {sym} outside [-{s}, {s}]");
+            let code = (sym + s) as u32; // in [0, 2s]
+            for b in 0..bits {
+                if code >> b & 1 == 1 {
+                    let p = i * bits + b;
+                    out[4 + p / 8] |= 1 << (p % 8);
+                }
+            }
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
+        assert_eq!(
+            bytes.len(),
+            self.encoded_bytes(d),
+            "qsgd payload: want {} bytes, got {}",
+            self.encoded_bytes(d),
+            bytes.len()
+        );
+        let norm = f32::from_le_bytes(bytes[..4].try_into().unwrap());
+        let bits = self.bits_per_symbol();
+        let s = self.levels as i32;
+        (0..d)
+            .map(|i| {
+                let mut code = 0u32;
+                for b in 0..bits {
+                    let p = i * bits + b;
+                    if bytes[4 + p / 8] >> (p % 8) & 1 == 1 {
+                        code |= 1 << b;
+                    }
+                }
+                self.dequant(norm, d, code as i32 - s)
+            })
+            .collect()
     }
 
     fn delta(&self, d: usize) -> f64 {
@@ -244,8 +454,7 @@ impl Compressor for Qsgd {
     }
 
     fn encoded_bytes(&self, d: usize) -> usize {
-        let bits_per = (2.0 * self.levels as f64 + 1.0).log2().ceil() as usize;
-        4 + (d * bits_per).div_ceil(8)
+        4 + (d * self.bits_per_symbol()).div_ceil(8)
     }
 
     fn is_stochastic(&self) -> bool {
@@ -263,7 +472,27 @@ impl Compressor for Identity {
     }
 
     fn compress(&self, x: &[f32], _rng: &mut Xoshiro256) -> CompressedVec {
-        CompressedVec { dense: x.to_vec(), wire_bytes: self.encoded_bytes(x.len()) }
+        CompressedVec {
+            dense: x.to_vec(),
+            wire_bytes: self.encoded_bytes(x.len()),
+            repr: WireRepr::Dense,
+        }
+    }
+
+    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 * c.dense.len());
+        for v in &c.dense {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
+        assert_eq!(bytes.len(), 4 * d, "identity payload: want {} bytes, got {}", 4 * d, bytes.len());
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
     }
 
     fn delta(&self, _d: usize) -> f64 {
@@ -370,6 +599,10 @@ mod tests {
         });
     }
 
+    // NOTE: the bit-identical encode→decode round-trip property for every
+    // operator lives in rust/tests/wire_roundtrip.rs (it also exercises
+    // parse() and the network payload-length invariant).
+
     #[test]
     fn prop_zero_maps_to_zero() {
         let mut rng = Xoshiro256::seed_from_u64(1);
@@ -377,6 +610,9 @@ mod tests {
         for c in operators() {
             let q = c.compress(&x, &mut rng);
             assert!(q.dense.iter().all(|&v| v == 0.0), "{}", c.name());
+            // and the all-zero message still round-trips through its codec
+            let back = c.decode(&c.encode(&q), 128);
+            assert!(back.iter().all(|&v| v == 0.0), "{}", c.name());
         }
     }
 
@@ -397,12 +633,62 @@ mod tests {
     }
 
     #[test]
+    fn sign_wire_layout_is_scale_then_bitmap() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let x = vec![1.0f32, -1.0, 1.0, 1.0, -1.0, -1.0, -1.0, 1.0, 1.0];
+        let q = Sign.compress(&x, &mut rng);
+        let bytes = Sign.encode(&q);
+        assert_eq!(bytes.len(), 4 + 2); // f32 scale + 9 bits -> 2 bytes
+        assert_eq!(f32::from_le_bytes(bytes[..4].try_into().unwrap()), 1.0);
+        assert_eq!(bytes[4], 0b1000_1101); // LSB-first signs of coords 0..7
+        assert_eq!(bytes[5], 0b0000_0001); // coord 8
+    }
+
+    #[test]
     fn topk_keeps_largest() {
         let mut rng = Xoshiro256::seed_from_u64(3);
         let x = vec![0.1f32, -5.0, 0.2, 4.0, -0.3];
         let q = TopK { ratio: 0.4 }.compress(&x, &mut rng); // k = 2
         assert_eq!(q.dense, vec![0.0, -5.0, 0.0, 4.0, 0.0]);
         assert_eq!(q.wire_bytes, 16);
+    }
+
+    #[test]
+    fn topk_wire_layout_is_index_value_pairs() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x = vec![0.1f32, -5.0, 0.2, 4.0, -0.3];
+        let c = TopK { ratio: 0.4 };
+        let bytes = c.encode(&c.compress(&x, &mut rng));
+        assert_eq!(bytes.len(), 16);
+        // canonical ascending index order: (1, -5.0) then (3, 4.0)
+        assert_eq!(u32::from_le_bytes(bytes[0..4].try_into().unwrap()), 1);
+        assert_eq!(f32::from_le_bytes(bytes[4..8].try_into().unwrap()), -5.0);
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 3);
+        assert_eq!(f32::from_le_bytes(bytes[12..16].try_into().unwrap()), 4.0);
+    }
+
+    #[test]
+    fn topk_nan_input_is_deterministic() {
+        // Regression: partial_cmp(..).unwrap_or(Equal) let NaN gradients
+        // silently reorder the selection. total_cmp gives a total order
+        // (NaN sorts largest), so the poisoned coordinate is always kept
+        // and repeated compressions agree bit-for-bit.
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut x = vec![0.5f32, 2.0, -1.0, 3.0, 0.25, -2.5];
+        x[2] = f32::NAN;
+        let c = TopK { ratio: 0.5 }; // k = 3
+        let a = c.compress(&x, &mut rng);
+        let b = c.compress(&x, &mut rng);
+        let bits = |q: &CompressedVec| q.dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b), "NaN input must not destabilize selection");
+        assert!(a.dense[2].is_nan(), "NaN sorts largest under total_cmp, so it is kept");
+        // top-3 by |.|: NaN (idx 2), 3.0 (idx 3), -2.5 (idx 5)
+        assert_eq!(a.dense[1], 0.0);
+        assert_eq!(a.dense[3], 3.0);
+        assert_eq!(a.dense[5], -2.5);
+        // and the NaN payload survives the wire bit-exactly
+        let back = c.decode(&c.encode(&a), x.len());
+        assert_eq!(bits(&a), back.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
     }
 
     #[test]
@@ -450,6 +736,20 @@ mod tests {
     }
 
     #[test]
+    fn qsgd_packs_norm_then_levels() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let x = vec![3.0f32, -4.0]; // L2 norm 5
+        let c = Qsgd { levels: 1 }; // symbols in {-1, 0, 1}, 2 bits each
+        let q = c.compress(&x, &mut rng);
+        let bytes = c.encode(&q);
+        assert_eq!(bytes.len(), 4 + 1);
+        assert_eq!(f32::from_le_bytes(bytes[..4].try_into().unwrap()), 5.0);
+        let back = c.decode(&bytes, 2);
+        assert_eq!(back.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   q.dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn parse_specs() {
         for spec in ["sign", "top0.01", "rand0.5", "qsgd8", "identity"] {
             let c = parse(spec).unwrap_or_else(|| panic!("{spec}"));
@@ -467,5 +767,12 @@ mod tests {
         let q = Identity.compress(&x, &mut rng);
         assert_eq!(q.dense, x);
         assert_eq!(q.wire_bytes, 4 * 333);
+        assert_eq!(Identity.decode(&Identity.encode(&q), 333), x);
+    }
+
+    #[test]
+    #[should_panic(expected = "payload")]
+    fn decode_rejects_wrong_length() {
+        Sign.decode(&[0u8; 3], 16);
     }
 }

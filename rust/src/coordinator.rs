@@ -64,7 +64,12 @@ pub fn run(
     // covers centralized baselines (C-SGDM's parameter-server up+down
     // traffic never crosses the gossip topology).
     let mut cum_bytes = 0u64;
-    let links_per_worker = if net.k() > 1 { net.neighbors(0).len().max(1) } else { 0 };
+    // The α–β model prices the round at the busiest worker: its degree is
+    // the link count (NOT worker 0's — on a star, node 0 is the hub but
+    // on other irregular graphs index 0 can be a leaf) and its measured
+    // per-round bytes are the bandwidth term.
+    let links_per_worker = if net.k() > 1 { net.max_degree().max(1) } else { 0 };
+    let mut prev_sent = net.bytes_sent.clone();
 
     let mut eval_and_push = |t: u64,
                              algo: &dyn Algorithm,
@@ -90,9 +95,29 @@ pub fn run(
         let stats = algo.step(t, source, net);
         sim_seconds += opts.cost_model.step_seconds;
         cum_bytes += stats.bytes;
-        if stats.communicated && stats.bytes > 0 {
-            let per_link = stats.bytes as usize / (algo.k().max(1) * links_per_worker.max(1));
-            sim_seconds += opts.cost_model.round_seconds(links_per_worker, per_link);
+        if stats.communicated && stats.bytes > 0 && links_per_worker > 0 {
+            // Busiest-worker bytes this round, measured from the network's
+            // per-worker counters in f64 (integer division truncated small
+            // compressed payloads — e.g. Sign at small d — to a zero
+            // bandwidth term). Centralized baselines (C-SGDM) never touch
+            // the gossip network, so their counters don't move: fall back
+            // to an even per-worker split of the reported bytes.
+            let measured = net
+                .bytes_sent
+                .iter()
+                .zip(&prev_sent)
+                .map(|(now, before)| now - before)
+                .max()
+                .unwrap_or(0);
+            let busiest_bytes = if measured > 0 {
+                measured as f64
+            } else {
+                stats.bytes as f64 / algo.k().max(1) as f64
+            };
+            sim_seconds += opts.cost_model.round_seconds(links_per_worker, busiest_bytes);
+        }
+        if stats.communicated {
+            prev_sent.copy_from_slice(&net.bytes_sent);
         }
         if (t + 1) % opts.eval_every == 0 || t + 1 == opts.steps {
             eval_and_push(t + 1, algo, source, cum_bytes, sim_seconds, &mut trace);

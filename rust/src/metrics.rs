@@ -57,6 +57,11 @@ impl Trace {
         self.points.last().map(|p| p.comm_mb).unwrap_or(0.0)
     }
 
+    /// Final α–β simulated wall-clock (the Figure 2 time axis).
+    pub fn final_sim_seconds(&self) -> f64 {
+        self.points.last().map(|p| p.sim_seconds).unwrap_or(0.0)
+    }
+
     /// First step at which loss drops below `target` (linear-speedup
     /// ablation metric); None if never reached.
     pub fn steps_to_loss(&self, target: f64) -> Option<u64> {
@@ -122,14 +127,14 @@ pub fn write_csv(path: &Path, traces: &[Trace]) -> std::io::Result<()> {
 pub fn summary_table(traces: &[Trace]) -> String {
     let mut s = String::new();
     s.push_str(&format!(
-        "{:<34} {:>12} {:>10} {:>12} {:>14}\n",
-        "run", "final_loss", "final_acc", "comm_MB", "consensus"
+        "{:<34} {:>12} {:>10} {:>12} {:>14} {:>10}\n",
+        "run", "final_loss", "final_acc", "comm_MB", "consensus", "sim_s"
     ));
     for t in traces {
         let last = t.points.last().copied().unwrap_or_default();
         s.push_str(&format!(
-            "{:<34} {:>12.4} {:>10.4} {:>12.2} {:>14.4e}\n",
-            t.label, last.loss, last.accuracy, last.comm_mb, last.consensus
+            "{:<34} {:>12.4} {:>10.4} {:>12.2} {:>14.4e} {:>10.2}\n",
+            t.label, last.loss, last.accuracy, last.comm_mb, last.consensus, last.sim_seconds
         ));
     }
     s
@@ -161,6 +166,7 @@ mod tests {
         assert_eq!(t.final_loss(), 0.4);
         assert_eq!(t.final_accuracy(), 0.8);
         assert_eq!(t.total_comm_mb(), 4.0);
+        assert!((t.final_sim_seconds() - 0.4).abs() < 1e-12);
         assert_eq!(t.best_loss(), 0.4);
         assert_eq!(t.steps_to_loss(1.0), Some(10));
         assert_eq!(t.steps_to_loss(0.01), None);
