@@ -11,7 +11,7 @@
 use pdsgdm::algorithms::Hyper;
 use pdsgdm::compress::{self, Compressor};
 use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
-use pdsgdm::coordinator::Experiment;
+use pdsgdm::coordinator::{Session, SessionSpec};
 use pdsgdm::metrics;
 use pdsgdm::optim::LrSchedule;
 
@@ -39,8 +39,9 @@ fn main() -> anyhow::Result<()> {
     // Full-precision reference (Algorithm 1).
     let mut cfg = base();
     cfg.algorithm = "pd-sgdm".into();
-    let mut exp = Experiment::build(cfg)?;
-    let full = exp.run(false);
+    let mut session = Session::build(SessionSpec::new(cfg))?;
+    session.run_to_stop();
+    let full = session.into_trace();
     let full_mb = full.total_comm_mb();
     rows.push((
         "pd-sgdm (full precision)".to_string(),
@@ -58,8 +59,9 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = base();
         cfg.algorithm = "cpd-sgdm".into();
         cfg.compressor = Some(spec.into());
-        let mut exp = Experiment::build(cfg)?;
-        let trace = exp.run(false);
+        let mut session = Session::build(SessionSpec::new(cfg))?;
+        session.run_to_stop();
+        let trace = session.into_trace();
         let delta = compress::parse(spec).unwrap().delta(d_hint);
         let ratio = full_mb / trace.total_comm_mb();
         rows.push((
@@ -78,8 +80,9 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = base();
         cfg.algorithm = algo.into();
         cfg.compressor = Some("sign".into());
-        let mut exp = Experiment::build(cfg)?;
-        let trace = exp.run(false);
+        let mut session = Session::build(SessionSpec::new(cfg))?;
+        session.run_to_stop();
+        let trace = session.into_trace();
         let ratio = full_mb / trace.total_comm_mb();
         rows.push((
             format!("{algo} + sign"),

@@ -10,20 +10,52 @@
 //! bounds the achievable loss. The loss curve is logged to
 //! `bench_out/e2e_<model>.csv` and summarized in EXPERIMENTS.md.
 //!
+//! Column semantics: since the Session port, the CSV's `sim_seconds`
+//! column is the α–β *simulated* time (the same meaning it has in every
+//! other trace this repo writes — it used to hold measured wall-clock
+//! here). Real elapsed seconds are printed per eval line (`[12.3s]`)
+//! and in the final tokens/s summary.
+//!
 //! Defaults: model = "e2e" (d = 3.45M), steps = 300. Python is NOT on
 //! the training path — delete it after `make artifacts` and this still
 //! runs.
 
 use std::time::Instant;
 
-use pdsgdm::algorithms::{Algorithm, Hyper, PdSgdm};
-use pdsgdm::comm::Network;
+use pdsgdm::algorithms::{Hyper, PdSgdm, StepStats};
+use pdsgdm::comm::{CostModel, Network};
+use pdsgdm::coordinator::{Observer, Session, StopCondition};
 use pdsgdm::data::MarkovCorpus;
 use pdsgdm::grad::GradientSource;
-use pdsgdm::metrics::{self, Trace, TracePoint};
+use pdsgdm::metrics::{self, TracePoint};
 use pdsgdm::optim::LrSchedule;
 use pdsgdm::runtime::{Runtime, XlaGradSource};
 use pdsgdm::topology::{self, Topology, Weighting};
+
+/// Streams the e2e progress line at every evaluation — the custom-
+/// observer version of what this example used to hardcode in its loop.
+struct E2eProgress {
+    t_start: Instant,
+    last_train_loss: f64,
+}
+
+impl Observer for E2eProgress {
+    fn on_step(&mut self, _t: u64, stats: &StepStats) {
+        self.last_train_loss = stats.mean_loss;
+    }
+
+    fn on_eval(&mut self, _label: &str, p: &TracePoint) {
+        println!(
+            "step {:>5}  heldout {:.4}  train {:.4}  comm {:>8.2} MB  consensus {:.3e}  [{:.1}s]",
+            p.step,
+            p.loss,
+            self.last_train_loss,
+            p.comm_mb,
+            p.consensus,
+            self.t_start.elapsed().as_secs_f64()
+        );
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -63,44 +95,22 @@ fn main() -> anyhow::Result<()> {
     let mut algo = PdSgdm::new(k, x0, w, hyper);
     println!("PD-SGDM: K={k} ring (rho = {rho:.3}), p={period}, mu=0.9, {steps} steps\n");
 
-    let mut trace = Trace::new(format!("e2e-{model}-pdsgdm-p{period}"));
     let t_start = Instant::now();
     let eval_every = (steps / 20).max(1);
-    let mut push_eval = |t: u64,
-                         algo: &PdSgdm,
-                         src: &mut XlaGradSource,
-                         net: &Network,
-                         trace: &mut Trace,
-                         mean_step_loss: f64| {
-        let eval = src.eval(&algo.avg_params());
-        trace.push(TracePoint {
-            step: t,
-            loss: eval.loss,
-            accuracy: 0.0,
-            comm_mb: net.total_megabytes(),
-            consensus: algo.consensus_error(),
-            grad_norm_sq: 0.0,
-            sim_seconds: t_start.elapsed().as_secs_f64(),
-        });
-        println!(
-            "step {t:>5}  heldout {:.4}  train {:.4}  comm {:>8.2} MB  consensus {:.3e}  [{:.1}s]",
-            eval.loss,
-            mean_step_loss,
-            net.total_megabytes(),
-            algo.consensus_error(),
-            t_start.elapsed().as_secs_f64()
-        );
-    };
-
-    push_eval(0, &algo, &mut src, &net, &mut trace, f64::NAN);
-    let mut recent = f64::NAN;
-    for t in 0..steps {
-        let stats = algo.step(t, &mut src, &mut net);
-        recent = stats.mean_loss;
-        if (t + 1) % eval_every == 0 || t + 1 == steps {
-            push_eval(t + 1, &algo, &mut src, &net, &mut trace, recent);
-        }
-    }
+    // Wrap the caller-owned parts in a step-wise Session: the driver
+    // loop, cost accounting, and trace recording come from the
+    // coordinator; this example only contributes the Observer above.
+    let mut session = Session::from_parts(
+        &mut algo,
+        &mut src,
+        &mut net,
+        eval_every,
+        CostModel::default(),
+    );
+    session.observe(Box::new(E2eProgress { t_start, last_train_loss: f64::NAN }));
+    session.run_until(StopCondition::Steps(steps));
+    let mut trace = session.into_trace();
+    trace.label = format!("e2e-{model}-pdsgdm-p{period}");
 
     let wall = t_start.elapsed().as_secs_f64();
     let tokens_seen = steps as f64 * k as f64 * (m.batch * m.seq_len) as f64;
@@ -118,6 +128,9 @@ fn main() -> anyhow::Result<()> {
         std::path::Path::new(&format!("bench_out/e2e_{model}.csv")),
         std::slice::from_ref(&trace),
     )?;
-    println!("loss curve -> bench_out/e2e_{model}.csv");
+    println!(
+        "loss curve -> bench_out/e2e_{model}.csv (sim_seconds column is α–β simulated \
+         time; wall-clock was {wall:.1}s)"
+    );
     Ok(())
 }

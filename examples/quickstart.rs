@@ -4,12 +4,14 @@
 //!     cargo run --release --example quickstart
 //!
 //! Prints a short loss/accuracy table and writes the trace CSV to
-//! `bench_out/quickstart.csv`. This is the 30-second tour of the public
-//! API: config -> Experiment -> run -> Trace.
+//! `bench_out/quickstart.csv`, plus a resumable full-state checkpoint.
+//! This is the 30-second tour of the public API:
+//! config -> SessionSpec -> Session -> run_until(StopCondition) -> Trace,
+//! with an Observer streaming progress instead of hardcoded printing.
 
 use pdsgdm::algorithms::Hyper;
 use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
-use pdsgdm::coordinator::Experiment;
+use pdsgdm::coordinator::{Session, SessionSpec, VerboseObserver};
 use pdsgdm::data::Sharding;
 use pdsgdm::metrics;
 use pdsgdm::optim::LrSchedule;
@@ -41,18 +43,28 @@ fn main() -> anyhow::Result<()> {
         gamma: 0.4,
     };
 
-    let mut exp = Experiment::build(cfg)?;
-    println!(
-        "PD-SGDM quickstart: K={} ring (rho = {:.3}), p={}, mu={}",
-        exp.config.workers, exp.rho, exp.config.hyper.period, exp.config.hyper.mu
-    );
-    let trace = exp.run(true);
+    let mut session = Session::build(SessionSpec::new(cfg))?;
+    {
+        let cfg = session.config.as_ref().expect("built from a config");
+        println!(
+            "PD-SGDM quickstart: K={} ring (rho = {:.3}), p={}, mu={}",
+            cfg.workers, session.rho, cfg.hyper.period, cfg.hyper.mu
+        );
+    }
+    // Streamed progress is an Observer, not a driver flag — swap in your
+    // own implementation for dashboards/early stopping.
+    session.observe(Box::new(VerboseObserver));
+    session.run_to_stop();
 
-    println!("\n{}", metrics::summary_table(std::slice::from_ref(&trace)));
+    println!("\n{}", metrics::summary_table(std::slice::from_ref(session.trace())));
     metrics::write_csv(
         std::path::Path::new("bench_out/quickstart.csv"),
-        std::slice::from_ref(&trace),
+        std::slice::from_ref(session.trace()),
     )?;
     println!("trace -> bench_out/quickstart.csv");
+    // Full-state checkpoint: `pdsgdm train --resume` (or
+    // SessionSpec::resume_from) continues it bit-identically.
+    session.save(std::path::Path::new("bench_out/quickstart.ckpt"))?;
+    println!("checkpoint -> bench_out/quickstart.ckpt");
     Ok(())
 }

@@ -10,7 +10,7 @@
 
 use pdsgdm::algorithms::Hyper;
 use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
-use pdsgdm::coordinator::Experiment;
+use pdsgdm::coordinator::{Session, SessionSpec};
 use pdsgdm::optim::LrSchedule;
 use pdsgdm::topology::Topology;
 
@@ -47,9 +47,10 @@ fn main() -> anyhow::Result<()> {
             period: 8,
             gamma: 0.4,
         };
-        let mut exp = Experiment::build(c)?;
-        let rho = exp.rho;
-        let trace = exp.run(false);
+        let mut session = Session::build(SessionSpec::new(c))?;
+        let rho = session.rho;
+        session.run_to_stop();
+        let trace = session.into_trace();
         let peak = trace.points.iter().map(|p| p.consensus).fold(0.0, f64::max);
         println!(
             "{name:<12} {rho:>8.4} {:>12.1} {peak:>16.4e} {:>12.4} {:>10.2}",

@@ -14,7 +14,7 @@
 mod common;
 
 use pdsgdm::config::WorkloadConfig;
-use pdsgdm::coordinator::Experiment;
+use pdsgdm::coordinator::{Session, SessionSpec};
 use pdsgdm::optim::LrSchedule;
 
 fn main() {
@@ -33,8 +33,9 @@ fn main() {
         c.workload = WorkloadConfig::Quadratic { dim: 64, heterogeneity: 0.0, noise: 2.0 };
         c.hyper.lr = LrSchedule::Constant { eta: 0.02 };
         c.hyper.period = 4;
-        let mut exp = Experiment::build(c).unwrap();
-        let trace = exp.run(false);
+        let mut session = Session::build(SessionSpec::new(c)).unwrap();
+        session.run_to_stop();
+        let trace = session.into_trace();
         let tail: Vec<f64> = trace
             .points
             .iter()
@@ -76,8 +77,9 @@ fn main() {
         c.workload = WorkloadConfig::Quadratic { dim: 64, heterogeneity: 1.0, noise: 0.5 };
         c.hyper.lr = LrSchedule::Corollary1 { eta0: 1.0, k: 8, total_steps: t_total };
         c.hyper.period = p;
-        let mut exp = Experiment::build(c).unwrap();
-        let trace = exp.run(false);
+        let mut session = Session::build(SessionSpec::new(c)).unwrap();
+        session.run_to_stop();
+        let trace = session.into_trace();
         println!("{tau},{p},{:.5},{:.2}", trace.final_loss(), trace.total_comm_mb());
     }
 }

@@ -13,7 +13,7 @@
 mod common;
 
 use pdsgdm::config::WorkloadConfig;
-use pdsgdm::coordinator::Experiment;
+use pdsgdm::coordinator::{Session, SessionSpec};
 use pdsgdm::optim::LrSchedule;
 use pdsgdm::topology::Topology;
 
@@ -27,9 +27,10 @@ fn peak_consensus(topo: Topology, p: u64) -> (f64, f64) {
     c.workload = WorkloadConfig::Quadratic { dim: 64, heterogeneity: 2.0, noise: 0.2 };
     c.hyper.lr = LrSchedule::Constant { eta: 0.02 };
     c.hyper.period = p;
-    let mut exp = Experiment::build(c).unwrap();
-    let rho = exp.rho;
-    let trace = exp.run(false);
+    let mut session = Session::build(SessionSpec::new(c)).unwrap();
+    let rho = session.rho;
+    session.run_to_stop();
+    let trace = session.into_trace();
     let peak = trace.points.iter().map(|pt| pt.consensus).fold(0.0, f64::max);
     (rho, peak)
 }

@@ -4,7 +4,7 @@
 
 use pdsgdm::algorithms::Hyper;
 use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
-use pdsgdm::coordinator::Experiment;
+use pdsgdm::coordinator::{Session, SessionSpec, StopCondition};
 use pdsgdm::metrics::{self, Trace};
 use pdsgdm::optim::LrSchedule;
 
@@ -34,13 +34,35 @@ pub fn paper_config(steps: u64, workload: &str) -> ExperimentConfig {
     c
 }
 
-/// Run one configured experiment and relabel its trace.
+/// Run one configured experiment to its config-implied stop condition
+/// and relabel its trace.
 pub fn run_labeled(cfg: ExperimentConfig, label: &str) -> Trace {
-    let mut exp = match Experiment::build(cfg) {
-        Ok(e) => e,
+    let stop = None;
+    run_until_labeled(cfg, stop, label)
+}
+
+/// Run one configured experiment until `stop` (or, when `None`, the
+/// config's own stop condition — steps plus any `[stop]` budgets).
+/// Budget sweeps hand in `StopCondition::CommBudgetMb` /
+/// `SimSecondsBudget` values here instead of guessing step counts.
+pub fn run_until_labeled(
+    cfg: ExperimentConfig,
+    stop: Option<StopCondition>,
+    label: &str,
+) -> Trace {
+    let mut session = match Session::build(SessionSpec::new(cfg)) {
+        Ok(s) => s,
         Err(e) => panic!("build {label}: {e}"),
     };
-    let mut trace = exp.run(false);
+    match stop {
+        Some(stop) => {
+            session.run_until(stop);
+        }
+        None => {
+            session.run_to_stop();
+        }
+    }
+    let mut trace = session.into_trace();
     trace.label = label.to_string();
     trace
 }

@@ -59,6 +59,16 @@ impl Algorithm for DSgd {
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
     }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("d-sgd");
+        w.put_f32_mat(&self.xs);
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("d-sgd")?;
+        r.take_f32_mat_into(&mut self.xs, "d-sgd.xs")
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -111,6 +121,16 @@ impl Algorithm for PdSgd {
 
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
+    }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("pd-sgd");
+        w.put_f32_mat(&self.xs);
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("pd-sgd")?;
+        r.take_f32_mat_into(&mut self.xs, "pd-sgd.xs")
     }
 }
 
@@ -183,6 +203,22 @@ impl Algorithm for DSgdm {
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
     }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("d-sgdm");
+        w.put_u64(self.gossip_momentum as u64);
+        w.put_f32_mat(&self.xs);
+        super::save_moms(&self.moms, w);
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("d-sgdm")?;
+        if (r.take_u64()? != 0) != self.gossip_momentum {
+            return Err("d-sgdm: gossip_momentum flag mismatch".into());
+        }
+        r.take_f32_mat_into(&mut self.xs, "d-sgdm.xs")?;
+        super::load_moms(&mut self.moms, r)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -248,12 +284,25 @@ impl Algorithm for CSgdm {
         &self.x
     }
 
-    fn avg_params(&self) -> Vec<f32> {
-        self.x.clone()
+    fn avg_params_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.x);
     }
 
     fn consensus_error(&self) -> f64 {
         0.0 // single global iterate by construction
+    }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("c-sgdm");
+        w.put_f32s(&self.x);
+        self.mom.state_save(w);
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("c-sgdm")?;
+        r.take_f32s_into(&mut self.x, "c-sgdm.x")?;
+        self.mom.state_load(r)
     }
 }
 
@@ -301,6 +350,16 @@ impl Algorithm for ChocoSgd {
 
     fn set_parallel(&mut self, on: bool) {
         self.inner.set_parallel(on);
+    }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("choco-sgd");
+        self.inner.state_save(w);
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("choco-sgd")?;
+        self.inner.state_load(r)
     }
 }
 
@@ -421,6 +480,23 @@ impl Algorithm for DeepSqueeze {
 
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
+    }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("deepsqueeze");
+        w.put_f32_mat(&self.xs);
+        w.put_f32_mat(&self.errs);
+        w.put_u64s(&self.rng.state());
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("deepsqueeze")?;
+        r.take_f32_mat_into(&mut self.xs, "deepsqueeze.xs")?;
+        r.take_f32_mat_into(&mut self.errs, "deepsqueeze.errs")?;
+        let s = r.take_u64s()?;
+        let s: [u64; 4] = s.try_into().map_err(|_| "deepsqueeze: bad rng state".to_string())?;
+        self.rng = Xoshiro256::from_state(s);
+        Ok(())
     }
 }
 

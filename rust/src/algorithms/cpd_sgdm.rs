@@ -168,6 +168,25 @@ impl Algorithm for CpdSgdm {
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
     }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("cpd-sgdm");
+        w.put_f32_mat(&self.xs);
+        w.put_f32_mat(&self.hats);
+        super::save_moms(&self.moms, w);
+        w.put_u64s(&self.rng.state());
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("cpd-sgdm")?;
+        r.take_f32_mat_into(&mut self.xs, "cpd-sgdm.xs")?;
+        r.take_f32_mat_into(&mut self.hats, "cpd-sgdm.hats")?;
+        super::load_moms(&mut self.moms, r)?;
+        let s = r.take_u64s()?;
+        let s: [u64; 4] = s.try_into().map_err(|_| "cpd-sgdm: bad rng state".to_string())?;
+        self.rng = Xoshiro256::from_state(s);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -28,6 +28,7 @@ pub use pd_sgdm::PdSgdm;
 
 use crate::comm::Network;
 use crate::grad::GradientSource;
+use crate::state::{StateReader, StateWriter};
 
 /// Shared hyper-parameters (paper §5.1 defaults where applicable).
 #[derive(Clone, Debug)]
@@ -92,20 +93,254 @@ pub trait Algorithm {
     /// Worker k's current iterate x_t^(k).
     fn params(&self, k: usize) -> &[f32];
 
-    /// The averaged iterate x̄_t the paper's theorems track.
-    fn avg_params(&self) -> Vec<f32> {
-        crate::linalg::mean_of(&(0..self.k()).map(|k| self.params(k).to_vec()).collect::<Vec<_>>())
+    /// Write the averaged iterate x̄_t into `out` (resized to d). This is
+    /// the evaluation hot path: the default accumulates straight from the
+    /// borrowed `params(k)` slices — no per-worker clones, so an eval
+    /// point costs zero K×d allocations (the old default cloned every
+    /// worker's iterate into fresh `Vec`s at every TracePoint).
+    fn avg_params_into(&self, out: &mut Vec<f32>) {
+        let k = self.k();
+        let d = self.params(0).len();
+        out.clear();
+        out.resize(d, 0.0);
+        for i in 0..k {
+            crate::linalg::axpy(1.0, self.params(i), out);
+        }
+        crate::linalg::scale(1.0 / k as f32, out);
     }
 
-    /// Consensus error Σ_k ||x_k − x̄||² (bounded by Lemma 5/6).
+    /// The averaged iterate x̄_t the paper's theorems track (allocating
+    /// convenience over [`Algorithm::avg_params_into`]).
+    fn avg_params(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.avg_params_into(&mut out);
+        out
+    }
+
+    /// Consensus error Σ_k ||x_k − x̄||² about a *precomputed* x̄ — the
+    /// eval path already holds x̄ from [`Algorithm::avg_params_into`], so
+    /// recording a TracePoint never averages the K iterates twice.
+    fn consensus_error_about(&self, xbar: &[f32]) -> f64 {
+        (0..self.k())
+            .map(|k| {
+                let e = crate::linalg::dist(self.params(k), xbar);
+                e * e
+            })
+            .sum()
+    }
+
+    /// Consensus error Σ_k ||x_k − x̄||² (bounded by Lemma 5/6). The
+    /// default computes x̄ into one d-length scratch from the borrowed
+    /// worker slices — never a K×d copy.
     fn consensus_error(&self) -> f64 {
-        let xs: Vec<Vec<f32>> = (0..self.k()).map(|k| self.params(k).to_vec()).collect();
-        crate::linalg::consensus_error(&xs)
+        let mut xbar = Vec::new();
+        self.avg_params_into(&mut xbar);
+        self.consensus_error_about(&xbar)
+    }
+
+    /// Serialize the algorithm's *full* mutable state — iterates,
+    /// momentum buffers, error-feedback/x̂ copies, internal RNG streams —
+    /// into `w`. Together with the gradient source's state this is
+    /// everything a `PDSGDM02` checkpoint needs for a resumed session to
+    /// reproduce the uninterrupted trace bit-identically (the old
+    /// checkpoint kept only x̄ and could resume nothing).
+    fn state_save(&self, w: &mut StateWriter);
+
+    /// Restore state written by [`Algorithm::state_save`] into an
+    /// identically-configured instance. Errs (never panics) on a shape or
+    /// algorithm-tag mismatch.
+    fn state_load(&mut self, r: &mut StateReader) -> Result<(), String>;
+}
+
+// ---------------------------------------------------------------------------
+// Typed construction: AlgorithmSpec + builder registry
+// ---------------------------------------------------------------------------
+
+/// Typed, named construction parameters for any algorithm in the table —
+/// replaces the old seven-positional-argument `by_name` bag. Build one
+/// with [`AlgorithmSpec::new`] and the chainable setters, then call
+/// [`AlgorithmSpec::build`]:
+///
+/// ```ignore
+/// let algo = AlgorithmSpec::new("cpd-sgdm", k, x0)
+///     .mixing(w)
+///     .hyper(hyper)
+///     .compressor(Box::new(compress::Sign))
+///     .seed(7)
+///     .build()?;
+/// ```
+pub struct AlgorithmSpec {
+    pub name: String,
+    pub workers: usize,
+    pub x0: Vec<f32>,
+    /// Mixing matrix W (defaults to I_K — fine for `c-sgdm`, required
+    /// doubly stochastic for the decentralized algorithms).
+    pub mixing: crate::linalg::Mat,
+    pub hyper: Hyper,
+    /// δ-contraction operator for the compressed algorithms; `None`
+    /// falls back to the paper's choice ([`crate::compress::Sign`]).
+    pub compressor: Option<Box<dyn crate::compress::Compressor>>,
+    pub seed: u64,
+}
+
+impl AlgorithmSpec {
+    pub fn new(name: impl Into<String>, workers: usize, x0: Vec<f32>) -> Self {
+        Self {
+            name: name.into(),
+            workers,
+            x0,
+            mixing: crate::linalg::Mat::eye(workers),
+            hyper: Hyper::default(),
+            compressor: None,
+            seed: 0,
+        }
+    }
+
+    pub fn mixing(mut self, w: crate::linalg::Mat) -> Self {
+        self.mixing = w;
+        self
+    }
+
+    pub fn hyper(mut self, hyper: Hyper) -> Self {
+        self.hyper = hyper;
+        self
+    }
+
+    pub fn compressor(mut self, c: Box<dyn crate::compress::Compressor>) -> Self {
+        self.compressor = Some(c);
+        self
+    }
+
+    pub fn compressor_opt(mut self, c: Option<Box<dyn crate::compress::Compressor>>) -> Self {
+        self.compressor = c;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Look the name up in [`REGISTRY`] and construct the algorithm.
+    pub fn build(self) -> Result<Box<dyn Algorithm>, String> {
+        let b = builder(&self.name).ok_or_else(|| {
+            format!("unknown algorithm {:?}; options: {:?}", self.name, ALL_NAMES)
+        })?;
+        Ok((b.build)(self))
+    }
+
+    fn compressor_or_sign(&self) -> Box<dyn crate::compress::Compressor> {
+        self.compressor
+            .as_ref()
+            .map(|c| c.box_clone())
+            .unwrap_or_else(|| Box::new(crate::compress::Sign))
     }
 }
 
-/// Construct any algorithm in the table by name — the config system and
-/// CLI route through this.
+/// One registry row: the CLI-facing name, a one-line summary (printed by
+/// `pdsgdm algorithms`), and the constructor.
+pub struct AlgorithmBuilder {
+    pub name: &'static str,
+    pub summary: &'static str,
+    build: fn(AlgorithmSpec) -> Box<dyn Algorithm>,
+}
+
+/// The algorithm table (same rows as the module doc) as a data-driven
+/// registry — the config system, CLI, and checkpoint loader all route
+/// through this instead of a hand-maintained match.
+pub static REGISTRY: &[AlgorithmBuilder] = &[
+    AlgorithmBuilder {
+        name: "pd-sgdm",
+        summary: "Algorithm 1: local momentum + periodic gossip (this paper)",
+        build: |s| Box::new(PdSgdm::new(s.workers, s.x0, s.mixing, s.hyper)),
+    },
+    AlgorithmBuilder {
+        name: "cpd-sgdm",
+        summary: "Algorithm 2: PD-SGDM with compressed comm rounds (this paper)",
+        build: |s| {
+            let c = s.compressor_or_sign();
+            Box::new(CpdSgdm::new(s.workers, s.x0, s.mixing, s.hyper, c, s.seed))
+        },
+    },
+    AlgorithmBuilder {
+        name: "d-sgd",
+        summary: "D-SGD (Lian et al. 2017): plain gossip SGD, comm every step",
+        build: |s| Box::new(DSgd::new(s.workers, s.x0, s.mixing, s.hyper)),
+    },
+    AlgorithmBuilder {
+        name: "pd-sgd",
+        summary: "PD-SGD / local SGD (Li et al. 2019): periodic gossip, no momentum",
+        build: |s| Box::new(PdSgd::new(s.workers, s.x0, s.mixing, s.hyper)),
+    },
+    AlgorithmBuilder {
+        name: "d-sgdm",
+        summary: "D-SGDM (Yu et al. 2019): momentum gossip every step",
+        build: |s| Box::new(DSgdm::new(s.workers, s.x0, s.mixing, s.hyper, false)),
+    },
+    AlgorithmBuilder {
+        name: "d-sgdm-pm",
+        summary: "D-SGDM + momentum gossip (the double-payload variant of [23])",
+        build: |s| Box::new(DSgdm::new(s.workers, s.x0, s.mixing, s.hyper, true)),
+    },
+    AlgorithmBuilder {
+        name: "c-sgdm",
+        summary: "centralized momentum SGD (parameter-server comparator)",
+        build: |s| Box::new(CSgdm::new(s.workers, s.x0, s.hyper)),
+    },
+    AlgorithmBuilder {
+        name: "choco-sgd",
+        summary: "CHOCO-SGD (Koloskova et al. 2019): compressed gossip, p=1, mu=0",
+        build: |s| {
+            let c = s.compressor_or_sign();
+            Box::new(ChocoSgd::new(s.workers, s.x0, s.mixing, s.hyper, c, s.seed))
+        },
+    },
+    AlgorithmBuilder {
+        name: "deepsqueeze",
+        summary: "DeepSqueeze (Tang et al. 2019): error-feedback compressed gossip",
+        build: |s| {
+            let c = s.compressor_or_sign();
+            Box::new(DeepSqueeze::new(s.workers, s.x0, s.mixing, s.hyper, c, s.seed))
+        },
+    },
+];
+
+/// Registry lookup by CLI name.
+pub fn builder(name: &str) -> Option<&'static AlgorithmBuilder> {
+    REGISTRY.iter().find(|b| b.name == name)
+}
+
+/// Shared checkpoint helpers for per-worker momentum banks.
+pub(crate) fn save_moms(moms: &[crate::optim::MomentumState], w: &mut StateWriter) {
+    w.put_u64(moms.len() as u64);
+    for m in moms {
+        m.state_save(w);
+    }
+}
+
+pub(crate) fn load_moms(
+    moms: &mut [crate::optim::MomentumState],
+    r: &mut StateReader,
+) -> Result<(), String> {
+    let k = r.take_u64()? as usize;
+    if k != moms.len() {
+        return Err(format!("momentum bank: saved K {k} != live K {}", moms.len()));
+    }
+    for m in moms.iter_mut() {
+        m.state_load(r)?;
+    }
+    Ok(())
+}
+
+/// All algorithm names the registry accepts (for CLI help and sweeps).
+pub const ALL_NAMES: &[&str] = &[
+    "pd-sgdm", "cpd-sgdm", "d-sgd", "pd-sgd", "d-sgdm", "d-sgdm-pm",
+    "c-sgdm", "choco-sgd", "deepsqueeze",
+];
+
+/// Legacy positional constructor, kept as a thin shim over
+/// [`AlgorithmSpec`] during the migration — new call sites should build a
+/// spec instead.
 pub fn by_name(
     name: &str,
     k: usize,
@@ -115,43 +350,19 @@ pub fn by_name(
     compressor: Option<Box<dyn crate::compress::Compressor>>,
     seed: u64,
 ) -> Option<Box<dyn Algorithm>> {
-    let comp = || compressor_or_sign(compressor_opt_clone(&compressor));
-    match name {
-        "pd-sgdm" => Some(Box::new(PdSgdm::new(k, x0, w, hyper))),
-        "cpd-sgdm" => Some(Box::new(CpdSgdm::new(k, x0, w, hyper, comp(), seed))),
-        "d-sgd" => Some(Box::new(DSgd::new(k, x0, w, hyper))),
-        "pd-sgd" => Some(Box::new(PdSgd::new(k, x0, w, hyper))),
-        "d-sgdm" => Some(Box::new(DSgdm::new(k, x0, w, hyper, false))),
-        "d-sgdm-pm" => Some(Box::new(DSgdm::new(k, x0, w, hyper, true))),
-        "c-sgdm" => Some(Box::new(CSgdm::new(k, x0, hyper))),
-        "choco-sgd" => Some(Box::new(ChocoSgd::new(k, x0, w, hyper, comp(), seed))),
-        "deepsqueeze" => Some(Box::new(DeepSqueeze::new(k, x0, w, hyper, comp(), seed))),
-        _ => None,
-    }
-}
-
-/// All algorithm names `by_name` accepts (for CLI help and sweeps).
-pub const ALL_NAMES: &[&str] = &[
-    "pd-sgdm", "cpd-sgdm", "d-sgd", "pd-sgd", "d-sgdm", "d-sgdm-pm",
-    "c-sgdm", "choco-sgd", "deepsqueeze",
-];
-
-fn compressor_opt_clone(
-    c: &Option<Box<dyn crate::compress::Compressor>>,
-) -> Option<Box<dyn crate::compress::Compressor>> {
-    // Compressors are tiny value types; re-parse by name to clone.
-    c.as_ref().and_then(|c| crate::compress::parse(&c.name()))
-}
-
-fn compressor_or_sign(
-    c: Option<Box<dyn crate::compress::Compressor>>,
-) -> Box<dyn crate::compress::Compressor> {
-    c.unwrap_or_else(|| Box::new(crate::compress::Sign))
+    AlgorithmSpec::new(name, k, x0)
+        .mixing(w)
+        .hyper(hyper)
+        .compressor_opt(compressor)
+        .seed(seed)
+        .build()
+        .ok()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::grad::GradientSource as _;
     use crate::topology::{mixing_matrix, Topology, Weighting};
 
     #[test]
@@ -165,5 +376,52 @@ mod tests {
             assert!(!a.name().is_empty());
         }
         assert!(by_name("nope", 2, vec![], crate::linalg::Mat::eye(2), Hyper::default(), None, 0).is_none());
+    }
+
+    #[test]
+    fn registry_matches_all_names() {
+        assert_eq!(
+            REGISTRY.iter().map(|b| b.name).collect::<Vec<_>>(),
+            ALL_NAMES.to_vec()
+        );
+        for b in REGISTRY {
+            assert!(!b.summary.is_empty());
+            assert!(builder(b.name).is_some());
+        }
+        assert!(builder("nope").is_none());
+    }
+
+    #[test]
+    fn spec_builder_constructs_with_typed_fields() {
+        let g = Topology::Ring.build(4, 0);
+        let w = mixing_matrix(&g, Weighting::UniformDegree);
+        let a = AlgorithmSpec::new("cpd-sgdm", 4, vec![0.0; 8])
+            .mixing(w)
+            .hyper(Hyper { period: 8, ..Hyper::default() })
+            .compressor(Box::new(crate::compress::TopK { ratio: 0.25 }))
+            .seed(9)
+            .build()
+            .unwrap();
+        assert_eq!(a.k(), 4);
+        assert!(a.name().contains("top0.250"), "{}", a.name());
+        let err = AlgorithmSpec::new("nope", 2, vec![]).build().unwrap_err();
+        assert!(err.contains("unknown algorithm"), "{err}");
+    }
+
+    #[test]
+    fn avg_params_into_matches_avg_params_without_clones() {
+        let g = Topology::Ring.build(4, 0);
+        let w = mixing_matrix(&g, Weighting::UniformDegree);
+        let mut src = crate::grad::Quadratic::new(4, 8, 1.0, 0.1, 3);
+        let mut net = crate::comm::Network::new(&Topology::Ring.build(4, 0));
+        let mut a = by_name("pd-sgdm", 4, src.init(1), w, Hyper::default(), None, 1).unwrap();
+        for t in 0..10 {
+            a.step(t, &mut src, &mut net);
+        }
+        let alloc = a.avg_params();
+        let mut buf = vec![42.0f32; 3]; // wrong size, dirty: must be reset
+        a.avg_params_into(&mut buf);
+        assert_eq!(alloc, buf);
+        assert!(a.consensus_error() >= 0.0);
     }
 }

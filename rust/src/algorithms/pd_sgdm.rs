@@ -96,6 +96,18 @@ impl Algorithm for PdSgdm {
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
     }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("pd-sgdm");
+        w.put_f32_mat(&self.xs);
+        super::save_moms(&self.moms, w);
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("pd-sgdm")?;
+        r.take_f32_mat_into(&mut self.xs, "pd-sgdm.xs")?;
+        super::load_moms(&mut self.moms, r)
+    }
 }
 
 #[cfg(test)]

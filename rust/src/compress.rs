@@ -96,6 +96,18 @@ pub trait Compressor: Send + Sync {
     fn is_stochastic(&self) -> bool {
         false
     }
+
+    /// Clone this operator behind the trait object. Every operator is a
+    /// tiny value type, so this is a direct copy — the old
+    /// clone-by-reparse hack (round-tripping `name()` through `parse`)
+    /// is gone; `Box<dyn Compressor>` implements `Clone` via this.
+    fn box_clone(&self) -> Box<dyn Compressor>;
+}
+
+impl Clone for Box<dyn Compressor> {
+    fn clone(&self) -> Self {
+        self.box_clone()
+    }
 }
 
 /// Empirical 1 - ||x - Q(x)||²/||x||² for a concrete x (>= delta() must
@@ -208,6 +220,10 @@ impl Compressor for Sign {
     fn encoded_bytes(&self, d: usize) -> usize {
         4 + d.div_ceil(8)
     }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
+    }
 }
 
 /// Top-k sparsification: keep the k largest |x_i|, zero the rest. δ = k/d.
@@ -268,6 +284,10 @@ impl Compressor for TopK {
     fn encoded_bytes(&self, d: usize) -> usize {
         self.k_for(d) * 8
     }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
+    }
 }
 
 /// Random-k sparsification (projection form; δ = k/d in expectation and
@@ -324,6 +344,10 @@ impl Compressor for RandK {
 
     fn is_stochastic(&self) -> bool {
         true
+    }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
     }
 }
 
@@ -460,6 +484,10 @@ impl Compressor for Qsgd {
     fn is_stochastic(&self) -> bool {
         true
     }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
+    }
 }
 
 /// No-op compression (δ = 1): turns Algorithm 2 into exact communication.
@@ -501,6 +529,10 @@ impl Compressor for Identity {
 
     fn encoded_bytes(&self, d: usize) -> usize {
         4 * d
+    }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
     }
 }
 
@@ -758,6 +790,32 @@ mod tests {
         assert!(parse("top0").is_none());
         assert!(parse("garbage").is_none());
         assert!(parse("qsgd0").is_none());
+    }
+
+    #[test]
+    fn box_clone_preserves_operator_parameters() {
+        // The old clone path re-parsed `name()` — lossy for any operator
+        // whose Display rounds its parameters. box_clone must be exact.
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let x = rng.normal_vec(200, 1.0);
+        for c in operators() {
+            let cl = c.box_clone();
+            assert_eq!(c.name(), cl.name());
+            assert_eq!(c.encoded_bytes(1234), cl.encoded_bytes(1234));
+            assert_eq!(c.delta(1234).to_bits(), cl.delta(1234).to_bits());
+            if !c.is_stochastic() {
+                let a = c.compress(&x, &mut rng.clone());
+                let b = cl.compress(&x, &mut rng.clone());
+                let bits = |q: &CompressedVec| q.dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&a), bits(&b), "{}", c.name());
+            }
+        }
+        // a ratio that does not survive the %.3 name formatting
+        let odd = TopK { ratio: 0.123456789 };
+        let cl = odd.box_clone();
+        assert_eq!(cl.encoded_bytes(10_000), odd.encoded_bytes(10_000));
+        assert!(parse(&odd.name()).unwrap().encoded_bytes(10_000) != 0); // parse still works, but...
+        assert_eq!(cl.delta(10_000).to_bits(), odd.delta(10_000).to_bits());
     }
 
     #[test]

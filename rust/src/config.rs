@@ -191,6 +191,21 @@ pub enum WorkloadConfig {
     Transformer { model: String, artifacts_dir: String },
 }
 
+/// Optional early-stop budgets (the `[stop]` config section). Each maps
+/// onto a `coordinator::StopCondition` that `Session::run_to_stop`
+/// composes with the step count, so configs can sweep
+/// scenario-diverse budgets (wall-clock, traffic, quality) instead of
+/// fixed step counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StopConfig {
+    /// Stop once the evaluated global loss reaches this.
+    pub target_loss: Option<f64>,
+    /// Stop once cumulative communication reaches this many MiB.
+    pub comm_budget_mb: Option<f64>,
+    /// Stop once α–β simulated wall-clock reaches this many seconds.
+    pub sim_seconds_budget: Option<f64>,
+}
+
 /// The full experiment description (one `configs/*.toml` file).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -207,6 +222,7 @@ pub struct ExperimentConfig {
     pub compressor: Option<String>,
     pub workload: WorkloadConfig,
     pub cost_model: CostModel,
+    pub stop: StopConfig,
     pub out_dir: String,
 }
 
@@ -226,6 +242,7 @@ impl Default for ExperimentConfig {
             compressor: None,
             workload: WorkloadConfig::Mlp { n: 4000, dim: 32, classes: 10, hidden: 64, batch: 16 },
             cost_model: CostModel::default(),
+            stop: StopConfig::default(),
             out_dir: "bench_out".into(),
         }
     }
@@ -256,6 +273,7 @@ impl ExperimentConfig {
             "workload.hidden", "workload.batch", "workload.l2",
             "workload.model", "workload.artifacts_dir",
             "cost.alpha", "cost.beta", "cost.step_seconds",
+            "stop.target_loss", "stop.comm_budget_mb", "stop.sim_seconds_budget",
             "out_dir",
         ];
         for key in doc.keys() {
@@ -400,11 +418,47 @@ impl ExperimentConfig {
         if let Some(v) = get_f32("cost.step_seconds")? {
             cfg.cost_model.step_seconds = v as f64;
         }
+        // stop budgets
+        if let Some(v) = get_f32("stop.target_loss")? {
+            cfg.stop.target_loss = Some(v as f64);
+        }
+        if let Some(v) = get_f32("stop.comm_budget_mb")? {
+            cfg.stop.comm_budget_mb = Some(v as f64);
+        }
+        if let Some(v) = get_f32("stop.sim_seconds_budget")? {
+            cfg.stop.sim_seconds_budget = Some(v as f64);
+        }
         if let Some(v) = get_str("out_dir") {
             cfg.out_dir = v;
         }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Stable description of everything that must match between the
+    /// saving and resuming runs for a checkpoint resume to be
+    /// bit-identical: the problem rebuild inputs (seed, workload,
+    /// topology, sharding), the optimizer (hyper, compressor), the cost
+    /// model, and the eval cadence. `steps`, the `[stop]` budgets,
+    /// `name`, and `out_dir` are deliberately excluded — changing those
+    /// is the *point* of resuming. Stored in the `PDSGDM02` header and
+    /// checked by `Session::load_state`.
+    pub fn resume_fingerprint(&self) -> String {
+        format!(
+            "algo={} k={} eval_every={} seed={} topo={:?} weighting={:?} sharding={:?} \
+             hyper={:?} comp={:?} workload={:?} cost={:?}",
+            self.algorithm,
+            self.workers,
+            self.eval_every,
+            self.seed,
+            self.topology,
+            self.weighting,
+            self.sharding,
+            self.hyper,
+            self.compressor,
+            self.workload,
+            self.cost_model,
+        )
     }
 
     pub fn validate(&self) -> Result<(), String> {
@@ -421,7 +475,30 @@ impl ExperimentConfig {
             return Err("gamma must be > 0".into());
         }
         if self.eval_every == 0 {
+            // Regression guard: the old driver computed
+            // `(t + 1) % eval_every` and panicked with a division by
+            // zero. Configs must name a real cadence; `Session` itself
+            // additionally treats a raw eval_every of 0 as
+            // "endpoints-only" rather than dividing by it.
             return Err("eval_every must be >= 1".into());
+        }
+        for (key, v) in [
+            ("stop.comm_budget_mb", self.stop.comm_budget_mb),
+            ("stop.sim_seconds_budget", self.stop.sim_seconds_budget),
+        ] {
+            if let Some(v) = v {
+                if !(v > 0.0) || !v.is_finite() {
+                    return Err(format!("{key} must be a finite number > 0, got {v}"));
+                }
+            }
+        }
+        if let Some(l) = self.stop.target_loss {
+            // Every workload in this repo has a non-negative loss, so a
+            // zero/negative (or non-finite) target can never trigger —
+            // reject it instead of silently running to the step ceiling.
+            if !(l > 0.0) || !l.is_finite() {
+                return Err(format!("stop.target_loss must be a finite number > 0, got {l}"));
+            }
         }
         if self.topology == Topology::Hypercube && !self.workers.is_power_of_two() {
             return Err("hypercube topology requires workers to be a power of two".into());
@@ -537,6 +614,31 @@ step_seconds = 0.05
         assert!(parse_toml("novalue =").is_err());
         assert!(parse_toml("= 3").is_err());
         assert!(parse_toml("x = [1, ").is_err());
+    }
+
+    #[test]
+    fn rejects_zero_eval_every() {
+        // Regression: eval_every = 0 used to reach the driver's modulo
+        // and panic; now it is a config error with a clear message.
+        let err = ExperimentConfig::from_toml_str("eval_every = 0").unwrap_err();
+        assert!(err.contains("eval_every"), "{err}");
+    }
+
+    #[test]
+    fn stop_section_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[stop]\ntarget_loss = 0.25\ncomm_budget_mb = 64.0\nsim_seconds_budget = 120",
+        )
+        .unwrap();
+        assert_eq!(cfg.stop.target_loss, Some(0.25));
+        assert_eq!(cfg.stop.comm_budget_mb, Some(64.0));
+        assert_eq!(cfg.stop.sim_seconds_budget, Some(120.0));
+        assert!(ExperimentConfig::from_toml_str("[stop]\ncomm_budget_mb = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[stop]\nsim_seconds_budget = -1").is_err());
+        // an unreachable target (losses here are non-negative) is a
+        // config error, not a silently inert budget
+        assert!(ExperimentConfig::from_toml_str("[stop]\ntarget_loss = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[stop]\ntarget_loss = 0").is_err());
     }
 
     #[test]

@@ -1,36 +1,56 @@
-//! The training driver: wires config → (topology, algorithm, oracle,
-//! network) and runs the synchronous decentralized loop, recording the
-//! paper's observables at every eval point.
+//! The training driver, redesigned around a resumable, step-wise
+//! [`Session`]:
 //!
-//! Two entry points:
+//! * [`Session::build`] materializes a full experiment from a
+//!   [`SessionSpec`] (config → topology, algorithm, oracle, network) —
+//!   optionally resuming from a versioned `PDSGDM02` checkpoint that
+//!   restores *every* mutable bit of the run (worker iterates, momentum
+//!   and error-feedback buffers, RNG streams, batch cursors, byte
+//!   counters, the trace so far), so a resumed run reproduces the
+//!   uninterrupted trace bit-identically (rust/tests/session_resume.rs).
+//! * [`Session::step`] advances one synchronous global iteration;
+//!   [`Session::eval_now`] records a pull-based [`TracePoint`];
+//!   [`Session::run_until`] drives to a [`StopCondition`] — step count,
+//!   target loss, communication budget, or simulated-wall-clock budget —
+//!   evaluating on the configured cadence.
+//! * [`Observer`]s receive `on_step` / `on_comm_round` / `on_eval`
+//!   callbacks, replacing the old hardcoded verbose printing
+//!   ([`VerboseObserver`] reproduces it).
+//! * [`run`] remains as a thin shim over `Session` for the legacy
+//!   `(algo, source, net, RunOpts)` call shape;
+//!   [`Session::from_parts`] serves callers that own the pieces.
 //!
-//! * [`run`] — drive any prepared `(Algorithm, GradientSource, Network)`
-//!   triple for `steps` iterations (what the figure benches call in
-//!   sweeps).
-//! * [`Experiment`] — build all of the above from an
-//!   [`ExperimentConfig`] (what the CLI and examples use); supports all
-//!   pure-Rust workloads and, when `workload.kind = "transformer"`, the
-//!   XLA runtime path.
+//! Checkpoint formats: `PDSGDM02` is the full-session format written by
+//! [`Session::save`]; the legacy x̄-only `PDSGDM01` files still load
+//! through [`load_checkpoint`] (which also extracts x̄ from a v2 file).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
-use crate::algorithms::{self, Algorithm};
+use crate::algorithms::{Algorithm, AlgorithmSpec, StepStats};
 use crate::comm::{CostModel, Network};
 use crate::config::{ExperimentConfig, WorkloadConfig};
 use crate::data::Blobs;
 use crate::grad::{GradientSource, Logistic, Mlp, Quadratic};
 use crate::metrics::{Trace, TracePoint};
+use crate::state::{StateReader, StateWriter};
 use crate::topology;
 
-/// Options for the driver loop.
+/// Magic prefix of the full-session checkpoint format.
+pub const CKPT_MAGIC_V2: &[u8; 8] = b"PDSGDM02";
+/// Magic prefix of the legacy x̄-only checkpoint format.
+pub const CKPT_MAGIC_V1: &[u8; 8] = b"PDSGDM01";
+
+/// Options for the legacy [`run`] shim.
 #[derive(Clone, Copy, Debug)]
 pub struct RunOpts {
     pub steps: u64,
+    /// Evaluation cadence; `0` means "endpoints only" (the t=0 point and
+    /// the final step) — no longer a division-by-zero panic.
     pub eval_every: u64,
     pub cost_model: CostModel,
-    /// Print progress lines to stderr.
+    /// Print progress lines to stderr (attaches a [`VerboseObserver`]).
     pub verbose: bool,
 }
 
@@ -45,108 +65,148 @@ impl Default for RunOpts {
     }
 }
 
-/// Drive `algo` on `source` over `net` for `opts.steps` iterations.
-///
-/// At every `eval_every` boundary (and at the final step) records a
-/// [`TracePoint`] with the paper's y-axes: global loss/accuracy at the
-/// averaged iterate x̄_t, cumulative comm-MB, consensus error, and the
-/// α–β simulated wall-clock.
-pub fn run(
-    algo: &mut dyn Algorithm,
-    source: &mut dyn GradientSource,
-    net: &mut Network,
-    opts: RunOpts,
-) -> Trace {
-    let mut trace = Trace::new(algo.name());
-    let mut sim_seconds = 0.0f64;
-    // Cumulative wire bytes from StepStats: equals net.total_bytes for
-    // decentralized algorithms (they meter through the Network) and also
-    // covers centralized baselines (C-SGDM's parameter-server up+down
-    // traffic never crosses the gossip topology).
-    let mut cum_bytes = 0u64;
-    // The α–β model prices the round at the busiest worker: its degree is
-    // the link count (NOT worker 0's — on a star, node 0 is the hub but
-    // on other irregular graphs index 0 can be a leaf) and its measured
-    // per-round bytes are the bandwidth term.
-    let links_per_worker = if net.k() > 1 { net.max_degree().max(1) } else { 0 };
-    let mut prev_sent = net.bytes_sent.clone();
+/// When [`Session::run_until`] should stop driving the loop. Budget
+/// conditions are checked after every step, so the session halts within
+/// one communication round of the budget; `TargetLoss` is judged on the
+/// most recent evaluation point.
+#[derive(Clone, Debug)]
+pub enum StopCondition {
+    /// Stop once the session's *total* step count reaches this value
+    /// (absolute, so a resumed session continues to the same target).
+    Steps(u64),
+    /// Stop once the latest evaluated global loss is at or below this.
+    /// Combine with a `Steps` bound inside [`StopCondition::Any`] unless
+    /// the target is provably reachable.
+    TargetLoss(f64),
+    /// Stop once cumulative communication reaches this many MiB.
+    CommBudgetMb(f64),
+    /// Stop once the α–β simulated wall-clock reaches this many seconds.
+    SimSecondsBudget(f64),
+    /// Stop when any member condition holds (budget sweeps compose:
+    /// `Any(vec![Steps(10_000), CommBudgetMb(64.0)])`).
+    Any(Vec<StopCondition>),
+}
 
-    let mut eval_and_push = |t: u64,
-                             algo: &dyn Algorithm,
-                             source: &mut dyn GradientSource,
-                             cum_bytes: u64,
-                             sim_seconds: f64,
-                             trace: &mut Trace| {
-        let xbar = algo.avg_params();
-        let m = source.eval(&xbar);
-        trace.push(TracePoint {
-            step: t,
-            loss: m.loss,
-            accuracy: m.accuracy,
-            comm_mb: cum_bytes as f64 / (1024.0 * 1024.0),
-            consensus: algo.consensus_error(),
-            grad_norm_sq: m.grad_norm_sq,
-            sim_seconds,
-        });
-    };
+/// Mid-run instrumentation hooks. All methods default to no-ops; attach
+/// implementations with [`Session::observe`]. Streaming metrics, early
+/// stopping dashboards, and the CLI's `--verbose` all live here instead
+/// of inside the driver loop.
+pub trait Observer {
+    /// After global iteration `t` completed (`t` is the 0-based index of
+    /// the executed step; the session's step count is now `t + 1`).
+    fn on_step(&mut self, t: u64, stats: &StepStats) {
+        let _ = (t, stats);
+    }
 
-    eval_and_push(0, algo, source, cum_bytes, sim_seconds, &mut trace);
-    for t in 0..opts.steps {
-        let stats = algo.step(t, source, net);
-        sim_seconds += opts.cost_model.step_seconds;
-        cum_bytes += stats.bytes;
-        if stats.communicated && stats.bytes > 0 && links_per_worker > 0 {
-            // Busiest-worker bytes this round, measured from the network's
-            // per-worker counters in f64 (integer division truncated small
-            // compressed payloads — e.g. Sign at small d — to a zero
-            // bandwidth term). Centralized baselines (C-SGDM) never touch
-            // the gossip network, so their counters don't move: fall back
-            // to an even per-worker split of the reported bytes.
-            let measured = net
-                .bytes_sent
-                .iter()
-                .zip(&prev_sent)
-                .map(|(now, before)| now - before)
-                .max()
-                .unwrap_or(0);
-            let busiest_bytes = if measured > 0 {
-                measured as f64
-            } else {
-                stats.bytes as f64 / algo.k().max(1) as f64
-            };
-            sim_seconds += opts.cost_model.round_seconds(links_per_worker, busiest_bytes);
-        }
-        if stats.communicated {
-            prev_sent.copy_from_slice(&net.bytes_sent);
-        }
-        if (t + 1) % opts.eval_every == 0 || t + 1 == opts.steps {
-            eval_and_push(t + 1, algo, source, cum_bytes, sim_seconds, &mut trace);
-            if opts.verbose {
-                let last = trace.points.last().unwrap();
-                eprintln!(
-                    "[{}] step {:>6}  loss {:.4}  acc {:.3}  comm {:.2} MB  consensus {:.3e}",
-                    trace.label, last.step, last.loss, last.accuracy, last.comm_mb, last.consensus
-                );
-            }
+    /// After a step whose communication round moved `bytes` over the
+    /// wire, costing `round_seconds` of simulated time.
+    fn on_comm_round(&mut self, t: u64, bytes: u64, round_seconds: f64) {
+        let _ = (t, bytes, round_seconds);
+    }
+
+    /// After an evaluation point was recorded.
+    fn on_eval(&mut self, label: &str, point: &TracePoint) {
+        let _ = (label, point);
+    }
+}
+
+/// Reproduces the driver's old `verbose: true` stderr lines as an
+/// [`Observer`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VerboseObserver;
+
+impl Observer for VerboseObserver {
+    fn on_eval(&mut self, label: &str, p: &TracePoint) {
+        eprintln!(
+            "[{}] step {:>6}  loss {:.4}  acc {:.3}  comm {:.2} MB  consensus {:.3e}",
+            label, p.step, p.loss, p.accuracy, p.comm_mb, p.consensus
+        );
+    }
+}
+
+/// How a [`Session`] holds each component: owned (built from a config)
+/// or borrowed (wrapped around caller-owned parts, e.g. the [`run`]
+/// shim and the e2e example).
+enum Slot<'a, T: ?Sized> {
+    Owned(Box<T>),
+    Borrowed(&'a mut T),
+}
+
+impl<'a, T: ?Sized> Slot<'a, T> {
+    fn get(&self) -> &T {
+        match self {
+            Slot::Owned(b) => b,
+            Slot::Borrowed(r) => r,
         }
     }
-    trace
+
+    fn get_mut(&mut self) -> &mut T {
+        match self {
+            Slot::Owned(b) => b,
+            Slot::Borrowed(r) => r,
+        }
+    }
 }
 
-/// A fully-materialized experiment: algorithm + oracle + network.
-pub struct Experiment {
+/// Build instructions for [`Session::build`].
+pub struct SessionSpec {
     pub config: ExperimentConfig,
-    pub algo: Box<dyn Algorithm>,
-    pub source: Box<dyn GradientSource>,
-    pub net: Network,
-    /// Spectral gap of the built mixing matrix (logged with results).
-    pub rho: f64,
+    /// Resume from a `PDSGDM02` checkpoint written by [`Session::save`].
+    /// The config must describe the same experiment (algorithm, K, d);
+    /// mismatches are rejected at load time.
+    pub resume_from: Option<PathBuf>,
 }
 
-impl Experiment {
-    /// Build everything from a config. Transformer workloads require the
-    /// artifacts directory (see `make artifacts`).
-    pub fn build(config: ExperimentConfig) -> Result<Self> {
+impl SessionSpec {
+    pub fn new(config: ExperimentConfig) -> Self {
+        Self { config, resume_from: None }
+    }
+
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume_from = Some(path.into());
+        self
+    }
+}
+
+/// A resumable, step-wise training session: algorithm + oracle + network
+/// + driver state (step counter, cost accounting, trace) + observers.
+pub struct Session<'a> {
+    algo: Slot<'a, dyn Algorithm + 'a>,
+    source: Slot<'a, dyn GradientSource + 'a>,
+    net: Slot<'a, Network>,
+    cost_model: CostModel,
+    /// Evaluation cadence; 0 = endpoints only.
+    eval_every: u64,
+    observers: Vec<Box<dyn Observer + 'a>>,
+    /// Global iteration count completed so far.
+    t: u64,
+    sim_seconds: f64,
+    cum_bytes: u64,
+    links_per_worker: usize,
+    prev_sent: Vec<u64>,
+    trace: Trace,
+    last_eval: Option<u64>,
+    /// True when the latest trace point exists only because
+    /// [`Session::run_until`] stopped there (off the eval cadence) — a
+    /// point an uninterrupted run would never record. Stored in the
+    /// checkpoint so a resume can drop exactly that point and nothing
+    /// else (a user-pulled [`Session::eval_now`] at the same step is
+    /// kept).
+    forced_final: bool,
+    /// Persistent x̄ scratch — evaluation never re-allocates K×d.
+    xbar: Vec<f32>,
+    /// Spectral gap of the built mixing matrix (0 for borrowed parts).
+    pub rho: f64,
+    /// The originating config, when built from one.
+    pub config: Option<ExperimentConfig>,
+}
+
+impl Session<'static> {
+    /// Materialize a session from a config (and optionally a checkpoint).
+    /// Transformer workloads require the artifacts directory (see
+    /// `make artifacts`).
+    pub fn build(spec: SessionSpec) -> Result<Self> {
+        let SessionSpec { config, resume_from } = spec;
         config.validate().map_err(|e| anyhow!(e))?;
         let k = config.workers;
         let (graph, w, rho) =
@@ -189,40 +249,556 @@ impl Experiment {
             .compressor
             .as_deref()
             .map(|s| crate::compress::parse(s).expect("validated by config"));
-        let algo = algorithms::by_name(
-            &config.algorithm,
-            k,
-            x0,
-            w,
-            config.hyper.clone(),
-            compressor,
-            config.seed,
-        )
-        .ok_or_else(|| anyhow!("unknown algorithm {}", config.algorithm))?;
+        let algo = AlgorithmSpec::new(&config.algorithm, k, x0)
+            .mixing(w)
+            .hyper(config.hyper.clone())
+            .compressor_opt(compressor)
+            .seed(config.seed)
+            .build()
+            .map_err(|e| anyhow!(e))?;
 
-        Ok(Self { config, algo, source, net, rho })
-    }
-
-    /// Run to completion and return the trace.
-    pub fn run(&mut self, verbose: bool) -> Trace {
-        let opts = RunOpts {
-            steps: self.config.steps,
-            eval_every: self.config.eval_every,
-            cost_model: self.config.cost_model,
-            verbose,
-        };
-        run(self.algo.as_mut(), self.source.as_mut(), &mut self.net, opts)
+        let mut session = Session::assemble(
+            Slot::Owned(algo),
+            Slot::Owned(source),
+            Slot::Owned(Box::new(net)),
+            config.eval_every,
+            config.cost_model,
+        );
+        session.rho = rho;
+        session.config = Some(config);
+        if let Some(path) = resume_from {
+            session.load(&path)?;
+        }
+        Ok(session)
     }
 }
 
-/// Binary checkpoint of the averaged iterate: magic, d, then f32 LE data.
-/// (Own format — no serde in this environment; round-trip tested below.)
+impl<'a> Session<'a> {
+    /// Wrap caller-owned parts in a session (the [`run`] shim and bench
+    /// sweeps that pre-build `(algo, source, net)` themselves).
+    /// `eval_every == 0` means endpoints-only evaluation.
+    pub fn from_parts(
+        algo: &'a mut dyn Algorithm,
+        source: &'a mut dyn GradientSource,
+        net: &'a mut Network,
+        eval_every: u64,
+        cost_model: CostModel,
+    ) -> Self {
+        Session::assemble(
+            Slot::Borrowed(algo),
+            Slot::Borrowed(source),
+            Slot::Borrowed(net),
+            eval_every,
+            cost_model,
+        )
+    }
+
+    fn assemble(
+        algo: Slot<'a, dyn Algorithm + 'a>,
+        source: Slot<'a, dyn GradientSource + 'a>,
+        net: Slot<'a, Network>,
+        eval_every: u64,
+        cost_model: CostModel,
+    ) -> Self {
+        let label = algo.get().name();
+        let n = net.get();
+        // The α–β model prices the round at the busiest worker: its
+        // degree is the link count (NOT worker 0's — on a star, node 0
+        // is the hub but on other irregular graphs index 0 can be a
+        // leaf) and its measured per-round bytes are the bandwidth term.
+        let links_per_worker = if n.k() > 1 { n.max_degree().max(1) } else { 0 };
+        let prev_sent = n.bytes_sent.clone();
+        Self {
+            algo,
+            source,
+            net,
+            cost_model,
+            eval_every,
+            observers: Vec::new(),
+            t: 0,
+            sim_seconds: 0.0,
+            cum_bytes: 0,
+            links_per_worker,
+            prev_sent,
+            trace: Trace::new(label),
+            last_eval: None,
+            forced_final: false,
+            xbar: Vec::new(),
+            rho: 0.0,
+            config: None,
+        }
+    }
+
+    /// Attach an observer; all attached observers receive every
+    /// subsequent callback in attachment order.
+    pub fn observe(&mut self, obs: Box<dyn Observer + 'a>) {
+        self.observers.push(obs);
+    }
+
+    /// Global iterations completed so far.
+    pub fn steps_done(&self) -> u64 {
+        self.t
+    }
+
+    /// Cumulative wire bytes (all algorithms, including the centralized
+    /// baseline's parameter-server traffic).
+    pub fn comm_bytes(&self) -> u64 {
+        self.cum_bytes
+    }
+
+    pub fn sim_seconds(&self) -> f64 {
+        self.sim_seconds
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+
+    pub fn algo(&self) -> &dyn Algorithm {
+        self.algo.get()
+    }
+
+    /// The averaged iterate x̄ at the current step.
+    pub fn avg_params(&self) -> Vec<f32> {
+        self.algo.get().avg_params()
+    }
+
+    /// Advance one synchronous global iteration, updating the α–β cost
+    /// accounting and notifying observers. Does **not** evaluate — call
+    /// [`Session::eval_now`] (pull-based) or use [`Session::run_until`]
+    /// for cadence-driven evaluation.
+    pub fn step(&mut self) -> StepStats {
+        let t = self.t;
+        let stats = {
+            let Self { algo, source, net, .. } = &mut *self;
+            algo.get_mut().step(t, source.get_mut(), net.get_mut())
+        };
+        self.sim_seconds += self.cost_model.step_seconds;
+        self.cum_bytes += stats.bytes;
+        let mut round_seconds = 0.0;
+        if stats.communicated && stats.bytes > 0 && self.links_per_worker > 0 {
+            // Busiest-worker bytes this round, measured from the
+            // network's per-worker counters in f64 (integer division
+            // truncated small compressed payloads — e.g. Sign at small d
+            // — to a zero bandwidth term). Centralized baselines
+            // (C-SGDM) never touch the gossip network, so their counters
+            // don't move: fall back to an even per-worker split of the
+            // reported bytes.
+            let measured = {
+                let net = self.net.get();
+                net.bytes_sent
+                    .iter()
+                    .zip(&self.prev_sent)
+                    .map(|(now, before)| now - before)
+                    .max()
+                    .unwrap_or(0)
+            };
+            let busiest_bytes = if measured > 0 {
+                measured as f64
+            } else {
+                stats.bytes as f64 / self.algo.get().k().max(1) as f64
+            };
+            round_seconds = self.cost_model.round_seconds(self.links_per_worker, busiest_bytes);
+            self.sim_seconds += round_seconds;
+        }
+        if stats.communicated {
+            let Self { net, prev_sent, .. } = &mut *self;
+            prev_sent.copy_from_slice(&net.get().bytes_sent);
+        }
+        self.t = t + 1;
+        for obs in self.observers.iter_mut() {
+            obs.on_step(t, &stats);
+            if stats.communicated {
+                obs.on_comm_round(t, stats.bytes, round_seconds);
+            }
+        }
+        stats
+    }
+
+    /// Record a [`TracePoint`] at the current step: global loss/accuracy
+    /// at x̄_t, cumulative comm-MB, consensus error, and the simulated
+    /// wall-clock. Pull-based — call whenever a fresh point is wanted.
+    pub fn eval_now(&mut self) -> TracePoint {
+        let point = {
+            let Self { algo, source, xbar, t, cum_bytes, sim_seconds, .. } = &mut *self;
+            let a = algo.get();
+            a.avg_params_into(xbar);
+            let m = source.get_mut().eval(xbar);
+            TracePoint {
+                step: *t,
+                loss: m.loss,
+                accuracy: m.accuracy,
+                comm_mb: *cum_bytes as f64 / (1024.0 * 1024.0),
+                consensus: a.consensus_error_about(xbar),
+                grad_norm_sq: m.grad_norm_sq,
+                sim_seconds: *sim_seconds,
+            }
+        };
+        self.trace.push(point);
+        self.last_eval = Some(point.step);
+        self.forced_final = false; // direct pulls are deliberate; run_until overrides
+        for obs in self.observers.iter_mut() {
+            obs.on_eval(&self.trace.label, &point);
+        }
+        point
+    }
+
+    /// Whether `stop` holds for the current session state.
+    pub fn stopped(&self, stop: &StopCondition) -> bool {
+        match stop {
+            StopCondition::Steps(n) => self.t >= *n,
+            StopCondition::TargetLoss(target) => self
+                .trace
+                .points
+                .last()
+                .map(|p| p.loss <= *target)
+                .unwrap_or(false),
+            StopCondition::CommBudgetMb(mb) => {
+                self.cum_bytes as f64 / (1024.0 * 1024.0) >= *mb
+            }
+            StopCondition::SimSecondsBudget(s) => self.sim_seconds >= *s,
+            StopCondition::Any(conds) => conds.iter().any(|c| self.stopped(c)),
+        }
+    }
+
+    /// Drive the loop until `stop` holds, evaluating at the configured
+    /// cadence, at the initial step of a fresh session, and at the final
+    /// step. Returns the trace so far (which, for a resumed session,
+    /// includes every point from before the checkpoint).
+    ///
+    /// Panics if `stop` involves [`StopCondition::TargetLoss`] while the
+    /// session evaluates endpoints-only (`eval_every == 0`): the loss is
+    /// only observed at evaluation points, so the target could never
+    /// fire — a bare `TargetLoss` would loop forever and one inside
+    /// `Any` would be silently inert. (Config-built sessions can't get
+    /// here: `validate` rejects `eval_every == 0`.)
+    pub fn run_until(&mut self, stop: StopCondition) -> &Trace {
+        fn wants_loss(stop: &StopCondition) -> bool {
+            match stop {
+                StopCondition::TargetLoss(_) => true,
+                StopCondition::Any(cs) => cs.iter().any(wants_loss),
+                _ => false,
+            }
+        }
+        assert!(
+            self.eval_every > 0 || !wants_loss(&stop),
+            "StopCondition::TargetLoss needs an eval cadence (eval_every >= 1): \
+             with endpoints-only evaluation the loss is never re-observed"
+        );
+        if self.trace.points.is_empty() {
+            self.eval_now();
+        }
+        while !self.stopped(&stop) {
+            self.step();
+            let on_cadence = self.eval_every > 0 && self.t % self.eval_every == 0;
+            if on_cadence || self.stopped(&stop) {
+                self.eval_now();
+                self.forced_final = !on_cadence;
+            }
+        }
+        if self.last_eval != Some(self.t) {
+            self.eval_now();
+            self.forced_final = self.eval_every == 0 || self.t % self.eval_every != 0;
+        }
+        &self.trace
+    }
+
+    /// The stop condition implied by the config: its step count plus any
+    /// `[stop]` budgets. Sessions assembled from borrowed parts have no
+    /// config and stop immediately — pass an explicit condition to
+    /// [`Session::run_until`] instead.
+    pub fn stop_condition(&self) -> StopCondition {
+        let Some(cfg) = &self.config else {
+            return StopCondition::Steps(self.t);
+        };
+        let mut conds = vec![StopCondition::Steps(cfg.steps)];
+        if let Some(l) = cfg.stop.target_loss {
+            conds.push(StopCondition::TargetLoss(l));
+        }
+        if let Some(mb) = cfg.stop.comm_budget_mb {
+            conds.push(StopCondition::CommBudgetMb(mb));
+        }
+        if let Some(s) = cfg.stop.sim_seconds_budget {
+            conds.push(StopCondition::SimSecondsBudget(s));
+        }
+        if conds.len() == 1 {
+            conds.pop().unwrap()
+        } else {
+            StopCondition::Any(conds)
+        }
+    }
+
+    /// Drive to the config-implied stop condition (see
+    /// [`Session::stop_condition`]).
+    pub fn run_to_stop(&mut self) -> &Trace {
+        let stop = self.stop_condition();
+        self.run_until(stop)
+    }
+
+    // -- full-state checkpointing (PDSGDM02) --------------------------------
+
+    /// Serialize the session to the `PDSGDM02` checkpoint format:
+    /// magic, session header (algorithm name, K, d, step, cost
+    /// accounting), x̄ (so x̄-only consumers can read v2 files too), the
+    /// trace so far, the network counters, and the nested full state of
+    /// the algorithm and the gradient source.
+    pub fn save_state(&self) -> Vec<u8> {
+        let algo = self.algo.get();
+        let mut w = StateWriter::new();
+        w.tag("session");
+        w.put_str(&algo.name());
+        w.put_u64(algo.k() as u64);
+        let xbar = algo.avg_params();
+        w.put_u64(xbar.len() as u64);
+        w.put_u64(self.t);
+        w.put_f64(self.sim_seconds);
+        w.put_u64(self.cum_bytes);
+        // Resume-compatibility fingerprint (empty for sessions wrapped
+        // around caller-owned parts) + whether the trace's last point is
+        // a forced end-of-run eval (see the `forced_final` field).
+        w.put_str(
+            &self
+                .config
+                .as_ref()
+                .map(|c| c.resume_fingerprint())
+                .unwrap_or_default(),
+        );
+        w.put_u64(self.forced_final as u64);
+        w.tag("xbar");
+        w.put_f32s(&xbar);
+        self.trace.state_save(&mut w);
+        w.tag("net");
+        let net = self.net.get();
+        w.put_u64(net.total_bytes);
+        w.put_u64(net.rounds);
+        w.put_u64(net.messages);
+        w.put_u64s(&net.bytes_sent);
+        w.put_u64s(&self.prev_sent);
+        w.tag("algo");
+        let mut aw = StateWriter::new();
+        algo.state_save(&mut aw);
+        w.put_bytes(&aw.into_bytes());
+        w.tag("source");
+        let mut sw = StateWriter::new();
+        self.source.get().state_save(&mut sw);
+        w.put_bytes(&sw.into_bytes());
+
+        let mut out = CKPT_MAGIC_V2.to_vec();
+        out.extend_from_slice(&w.into_bytes());
+        out
+    }
+
+    /// Write [`Session::save_state`] to `path` (creating parent dirs).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.save_state())?;
+        Ok(())
+    }
+
+    /// Restore a `PDSGDM02` checkpoint into this (identically
+    /// configured) session. Rejects v1 files, foreign algorithms, and
+    /// shape mismatches with descriptive errors — all header/shape
+    /// validation runs before any session state is touched. Errors from
+    /// the nested algorithm/source blocks (corrupt interior bytes) can
+    /// leave those components partially restored: on `Err`, discard the
+    /// session rather than continuing to drive it.
+    pub fn load_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        if bytes.len() >= 8 && &bytes[..8] == CKPT_MAGIC_V1 {
+            return Err(format!(
+                "not a resumable checkpoint: {} files keep only x̄ (use load_checkpoint)",
+                String::from_utf8_lossy(CKPT_MAGIC_V1)
+            ));
+        }
+        if bytes.len() < 8 || &bytes[..8] != CKPT_MAGIC_V2 {
+            return Err("not a pdsgdm checkpoint (bad magic)".into());
+        }
+        let mut r = StateReader::new(&bytes[8..]);
+        let header = read_v2_header(&mut r)?;
+        let live_name = self.algo.get().name();
+        if header.name != live_name {
+            return Err(format!(
+                "checkpoint is for algorithm {:?}, session runs {live_name:?}",
+                header.name
+            ));
+        }
+        if header.k != self.algo.get().k() {
+            return Err(format!(
+                "checkpoint K {} != session K {}",
+                header.k,
+                self.algo.get().k()
+            ));
+        }
+        let live_d = self.source.get().dim();
+        if header.d != live_d {
+            return Err(format!("checkpoint d {} != session d {live_d}", header.d));
+        }
+        // Same algorithm/K/d is necessary but not sufficient: the
+        // problem data, RNG seeding, topology, hyper-parameters, cost
+        // model, and eval cadence are all rebuilt from the config, so a
+        // resume under a different config (a typo'd --seed, a changed
+        // --eta) would load cleanly and then silently diverge. Compare
+        // the full fingerprint whenever both sides have one.
+        if let Some(cfg) = &self.config {
+            let live_fp = cfg.resume_fingerprint();
+            if !header.fingerprint.is_empty() && header.fingerprint != live_fp {
+                return Err(format!(
+                    "checkpoint config does not match this session's config \
+                     (resume needs identical flags except --steps / stop budgets)\n  \
+                     checkpoint: {}\n  session:    {live_fp}",
+                    header.fingerprint
+                ));
+            }
+        }
+        let t = header.t;
+        let trace = Trace::state_load(&mut r)?;
+        r.expect_tag("net")?;
+        let total_bytes = r.take_u64()?;
+        let rounds = r.take_u64()?;
+        let messages = r.take_u64()?;
+        let bytes_sent = r.take_u64s()?;
+        let prev_sent = r.take_u64s()?;
+        if bytes_sent.len() != self.net.get().bytes_sent.len() {
+            return Err(format!(
+                "checkpoint network K {} != session K {}",
+                bytes_sent.len(),
+                self.net.get().bytes_sent.len()
+            ));
+        }
+        if prev_sent.len() != self.prev_sent.len() {
+            return Err("checkpoint prev_sent length mismatch".into());
+        }
+        r.expect_tag("algo")?;
+        let ablk = r.take_bytes()?;
+        r.expect_tag("source")?;
+        let sblk = r.take_bytes()?;
+        // Everything above was parse + validate only — no session state
+        // has been touched yet, so header/shape/truncation errors leave
+        // the session exactly as it was. The nested loads below mutate
+        // the algorithm/source in place; if one of them errs midway
+        // (corrupt interior bytes), the session is partially restored
+        // and MUST be discarded — `Session::build` does exactly that on
+        // the resume path.
+        self.algo.get_mut().state_load(&mut StateReader::new(ablk))?;
+        self.source.get_mut().state_load(&mut StateReader::new(sblk))?;
+        {
+            let net = self.net.get_mut();
+            net.total_bytes = total_bytes;
+            net.rounds = rounds;
+            net.messages = messages;
+            net.bytes_sent.copy_from_slice(&bytes_sent);
+        }
+
+        self.t = t;
+        self.sim_seconds = header.sim_seconds;
+        self.cum_bytes = header.cum_bytes;
+        self.prev_sent = prev_sent;
+        let mut trace = trace;
+        // `run_until` force-evaluates at the step it stops on; when that
+        // step is off the eval cadence, the point exists only because
+        // the interrupted run *ended* there — an uninterrupted run would
+        // never record it. The saved `forced_final` marker identifies
+        // exactly that point (a user-pulled eval_now at the same step is
+        // kept), so dropping it keeps the resumed trace bit-identical to
+        // the uninterrupted one; if the resumed run stops at this same
+        // step again, the point is recomputed identically (evaluation
+        // consumes no randomness).
+        if header.forced_final {
+            if let Some(p) = trace.points.last() {
+                let off_cadence = self.eval_every == 0 || p.step % self.eval_every != 0;
+                if p.step == t && p.step != 0 && off_cadence {
+                    trace.points.pop();
+                }
+            }
+        }
+        self.forced_final = false;
+        self.last_eval = trace.points.last().map(|p| p.step);
+        self.trace = trace;
+        Ok(())
+    }
+
+    /// Read and [`Session::load_state`] a checkpoint file.
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        let bytes = std::fs::read(path)?;
+        self.load_state(&bytes).map_err(|e| anyhow!("{path:?}: {e}"))
+    }
+}
+
+/// Legacy one-shot driver, now a thin shim over [`Session::from_parts`]:
+/// drive `algo` on `source` over `net` for `opts.steps` iterations,
+/// recording the paper's observables on the `opts.eval_every` cadence.
+pub fn run(
+    algo: &mut dyn Algorithm,
+    source: &mut dyn GradientSource,
+    net: &mut Network,
+    opts: RunOpts,
+) -> Trace {
+    let mut session = Session::from_parts(algo, source, net, opts.eval_every, opts.cost_model);
+    if opts.verbose {
+        session.observe(Box::new(VerboseObserver));
+    }
+    session.run_until(StopCondition::Steps(opts.steps));
+    session.into_trace()
+}
+
+// ---------------------------------------------------------------------------
+// PDSGDM02 header (single definition shared by every v2 reader)
+// ---------------------------------------------------------------------------
+
+/// The fixed `"session"` + `"xbar"` header every `PDSGDM02` file opens
+/// with. `Session::save_state` writes it; `Session::load_state` and
+/// [`load_checkpoint`] both parse it through [`read_v2_header`], so the
+/// layout lives in exactly one writer/reader pair — extending the
+/// header means touching `save_state` and this struct, nothing else.
+struct V2Header {
+    name: String,
+    k: usize,
+    d: usize,
+    t: u64,
+    sim_seconds: f64,
+    cum_bytes: u64,
+    /// `ExperimentConfig::resume_fingerprint` of the saving run; empty
+    /// for sessions wrapped around caller-owned parts.
+    fingerprint: String,
+    /// Whether the trace's last point is a forced end-of-run eval.
+    forced_final: bool,
+    /// The averaged iterate x̄ (the v1-compatible payload).
+    xbar: Vec<f32>,
+}
+
+fn read_v2_header(r: &mut StateReader) -> Result<V2Header, String> {
+    r.expect_tag("session")?;
+    let name = r.take_str()?.to_string();
+    let k = r.take_u64()? as usize;
+    let d = r.take_u64()? as usize;
+    let t = r.take_u64()?;
+    let sim_seconds = r.take_f64()?;
+    let cum_bytes = r.take_u64()?;
+    let fingerprint = r.take_str()?.to_string();
+    let forced_final = r.take_u64()? != 0;
+    r.expect_tag("xbar")?;
+    let xbar = r.take_f32s()?;
+    Ok(V2Header { name, k, d, t, sim_seconds, cum_bytes, fingerprint, forced_final, xbar })
+}
+
+// ---------------------------------------------------------------------------
+// x̄-only checkpoint helpers (v1 format + v2 extraction)
+// ---------------------------------------------------------------------------
+
+/// Binary checkpoint of the averaged iterate only (legacy `PDSGDM01`
+/// layout: magic, d, then f32 LE data). Full-state checkpoints are
+/// written by [`Session::save`] instead.
 pub fn save_checkpoint(path: &Path, x: &[f32]) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut buf = Vec::with_capacity(8 + 8 + 4 * x.len());
-    buf.extend_from_slice(b"PDSGDM01");
+    buf.extend_from_slice(CKPT_MAGIC_V1);
     buf.extend_from_slice(&(x.len() as u64).to_le_bytes());
     for v in x {
         buf.extend_from_slice(&v.to_le_bytes());
@@ -231,9 +807,18 @@ pub fn save_checkpoint(path: &Path, x: &[f32]) -> Result<()> {
     Ok(())
 }
 
+/// Load the averaged iterate from *either* checkpoint generation:
+/// `PDSGDM01` files are x̄-only by construction; `PDSGDM02` files carry
+/// x̄ in their header, so old tooling keeps working against new
+/// checkpoints.
 pub fn load_checkpoint(path: &Path) -> Result<Vec<f32>> {
     let buf = std::fs::read(path)?;
-    if buf.len() < 16 || &buf[..8] != b"PDSGDM01" {
+    if buf.len() >= 8 && &buf[..8] == CKPT_MAGIC_V2 {
+        return read_v2_header(&mut StateReader::new(&buf[8..]))
+            .map(|h| h.xbar)
+            .map_err(|e| anyhow!("{path:?}: {e}"));
+    }
+    if buf.len() < 16 || &buf[..8] != CKPT_MAGIC_V1 {
         anyhow::bail!("{path:?}: not a pdsgdm checkpoint");
     }
     let d = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
@@ -262,11 +847,16 @@ mod tests {
         c
     }
 
+    fn run_session(cfg: ExperimentConfig) -> Trace {
+        let mut s = Session::build(SessionSpec::new(cfg)).unwrap();
+        s.run_to_stop();
+        s.into_trace()
+    }
+
     #[test]
-    fn experiment_builds_and_runs_every_algorithm() {
+    fn session_builds_and_runs_every_algorithm() {
         for name in crate::algorithms::ALL_NAMES {
-            let mut exp = Experiment::build(quick_config(name)).unwrap();
-            let trace = exp.run(false);
+            let trace = run_session(quick_config(name));
             // t=0 point + 3 eval points
             assert_eq!(trace.points.len(), 4, "{name}");
             assert!(trace.final_loss().is_finite(), "{name}");
@@ -279,8 +869,7 @@ mod tests {
 
     #[test]
     fn trace_comm_mb_is_monotone() {
-        let mut exp = Experiment::build(quick_config("pd-sgdm")).unwrap();
-        let trace = exp.run(false);
+        let trace = run_session(quick_config("pd-sgdm"));
         for w in trace.points.windows(2) {
             assert!(w[1].comm_mb >= w[0].comm_mb);
             assert!(w[1].sim_seconds >= w[0].sim_seconds);
@@ -291,8 +880,8 @@ mod tests {
     fn rho_matches_topology() {
         let mut c = quick_config("pd-sgdm");
         c.topology = crate::topology::Topology::Complete;
-        let exp = Experiment::build(c).unwrap();
-        assert!((exp.rho - 1.0).abs() < 1e-6);
+        let s = Session::build(SessionSpec::new(c)).unwrap();
+        assert!((s.rho - 1.0).abs() < 1e-6);
     }
 
     #[test]
@@ -300,10 +889,179 @@ mod tests {
         let mut c = quick_config("pd-sgdm");
         c.steps = 50;
         c.eval_every = 20; // evals at 20, 40 and the final 50
-        let mut exp = Experiment::build(c).unwrap();
-        let trace = exp.run(false);
+        let trace = run_session(c);
         let steps: Vec<u64> = trace.points.iter().map(|p| p.step).collect();
         assert_eq!(steps, vec![0, 20, 40, 50]);
+    }
+
+    #[test]
+    fn run_shim_matches_session_loop() {
+        // The legacy entry point is a shim over Session — identical trace.
+        let mut c = quick_config("pd-sgdm");
+        c.steps = 40;
+        let via_session = run_session(c.clone());
+        let mut s = Session::build(SessionSpec::new(c)).unwrap();
+        let via_shim = {
+            let Session { algo, source, net, .. } = &mut s;
+            run(
+                algo.get_mut(),
+                source.get_mut(),
+                net.get_mut(),
+                RunOpts { steps: 40, eval_every: 20, verbose: false, ..Default::default() },
+            )
+        };
+        assert_eq!(via_session.points.len(), via_shim.points.len());
+        for (a, b) in via_session.points.iter().zip(&via_shim.points) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+            assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits());
+        }
+    }
+
+    #[test]
+    fn eval_every_zero_is_endpoints_only_not_a_panic() {
+        // Regression: the old driver computed `(t + 1) % opts.eval_every`
+        // and panicked with a division by zero.
+        let mut c = quick_config("pd-sgdm");
+        c.steps = 30;
+        let mut s = Session::build(SessionSpec::new(c)).unwrap();
+        s.eval_every = 0;
+        s.run_until(StopCondition::Steps(30));
+        let steps: Vec<u64> = s.trace().points.iter().map(|p| p.step).collect();
+        assert_eq!(steps, vec![0, 30]);
+    }
+
+    #[test]
+    fn observers_see_steps_comm_rounds_and_evals() {
+        #[derive(Default)]
+        struct Counter {
+            steps: u64,
+            rounds: u64,
+            evals: u64,
+            comm_bytes: u64,
+        }
+        impl Observer for Counter {
+            fn on_step(&mut self, _t: u64, _s: &StepStats) {
+                self.steps += 1;
+            }
+            fn on_comm_round(&mut self, _t: u64, bytes: u64, secs: f64) {
+                self.rounds += 1;
+                self.comm_bytes += bytes;
+                assert!(secs > 0.0);
+            }
+            fn on_eval(&mut self, label: &str, _p: &TracePoint) {
+                assert!(label.contains("pd-sgdm"));
+                self.evals += 1;
+            }
+        }
+        // Observers are boxed into the session, so count through a cell.
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        struct Shared(Rc<RefCell<Counter>>);
+        impl Observer for Shared {
+            fn on_step(&mut self, t: u64, s: &StepStats) {
+                self.0.borrow_mut().on_step(t, s);
+            }
+            fn on_comm_round(&mut self, t: u64, b: u64, s: f64) {
+                self.0.borrow_mut().on_comm_round(t, b, s);
+            }
+            fn on_eval(&mut self, l: &str, p: &TracePoint) {
+                self.0.borrow_mut().on_eval(l, p);
+            }
+        }
+        let counter = Rc::new(RefCell::new(Counter::default()));
+        let mut s = Session::build(SessionSpec::new(quick_config("pd-sgdm"))).unwrap();
+        s.observe(Box::new(Shared(Rc::clone(&counter))));
+        s.run_to_stop();
+        let c = counter.borrow();
+        assert_eq!(c.steps, 60);
+        assert_eq!(c.rounds, 60 / 4); // period 4
+        assert_eq!(c.evals, 4); // 0, 20, 40, 60
+        assert_eq!(c.comm_bytes, s.comm_bytes());
+    }
+
+    #[test]
+    fn stop_condition_comm_budget_halts_within_one_round() {
+        let mut c = quick_config("pd-sgdm");
+        c.steps = 10_000; // budget must bite long before this
+        let mut s = Session::build(SessionSpec::new(c)).unwrap();
+        // One round: K=4 ring, degree 2, d=16 => 4 * 2 * 64 = 512 bytes.
+        let round_bytes = 512.0;
+        let budget_mb = (3.5 * round_bytes) / (1024.0 * 1024.0);
+        s.run_until(StopCondition::Any(vec![
+            StopCondition::Steps(10_000),
+            StopCondition::CommBudgetMb(budget_mb),
+        ]));
+        let got = s.comm_bytes() as f64;
+        assert!(got >= budget_mb * 1024.0 * 1024.0, "stopped under budget");
+        assert!(
+            got <= budget_mb * 1024.0 * 1024.0 + round_bytes,
+            "overshot by more than one round: {got}"
+        );
+        assert!(s.steps_done() < 10_000);
+    }
+
+    #[test]
+    fn stop_condition_target_loss_and_sim_budget() {
+        let mut c = quick_config("pd-sgdm");
+        c.steps = 5_000;
+        let mut s = Session::build(SessionSpec::new(c.clone())).unwrap();
+        let start_loss = s.eval_now().loss;
+        s.run_until(StopCondition::Any(vec![
+            StopCondition::Steps(5_000),
+            StopCondition::TargetLoss(start_loss * 0.5),
+        ]));
+        assert!(s.trace().final_loss() <= start_loss * 0.5);
+        assert!(s.steps_done() < 5_000, "target should hit early");
+
+        let mut s2 = Session::build(SessionSpec::new(c)).unwrap();
+        s2.run_until(StopCondition::Any(vec![
+            StopCondition::Steps(5_000),
+            StopCondition::SimSecondsBudget(1.0),
+        ]));
+        assert!(s2.sim_seconds() >= 1.0);
+        assert!(s2.steps_done() < 5_000);
+    }
+
+    #[test]
+    fn config_stop_section_feeds_run_to_stop() {
+        let mut c = quick_config("pd-sgdm");
+        c.steps = 10_000;
+        c.stop.sim_seconds_budget = Some(1.0);
+        let mut s = Session::build(SessionSpec::new(c)).unwrap();
+        s.run_to_stop();
+        assert!(s.sim_seconds() >= 1.0);
+        assert!(s.steps_done() < 10_000);
+    }
+
+    #[test]
+    fn v2_checkpoint_roundtrips_through_load_checkpoint_as_xbar() {
+        let dir = std::env::temp_dir().join(format!("pdsgdm_v2x_{}", std::process::id()));
+        let path = dir.join("v2.ckpt");
+        let mut s = Session::build(SessionSpec::new(quick_config("pd-sgdm"))).unwrap();
+        s.run_until(StopCondition::Steps(20));
+        s.save(&path).unwrap();
+        let xbar = load_checkpoint(&path).unwrap();
+        assert_eq!(xbar, s.avg_params());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_state_rejects_foreign_algorithm_and_v1() {
+        let dir = std::env::temp_dir().join(format!("pdsgdm_rej_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut a = Session::build(SessionSpec::new(quick_config("pd-sgdm"))).unwrap();
+        a.run_until(StopCondition::Steps(8));
+        let bytes = a.save_state();
+        let mut b = Session::build(SessionSpec::new(quick_config("d-sgd"))).unwrap();
+        let err = b.load_state(&bytes).unwrap_err();
+        assert!(err.contains("algorithm"), "{err}");
+        // v1 files cannot resume a session
+        let v1 = dir.join("v1.ckpt");
+        save_checkpoint(&v1, &[1.0; 16]).unwrap();
+        let err = a.load(&v1).unwrap_err().to_string();
+        assert!(err.contains("x̄"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
@@ -341,7 +1099,7 @@ mod tests {
             model: "tiny".into(),
             artifacts_dir: "/definitely/not/here".into(),
         };
-        let err = match Experiment::build(c) {
+        let err = match Session::build(SessionSpec::new(c)) {
             Ok(_) => panic!("should fail without artifacts"),
             Err(e) => e.to_string(),
         };

@@ -200,6 +200,54 @@ impl BatchIter {
         Self { indices: idx, cursor: 0, rng }
     }
 
+    /// Checkpoint this sampler's full mutable state: the (shuffled)
+    /// index order, the epoch cursor, and the RNG stream. All three are
+    /// needed for a resumed run to draw the exact batches the
+    /// uninterrupted run would have.
+    pub fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("batch-iter");
+        w.put_u64s(&self.indices.iter().map(|&i| i as u64).collect::<Vec<_>>());
+        w.put_u64(self.cursor as u64);
+        w.put_u64s(&self.rng.state());
+    }
+
+    /// Restore state written by [`BatchIter::state_save`]. The saved
+    /// order must be a *permutation of the live shard's index set* (same
+    /// dataset/sharding config) — a corrupt or foreign checkpoint whose
+    /// indices point outside this worker's shard (or outside the dataset
+    /// entirely, which would panic deep in the gradient code) is
+    /// rejected here with an `Err`, never a panic.
+    pub fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("batch-iter")?;
+        let indices = r.take_u64s()?;
+        if indices.len() != self.indices.len() {
+            return Err(format!(
+                "batch-iter: saved shard size {} != live {}",
+                indices.len(),
+                self.indices.len()
+            ));
+        }
+        let cursor = r.take_u64()? as usize;
+        if cursor > indices.len() {
+            return Err(format!("batch-iter: cursor {cursor} out of range"));
+        }
+        let s = r.take_u64s()?;
+        let s: [u64; 4] =
+            s.try_into().map_err(|_| "batch-iter: bad rng state".to_string())?;
+        let indices: Vec<usize> = indices.into_iter().map(|i| i as usize).collect();
+        let mut saved_sorted = indices.clone();
+        saved_sorted.sort_unstable();
+        let mut live_sorted = self.indices.clone();
+        live_sorted.sort_unstable();
+        if saved_sorted != live_sorted {
+            return Err("batch-iter: saved order is not a permutation of this shard".into());
+        }
+        self.indices = indices;
+        self.cursor = cursor;
+        self.rng = Xoshiro256::from_state(s);
+        Ok(())
+    }
+
     /// Next minibatch of (up to) `b` indices; reshuffles each epoch.
     pub fn next_batch(&mut self, b: usize) -> Vec<usize> {
         let mut out = Vec::with_capacity(b);
@@ -346,5 +394,29 @@ mod tests {
         for v in 10..13 {
             assert!(seen.iter().filter(|&&x| x == v).count() >= 2);
         }
+    }
+
+    #[test]
+    fn batch_iter_state_roundtrip_resumes_exact_stream() {
+        let mut a = BatchIter::new((0..17).collect(), 9);
+        a.next_batch(5); // advance into the epoch
+        let mut w = crate::state::StateWriter::new();
+        a.state_save(&mut w);
+        let bytes = w.into_bytes();
+        // restore into a differently-advanced sampler over the same shard
+        let mut b = BatchIter::new((0..17).collect(), 1234);
+        b.next_batch(11);
+        b.state_load(&mut crate::state::StateReader::new(&bytes)).unwrap();
+        for _ in 0..10 {
+            assert_eq!(a.next_batch(4), b.next_batch(4));
+        }
+        // shard-size mismatch must be rejected
+        let mut c = BatchIter::new((0..5).collect(), 2);
+        assert!(c.state_load(&mut crate::state::StateReader::new(&bytes)).is_err());
+        // same size but a different index set (another worker's shard /
+        // corrupt indices) must be rejected too — those indices would
+        // otherwise read foreign samples or panic out-of-bounds later.
+        let mut d = BatchIter::new((100..117).collect(), 2);
+        assert!(d.state_load(&mut crate::state::StateReader::new(&bytes)).is_err());
     }
 }

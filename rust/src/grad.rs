@@ -98,6 +98,22 @@ pub trait GradientSource {
     fn split_workers(&mut self) -> Option<Vec<Box<dyn WorkerGrad + '_>>> {
         None
     }
+
+    /// Serialize the oracle's mutable state — per-worker noise/sampler
+    /// RNG streams and epoch cursors. Problem data (curvatures, datasets)
+    /// is rebuilt deterministically from the config seed, so only the
+    /// *consumed-randomness position* needs to survive a checkpoint for
+    /// a resumed run to draw the exact gradient stream the uninterrupted
+    /// run would. The default (for genuinely stateless oracles) writes a
+    /// marker tag so load stays shape-checked.
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("stateless-source");
+    }
+
+    /// Restore state written by [`GradientSource::state_save`].
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("stateless-source")
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -252,6 +268,28 @@ impl GradientSource for Quadratic {
             v.push(Box::new(QuadraticWorker { a: a.as_slice(), b: b.as_slice(), noise, rng }));
         }
         Some(v)
+    }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("quadratic");
+        w.put_u64(self.rngs.len() as u64);
+        for rng in &self.rngs {
+            w.put_u64s(&rng.state());
+        }
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("quadratic")?;
+        let k = r.take_u64()? as usize;
+        if k != self.rngs.len() {
+            return Err(format!("quadratic: saved K {k} != live K {}", self.rngs.len()));
+        }
+        for rng in self.rngs.iter_mut() {
+            let s = r.take_u64s()?;
+            let s: [u64; 4] = s.try_into().map_err(|_| "quadratic: bad rng state".to_string())?;
+            *rng = Xoshiro256::from_state(s);
+        }
+        Ok(())
     }
 }
 
@@ -427,6 +465,16 @@ impl GradientSource for Logistic {
             v.push(Box::new(LogisticWorker { data, batch, l2, sampler }));
         }
         Some(v)
+    }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("logistic");
+        save_samplers(&self.shards, w);
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("logistic")?;
+        load_samplers(&mut self.shards, r)
     }
 }
 
@@ -688,6 +736,39 @@ impl GradientSource for Mlp {
         }
         Some(v)
     }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("mlp");
+        save_samplers(&self.shards, w);
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("mlp")?;
+        load_samplers(&mut self.shards, r)
+    }
+}
+
+/// Checkpoint helpers for a per-worker bank of batch samplers, shared by
+/// [`Logistic`], [`Mlp`], and [`crate::runtime::XlaGradSource`].
+pub(crate) fn save_samplers(shards: &[BatchIter], w: &mut crate::state::StateWriter) {
+    w.put_u64(shards.len() as u64);
+    for s in shards {
+        s.state_save(w);
+    }
+}
+
+pub(crate) fn load_samplers(
+    shards: &mut [BatchIter],
+    r: &mut crate::state::StateReader,
+) -> Result<(), String> {
+    let k = r.take_u64()? as usize;
+    if k != shards.len() {
+        return Err(format!("samplers: saved K {k} != live K {}", shards.len()));
+    }
+    for s in shards.iter_mut() {
+        s.state_load(r)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -39,5 +39,6 @@ pub mod metrics;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
+pub mod state;
 pub mod testing;
 pub mod topology;

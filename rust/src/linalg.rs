@@ -164,7 +164,21 @@ pub fn mean_of(xs: &[Vec<f32>]) -> Vec<f32> {
 /// Consensus error `sum_k ||x_k - x_bar||^2` — the quantity bounded by
 /// the paper's Lemma 5 / Lemma 6.
 pub fn consensus_error(xs: &[Vec<f32>]) -> f64 {
-    let xbar = mean_of(xs);
+    consensus_error_slices(&xs.iter().map(Vec::as_slice).collect::<Vec<_>>())
+}
+
+/// Slice-based consensus error: same math as [`consensus_error`] over
+/// borrowed views, so it never clones a worker iterate. (The driver's
+/// eval path goes further still — `Algorithm::consensus_error_about`
+/// reuses the x̄ it already computed instead of re-averaging here.)
+pub fn consensus_error_slices(xs: &[&[f32]]) -> f64 {
+    assert!(!xs.is_empty());
+    let d = xs[0].len();
+    let mut xbar = vec![0.0f32; d];
+    for x in xs {
+        axpy(1.0, x, &mut xbar);
+    }
+    scale(1.0 / xs.len() as f32, &mut xbar);
     xs.iter()
         .map(|x| {
             let e = dist(x, &xbar);

@@ -4,13 +4,19 @@
 //!
 //! * `train --config <file.toml> [--verbose] [--out <csv>]`
 //!   run one experiment from a config file, print the summary row, dump
-//!   the trace CSV and a final checkpoint.
+//!   the trace CSV and a full-state checkpoint.
 //! * `train [--algo A] [--workers K] [--steps T] [--period P] ...`
 //!   the same without a file, using flag overrides on the defaults.
+//! * `train --resume <ckpt> --steps T` — resume a `PDSGDM02` checkpoint
+//!   (written by `--ckpt`) and continue to the new total step count; the
+//!   resumed trace is bit-identical to an uninterrupted run.
+//! * `train --target-loss F | --comm-budget-mb F | --sim-seconds F` —
+//!   budget-based stop conditions instead of (or combined with) a fixed
+//!   step count.
 //! * `topology --kind ring --workers 8` — print W and its spectral gap.
 //! * `inspect --artifacts DIR --model NAME` — validate artifacts and show
 //!   the model manifest (d, layout, mix Ks).
-//! * `algorithms` — list implemented algorithms.
+//! * `algorithms` — list implemented algorithms with summaries.
 //!
 //! (Arg parsing is in-crate: no clap in this offline build environment.)
 
@@ -19,7 +25,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 use pdsgdm::config::ExperimentConfig;
-use pdsgdm::coordinator::{save_checkpoint, Experiment};
+use pdsgdm::coordinator::{Session, SessionSpec, VerboseObserver};
 use pdsgdm::metrics;
 use pdsgdm::topology::{mixing_matrix, Topology, Weighting};
 
@@ -42,8 +48,8 @@ fn real_main() -> Result<()> {
         "topology" => cmd_topology(flags),
         "inspect" => cmd_inspect(flags),
         "algorithms" => {
-            for name in pdsgdm::algorithms::ALL_NAMES {
-                println!("{name}");
+            for b in pdsgdm::algorithms::REGISTRY {
+                println!("{:<12} {}", b.name, b.summary);
             }
             Ok(())
         }
@@ -61,16 +67,19 @@ fn print_help() {
          \n\
          USAGE:\n\
            pdsgdm train   [--config FILE] [--algo NAME] [--workers K] [--steps T]\n\
-                          [--period P] [--eta F] [--mu F] [--gamma F] [--topology T]\n\
-                          [--compressor SPEC] [--workload W] [--seed N]\n\
-                          [--out CSV] [--ckpt FILE] [--verbose]\n\
+                          [--eval-every N] [--period P] [--eta F] [--mu F] [--gamma F]\n\
+                          [--topology T] [--compressor SPEC] [--workload W] [--seed N]\n\
+                          [--target-loss F] [--comm-budget-mb F] [--sim-seconds F]\n\
+                          [--resume CKPT] [--out CSV] [--ckpt FILE] [--verbose]\n\
            pdsgdm topology --kind ring|chain|complete|star|torus|hypercube|regular-D\n\
                           [--workers K] [--weighting uniform|metropolis|lazy-metropolis]\n\
            pdsgdm inspect  [--artifacts DIR] [--model NAME]\n\
            pdsgdm algorithms\n\
          \n\
          Workloads: quadratic | logistic | mlp | transformer (needs `make artifacts`).\n\
-         Compressors: sign | topR | randR | qsgdL | identity (R ratio, L levels)."
+         Compressors: sign | topR | randR | qsgdL | identity (R ratio, L levels).\n\
+         Checkpoints: --ckpt writes a full-state PDSGDM02 file; --resume continues\n\
+         it bit-identically (give the same config plus the new --steps total)."
     );
 }
 
@@ -140,6 +149,9 @@ fn cmd_train(flags: Flags) -> Result<()> {
     if let Some(t) = flags.get_parse("steps")? {
         cfg.steps = t;
     }
+    if let Some(e) = flags.get_parse("eval-every")? {
+        cfg.eval_every = e;
+    }
     if let Some(p) = flags.get_parse("period")? {
         cfg.hyper.period = p;
     }
@@ -192,24 +204,47 @@ fn cmd_train(flags: Flags) -> Result<()> {
             other => bail!("unknown workload {other}"),
         };
     }
+    if let Some(l) = flags.get_parse::<f64>("target-loss")? {
+        cfg.stop.target_loss = Some(l);
+    }
+    if let Some(mb) = flags.get_parse::<f64>("comm-budget-mb")? {
+        cfg.stop.comm_budget_mb = Some(mb);
+    }
+    if let Some(s) = flags.get_parse::<f64>("sim-seconds")? {
+        cfg.stop.sim_seconds_budget = Some(s);
+    }
     cfg.validate().map_err(|e| anyhow!(e))?;
 
     eprintln!(
         "building: {} | K={} {:?} | p={} mu={} | workload={:?}",
         cfg.algorithm, cfg.workers, cfg.topology, cfg.hyper.period, cfg.hyper.mu, cfg.workload
     );
-    let mut exp = Experiment::build(cfg)?;
-    eprintln!("spectral gap rho = {:.4}", exp.rho);
-    let trace = exp.run(flags.has("verbose"));
-    print!("{}", metrics::summary_table(std::slice::from_ref(&trace)));
+    let mut spec = SessionSpec::new(cfg);
+    if let Some(ckpt) = flags.get("resume") {
+        spec = spec.resume_from(ckpt);
+    }
+    let mut session = Session::build(spec)?;
+    eprintln!("spectral gap rho = {:.4}", session.rho);
+    if session.steps_done() > 0 {
+        eprintln!(
+            "resumed at step {} ({:.2} MB communicated so far)",
+            session.steps_done(),
+            session.comm_bytes() as f64 / (1024.0 * 1024.0)
+        );
+    }
+    if flags.has("verbose") {
+        session.observe(Box::new(VerboseObserver));
+    }
+    session.run_to_stop();
+    print!("{}", metrics::summary_table(std::slice::from_ref(session.trace())));
 
     if let Some(out) = flags.get("out") {
-        metrics::write_csv(Path::new(out), std::slice::from_ref(&trace))?;
+        metrics::write_csv(Path::new(out), std::slice::from_ref(session.trace()))?;
         eprintln!("trace -> {out}");
     }
     if let Some(ckpt) = flags.get("ckpt") {
-        save_checkpoint(Path::new(ckpt), &exp.algo.avg_params())?;
-        eprintln!("checkpoint -> {ckpt}");
+        session.save(Path::new(ckpt))?;
+        eprintln!("checkpoint (PDSGDM02 full state) -> {ckpt}");
     }
     Ok(())
 }

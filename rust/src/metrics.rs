@@ -73,6 +73,44 @@ impl Trace {
         self.points.iter().map(|p| p.loss).fold(f64::INFINITY, f64::min)
     }
 
+    /// Checkpoint this trace (label + every point, floats bit-exact) —
+    /// a resumed session continues the *same* trace, so the final CSV of
+    /// an interrupted-and-resumed run is byte-identical to an
+    /// uninterrupted one.
+    pub fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("trace");
+        w.put_str(&self.label);
+        w.put_u64(self.points.len() as u64);
+        for p in &self.points {
+            w.put_u64(p.step);
+            w.put_f64(p.loss);
+            w.put_f64(p.accuracy);
+            w.put_f64(p.comm_mb);
+            w.put_f64(p.consensus);
+            w.put_f64(p.grad_norm_sq);
+            w.put_f64(p.sim_seconds);
+        }
+    }
+
+    pub fn state_load(r: &mut crate::state::StateReader) -> Result<Self, String> {
+        r.expect_tag("trace")?;
+        let label = r.take_str()?.to_string();
+        let n = r.take_u64()? as usize;
+        let mut points = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            points.push(TracePoint {
+                step: r.take_u64()?,
+                loss: r.take_f64()?,
+                accuracy: r.take_f64()?,
+                comm_mb: r.take_f64()?,
+                consensus: r.take_f64()?,
+                grad_norm_sq: r.take_f64()?,
+                sim_seconds: r.take_f64()?,
+            });
+        }
+        Ok(Self { label, points })
+    }
+
     pub fn csv_header() -> &'static str {
         "label,step,loss,accuracy,comm_mb,consensus,grad_norm_sq,sim_seconds"
     }
@@ -207,6 +245,24 @@ mod tests {
         let s = summary_table(&[sample(), sample()]);
         assert_eq!(s.lines().count(), 3);
         assert!(s.contains("pd-sgdm(p=4)"));
+    }
+
+    #[test]
+    fn trace_state_roundtrip_is_bit_exact() {
+        let t = sample();
+        let mut w = crate::state::StateWriter::new();
+        t.state_save(&mut w);
+        let bytes = w.into_bytes();
+        let got = Trace::state_load(&mut crate::state::StateReader::new(&bytes)).unwrap();
+        assert_eq!(got.label, t.label);
+        assert_eq!(got.points.len(), t.points.len());
+        for (a, b) in t.points.iter().zip(&got.points) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits());
+        }
+        // truncation is an error, not a panic
+        assert!(Trace::state_load(&mut crate::state::StateReader::new(&bytes[..9])).is_err());
     }
 
     #[test]

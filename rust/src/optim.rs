@@ -53,6 +53,16 @@ impl MomentumState {
     pub fn reset(&mut self) {
         self.m.iter_mut().for_each(|v| *v = 0.0);
     }
+
+    /// Checkpoint the momentum buffer (mu/weight_decay are config, not
+    /// state — they come back from the rebuilt Hyper).
+    pub fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.put_f32s(&self.m);
+    }
+
+    pub fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.take_f32s_into(&mut self.m, "momentum")
+    }
 }
 
 /// Learning-rate schedules. The paper uses step decay (x0.1 at epoch

@@ -544,6 +544,16 @@ impl GradientSource for XlaGradSource {
     fn init(&self, seed: u64) -> Vec<f32> {
         self.step.manifest.init_params(seed)
     }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("xla");
+        crate::grad::save_samplers(&self.samplers, w);
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("xla")?;
+        crate::grad::load_samplers(&mut self.samplers, r)
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,291 @@
+//! Binary state (de)serialization for full-fidelity checkpoints.
+//!
+//! The `PDSGDM02` checkpoint format (see [`crate::coordinator`]) needs to
+//! round-trip *every* mutable bit of a run — worker iterates, momentum
+//! and error-feedback buffers, RNG streams, batch-sampler cursors, byte
+//! counters — so that a resumed session reproduces the uninterrupted
+//! trace bit-identically. No serde exists in this offline environment,
+//! so this module provides a tiny length-prefixed little-endian format:
+//!
+//! * every primitive is written LE (`f32`/`f64` via `to_bits`, so
+//!   floats round-trip exactly, NaN payloads included);
+//! * strings and slices are length-prefixed;
+//! * components mark their payload with a [`StateWriter::tag`] that the
+//!   reader verifies with [`StateReader::expect_tag`] — loading a
+//!   checkpoint into the wrong algorithm fails loudly instead of
+//!   reinterpreting buffers.
+//!
+//! [`StateReader`] is fully bounds-checked and returns `Err` (never
+//! panics) on truncated or foreign input; property-tested below and in
+//! rust/tests/session_resume.rs.
+
+/// Append-only binary writer for checkpoint payloads.
+#[derive(Debug, Default)]
+pub struct StateWriter {
+    buf: Vec<u8>,
+}
+
+impl StateWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Raw bytes, for embedding one writer's output inside another.
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.put_u64(bytes.len() as u64);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Component marker; pair with [`StateReader::expect_tag`].
+    pub fn tag(&mut self, t: &str) {
+        self.put_str(t);
+    }
+
+    pub fn put_u64s(&mut self, xs: &[u64]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_f32s(&mut self, xs: &[f32]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    /// K rows of equal-length f32 vectors (worker-major state matrices).
+    pub fn put_f32_mat(&mut self, rows: &[Vec<f32>]) {
+        self.put_u64(rows.len() as u64);
+        for r in rows {
+            self.put_f32s(r);
+        }
+    }
+}
+
+/// Bounds-checked reader over a checkpoint payload.
+#[derive(Debug)]
+pub struct StateReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> StateReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated state: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    /// A length guarded against adversarial/corrupt prefixes: the payload
+    /// of `elem_bytes`-sized elements must actually fit in what remains.
+    fn take_len(&mut self, elem_bytes: usize) -> Result<usize, String> {
+        let n = self.take_u64()? as usize;
+        if n.checked_mul(elem_bytes).map(|b| b > self.remaining()).unwrap_or(true) {
+            return Err(format!("corrupt state: length {n} exceeds remaining bytes"));
+        }
+        Ok(n)
+    }
+
+    pub fn take_bytes(&mut self) -> Result<&'a [u8], String> {
+        let n = self.take_len(1)?;
+        self.take(n)
+    }
+
+    pub fn take_str(&mut self) -> Result<&'a str, String> {
+        let b = self.take_bytes()?;
+        std::str::from_utf8(b).map_err(|_| "corrupt state: non-utf8 string".to_string())
+    }
+
+    pub fn expect_tag(&mut self, want: &str) -> Result<(), String> {
+        let got = self.take_str()?;
+        if got != want {
+            return Err(format!("state tag mismatch: wanted {want:?}, found {got:?}"));
+        }
+        Ok(())
+    }
+
+    pub fn take_u64s(&mut self) -> Result<Vec<u64>, String> {
+        let n = self.take_len(8)?;
+        (0..n).map(|_| self.take_u64()).collect()
+    }
+
+    pub fn take_f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.take_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_bits(u32::from_le_bytes(self.take(4)?.try_into().unwrap())));
+        }
+        Ok(out)
+    }
+
+    /// Restore an f32 slice in place, requiring the saved length to match.
+    pub fn take_f32s_into(&mut self, out: &mut [f32], what: &str) -> Result<(), String> {
+        let n = self.take_len(4)?;
+        if n != out.len() {
+            return Err(format!("{what}: saved dim {n} != live dim {}", out.len()));
+        }
+        for o in out.iter_mut() {
+            *o = f32::from_bits(u32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    /// Restore a worker-major state matrix in place (strict shape check).
+    pub fn take_f32_mat_into(&mut self, rows: &mut [Vec<f32>], what: &str) -> Result<(), String> {
+        let k = self.take_len(1)?;
+        if k != rows.len() {
+            return Err(format!("{what}: saved K {k} != live K {}", rows.len()));
+        }
+        for (i, r) in rows.iter_mut().enumerate() {
+            self.take_f32s_into(r, &format!("{what}[{i}]"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_and_slice_roundtrip() {
+        let mut w = StateWriter::new();
+        w.tag("test");
+        w.put_u64(u64::MAX);
+        w.put_f64(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_str("pd-sgdm(p=4)");
+        w.put_u64s(&[1, 2, 3]);
+        w.put_f32s(&[1.5, -2.25, f32::INFINITY]);
+        let bytes = w.into_bytes();
+
+        let mut r = StateReader::new(&bytes);
+        r.expect_tag("test").unwrap();
+        assert_eq!(r.take_u64().unwrap(), u64::MAX);
+        assert_eq!(r.take_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.take_f64().unwrap().is_nan());
+        assert_eq!(r.take_str().unwrap(), "pd-sgdm(p=4)");
+        assert_eq!(r.take_u64s().unwrap(), vec![1, 2, 3]);
+        let f = r.take_f32s().unwrap();
+        assert_eq!(f[0], 1.5);
+        assert_eq!(f[2], f32::INFINITY);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn mat_roundtrip_in_place() {
+        let rows = vec![vec![1.0f32, 2.0], vec![-3.0, 4.0], vec![0.0, f32::NAN]];
+        let mut w = StateWriter::new();
+        w.put_f32_mat(&rows);
+        let bytes = w.into_bytes();
+        let mut got = vec![vec![9.0f32; 2]; 3];
+        StateReader::new(&bytes).take_f32_mat_into(&mut got, "xs").unwrap();
+        for (a, b) in rows.iter().zip(&got) {
+            let bits = |v: &Vec<f32>| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(a), bits(b));
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let mut w = StateWriter::new();
+        w.put_f32_mat(&[vec![1.0f32; 4]; 2]);
+        let bytes = w.into_bytes();
+        let mut wrong_k = vec![vec![0.0f32; 4]; 3];
+        assert!(StateReader::new(&bytes).take_f32_mat_into(&mut wrong_k, "xs").is_err());
+        let mut wrong_d = vec![vec![0.0f32; 5]; 2];
+        assert!(StateReader::new(&bytes).take_f32_mat_into(&mut wrong_d, "xs").is_err());
+    }
+
+    #[test]
+    fn tag_mismatch_and_truncation_are_errors_not_panics() {
+        let mut w = StateWriter::new();
+        w.tag("cpd-sgdm");
+        w.put_f32s(&[1.0; 16]);
+        let bytes = w.into_bytes();
+        assert!(StateReader::new(&bytes).expect_tag("pd-sgdm").is_err());
+        for cut in [0, 3, 9, bytes.len() - 1] {
+            let mut r = StateReader::new(&bytes[..cut]);
+            // whatever we try to read, we must get Err, never a panic
+            let _ = r.expect_tag("cpd-sgdm").and_then(|_| r.take_f32s().map(|_| ()));
+        }
+    }
+
+    #[test]
+    fn adversarial_length_prefix_rejected() {
+        let mut w = StateWriter::new();
+        w.put_u64(u64::MAX); // claims 2^64-1 elements
+        let bytes = w.into_bytes();
+        assert!(StateReader::new(&bytes).take_f32s().is_err());
+        assert!(StateReader::new(&bytes).take_u64s().is_err());
+        assert!(StateReader::new(&bytes).take_bytes().is_err());
+    }
+
+    #[test]
+    fn nested_bytes_blocks() {
+        let mut inner = StateWriter::new();
+        inner.put_u64(7);
+        let mut outer = StateWriter::new();
+        outer.put_bytes(&inner.into_bytes());
+        outer.put_str("after");
+        let bytes = outer.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        let blk = r.take_bytes().unwrap();
+        assert_eq!(StateReader::new(blk).take_u64().unwrap(), 7);
+        assert_eq!(r.take_str().unwrap(), "after");
+    }
+}

@@ -83,6 +83,94 @@ fn train_quadratic_quick_run_writes_outputs() {
 }
 
 #[test]
+fn train_resume_reproduces_straight_run_exactly() {
+    // The CI resume-smoke contract: train N steps -> checkpoint ->
+    // resume to 2N must emit the *identical* trace CSV as a straight
+    // 2N-step run (the checkpoint carries full state + the trace so far).
+    let dir = std::env::temp_dir().join(format!("pdsgdm_cli_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("half.ckpt");
+    let resumed_csv = dir.join("resumed.csv");
+    let straight_csv = dir.join("straight.csv");
+    let base: &[&str] = &[
+        "train",
+        "--workload", "quadratic",
+        "--algo", "pd-sgdm",
+        "--workers", "4",
+        "--eval-every", "20",
+        "--eta", "0.05",
+        "--seed", "9",
+    ];
+
+    let (ok, _, stderr) =
+        run(&[base, &["--steps", "40", "--ckpt", ckpt.to_str().unwrap()][..]].concat());
+    assert!(ok, "first half failed: {stderr}");
+    let (ok, _, stderr) = run(&[base, &[
+        "--steps", "80",
+        "--resume", ckpt.to_str().unwrap(),
+        "--out", resumed_csv.to_str().unwrap(),
+    ][..]].concat());
+    assert!(ok, "resume failed: {stderr}");
+    assert!(stderr.contains("resumed at step 40"), "{stderr}");
+    let (ok, _, stderr) =
+        run(&[base, &["--steps", "80", "--out", straight_csv.to_str().unwrap()][..]].concat());
+    assert!(ok, "straight run failed: {stderr}");
+
+    let resumed = std::fs::read_to_string(&resumed_csv).unwrap();
+    let straight = std::fs::read_to_string(&straight_csv).unwrap();
+    assert!(resumed.lines().count() > 4);
+    assert_eq!(resumed, straight, "resumed trace differs from uninterrupted trace");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn train_resume_rejects_mismatched_config() {
+    let dir = std::env::temp_dir().join(format!("pdsgdm_cli_badresume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("a.ckpt");
+    let (ok, _, stderr) = run(&[
+        "train", "--workload", "quadratic", "--algo", "pd-sgdm",
+        "--workers", "4", "--steps", "20", "--ckpt", ckpt.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    // different algorithm -> load must fail loudly, not silently restart
+    let (ok, _, stderr) = run(&[
+        "train", "--workload", "quadratic", "--algo", "d-sgd",
+        "--workers", "4", "--steps", "40", "--resume", ckpt.to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("algorithm"), "{stderr}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn train_comm_budget_flag_stops_early() {
+    let dir = std::env::temp_dir().join(format!("pdsgdm_cli_budget_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("budget.csv");
+    let (ok, stdout, stderr) = run(&[
+        "train", "--workload", "quadratic", "--algo", "pd-sgdm",
+        "--workers", "4", "--steps", "100000", "--eval-every", "50",
+        "--comm-budget-mb", "0.01",
+        "--out", csv.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("pd-sgdm"), "{stdout}");
+    // A 100k-step run under a 0.01 MB budget must stop after a handful
+    // of rounds: one K=4 ring round of the d=64 CLI quadratic moves
+    // 4*2*256 = 2048 bytes, so ~6 rounds (p=4 -> ~24 steps) hit 0.01 MB.
+    let content = std::fs::read_to_string(&csv).unwrap();
+    let last_step: u64 = content
+        .lines()
+        .last()
+        .and_then(|l| l.split(',').nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad csv: {content}"));
+    assert!(last_step > 0 && last_step < 1000, "budget did not stop early: {last_step}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn train_rejects_bad_flags() {
     let (ok, _, stderr) = run(&["train", "--algo", "nope"]);
     assert!(!ok);

@@ -1,10 +1,16 @@
 //! Cross-module convergence tests: the paper's qualitative claims, each
 //! checked on the pure-Rust workloads through the full coordinator path
-//! (config -> Experiment -> run -> Trace).
+//! (config -> SessionSpec -> Session -> run -> Trace).
 
 use pdsgdm::algorithms::Hyper;
 use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
-use pdsgdm::coordinator::Experiment;
+use pdsgdm::coordinator::{Session, SessionSpec};
+
+fn run_cfg(c: ExperimentConfig) -> pdsgdm::metrics::Trace {
+    let mut s = Session::build(SessionSpec::new(c)).unwrap();
+    s.run_to_stop();
+    s.into_trace()
+}
 use pdsgdm::data::Sharding;
 use pdsgdm::optim::LrSchedule;
 use pdsgdm::topology::Topology;
@@ -35,7 +41,7 @@ fn fig1_claim_pd_sgdm_matches_c_sgdm_loss() {
         let mut c = base_config();
         c.algorithm = algo.into();
         c.hyper.period = p;
-        let trace = Experiment::build(c).unwrap().run(false);
+        let trace = run_cfg(c);
         losses.push((format!("{algo}(p={p})"), trace.final_loss()));
     }
     let c_sgdm = losses[0].1;
@@ -54,7 +60,7 @@ fn fig1_claim_accuracy_insensitive_to_p() {
     for p in [4u64, 8, 16] {
         let mut c = base_config();
         c.hyper.period = p;
-        let trace = Experiment::build(c).unwrap().run(false);
+        let trace = run_cfg(c);
         accs.push(trace.final_accuracy());
     }
     let max = accs.iter().cloned().fold(f64::MIN, f64::max);
@@ -71,7 +77,7 @@ fn fig2_claim_larger_p_less_comm() {
     for p in [4u64, 8, 16] {
         let mut c = base_config();
         c.hyper.period = p;
-        let trace = Experiment::build(c).unwrap().run(false);
+        let trace = run_cfg(c);
         rows.push((p, trace.total_comm_mb(), trace.final_accuracy()));
     }
     assert!(rows[0].1 > 1.9 * rows[1].1, "{rows:?}");
@@ -88,13 +94,13 @@ fn fig3_claim_compression_matches_full_precision() {
     let mut c_full = base_config();
     c_full.algorithm = "pd-sgdm".into();
     c_full.hyper.period = 4;
-    let full = Experiment::build(c_full).unwrap().run(false);
+    let full = run_cfg(c_full);
 
     let mut c_cpd = base_config();
     c_cpd.algorithm = "cpd-sgdm".into();
     c_cpd.hyper.period = 4;
     c_cpd.compressor = Some("sign".into());
-    let cpd = Experiment::build(c_cpd).unwrap().run(false);
+    let cpd = run_cfg(c_cpd);
 
     assert!(
         (cpd.final_loss() - full.final_loss()).abs() < 0.3,
@@ -124,7 +130,7 @@ fn corollary1_claim_noise_floor_scales_inversely_with_k() {
         c.workload = WorkloadConfig::Quadratic { dim: 32, heterogeneity: 0.0, noise: 2.0 };
         c.hyper.lr = LrSchedule::Constant { eta: 0.02 };
         c.hyper.period = 4;
-        let trace = Experiment::build(c).unwrap().run(false);
+        let trace = run_cfg(c);
         // stationary floor = mean loss over the second half of the run
         let tail: Vec<f64> = trace
             .points
@@ -154,7 +160,7 @@ fn theorem1_claim_consensus_scales_with_p_and_rho() {
         c.hyper.period = p;
         c.workload = WorkloadConfig::Quadratic { dim: 32, heterogeneity: 2.0, noise: 0.2 };
         c.hyper.lr = LrSchedule::Constant { eta: 0.02 };
-        let trace = Experiment::build(c).unwrap().run(false);
+        let trace = run_cfg(c);
         trace.points.iter().map(|pt| pt.consensus).fold(0.0, f64::max)
     };
     let ring_p4 = consensus(4, Topology::Ring);
@@ -170,7 +176,7 @@ fn pd_sgdm_survives_non_iid_sharding() {
     let mut c = base_config();
     c.sharding = Sharding::Dirichlet { alpha: 0.3 };
     c.steps = 800;
-    let trace = Experiment::build(c).unwrap().run(false);
+    let trace = run_cfg(c);
     assert!(trace.final_accuracy() > 0.6, "acc {}", trace.final_accuracy());
 }
 
@@ -226,7 +232,7 @@ fn csgdm_comm_bytes_are_traced() {
     c.algorithm = "c-sgdm".into();
     c.steps = 50;
     c.eval_every = 25;
-    let trace = Experiment::build(c).unwrap().run(false);
+    let trace = run_cfg(c);
     // 2 * 4 bytes * d * K per step
     assert!(trace.total_comm_mb() > 0.0);
     let d = 24 * 16 + 24 + 4 * 24 + 4; // mlp dim for base_config

@@ -1,0 +1,302 @@
+//! Checkpoint/resume acceptance tests for the `Session` driver:
+//!
+//! * for **every** algorithm in `ALL_NAMES`, a run interrupted at T/2,
+//!   checkpointed to the `PDSGDM02` format, and resumed into a freshly
+//!   built session reproduces the uninterrupted run's trace — and final
+//!   worker iterates — **bit-identically** (noisy gradients included, so
+//!   RNG-stream restoration is load-bearing, not decorative);
+//! * the same holds on the MLP workload, where resume additionally has
+//!   to restore every worker's batch-sampler order/cursor/stream;
+//! * `StopCondition::CommBudgetMb` halts within one comm round of the
+//!   budget;
+//! * v1→v2 forward compat: legacy `PDSGDM01` files still load as
+//!   x̄-only, and v2 files satisfy x̄-only consumers too;
+//! * the `eval_every == 0` division-by-zero panic in the old driver loop
+//!   is gone (endpoints-only semantics instead).
+
+use pdsgdm::algorithms::{Algorithm as _, ALL_NAMES};
+use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
+use pdsgdm::coordinator::{
+    load_checkpoint, run, save_checkpoint, RunOpts, Session, SessionSpec, StopCondition,
+};
+use pdsgdm::metrics::Trace;
+
+fn quadratic_config(algorithm: &str) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.algorithm = algorithm.into();
+    c.workers = 4;
+    c.steps = 60;
+    c.eval_every = 10;
+    c.seed = 77;
+    // noise > 0: a resume that fails to restore the per-worker gradient
+    // RNG streams cannot reproduce the trace bits.
+    c.workload = WorkloadConfig::Quadratic { dim: 16, heterogeneity: 1.0, noise: 0.2 };
+    c.hyper.lr = pdsgdm::optim::LrSchedule::Constant { eta: 0.02 };
+    c
+}
+
+fn mlp_config(algorithm: &str) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.algorithm = algorithm.into();
+    c.workers = 4;
+    c.steps = 40;
+    c.eval_every = 10;
+    c.seed = 5;
+    c.workload = WorkloadConfig::Mlp { n: 400, dim: 8, classes: 3, hidden: 8, batch: 8 };
+    c.hyper.lr = pdsgdm::optim::LrSchedule::Constant { eta: 0.05 };
+    c
+}
+
+fn assert_traces_bit_identical(name: &str, a: &Trace, b: &Trace) {
+    assert_eq!(a.label, b.label, "{name}");
+    assert_eq!(a.points.len(), b.points.len(), "{name}: point counts differ");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.step, pb.step, "{name}");
+        let t = pa.step;
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "{name}: loss @ step {t}");
+        assert_eq!(
+            pa.accuracy.to_bits(),
+            pb.accuracy.to_bits(),
+            "{name}: accuracy @ step {t}"
+        );
+        assert_eq!(
+            pa.comm_mb.to_bits(),
+            pb.comm_mb.to_bits(),
+            "{name}: comm_mb @ step {t}"
+        );
+        assert_eq!(
+            pa.consensus.to_bits(),
+            pb.consensus.to_bits(),
+            "{name}: consensus @ step {t}"
+        );
+        assert_eq!(
+            pa.grad_norm_sq.to_bits(),
+            pb.grad_norm_sq.to_bits(),
+            "{name}: grad_norm_sq @ step {t}"
+        );
+        assert_eq!(
+            pa.sim_seconds.to_bits(),
+            pb.sim_seconds.to_bits(),
+            "{name}: sim_seconds @ step {t}"
+        );
+    }
+}
+
+/// Run `cfg` uninterrupted; then run it to T/2, checkpoint, rebuild a
+/// fresh session, resume, finish — and demand bitwise equality.
+fn check_resume_matches(cfg: ExperimentConfig) {
+    let name = cfg.algorithm.clone();
+    let total = cfg.steps;
+    let half = total / 2;
+
+    let mut straight = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+    straight.run_until(StopCondition::Steps(total));
+
+    let mut first = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+    first.run_until(StopCondition::Steps(half));
+    let ckpt = first.save_state();
+    drop(first); // the interrupted process is gone
+
+    let mut resumed = Session::build(SessionSpec::new(cfg)).unwrap();
+    resumed.load_state(&ckpt).unwrap_or_else(|e| panic!("{name}: {e}"));
+    assert_eq!(resumed.steps_done(), half, "{name}");
+    resumed.run_until(StopCondition::Steps(total));
+
+    assert_traces_bit_identical(&name, straight.trace(), resumed.trace());
+    // Beyond the trace: every worker's final iterate must agree bitwise.
+    let (a, b) = (straight.algo(), resumed.algo());
+    for k in 0..a.k() {
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(a.params(k)), bits(b.params(k)), "{name}: worker {k} iterate");
+    }
+}
+
+#[test]
+fn session_resume_bit_identical_for_every_algorithm_quadratic() {
+    for name in ALL_NAMES {
+        check_resume_matches(quadratic_config(name));
+    }
+}
+
+#[test]
+fn session_resume_bit_identical_on_mlp_batch_samplers() {
+    // The MLP oracle's mutable state is its per-worker batch samplers
+    // (shuffled order + cursor + RNG) — a resume that rebuilds them from
+    // the seed instead of the checkpoint replays the wrong minibatches.
+    for name in ["pd-sgdm", "cpd-sgdm", "d-sgd"] {
+        check_resume_matches(mlp_config(name));
+    }
+}
+
+#[test]
+fn session_resume_from_off_cadence_interrupt_stays_bit_identical() {
+    // Interrupting at a step that is NOT on the eval cadence records a
+    // forced final TracePoint the uninterrupted run would never have.
+    // load_state drops that trailing point, so the resumed trace still
+    // matches the straight run bit-for-bit.
+    let mut cfg = quadratic_config("pd-sgdm");
+    cfg.eval_every = 20;
+    let total = 60u64;
+    let interrupt_at = 33u64; // off the 20-cadence, off the p=4 schedule
+
+    let mut straight = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+    straight.run_until(StopCondition::Steps(total));
+
+    let mut first = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+    first.run_until(StopCondition::Steps(interrupt_at));
+    // the interrupted run's own trace ends with the forced point at 33
+    assert_eq!(first.trace().points.last().unwrap().step, interrupt_at);
+    let ckpt = first.save_state();
+    drop(first);
+
+    let mut resumed = Session::build(SessionSpec::new(cfg)).unwrap();
+    resumed.load_state(&ckpt).unwrap();
+    assert_eq!(resumed.steps_done(), interrupt_at);
+    // trailing off-cadence point was dropped on load
+    assert_eq!(resumed.trace().points.last().unwrap().step, 20);
+    resumed.run_until(StopCondition::Steps(total));
+    assert_traces_bit_identical("pd-sgdm(off-cadence)", straight.trace(), resumed.trace());
+}
+
+#[test]
+fn session_resume_through_checkpoint_file() {
+    let dir = std::env::temp_dir().join(format!("pdsgdm_resume_{}", std::process::id()));
+    let path = dir.join("half.ckpt");
+
+    let cfg = quadratic_config("cpd-sgdm");
+    let mut straight = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+    straight.run_until(StopCondition::Steps(60));
+
+    let mut first = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+    first.run_until(StopCondition::Steps(30));
+    first.save(&path).unwrap();
+    drop(first);
+
+    let mut resumed =
+        Session::build(SessionSpec::new(cfg).resume_from(&path)).unwrap();
+    assert_eq!(resumed.steps_done(), 30);
+    resumed.run_until(StopCondition::Steps(60));
+    assert_traces_bit_identical("cpd-sgdm(file)", straight.trace(), resumed.trace());
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn user_pulled_eval_point_survives_resume() {
+    // Only run_until's forced end-of-run eval is dropped on load; a
+    // point the user deliberately recorded with eval_now() at the same
+    // (off-cadence) step is part of the run's history and must survive.
+    let cfg = quadratic_config("pd-sgdm"); // eval_every = 10
+    let mut s = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+    for _ in 0..7 {
+        s.step();
+    }
+    let p = s.eval_now();
+    assert_eq!(p.step, 7);
+    let ckpt = s.save_state();
+    drop(s);
+
+    let mut resumed = Session::build(SessionSpec::new(cfg)).unwrap();
+    resumed.load_state(&ckpt).unwrap();
+    assert_eq!(resumed.steps_done(), 7);
+    assert_eq!(resumed.trace().points.last().unwrap().step, 7);
+}
+
+#[test]
+fn resume_rejects_mismatched_config_fingerprint() {
+    // Same algorithm/K/d but a different seed rebuilds a *different*
+    // problem — resuming into it must fail loudly, not silently diverge.
+    let cfg = quadratic_config("pd-sgdm");
+    let mut s = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+    s.run_until(StopCondition::Steps(20));
+    let ckpt = s.save_state();
+
+    let mut other_seed = cfg.clone();
+    other_seed.seed = 78;
+    let mut t = Session::build(SessionSpec::new(other_seed)).unwrap();
+    let err = t.load_state(&ckpt).unwrap_err();
+    assert!(err.contains("config"), "{err}");
+
+    let mut other_eta = cfg;
+    other_eta.hyper.lr = pdsgdm::optim::LrSchedule::Constant { eta: 0.04 };
+    let mut u = Session::build(SessionSpec::new(other_eta)).unwrap();
+    let err = u.load_state(&ckpt).unwrap_err();
+    assert!(err.contains("config"), "{err}");
+}
+
+#[test]
+fn comm_budget_halts_within_one_round_of_budget() {
+    // K=4 ring (degree 2), d=16 dense f32 gossip: one PD-SGDM round
+    // moves 4 workers x 2 links x 64 bytes = 512 bytes.
+    let round_bytes = 512u64;
+    let budget_rounds = 5.5f64;
+    let budget_mb = budget_rounds * round_bytes as f64 / (1024.0 * 1024.0);
+    let mut cfg = quadratic_config("pd-sgdm");
+    cfg.steps = 100_000;
+    let mut s = Session::build(SessionSpec::new(cfg)).unwrap();
+    s.run_until(StopCondition::Any(vec![
+        StopCondition::Steps(100_000),
+        StopCondition::CommBudgetMb(budget_mb),
+    ]));
+    let spent = s.comm_bytes();
+    let budget_bytes = budget_mb * 1024.0 * 1024.0;
+    assert!(spent as f64 >= budget_bytes, "halted under budget: {spent}");
+    assert!(
+        (spent as f64) < budget_bytes + round_bytes as f64,
+        "overshot the budget by a full round or more: {spent} vs {budget_bytes}"
+    );
+    assert!(s.steps_done() < 100_000, "budget never bit");
+}
+
+#[test]
+fn v1_checkpoints_still_load_as_xbar_only_and_v2_serves_both() {
+    let dir = std::env::temp_dir().join(format!("pdsgdm_v1v2_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // v1 file (old save path): loads as x̄, exactly as before.
+    let v1 = dir.join("old.ckpt");
+    let x: Vec<f32> = (0..32).map(|i| i as f32 * 0.5 - 3.0).collect();
+    save_checkpoint(&v1, &x).unwrap();
+    assert_eq!(load_checkpoint(&v1).unwrap(), x);
+
+    // ...but cannot resume a session (x̄ is not full state).
+    let mut s = Session::build(SessionSpec::new(quadratic_config("pd-sgdm"))).unwrap();
+    let err = s.load(&v1).unwrap_err().to_string();
+    assert!(err.contains("x̄") || err.contains("PDSGDM01"), "{err}");
+
+    // v2 file: resumes (above) AND still serves x̄-only consumers.
+    let v2 = dir.join("new.ckpt");
+    s.run_until(StopCondition::Steps(20));
+    s.save(&v2).unwrap();
+    assert_eq!(load_checkpoint(&v2).unwrap(), s.avg_params());
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn eval_every_zero_no_longer_panics_in_driver_loop() {
+    // Regression: the old loop computed `(t + 1) % opts.eval_every` and
+    // panicked with `eval_every == 0`. The config layer rejects it...
+    let mut cfg = quadratic_config("pd-sgdm");
+    cfg.eval_every = 0;
+    assert!(cfg.validate().is_err());
+
+    // ...and the driver itself now treats 0 as "endpoints only".
+    let mut src = pdsgdm::grad::Quadratic::new(4, 8, 1.0, 0.1, 3);
+    let g = pdsgdm::topology::Topology::Ring.build(4, 0);
+    let w = pdsgdm::topology::mixing_matrix(&g, pdsgdm::topology::Weighting::UniformDegree);
+    let mut net = pdsgdm::comm::Network::new(&g);
+    let x0 = pdsgdm::grad::GradientSource::init(&src, 1);
+    let mut algo = pdsgdm::algorithms::AlgorithmSpec::new("pd-sgdm", 4, x0)
+        .mixing(w)
+        .build()
+        .unwrap();
+    let trace = run(
+        algo.as_mut(),
+        &mut src,
+        &mut net,
+        RunOpts { steps: 12, eval_every: 0, verbose: false, ..Default::default() },
+    );
+    let steps: Vec<u64> = trace.points.iter().map(|p| p.step).collect();
+    assert_eq!(steps, vec![0, 12]);
+}
