@@ -5,16 +5,23 @@
 //! Sections:
 //!
 //! 1. `algo_step` — END-TO-END `Algorithm::step` throughput of PD-SGDM on
-//!    the MLP oracle at K ∈ {1, 4, 8, 16}, sequential vs the parallel
+//!    the MLP oracle at K ∈ {1, 4, 8, 16}, sequential vs the pooled
 //!    [`pdsgdm::engine::LocalStepEngine`], including the K-scaling
 //!    speedup and a bit-identical-trace determinism check. This is the
 //!    paper's "linear speedup in K" claim measured on this machine.
-//! 2. L3 micro-kernels: momentum update, gossip mixing, every
+//! 2. `mix_round` / `comm_round` — the communication half of the step
+//!    loop at K ∈ {4, 8, 16}: one full-precision gossip round
+//!    (`GossipState::mix`) and one compressed exchange round
+//!    (`CompressedExchange::round`, Sign codec), each sequential vs
+//!    fanned over the persistent [`pdsgdm::engine::WorkerPool`], with a
+//!    seq-vs-pool bit-identity assertion before timing (a determinism
+//!    break is a hard bench failure, which CI turns into a red build).
+//! 3. L3 micro-kernels: momentum update, gossip mixing, every
 //!    compression operator, and every wire codec (encode+decode
 //!    round-trip, asserting the `wire_bytes == encode(..).len()`
 //!    invariant) at the e2e model size (d = 3.45M) and a 16M
 //!    "GPT-2-small slice".
-//! 3. One XLA train_step / momentum execution when artifacts are present
+//! 4. One XLA train_step / momentum execution when artifacts are present
 //!    AND the crate was built with `--features pjrt`, so the L3-vs-L2
 //!    cost split is visible.
 //!
@@ -27,11 +34,12 @@
 
 use std::time::Duration;
 
-use pdsgdm::algorithms::{Algorithm, Hyper, PdSgdm};
+use pdsgdm::algorithms::{Algorithm, CompressedExchange, GossipState, Hyper, PdSgdm};
 use pdsgdm::benchlib::{bench, black_box, budget, report, smoke, stats_json, JsonSink};
 use pdsgdm::comm::Network;
 use pdsgdm::compress::{Compressor, Identity, Qsgd, RandK, Sign, TopK};
 use pdsgdm::data::{Blobs, Sharding};
+use pdsgdm::engine::WorkerPool;
 use pdsgdm::grad::{GradientSource, Mlp};
 use pdsgdm::json::Json;
 use pdsgdm::optim::{LrSchedule, MomentumState};
@@ -135,7 +143,146 @@ fn bench_algo_step(sink: &mut JsonSink) {
 }
 
 // ---------------------------------------------------------------------------
-// Section 2: L3 micro-kernels
+// Section 2: comm-round seq-vs-pool (the tentpole's second half)
+// ---------------------------------------------------------------------------
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One full-precision gossip round, sequential vs fanned over a
+/// persistent pool, at K ∈ {4, 8, 16} — with a bitwise determinism
+/// assert before any timing. Pool wins are expected from d ≈ 4096 up
+/// (per-receiver fused weighted-sum ≫ dispatch cost); the records are
+/// what EXPERIMENTS.md §Perf's before/after table cites.
+fn bench_mix_round(sink: &mut JsonSink) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("\n## mix_round seq-vs-pool (gossip comm phase, {cores} cores)\n");
+    let ds: &[usize] = if smoke() { &[4096] } else { &[4096, 1_048_576] };
+    for &k in &[4usize, 8, 16] {
+        let graph = Topology::Ring.build(k, 0);
+        let w = mixing_matrix(&graph, Weighting::UniformDegree);
+        let pool = WorkerPool::new(k.min(cores));
+        for &d in ds {
+            let mut rng = Xoshiro256::seed_from_u64(0x317);
+            let xs0: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+            // Determinism first: pooled mixing must be bit-identical.
+            {
+                let mut gs_seq = GossipState::new(w.clone());
+                let mut gs_pool = GossipState::new(w.clone());
+                let mut net_seq = Network::new(&graph);
+                let mut net_pool = Network::new(&graph);
+                let mut xa = xs0.clone();
+                let mut xb = xs0.clone();
+                for _ in 0..2 {
+                    gs_seq.mix(&mut xa, &mut net_seq, None);
+                    gs_pool.mix(&mut xb, &mut net_pool, Some(&pool));
+                }
+                let ok = xa.iter().zip(&xb).all(|(a, b)| bits(a) == bits(b));
+                assert!(ok, "mix_round K={k} d={d}: pooled mix diverged from sequential");
+            }
+            let mut median_seq_ns = 0.0f64;
+            for mode in ["sequential", "pool"] {
+                let mut gs = GossipState::new(w.clone());
+                let mut net = Network::new(&graph);
+                let mut xs = xs0.clone();
+                let pool_opt = if mode == "pool" { Some(&pool) } else { None };
+                let stats = bench(2, budget(), || {
+                    black_box(gs.mix(&mut xs, &mut net, pool_opt));
+                });
+                report(
+                    &format!("mix_round K={k} d={d} {mode}"),
+                    &stats,
+                    Some(((k * d) as f64, "param")),
+                );
+                let median_ns = stats.median.as_nanos() as f64;
+                let mut fields = vec![
+                    ("k", Json::Num(k as f64)),
+                    ("d", Json::Num(d as f64)),
+                    ("cores", Json::Num(cores as f64)),
+                    ("mode", Json::Str(mode.into())),
+                ];
+                fields.extend(stats_json(&stats, Some((k * d) as f64)));
+                if mode == "pool" {
+                    let speedup = median_seq_ns / median_ns.max(1.0);
+                    fields.push(("speedup_vs_seq", Json::Num(speedup)));
+                    println!("  -> K={k} d={d}: pool speedup {speedup:.2}x over sequential");
+                } else {
+                    median_seq_ns = median_ns;
+                }
+                sink.push("mix_round", fields);
+            }
+        }
+    }
+}
+
+/// One compressed exchange round (Sign codec: compress + encode + ship +
+/// decode), sequential vs pooled, at K ∈ {4, 8, 16} — again with the
+/// bitwise determinism assert up front.
+fn bench_comm_round(sink: &mut JsonSink) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("\n## comm_round seq-vs-pool (compressed exchange, sign codec, {cores} cores)\n");
+    let ds: &[usize] = if smoke() { &[4096] } else { &[4096, 1_048_576] };
+    for &k in &[4usize, 8, 16] {
+        let graph = Topology::Ring.build(k, 0);
+        let pool = WorkerPool::new(k.min(cores));
+        for &d in ds {
+            let mut rng = Xoshiro256::seed_from_u64(0xC0);
+            let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+            // Determinism first (Sign is deterministic; the forked
+            // per-worker streams make this hold for stochastic codecs
+            // too — property-tested in the crate's unit tests).
+            {
+                let mut ex_seq = CompressedExchange::new(k, 9);
+                let mut ex_pool = CompressedExchange::new(k, 9);
+                let mut net_seq = Network::new(&graph);
+                let mut net_pool = Network::new(&graph);
+                for _ in 0..2 {
+                    let a: Vec<Vec<f32>> = ex_seq
+                        .round(&Sign, &mut net_seq, &inputs, None, |_, _| {})
+                        .to_vec();
+                    let b = ex_pool.round(&Sign, &mut net_pool, &inputs, Some(&pool), |_, _| {});
+                    let ok = a.iter().zip(b).all(|(x, y)| bits(x) == bits(y));
+                    assert!(ok, "comm_round K={k} d={d}: pooled exchange diverged");
+                }
+            }
+            let mut median_seq_ns = 0.0f64;
+            for mode in ["sequential", "pool"] {
+                let mut ex = CompressedExchange::new(k, 11);
+                let mut net = Network::new(&graph);
+                let pool_opt = if mode == "pool" { Some(&pool) } else { None };
+                let stats = bench(2, budget(), || {
+                    black_box(ex.round(&Sign, &mut net, &inputs, pool_opt, |_, _| {}).len());
+                });
+                report(
+                    &format!("comm_round[sign] K={k} d={d} {mode}"),
+                    &stats,
+                    Some(((k * d) as f64, "param")),
+                );
+                let median_ns = stats.median.as_nanos() as f64;
+                let mut fields = vec![
+                    ("operator", Json::Str("sign".into())),
+                    ("k", Json::Num(k as f64)),
+                    ("d", Json::Num(d as f64)),
+                    ("cores", Json::Num(cores as f64)),
+                    ("mode", Json::Str(mode.into())),
+                ];
+                fields.extend(stats_json(&stats, Some((k * d) as f64)));
+                if mode == "pool" {
+                    let speedup = median_seq_ns / median_ns.max(1.0);
+                    fields.push(("speedup_vs_seq", Json::Num(speedup)));
+                    println!("  -> K={k} d={d}: pool speedup {speedup:.2}x over sequential");
+                } else {
+                    median_seq_ns = median_ns;
+                }
+                sink.push("comm_round", fields);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Section 3: L3 micro-kernels
 // ---------------------------------------------------------------------------
 
 fn bench_momentum(d: usize, sink: &mut JsonSink) {
@@ -156,12 +303,12 @@ fn bench_momentum(d: usize, sink: &mut JsonSink) {
 fn bench_gossip(k: usize, d: usize, sink: &mut JsonSink) {
     let g = Topology::Ring.build(k, 0);
     let w = mixing_matrix(&g, Weighting::UniformDegree);
-    let gossip = pdsgdm::algorithms::GossipState::new(w);
+    let mut gossip = GossipState::new(w);
     let mut rng = Xoshiro256::seed_from_u64(2);
     let mut xs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
     let mut net = Network::new(&g);
     let stats = bench(2, budget(), || {
-        black_box(gossip.mix(&mut xs, &mut net));
+        black_box(gossip.mix(&mut xs, &mut net, None));
     });
     report(&format!("gossip_mix K={k} d={d}"), &stats, Some(((k * d) as f64, "param")));
     let mut fields = vec![("k", Json::Num(k as f64)), ("d", Json::Num(d as f64))];
@@ -229,7 +376,7 @@ fn bench_wire_codecs(d: usize, sink: &mut JsonSink) {
 }
 
 // ---------------------------------------------------------------------------
-// Section 3: XLA artifacts (pjrt builds only)
+// Section 4: XLA artifacts (pjrt builds only)
 // ---------------------------------------------------------------------------
 
 fn bench_xla_artifacts(sink: &mut JsonSink) {
@@ -303,6 +450,8 @@ fn main() {
     let mut sink = JsonSink::new(&out);
 
     bench_algo_step(&mut sink);
+    bench_mix_round(&mut sink);
+    bench_comm_round(&mut sink);
 
     println!("\n## L3 micro-kernels\n");
     let (d_e2e, d_big) = if smoke() { (100_000usize, 200_000usize) } else { (3_454_464, 16_000_000) };

@@ -3,14 +3,16 @@
 //! their original papers — no stubs — so the figure benches can reproduce
 //! "who wins by how much" faithfully.
 
-use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
+use super::{
+    gossip::{self, CompressedExchange, GossipState},
+    Algorithm, Hyper, StepStats,
+};
 use crate::comm::Network;
 use crate::compress::Compressor;
-use crate::engine::{LocalStepEngine, LocalUpdate};
+use crate::engine::{LocalStepEngine, LocalUpdate, ScopedTask};
 use crate::grad::GradientSource;
 use crate::linalg::{self, Mat};
 use crate::optim::MomentumState;
-use crate::rng::Xoshiro256;
 
 // ---------------------------------------------------------------------------
 // D-SGD (Lian et al. 2017): plain decentralized SGD, gossip every step.
@@ -48,7 +50,7 @@ impl Algorithm for DSgd {
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
         let eta = self.hyper.lr.eta(t);
         let mean_loss = self.engine.local_step(source, &mut self.xs, LocalUpdate::Sgd { eta });
-        let bytes = self.gossip.mix(&mut self.xs, net);
+        let bytes = self.gossip.mix(&mut self.xs, net, self.engine.comm_pool());
         StepStats { mean_loss, communicated: true, bytes }
     }
 
@@ -109,7 +111,7 @@ impl Algorithm for PdSgd {
         let mean_loss = self.engine.local_step(source, &mut self.xs, LocalUpdate::Sgd { eta });
         let mut stats = StepStats { mean_loss, ..Default::default() };
         if (t + 1) % self.hyper.period == 0 {
-            stats.bytes = self.gossip.mix(&mut self.xs, net);
+            stats.bytes = self.gossip.mix(&mut self.xs, net, self.engine.comm_pool());
             stats.communicated = true;
         }
         stats
@@ -182,13 +184,13 @@ impl Algorithm for DSgdm {
             &mut self.xs,
             LocalUpdate::Momentum { moms: &mut self.moms, eta },
         );
-        let mut bytes = self.gossip.mix(&mut self.xs, net);
+        let mut bytes = self.gossip.mix(&mut self.xs, net, self.engine.comm_pool());
         if self.gossip_momentum {
             // Move the momentum buffers through the mix and back —
             // no per-step clone of K d-length vectors.
             let mut ms: Vec<Vec<f32>> =
                 self.moms.iter_mut().map(|m| std::mem::take(&mut m.m)).collect();
-            bytes += self.gossip.mix(&mut ms, net);
+            bytes += self.gossip.mix(&mut ms, net, self.engine.comm_pool());
             for (mom, m) in self.moms.iter_mut().zip(ms) {
                 mom.m = m;
             }
@@ -383,7 +385,13 @@ pub struct DeepSqueeze {
     gossip: GossipState,
     compressor: Box<dyn Compressor>,
     engine: LocalStepEngine,
-    rng: Xoshiro256,
+    /// Stateful compressed round (per-worker RNG streams + reusable
+    /// buffer tables) shared with CPD-SGDM's code path.
+    exchange: CompressedExchange,
+    /// Reusable K×d scratch: the error-compensated inputs v_k = x_k + e_k.
+    vs: Vec<Vec<f32>>,
+    /// Reusable K×d scratch: the mixed-compressed corrections.
+    mixes: Vec<Vec<f32>>,
 }
 
 impl DeepSqueeze {
@@ -403,52 +411,71 @@ impl DeepSqueeze {
             gossip: GossipState::new(w),
             compressor,
             engine: LocalStepEngine::new(k, d),
+            exchange: CompressedExchange::new(k, seed),
+            vs: Vec::new(),
+            mixes: Vec::new(),
             hyper,
-            rng: Xoshiro256::seed_from_u64(seed),
         }
     }
 
     fn comm_round(&mut self, net: &mut Network) -> u64 {
         let k = self.k();
-        let w = &self.gossip.w;
+        let d = self.xs.first().map(Vec::len).unwrap_or(0);
         let before = net.total_bytes;
-        // v_k = x_k + e_k, then the shared compressed exchange (same
-        // encode → send → recv → decode path as CPD-SGDM: charged bytes
-        // are measured buffer lengths); the error update e_k = v_k − c_k
-        // happens sender-side via the on_compressed hook, while the
-        // mixing below consumes the receiver-side decodes.
-        let vs: Vec<Vec<f32>> = (0..k)
-            .map(|i| {
-                self.xs[i]
-                    .iter()
-                    .zip(&self.errs[i])
-                    .map(|(&x, &e)| x + e)
-                    .collect()
-            })
-            .collect();
+        let pool = self.engine.comm_pool();
+        // v_k = x_k + e_k into reusable scratch, then the shared
+        // compressed exchange (same compress → encode → send → recv →
+        // decode path as CPD-SGDM: charged bytes are measured buffer
+        // lengths); the error update e_k = v_k − c_k happens sender-side
+        // via the on_compressed hook (always caller-thread, worker
+        // order), while the mixing below consumes the receiver-side
+        // decodes.
+        gossip::ensure_rows(&mut self.vs, k, d);
+        for ((v, x), e) in self.vs.iter_mut().zip(&self.xs).zip(&self.errs) {
+            for ((vv, &xv), &ev) in v.iter_mut().zip(x).zip(e) {
+                *vv = xv + ev;
+            }
+        }
+        let vs = &self.vs;
         let errs = &mut self.errs;
-        let cs = super::gossip::exchange_compressed(
+        let cs = self.exchange.round(
             self.compressor.as_ref(),
-            &mut self.rng,
             net,
-            &vs,
+            vs,
+            pool,
             |i, c| {
                 for ((e, &vv), &cc) in errs[i].iter_mut().zip(&vs[i]).zip(&c.dense) {
                     *e = vv - cc;
                 }
             },
         );
-        for i in 0..k {
-            // x_i += Σ_j w_ij c_j − c_i
-            let mut mixc = vec![0.0f32; self.xs[i].len()];
-            for j in 0..k {
-                let wij = w[(i, j)] as f32;
-                if wij != 0.0 {
-                    linalg::axpy(wij, &cs[j], &mut mixc);
-                }
-            }
-            linalg::axpy(-1.0, &cs[i], &mut mixc);
-            linalg::axpy(1.0, &mixc, &mut self.xs[i]);
+        // x_i += Σ_j w_ij c_j − c_i: one fused weighted-sum per worker
+        // into reusable scratch (was a fresh `mixc` per worker per
+        // round), fanned over the shared engine pool.
+        gossip::ensure_rows(&mut self.mixes, k, d);
+        {
+            let w = &self.gossip.w;
+            let rows: Vec<ScopedTask<'_, ()>> = self
+                .xs
+                .iter_mut()
+                .zip(self.mixes.iter_mut())
+                .enumerate()
+                .map(|(i, (x, mixc))| {
+                    let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(k + 1);
+                    for j in 0..k {
+                        let wij = w[(i, j)] as f32;
+                        if wij != 0.0 {
+                            terms.push((wij, cs[j].as_slice()));
+                        }
+                    }
+                    terms.push((-1.0, cs[i].as_slice()));
+                    Box::new(move || {
+                        linalg::weighted_sum_into(mixc, &terms);
+                        linalg::axpy(1.0, mixc, x);
+                    }) as ScopedTask<'_, ()>
+                })
+                .collect();
+            gossip::run_rows(pool, rows);
         }
         net.total_bytes - before
     }
@@ -486,17 +513,15 @@ impl Algorithm for DeepSqueeze {
         w.tag("deepsqueeze");
         w.put_f32_mat(&self.xs);
         w.put_f32_mat(&self.errs);
-        w.put_u64s(&self.rng.state());
+        // Per-worker compression streams (see CompressedExchange).
+        self.exchange.state_save(w);
     }
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
         r.expect_tag("deepsqueeze")?;
         r.take_f32_mat_into(&mut self.xs, "deepsqueeze.xs")?;
         r.take_f32_mat_into(&mut self.errs, "deepsqueeze.errs")?;
-        let s = r.take_u64s()?;
-        let s: [u64; 4] = s.try_into().map_err(|_| "deepsqueeze: bad rng state".to_string())?;
-        self.rng = Xoshiro256::from_state(s);
-        Ok(())
+        self.exchange.state_load(r)
     }
 }
 

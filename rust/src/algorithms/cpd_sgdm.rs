@@ -20,14 +20,16 @@
 //! whole codec path (encode → send → recv → decode) runs end-to-end and
 //! the charged byte counts are actual buffer lengths.
 
-use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
+use super::{
+    gossip::{self, CompressedExchange, GossipState},
+    Algorithm, Hyper, StepStats,
+};
 use crate::comm::Network;
 use crate::compress::Compressor;
-use crate::engine::{LocalStepEngine, LocalUpdate};
+use crate::engine::{LocalStepEngine, LocalUpdate, ScopedTask};
 use crate::grad::GradientSource;
 use crate::linalg::{self, Mat};
 use crate::optim::MomentumState;
-use crate::rng::Xoshiro256;
 
 pub struct CpdSgdm {
     hyper: Hyper,
@@ -38,7 +40,13 @@ pub struct CpdSgdm {
     gossip: GossipState,
     compressor: Box<dyn Compressor>,
     engine: LocalStepEngine,
-    rng: Xoshiro256,
+    /// The stateful compress→encode→send→recv→decode round (per-worker
+    /// RNG streams + reusable buffer tables; see `gossip` module docs).
+    exchange: CompressedExchange,
+    /// Reusable K×d scratch: the q-inputs x_i − x̂_i (line 7).
+    diffs: Vec<Vec<f32>>,
+    /// Reusable K×d scratch: the line-6 consensus corrections.
+    corrs: Vec<Vec<f32>>,
 }
 
 impl CpdSgdm {
@@ -62,8 +70,10 @@ impl CpdSgdm {
             gossip: GossipState::new(w),
             compressor,
             engine: LocalStepEngine::new(k, d),
+            exchange: CompressedExchange::new(k, seed),
+            diffs: Vec::new(),
+            corrs: Vec::new(),
             hyper,
-            rng: Xoshiro256::seed_from_u64(seed),
         }
     }
 
@@ -83,47 +93,62 @@ impl CpdSgdm {
 
     fn comm_round(&mut self, net: &mut Network) -> u64 {
         let k = self.k();
-        let w = &self.gossip.w;
+        let d = self.xs.first().map(Vec::len).unwrap_or(0);
         let gamma = self.hyper.gamma;
         let before = net.total_bytes;
+        let pool = self.engine.comm_pool();
 
-        // Line 6: consensus correction from the (shared) auxiliary state.
-        for i in 0..k {
-            // Σ_j w_ij (x̂_j − x̂_i); w row sums to 1 so this equals
-            // Σ_j w_ij x̂_j − x̂_i.
-            let mut corr = vec![0.0f32; self.xs[i].len()];
-            for j in 0..k {
-                let wij = w[(i, j)] as f32;
-                if wij != 0.0 {
-                    linalg::axpy(wij, &self.hats[j], &mut corr);
-                }
+        // Line 6: consensus correction from the (shared) auxiliary state
+        // — Σ_j w_ij (x̂_j − x̂_i); w rows sum to 1 so this equals
+        // Σ_j w_ij x̂_j − x̂_i. One fused weighted-sum per worker into a
+        // reusable scratch row (the old path allocated a fresh `corr`
+        // per worker per round), fanned over the shared engine pool:
+        // worker i reads the frozen x̂ table and writes only
+        // corrs[i]/xs[i], so the schedule is bit-invisible.
+        gossip::ensure_rows(&mut self.corrs, k, d);
+        {
+            let w = &self.gossip.w;
+            let hats = &self.hats;
+            let rows: Vec<ScopedTask<'_, ()>> = self
+                .xs
+                .iter_mut()
+                .zip(self.corrs.iter_mut())
+                .enumerate()
+                .map(|(i, (x, corr))| {
+                    let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(k + 1);
+                    for j in 0..k {
+                        let wij = w[(i, j)] as f32;
+                        if wij != 0.0 {
+                            terms.push((wij, hats[j].as_slice()));
+                        }
+                    }
+                    terms.push((-1.0, hats[i].as_slice()));
+                    Box::new(move || {
+                        linalg::weighted_sum_into(corr, &terms);
+                        linalg::axpy(gamma, corr, x);
+                    }) as ScopedTask<'_, ()>
+                })
+                .collect();
+            gossip::run_rows(pool, rows);
+        }
+
+        // Line 7 inputs: q-differences x_i − x̂_i into reusable scratch.
+        gossip::ensure_rows(&mut self.diffs, k, d);
+        for ((diff, x), hat) in self.diffs.iter_mut().zip(&self.xs).zip(&self.hats) {
+            for ((dv, &xv), &hv) in diff.iter_mut().zip(x).zip(hat) {
+                *dv = xv - hv;
             }
-            linalg::axpy(-1.0, &self.hats[i], &mut corr);
-            linalg::axpy(gamma, &corr, &mut self.xs[i]);
         }
 
         // Lines 7-9: compress the differences and exchange them through
-        // the shared encode → send → recv → decode round (see
-        // `gossip::exchange_compressed`): the Figure 2 byte counters
+        // the shared compress → encode → send → recv → decode round (see
+        // [`CompressedExchange::round`]): the Figure 2 byte counters
         // measure actual buffer lengths, and every copy of x̂^(j) absorbs
         // the *receiver-side decode* of q^(j).
-        let diffs: Vec<Vec<f32>> = (0..k)
-            .map(|i| {
-                self.xs[i]
-                    .iter()
-                    .zip(&self.hats[i])
-                    .map(|(&a, &b)| a - b)
-                    .collect()
-            })
-            .collect();
-        let qs = super::gossip::exchange_compressed(
-            self.compressor.as_ref(),
-            &mut self.rng,
-            net,
-            &diffs,
-            |_, _| {},
-        );
-        for (hat, q) in self.hats.iter_mut().zip(&qs) {
+        let qs =
+            self.exchange
+                .round(self.compressor.as_ref(), net, &self.diffs, pool, |_, _| {});
+        for (hat, q) in self.hats.iter_mut().zip(qs) {
             linalg::axpy(1.0, q, hat);
         }
         net.total_bytes - before
@@ -174,7 +199,9 @@ impl Algorithm for CpdSgdm {
         w.put_f32_mat(&self.xs);
         w.put_f32_mat(&self.hats);
         super::save_moms(&self.moms, w);
-        w.put_u64s(&self.rng.state());
+        // Per-worker compression streams (was: one shared stream — the
+        // per-worker bank is what keeps pooled compression deterministic).
+        self.exchange.state_save(w);
     }
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
@@ -182,10 +209,7 @@ impl Algorithm for CpdSgdm {
         r.take_f32_mat_into(&mut self.xs, "cpd-sgdm.xs")?;
         r.take_f32_mat_into(&mut self.hats, "cpd-sgdm.hats")?;
         super::load_moms(&mut self.moms, r)?;
-        let s = r.take_u64s()?;
-        let s: [u64; 4] = s.try_into().map_err(|_| "cpd-sgdm: bad rng state".to_string())?;
-        self.rng = Xoshiro256::from_state(s);
-        Ok(())
+        self.exchange.state_load(r)
     }
 }
 

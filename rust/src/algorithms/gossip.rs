@@ -1,63 +1,48 @@
 //! Shared gossip machinery: the Eq. (4) mixing step over the byte-metered
 //! network (full-precision algorithms) and the compressed exchange round
 //! (CPD-SGDM / DeepSqueeze) that ships encoded codec bytes end-to-end.
+//!
+//! §Perf: both rounds are **zero-allocation in steady state** and fan
+//! their per-worker work over the session's persistent
+//! [`crate::engine::WorkerPool`] when one is supplied — the same pool
+//! that runs the local-step phase, so the whole step loop shares one set
+//! of parked threads. Determinism is preserved bit-exactly: every task
+//! touches only its own worker's buffers, all inputs are read-only
+//! snapshots taken before the fan-out, and reductions happen on the
+//! caller's thread in worker order (see DESIGN.md §4–5).
 
 use std::sync::Arc;
 
-use crate::comm::Network;
-use crate::compress::{CompressedVec, Compressor};
+use crate::comm::{Message, Network, Payload};
+use crate::compress::{check_wire_size, CompressedVec, Compressor};
+use crate::engine::{ScopedTask, WorkerPool};
 use crate::linalg::Mat;
 use crate::rng::Xoshiro256;
 
-/// One compressed communication round shared by CPD-SGDM and DeepSqueeze:
-/// compress each worker's vector in `inputs`, *encode it to wire bytes*,
-/// broadcast the encoded buffer to all neighbors, and return each
-/// worker's message as decoded by its receivers. What crosses the network
-/// is the codec's byte payload, so the charged byte counts are measured
-/// buffer lengths (`wire_bytes == payload.len()`).
-///
-/// `on_compressed(i, &c)` runs on the sender side before encoding —
-/// DeepSqueeze uses it for its error-feedback update. Every receiver of
-/// worker j sees identical bytes, so one decode per sender suffices; a
-/// worker's own message never crosses the wire (nor does anything in a
-/// K=1 fleet), so those are decoded from the local buffer. Ends the
-/// network round.
-pub(crate) fn exchange_compressed(
-    compressor: &dyn Compressor,
-    rng: &mut Xoshiro256,
-    net: &mut Network,
-    inputs: &[Vec<f32>],
-    mut on_compressed: impl FnMut(usize, &CompressedVec),
-) -> Vec<Vec<f32>> {
-    let k = inputs.len();
-    let d = inputs.first().map(Vec::len).unwrap_or(0);
-    let mut encoded: Vec<Arc<Vec<u8>>> = Vec::with_capacity(k);
-    for (i, v) in inputs.iter().enumerate() {
-        let c = compressor.compress(v, rng);
-        on_compressed(i, &c);
-        let bytes = Arc::new(compressor.encode(&c));
-        debug_assert_eq!(bytes.len(), c.wire_bytes, "codec wire-size invariant");
-        net.broadcast_encoded(i, Arc::clone(&bytes));
-        encoded.push(bytes);
+/// Run one closure per worker: fanned over the pool when present (and
+/// worth it), inline otherwise. Each row must touch only its own
+/// worker's mutable state — the shared contract of every comm-phase
+/// fan-out in this module.
+pub(crate) fn run_rows(pool: Option<&WorkerPool>, rows: Vec<ScopedTask<'_, ()>>) {
+    match pool {
+        Some(pool) if rows.len() > 1 => {
+            pool.run_scoped(rows);
+        }
+        _ => rows.into_iter().for_each(|row| row()),
     }
-    let mut decoded: Vec<Option<Vec<f32>>> = (0..k).map(|_| None).collect();
-    for i in 0..k {
-        for msg in net.recv_all(i) {
-            if decoded[msg.from].is_none() {
-                let payload = msg
-                    .payload
-                    .encoded()
-                    .expect("compressed algorithms exchange encoded payloads");
-                decoded[msg.from] = Some(compressor.decode(payload, d));
-            }
+}
+
+/// Size a K×d scratch table, reusing existing rows (the only allocation
+/// happens on first use or after a shape change).
+pub(crate) fn ensure_rows(rows: &mut Vec<Vec<f32>>, k: usize, d: usize) {
+    if rows.len() != k {
+        rows.resize_with(k, Vec::new);
+    }
+    for r in rows.iter_mut() {
+        if r.len() != d {
+            r.resize(d, 0.0);
         }
     }
-    net.end_round();
-    decoded
-        .into_iter()
-        .enumerate()
-        .map(|(j, q)| q.unwrap_or_else(|| compressor.decode(&encoded[j], d)))
-        .collect()
 }
 
 /// Mixing matrix + the exchange logic for one full-precision gossip
@@ -66,12 +51,16 @@ pub(crate) fn exchange_compressed(
 #[derive(Clone, Debug)]
 pub struct GossipState {
     pub w: Mat,
+    /// Per-worker reusable mixing outputs; after each round these hold
+    /// the *previous* iterate buffers (recovered from the broadcast
+    /// Arcs), so steady-state rounds allocate nothing in K·d.
+    scratch: Vec<Vec<f32>>,
 }
 
 impl GossipState {
     pub fn new(w: Mat) -> Self {
         assert!(w.is_doubly_stochastic(1e-6), "Assumption 1 violated");
-        Self { w }
+        Self { w, scratch: Vec::new() }
     }
 
     pub fn k(&self) -> usize {
@@ -83,38 +72,280 @@ impl GossipState {
     /// Returns the wire bytes this round consumed.
     ///
     /// §Perf: each worker's buffer is *moved* into a shared (Arc)
-    /// broadcast payload after seeding the self-term, and results are
-    /// swapped rather than copied back — zero deep copies per round
-    /// (before: degree+1 full-vector copies per worker). Measured
-    /// before/after in EXPERIMENTS.md §Perf.
-    pub fn mix(&self, xs: &mut [Vec<f32>], net: &mut Network) -> u64 {
+    /// broadcast payload after seeding the self-term; the per-receiver
+    /// fused weighted-sum writes into this state's reusable scratch
+    /// rows — fanned over `pool` when one is supplied — and the original
+    /// buffers are recovered from their Arcs once every message clone is
+    /// dropped. Zero deep copies AND zero K·d allocations per round
+    /// (before: one fresh `weighted_sum` vector per worker per round).
+    /// Pool and sequential schedules are bit-identical: receiver k reads
+    /// frozen inputs and writes only `scratch[k]`, in the same term
+    /// order either way. Measured in EXPERIMENTS.md §Perf (`mix_round`).
+    pub fn mix(&mut self, xs: &mut [Vec<f32>], net: &mut Network, pool: Option<&WorkerPool>) -> u64 {
         let k = self.k();
         assert_eq!(xs.len(), k);
         let before = net.total_bytes;
         let d = xs.first().map(Vec::len).unwrap_or(0);
+        ensure_rows(&mut self.scratch, k, d);
         // Phase 1: each worker *moves* its buffer into a shared (Arc)
         // broadcast payload and keeps one reference for its own self
         // term — zero deep copies regardless of degree.
-        let mut own: Vec<std::sync::Arc<Vec<f32>>> = Vec::with_capacity(k);
+        let mut own: Vec<Arc<Vec<f32>>> = Vec::with_capacity(k);
         for from in 0..k {
-            let payload = std::sync::Arc::new(std::mem::take(&mut xs[from]));
-            own.push(std::sync::Arc::clone(&payload));
+            let payload = Arc::new(std::mem::take(&mut xs[from]));
+            own.push(Arc::clone(&payload));
             net.broadcast_shared(from, payload);
         }
-        // Phase 2: one fused weighted-sum pass per worker over
-        // (self, received neighbors) — a single write sweep of memory.
-        for to in 0..k {
-            let msgs = net.recv_all(to);
-            let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(1 + msgs.len());
-            terms.push((self.w[(to, to)] as f32, own[to].as_slice()));
-            for msg in &msgs {
-                let x = msg.payload.dense().expect("gossip exchanges dense payloads");
-                terms.push((self.w[(to, msg.from)] as f32, x));
-            }
-            xs[to] = crate::linalg::weighted_sum(&terms, d);
+        // Phase 2: drain every inbox up front (mail order is fixed by
+        // the send loop, not by receiver scheduling), then run one fused
+        // weighted-sum pass per worker over (self, received neighbors).
+        let inboxes: Vec<Vec<Message>> = (0..k).map(|to| net.recv_all(to)).collect();
+        {
+            let w = &self.w;
+            let terms_table: Vec<Vec<(f32, &[f32])>> = (0..k)
+                .map(|to| {
+                    let msgs = &inboxes[to];
+                    let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(1 + msgs.len());
+                    terms.push((w[(to, to)] as f32, own[to].as_slice()));
+                    for msg in msgs {
+                        let x = msg.payload.dense().expect("gossip exchanges dense payloads");
+                        terms.push((w[(to, msg.from)] as f32, x));
+                    }
+                    terms
+                })
+                .collect();
+            let rows: Vec<ScopedTask<'_, ()>> = self
+                .scratch
+                .iter_mut()
+                .zip(&terms_table)
+                .map(|(dst, terms)| {
+                    Box::new(move || crate::linalg::weighted_sum_into(dst, terms))
+                        as ScopedTask<'_, ()>
+                })
+                .collect();
+            run_rows(pool, rows);
+        }
+        // Phase 3: every per-edge clone is dropped with the inboxes, so
+        // each worker's original buffer is unique again — recover it
+        // into the scratch slot (ready for next round) and move the
+        // freshly mixed row into xs.
+        drop(inboxes);
+        for (from, payload) in own.into_iter().enumerate() {
+            xs[from] = Arc::try_unwrap(payload).unwrap_or_default();
+        }
+        for (x, s) in xs.iter_mut().zip(self.scratch.iter_mut()) {
+            std::mem::swap(x, s);
         }
         net.end_round();
         net.total_bytes - before
+    }
+}
+
+/// One compressed communication round shared by CPD-SGDM and DeepSqueeze:
+/// compress each worker's vector, *encode it to wire bytes*, broadcast
+/// the encoded buffer to all neighbors, and decode each sender's message
+/// exactly once as seen by its receivers. What crosses the network is the
+/// codec's byte payload, so the charged byte counts are measured buffer
+/// lengths (`wire_bytes == payload.len()`, promoted to a release-mode
+/// check via [`check_wire_size`]).
+///
+/// This is the stateful, zero-allocation successor of the old
+/// `exchange_compressed` free function: the per-worker
+/// [`CompressedVec`]s, wire byte buffers (recovered from their broadcast
+/// Arcs after every round), decode table, and compression RNG streams
+/// all persist across rounds, so a steady-state round performs no K·d
+/// allocation at all. Worker k draws compression randomness only from
+/// stream k — which is what makes the pooled sender-side
+/// compress+encode and receiver-side decode bit-identical to the
+/// sequential schedule (the old single shared stream would have made
+/// parallel compression order-dependent).
+pub struct CompressedExchange {
+    /// Per-sender compressed scratch (dense + repr reused every round).
+    cvs: Vec<CompressedVec>,
+    /// Per-sender wire buffers; moved into the broadcast payload each
+    /// round and reclaimed once every message clone is dropped.
+    wires: Vec<Vec<u8>>,
+    /// Per-sender receiver-side decode table (one decode per sender per
+    /// round, never one per edge).
+    decoded: Vec<Vec<f32>>,
+    /// Per-worker compression RNG streams, forked once from the
+    /// algorithm seed.
+    rngs: Vec<Xoshiro256>,
+}
+
+impl CompressedExchange {
+    pub fn new(k: usize, seed: u64) -> Self {
+        let base = Xoshiro256::seed_from_u64(seed);
+        Self {
+            cvs: (0..k).map(|_| CompressedVec::empty()).collect(),
+            wires: vec![Vec::new(); k],
+            decoded: vec![Vec::new(); k],
+            rngs: (0..k).map(|i| base.fork(i as u64)).collect(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.rngs.len()
+    }
+
+    /// Run one compress → encode → send → recv → decode round over
+    /// `inputs` (one vector per worker) and return each sender's message
+    /// as decoded by its receivers (borrowed from the internal table;
+    /// valid until the next round).
+    ///
+    /// `on_compressed(i, &c)` observes worker i's compressed output on
+    /// the sender side — DeepSqueeze uses it for its error-feedback
+    /// update. It always runs in worker order on the caller's thread,
+    /// after the (possibly pooled) compress+encode fan-out completes.
+    /// Every receiver of worker j sees identical bytes, so one decode
+    /// per sender suffices; a worker's own message never crosses the
+    /// wire (nor does anything in a K=1 fleet), so those are decoded
+    /// from the local buffer. Ends the network round and release-asserts
+    /// that the charged bytes equal Σ_i degree(i)·|wire_i| — the
+    /// measured-accounting regression guard.
+    pub fn round(
+        &mut self,
+        compressor: &dyn Compressor,
+        net: &mut Network,
+        inputs: &[Vec<f32>],
+        pool: Option<&WorkerPool>,
+        mut on_compressed: impl FnMut(usize, &CompressedVec),
+    ) -> &[Vec<f32>] {
+        let k = inputs.len();
+        assert_eq!(k, self.k(), "exchange sized for a different K");
+        let d = inputs.first().map(Vec::len).unwrap_or(0);
+        let before = net.total_bytes;
+
+        // (1) Sender side: compress + encode into the per-worker tables,
+        // fanned over the pool (worker i touches only cvs[i]/wires[i]/
+        // rngs[i], so the schedule cannot reorder anything observable).
+        {
+            let rows: Vec<ScopedTask<'_, ()>> = self
+                .cvs
+                .iter_mut()
+                .zip(self.wires.iter_mut())
+                .zip(self.rngs.iter_mut())
+                .zip(inputs)
+                .map(|(((cv, wire), rng), input)| {
+                    Box::new(move || {
+                        compressor.compress_into(input, rng, cv);
+                        compressor.encode_into(cv, wire);
+                    }) as ScopedTask<'_, ()>
+                })
+                .collect();
+            run_rows(pool, rows);
+        }
+
+        // (2) Sender-side hook + the wire-size invariant, in worker
+        // order. The check runs in release builds: a codec that costs
+        // bytes it does not emit would silently skew Figure 2.
+        for i in 0..k {
+            check_wire_size(compressor, &self.cvs[i], self.wires[i].len())
+                .unwrap_or_else(|e| panic!("{e}"));
+            on_compressed(i, &self.cvs[i]);
+        }
+
+        // (3) Ship: move each wire buffer into a shared payload (one
+        // buffer regardless of degree) and keep a local handle.
+        let mut shipped: Vec<Arc<Vec<u8>>> = Vec::with_capacity(k);
+        for i in 0..k {
+            let payload = Arc::new(std::mem::take(&mut self.wires[i]));
+            net.broadcast_encoded(i, Arc::clone(&payload));
+            shipped.push(payload);
+        }
+
+        // (4) Receive: drain every inbox, remembering the first received
+        // copy of each sender's payload.
+        let mut first_rx: Vec<Option<Arc<Vec<u8>>>> = vec![None; k];
+        for to in 0..k {
+            for msg in net.recv_all(to) {
+                if first_rx[msg.from].is_none() {
+                    let Payload::Encoded(bytes) = msg.payload else {
+                        panic!("compressed algorithms exchange encoded payloads")
+                    };
+                    first_rx[msg.from] = Some(bytes);
+                }
+            }
+        }
+
+        // (5) Decode each sender exactly once into its reusable row —
+        // from the received bytes where the message crossed a wire, from
+        // the local buffer otherwise (own message / K=1 fleet) — fanned
+        // over the pool (decoder j writes only decoded[j]).
+        ensure_rows(&mut self.decoded, k, d);
+        {
+            let sources: Vec<&[u8]> = (0..k)
+                .map(|j| {
+                    first_rx[j]
+                        .as_deref()
+                        .map(|v| v.as_slice())
+                        .unwrap_or_else(|| shipped[j].as_slice())
+                })
+                .collect();
+            let rows: Vec<ScopedTask<'_, ()>> = self
+                .decoded
+                .iter_mut()
+                .zip(sources)
+                .map(|(dec, bytes)| {
+                    Box::new(move || compressor.decode_into(bytes, dec)) as ScopedTask<'_, ()>
+                })
+                .collect();
+            run_rows(pool, rows);
+        }
+        net.end_round();
+
+        // (6) Reclaim the wire buffers for next round (every per-edge
+        // clone was dropped in (4)/(5)), then release-assert the byte
+        // accounting: a worker's own message never crosses the wire, so
+        // the round must have charged exactly degree(i)·|wire_i| per
+        // sender.
+        drop(first_rx);
+        for (wire, payload) in self.wires.iter_mut().zip(shipped) {
+            *wire = Arc::try_unwrap(payload).unwrap_or_default();
+        }
+        let charged = net.total_bytes - before;
+        let expected: u64 = (0..k)
+            .map(|i| net.neighbors(i).len() as u64 * self.wires[i].len() as u64)
+            .sum();
+        assert_eq!(
+            charged, expected,
+            "compressed-round byte accounting drifted: charged {charged}, \
+             measured payload lengths total {expected}"
+        );
+        &self.decoded
+    }
+
+    /// Checkpoint the per-worker compression streams (flattened K×4
+    /// xoshiro words) — everything a resumed run needs to draw the exact
+    /// compression randomness the uninterrupted run would. The tag
+    /// distinguishes this bank from the pre-pool single shared stream,
+    /// which also serialized as a `put_u64s` list: without it, a K=1
+    /// checkpoint from the old format would pass the length check and
+    /// silently load old-semantics state (violating bit-identical
+    /// resume); with it, any old checkpoint fails with a clear error.
+    pub fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("cx-rng-bank");
+        let flat: Vec<u64> = self.rngs.iter().flat_map(|r| r.state()).collect();
+        w.put_u64s(&flat);
+    }
+
+    pub fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("cx-rng-bank").map_err(|e| {
+            format!("{e} (pre-worker-pool checkpoints carry a single compression \
+                     stream and cannot resume under the per-worker stream bank)")
+        })?;
+        let flat = r.take_u64s()?;
+        if flat.len() != 4 * self.rngs.len() {
+            return Err(format!(
+                "compressed-exchange rng bank: {} words for K={}",
+                flat.len(),
+                self.rngs.len()
+            ));
+        }
+        for (rng, c) in self.rngs.iter_mut().zip(flat.chunks_exact(4)) {
+            *rng = Xoshiro256::from_state([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
     }
 }
 
@@ -122,6 +353,7 @@ impl GossipState {
 mod tests {
     use super::*;
     use crate::comm::Network;
+    use crate::compress::{Identity, Sign};
     use crate::linalg;
     use crate::testing::forall;
     use crate::topology::{mixing_matrix, Topology, Weighting};
@@ -134,7 +366,7 @@ mod tests {
 
     #[test]
     fn mix_equals_matrix_product() {
-        let (gs, mut net) = setup(5);
+        let (mut gs, mut net) = setup(5);
         let mut xs: Vec<Vec<f32>> = (0..5).map(|k| vec![k as f32, -(k as f32)]).collect();
         let expect: Vec<Vec<f32>> = (0..5)
             .map(|i| {
@@ -145,7 +377,7 @@ mod tests {
                     .collect()
             })
             .collect();
-        gs.mix(&mut xs, &mut net);
+        gs.mix(&mut xs, &mut net, None);
         for (got, want) in xs.iter().zip(&expect) {
             crate::testing::assert_allclose(got, want, 1e-6, 1e-7);
         }
@@ -156,11 +388,11 @@ mod tests {
         // The Eq. (18) invariant: x̄ is untouched by communication.
         forall(0xA11CE, 20, |rng| {
             let k = 3 + rng.below(8);
-            let (gs, mut net) = setup(k);
+            let (mut gs, mut net) = setup(k);
             let d = 1 + rng.below(50);
             let mut xs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
             let before = linalg::mean_of(&xs);
-            gs.mix(&mut xs, &mut net);
+            gs.mix(&mut xs, &mut net, None);
             let after = linalg::mean_of(&xs);
             crate::testing::assert_allclose(&after, &before, 1e-4, 1e-5);
         });
@@ -172,24 +404,74 @@ mod tests {
         // check the weaker monotone form which holds for every sample.
         forall(0xB0B, 20, |rng| {
             let k = 3 + rng.below(8);
-            let (gs, mut net) = setup(k);
+            let (mut gs, mut net) = setup(k);
             let d = 1 + rng.below(50);
             let mut xs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
             let before = linalg::consensus_error(&xs);
-            gs.mix(&mut xs, &mut net);
+            gs.mix(&mut xs, &mut net, None);
             let after = linalg::consensus_error(&xs);
             assert!(after <= before * (1.0 + 1e-6), "consensus grew: {before} -> {after}");
         });
     }
 
     #[test]
+    fn prop_mix_pooled_is_bit_identical_to_sequential() {
+        // The tentpole determinism contract, at the gossip layer: the
+        // pool fan-out must reproduce the sequential round bit-for-bit
+        // on regular AND irregular (star: hub degree K−1) topologies.
+        let pool = WorkerPool::new(3);
+        forall(0x90551F, 10, |rng| {
+            let k = 3 + rng.below(6);
+            let d = 1 + rng.below(60);
+            for topo in [Topology::Ring, Topology::Star, Topology::Chain] {
+                let g = topo.build(k, 0);
+                let w = mixing_matrix(&g, Weighting::UniformDegree);
+                let xs0: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+                let mut gs_seq = GossipState::new(w.clone());
+                let mut gs_pool = GossipState::new(w);
+                let mut net_seq = Network::new(&g);
+                let mut net_pool = Network::new(&g);
+                let mut xs_seq = xs0.clone();
+                let mut xs_pool = xs0;
+                // two rounds so the scratch-reuse path is exercised
+                for _ in 0..2 {
+                    let b_seq = gs_seq.mix(&mut xs_seq, &mut net_seq, None);
+                    let b_pool = gs_pool.mix(&mut xs_pool, &mut net_pool, Some(&pool));
+                    assert_eq!(b_seq, b_pool, "{topo:?}: bytes diverged");
+                }
+                for (a, b) in xs_seq.iter().zip(&xs_pool) {
+                    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(bits(a), bits(b), "{topo:?}: pooled mix diverged");
+                }
+            }
+        });
+    }
+
+    #[test]
     fn mix_charges_exact_bytes() {
-        let (gs, mut net) = setup(6);
+        let (mut gs, mut net) = setup(6);
         let mut xs = vec![vec![0.0f32; 100]; 6];
-        let bytes = gs.mix(&mut xs, &mut net);
+        let bytes = gs.mix(&mut xs, &mut net, None);
         // 6 workers x 2 ring links x 400 bytes
         assert_eq!(bytes, 6 * 2 * 400);
         assert_eq!(net.rounds, 1);
+    }
+
+    #[test]
+    fn mix_reuses_buffers_across_rounds() {
+        // Steady-state zero-allocation: the pointers of the K iterate
+        // buffers and the K scratch rows must simply swap roles between
+        // consecutive rounds — no fresh K·d allocations.
+        let (mut gs, mut net) = setup(4);
+        let mut xs: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 64]).collect();
+        gs.mix(&mut xs, &mut net, None); // materializes scratch
+        let gen1: Vec<*const f32> = xs.iter().map(|x| x.as_ptr()).collect();
+        let scratch1: Vec<*const f32> = gs.scratch.iter().map(|s| s.as_ptr()).collect();
+        gs.mix(&mut xs, &mut net, None);
+        let gen2: Vec<*const f32> = xs.iter().map(|x| x.as_ptr()).collect();
+        let scratch2: Vec<*const f32> = gs.scratch.iter().map(|s| s.as_ptr()).collect();
+        assert_eq!(gen2, scratch1, "round outputs must land in the old scratch rows");
+        assert_eq!(scratch2, gen1, "old iterate buffers must be recovered as scratch");
     }
 
     #[test]
@@ -198,5 +480,162 @@ mod tests {
         let mut w = Mat::eye(3);
         w[(0, 0)] = 0.5; // rows no longer sum to 1
         GossipState::new(w);
+    }
+
+    // -----------------------------------------------------------------
+    // CompressedExchange
+    // -----------------------------------------------------------------
+
+    fn ring_net(k: usize) -> Network {
+        Network::new(&Topology::Ring.build(k, 0))
+    }
+
+    #[test]
+    fn exchange_decodes_every_sender_once_with_exact_bytes() {
+        let k = 5;
+        let d = 40;
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let mut net = ring_net(k);
+        let mut ex = CompressedExchange::new(k, 3);
+        let mut hook_order = Vec::new();
+        let qs =
+            ex.round(&Sign, &mut net, &inputs, None, |i, c| {
+                assert_eq!(c.dense.len(), d);
+                hook_order.push(i);
+            });
+        assert_eq!(hook_order, (0..k).collect::<Vec<_>>(), "hook runs in worker order");
+        assert_eq!(qs.len(), k);
+        // Sign decode of x: ±(||x||₁/d) with x's signs
+        for (q, x) in qs.iter().zip(&inputs) {
+            let scale = x.iter().map(|v| v.abs() as f64).sum::<f64>() / d as f64;
+            for (qi, xi) in q.iter().zip(x) {
+                assert!((qi.abs() as f64 - scale).abs() < 1e-4);
+                assert_eq!(qi.is_sign_positive(), *xi >= 0.0);
+            }
+        }
+        // ring: every worker ships its Sign payload over 2 links
+        let per_msg = Sign.encoded_bytes(d) as u64;
+        assert_eq!(net.total_bytes, k as u64 * 2 * per_msg);
+        assert_eq!(net.rounds, 1);
+    }
+
+    #[test]
+    fn exchange_reuses_wire_buffers_across_rounds() {
+        let k = 4;
+        let d = 32;
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let mut net = ring_net(k);
+        let mut ex = CompressedExchange::new(k, 5);
+        ex.round(&Sign, &mut net, &inputs, None, |_, _| {});
+        let wires1: Vec<*const u8> = ex.wires.iter().map(|w| w.as_ptr()).collect();
+        let decoded1: Vec<*const f32> = ex.decoded.iter().map(|q| q.as_ptr()).collect();
+        assert!(ex.wires.iter().all(|w| w.len() == Sign.encoded_bytes(d)));
+        ex.round(&Sign, &mut net, &inputs, None, |_, _| {});
+        let wires2: Vec<*const u8> = ex.wires.iter().map(|w| w.as_ptr()).collect();
+        let decoded2: Vec<*const f32> = ex.decoded.iter().map(|q| q.as_ptr()).collect();
+        assert_eq!(wires1, wires2, "wire buffers must be recovered, not reallocated");
+        assert_eq!(decoded1, decoded2, "decode table must be reused");
+    }
+
+    #[test]
+    fn prop_exchange_pooled_is_bit_identical_to_sequential() {
+        use crate::compress::{Qsgd, RandK, TopK};
+        let pool = WorkerPool::new(3);
+        let ops: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Sign),
+            Box::new(TopK { ratio: 0.25 }),
+            Box::new(RandK { ratio: 0.25 }),
+            Box::new(Qsgd { levels: 4 }),
+            Box::new(Identity),
+        ];
+        forall(0xE8C0DE, 6, |rng| {
+            let k = 2 + rng.below(6);
+            let d = 1 + rng.below(50);
+            let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+            for op in &ops {
+                for topo in [Topology::Ring, Topology::Star, Topology::Chain] {
+                    let g = topo.build(k, 0);
+                    let mut ex_seq = CompressedExchange::new(k, 77);
+                    let mut ex_pool = CompressedExchange::new(k, 77);
+                    let mut net_seq = Network::new(&g);
+                    let mut net_pool = Network::new(&g);
+                    for _ in 0..2 {
+                        let a: Vec<Vec<f32>> = ex_seq
+                            .round(op.as_ref(), &mut net_seq, &inputs, None, |_, _| {})
+                            .to_vec();
+                        let b = ex_pool.round(
+                            op.as_ref(),
+                            &mut net_pool,
+                            &inputs,
+                            Some(&pool),
+                            |_, _| {},
+                        );
+                        for (x, y) in a.iter().zip(b) {
+                            let bits =
+                                |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                            assert_eq!(bits(x), bits(y), "{} {topo:?}", op.name());
+                        }
+                    }
+                    assert_eq!(net_seq.total_bytes, net_pool.total_bytes);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn exchange_k1_decodes_from_local_buffer() {
+        // A 1-worker fleet has no edges: nothing crosses the wire, but
+        // the worker still sees its own decoded message.
+        let mut net = Network::new(&Topology::Ring.build(1, 0));
+        let mut ex = CompressedExchange::new(1, 1);
+        let inputs = vec![vec![1.0f32, -2.0, 3.0, -4.0]];
+        let qs = ex.round(&Identity, &mut net, &inputs, None, |_, _| {});
+        assert_eq!(qs[0], inputs[0]);
+        assert_eq!(net.total_bytes, 0, "own message never crosses the wire");
+    }
+
+    #[test]
+    #[should_panic(expected = "wire-size invariant")]
+    fn exchange_rejects_miscosted_codec_in_release_builds() {
+        // A codec that charges one byte more than it emits must abort
+        // the round in release builds (the old debug_assert let it skew
+        // Figure 2 silently).
+        let mut net = ring_net(3);
+        let mut ex = CompressedExchange::new(3, 2);
+        let inputs = vec![vec![1.0f32; 8]; 3];
+        ex.round(&crate::testing::MisCosted, &mut net, &inputs, None, |_, _| {});
+    }
+
+    #[test]
+    fn exchange_state_roundtrip_preserves_streams() {
+        use crate::state::{StateReader, StateWriter};
+        let k = 4;
+        let d = 16;
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let mut a = CompressedExchange::new(k, 9);
+        // advance the streams, snapshot, then compare the next round of
+        // a restored twin against the original
+        let mut net = ring_net(k);
+        a.round(&crate::compress::RandK { ratio: 0.5 }, &mut net, &inputs, None, |_, _| {});
+        let mut w = StateWriter::new();
+        a.state_save(&mut w);
+        let buf = w.into_bytes();
+        let mut b = CompressedExchange::new(k, 12345); // wrong seed on purpose
+        b.state_load(&mut StateReader::new(&buf)).unwrap();
+        let op = crate::compress::RandK { ratio: 0.5 };
+        let mut net_a = ring_net(k);
+        let mut net_b = ring_net(k);
+        let qa: Vec<Vec<f32>> = a.round(&op, &mut net_a, &inputs, None, |_, _| {}).to_vec();
+        let qb = b.round(&op, &mut net_b, &inputs, None, |_, _| {});
+        for (x, y) in qa.iter().zip(qb) {
+            assert_eq!(x, y, "restored streams must continue identically");
+        }
+        // and a K-mismatched bank errors instead of corrupting
+        let mut c = CompressedExchange::new(k + 1, 0);
+        let err = c.state_load(&mut StateReader::new(&buf)).unwrap_err();
+        assert!(err.contains("rng bank"), "{err}");
     }
 }

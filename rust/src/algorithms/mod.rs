@@ -23,7 +23,7 @@ mod pd_sgdm;
 
 pub use baselines::{CSgdm, ChocoSgd, DSgd, DSgdm, DeepSqueeze, PdSgd};
 pub use cpd_sgdm::CpdSgdm;
-pub use gossip::GossipState;
+pub use gossip::{CompressedExchange, GossipState};
 pub use pd_sgdm::PdSgdm;
 
 use crate::comm::Network;

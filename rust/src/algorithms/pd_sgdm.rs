@@ -80,10 +80,11 @@ impl Algorithm for PdSgdm {
             &mut self.xs,
             LocalUpdate::Momentum { moms: &mut self.moms, eta },
         );
-        // Lines 5-9: periodic gossip on the intermediate iterates.
+        // Lines 5-9: periodic gossip on the intermediate iterates,
+        // fanned over the engine's pool (one pool for both phases).
         let mut stats = StepStats { mean_loss, ..Default::default() };
         if (t + 1) % self.hyper.period == 0 {
-            stats.bytes = self.gossip.mix(&mut self.xs, net);
+            stats.bytes = self.gossip.mix(&mut self.xs, net, self.engine.comm_pool());
             stats.communicated = true;
         }
         stats

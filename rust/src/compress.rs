@@ -14,15 +14,20 @@
 //! * [`Identity`] — δ = 1, turning CPD-SGDM into exact-communication
 //!   gossip (used by tests to cross-check against PD-SGDM-style mixing).
 //!
-//! Every operator is a real wire codec: [`Compressor::compress`] produces
-//! both the dense decode and the exact symbols its natural format packs
-//! ([`WireRepr`]), [`Compressor::encode`] serializes them to the byte
-//! buffer that actually crosses the simulated network, and
-//! [`Compressor::decode`] reconstructs the dense vector **bit-identically**
-//! (property-tested in `rust/tests/wire_roundtrip.rs`). The byte counters
-//! driving Figure 2's x-axes therefore measure real buffer lengths —
-//! `wire_bytes == encode(..).len() == encoded_bytes(d)` is an invariant,
-//! not an honor system.
+//! Every operator is a real wire codec: [`Compressor::compress_into`]
+//! produces both the dense decode and the exact symbols its natural
+//! format packs ([`WireRepr`]), [`Compressor::encode_into`] serializes
+//! them to the byte buffer that actually crosses the simulated network,
+//! and [`Compressor::decode_into`] reconstructs the dense vector
+//! **bit-identically** (property-tested in `rust/tests/wire_roundtrip.rs`).
+//! All three overwrite caller-owned buffers, so the per-round comm hot
+//! path ([`crate::algorithms::CompressedExchange`]) is allocation-free in
+//! steady state; the allocating `compress`/`encode`/`decode` forms remain
+//! as provided wrappers. The byte counters driving Figure 2's x-axes
+//! measure real buffer lengths — `wire_bytes == encode(..).len() ==
+//! encoded_bytes(d)` is an invariant enforced in **release** builds via
+//! [`check_wire_size`] (it was a debug-only assert before), not an honor
+//! system.
 //!
 //! Wire formats (all little-endian):
 //!
@@ -37,6 +42,11 @@ use crate::rng::Xoshiro256;
 
 /// A compressed vector: the dense decode target, its wire cost, and the
 /// exact symbols the operator's codec packs.
+///
+/// All three fields are **reusable**: [`Compressor::compress_into`]
+/// overwrites them in place, so a long-lived `CompressedVec` (one per
+/// worker in [`crate::algorithms::CompressedExchange`]) makes the whole
+/// compress phase allocation-free in steady state.
 #[derive(Clone, Debug)]
 pub struct CompressedVec {
     /// Dense decode of Q(x) (the simulator applies it directly).
@@ -48,6 +58,13 @@ pub struct CompressedVec {
     /// symbols explicitly means encode never re-derives them lossily
     /// from `dense`.
     pub repr: WireRepr,
+}
+
+impl CompressedVec {
+    /// An empty, reusable target for [`Compressor::compress_into`].
+    pub fn empty() -> Self {
+        Self { dense: Vec::new(), wire_bytes: 0, repr: WireRepr::Dense }
+    }
 }
 
 /// The operator-natural wire symbols produced by compression.
@@ -66,22 +83,54 @@ pub enum WireRepr {
 }
 
 /// A δ-contraction operator Q: R^d -> R^d (paper Definition 1).
+///
+/// The `*_into` methods are the hot path: they overwrite caller-owned
+/// buffers and never allocate in d (capacity growth on first use aside),
+/// so a comm round that reuses its `CompressedVec`/byte/dense tables is
+/// allocation-free in steady state. The allocating `compress`/`encode`/
+/// `decode` forms are provided wrappers for tests and one-shot callers.
 pub trait Compressor: Send + Sync {
     fn name(&self) -> String;
 
-    /// Apply Q. `rng` is used only by stochastic operators.
-    fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> CompressedVec;
+    /// Apply Q, overwriting every field of `out` (the zero-allocation
+    /// form — `out.dense` and any repr-side buffers are reused).
+    /// `rng` is used only by stochastic operators.
+    fn compress_into(&self, x: &[f32], rng: &mut Xoshiro256, out: &mut CompressedVec);
 
-    /// Serialize `c` into the operator's natural wire format. The
-    /// returned buffer length equals `c.wire_bytes` (and
-    /// `encoded_bytes(d)`); panics if `c` was produced by a different
-    /// operator (its [`WireRepr`] would not match).
-    fn encode(&self, c: &CompressedVec) -> Vec<u8>;
+    /// Allocating convenience form of [`Compressor::compress_into`].
+    fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> CompressedVec {
+        let mut out = CompressedVec::empty();
+        self.compress_into(x, rng, &mut out);
+        out
+    }
 
-    /// Inverse of [`Compressor::encode`] for a d-dimensional message:
-    /// reconstructs `c.dense` bit-identically from the wire bytes.
+    /// Serialize `c` into the operator's natural wire format, overwriting
+    /// `out` (cleared and resized; capacity is reused). The resulting
+    /// length equals `c.wire_bytes` (and `encoded_bytes(d)`) — checked in
+    /// release mode by [`check_wire_size`] wherever bytes are charged to
+    /// the network; panics if `c` was produced by a different operator
+    /// (its [`WireRepr`] would not match).
+    fn encode_into(&self, c: &CompressedVec, out: &mut Vec<u8>);
+
+    /// Allocating convenience form of [`Compressor::encode_into`].
+    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(c, &mut out);
+        out
+    }
+
+    /// Inverse of [`Compressor::encode_into`] for a d-dimensional message
+    /// (`d == out.len()`): fully overwrites `out` with the dense decode,
+    /// reconstructing `c.dense` bit-identically from the wire bytes.
     /// Panics on a payload whose length does not match `encoded_bytes(d)`.
-    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32>;
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]);
+
+    /// Allocating convenience form of [`Compressor::decode_into`].
+    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; d];
+        self.decode_into(bytes, &mut out);
+        out
+    }
 
     /// The operator's contraction parameter δ (a priori lower bound;
     /// `measured_delta` checks it empirically).
@@ -126,29 +175,67 @@ pub fn measured_delta(c: &dyn Compressor, x: &[f32], rng: &mut Xoshiro256) -> f6
     1.0 - err / nx
 }
 
+/// The codec wire-size invariant as a **release-mode error path**: a
+/// codec whose `encode` emitted a buffer that disagrees with the
+/// `wire_bytes` it costed would silently skew every Figure 2 byte axis
+/// (the old guard was a `debug_assert!`, i.e. absent from the release
+/// binaries that produce the figures). Comm rounds call this before
+/// charging the network and panic with the returned message; tests
+/// exercise the `Err` arm directly with a deliberately miscosted codec.
+pub fn check_wire_size(
+    op: &dyn Compressor,
+    c: &CompressedVec,
+    encoded_len: usize,
+) -> Result<(), String> {
+    if encoded_len == c.wire_bytes {
+        Ok(())
+    } else {
+        Err(format!(
+            "codec wire-size invariant violated: {} encoded {} bytes for a \
+             message costed at {} wire bytes (d={})",
+            op.name(),
+            encoded_len,
+            c.wire_bytes,
+            c.dense.len()
+        ))
+    }
+}
+
+/// Reclaim the index buffer of a previous `Sparse` repr (cleared), or a
+/// fresh one — the TopK/RandK `compress_into` reuse path.
+fn reuse_sparse_indices(repr: &mut WireRepr) -> Vec<u32> {
+    match std::mem::replace(repr, WireRepr::Dense) {
+        WireRepr::Sparse { mut indices } => {
+            indices.clear();
+            indices
+        }
+        _ => Vec::new(),
+    }
+}
+
 /// (u32 index, f32 value) pair serialization shared by TopK and RandK.
-fn encode_sparse(c: &CompressedVec) -> Vec<u8> {
+fn encode_sparse_into(c: &CompressedVec, out: &mut Vec<u8>) {
     let indices = match &c.repr {
         WireRepr::Sparse { indices } => indices,
         _ => panic!("sparse encode needs a Sparse repr (foreign CompressedVec?)"),
     };
-    let mut out = Vec::with_capacity(indices.len() * 8);
+    out.clear();
+    out.reserve(indices.len() * 8);
     for &i in indices {
         out.extend_from_slice(&i.to_le_bytes());
         out.extend_from_slice(&c.dense[i as usize].to_le_bytes());
     }
-    out
 }
 
-fn decode_sparse(bytes: &[u8], d: usize, k: usize) -> Vec<f32> {
+fn decode_sparse_into(bytes: &[u8], out: &mut [f32], k: usize) {
     assert_eq!(bytes.len(), k * 8, "sparse payload: want {} bytes, got {}", k * 8, bytes.len());
-    let mut dense = vec![0.0f32; d];
+    let d = out.len();
+    out.iter_mut().for_each(|v| *v = 0.0);
     for pair in bytes.chunks_exact(8) {
         let i = u32::from_le_bytes(pair[..4].try_into().unwrap()) as usize;
         assert!(i < d, "sparse payload: index {i} out of range for d={d}");
-        dense[i] = f32::from_le_bytes(pair[4..].try_into().unwrap());
+        out[i] = f32::from_le_bytes(pair[4..].try_into().unwrap());
     }
-    dense
 }
 
 /// Scaled sign compression: Q(x) = (||x||_1 / d) sign(x).
@@ -163,28 +250,24 @@ impl Compressor for Sign {
         "sign".into()
     }
 
-    fn compress(&self, x: &[f32], _rng: &mut Xoshiro256) -> CompressedVec {
+    fn compress_into(&self, x: &[f32], _rng: &mut Xoshiro256, out: &mut CompressedVec) {
         let d = x.len();
         let l1: f64 = x.iter().map(|&v| (v as f64).abs()).sum();
         let scale = (l1 / d.max(1) as f64) as f32;
-        let dense = x
-            .iter()
-            .map(|&v| if v >= 0.0 { scale } else { -scale })
-            .collect();
-        CompressedVec {
-            dense,
-            wire_bytes: self.encoded_bytes(d),
-            repr: WireRepr::SignBitmap { scale },
-        }
+        out.dense.clear();
+        out.dense.extend(x.iter().map(|&v| if v >= 0.0 { scale } else { -scale }));
+        out.wire_bytes = self.encoded_bytes(d);
+        out.repr = WireRepr::SignBitmap { scale };
     }
 
-    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
+    fn encode_into(&self, c: &CompressedVec, out: &mut Vec<u8>) {
         let scale = match c.repr {
             WireRepr::SignBitmap { scale } => scale,
             _ => panic!("sign encode needs a SignBitmap repr (foreign CompressedVec?)"),
         };
         let d = c.dense.len();
-        let mut out = vec![0u8; self.encoded_bytes(d)];
+        out.clear();
+        out.resize(self.encoded_bytes(d), 0);
         out[..4].copy_from_slice(&scale.to_le_bytes());
         for (i, v) in c.dense.iter().enumerate() {
             // dense is ±scale; the bitmap stores the IEEE sign bit so
@@ -193,10 +276,10 @@ impl Compressor for Sign {
                 out[4 + i / 8] |= 1 << (i % 8);
             }
         }
-        out
     }
 
-    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) {
+        let d = out.len();
         assert_eq!(
             bytes.len(),
             self.encoded_bytes(d),
@@ -205,9 +288,9 @@ impl Compressor for Sign {
             bytes.len()
         );
         let scale = f32::from_le_bytes(bytes[..4].try_into().unwrap());
-        (0..d)
-            .map(|i| if bytes[4 + i / 8] >> (i % 8) & 1 == 1 { scale } else { -scale })
-            .collect()
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = if bytes[4 + i / 8] >> (i % 8) & 1 == 1 { scale } else { -scale };
+        }
     }
 
     fn delta(&self, d: usize) -> f64 {
@@ -246,35 +329,41 @@ impl Compressor for TopK {
         format!("top{:.3}", self.ratio)
     }
 
-    fn compress(&self, x: &[f32], _rng: &mut Xoshiro256) -> CompressedVec {
+    fn compress_into(&self, x: &[f32], _rng: &mut Xoshiro256, out: &mut CompressedVec) {
         let d = x.len();
         let k = self.k_for(d);
-        let mut idx: Vec<usize> = (0..d).collect();
-        // total_cmp on |x_i|: a deterministic total order even with NaN
-        // gradients (NaN sorts largest, so poisoned coordinates are
-        // selected — and surfaced — instead of silently reordering).
-        idx.select_nth_unstable_by(k.saturating_sub(1).min(d.saturating_sub(1)), |&a, &b| {
-            x[b].abs().total_cmp(&x[a].abs())
-        });
-        let mut indices: Vec<u32> = idx[..k.min(d)].iter().map(|&i| i as u32).collect();
+        // The selection scratch IS the wire index buffer (u32 fits — the
+        // sparse wire format already caps d at u32 range), reclaimed from
+        // the previous round's repr: no per-call index allocation.
+        let mut indices = reuse_sparse_indices(&mut out.repr);
+        indices.extend(0..d as u32);
+        if !indices.is_empty() {
+            // total_cmp on |x_i|: a deterministic total order even with
+            // NaN gradients (NaN sorts largest, so poisoned coordinates
+            // are selected — and surfaced — instead of silently
+            // reordering).
+            indices.select_nth_unstable_by(
+                k.saturating_sub(1).min(d.saturating_sub(1)),
+                |&a, &b| x[b as usize].abs().total_cmp(&x[a as usize].abs()),
+            );
+        }
+        indices.truncate(k.min(d));
         indices.sort_unstable(); // canonical ascending wire order
-        let mut dense = vec![0.0f32; d];
+        out.dense.clear();
+        out.dense.resize(d, 0.0);
         for &i in &indices {
-            dense[i as usize] = x[i as usize];
+            out.dense[i as usize] = x[i as usize];
         }
-        CompressedVec {
-            dense,
-            wire_bytes: self.encoded_bytes(d),
-            repr: WireRepr::Sparse { indices },
-        }
+        out.wire_bytes = self.encoded_bytes(d);
+        out.repr = WireRepr::Sparse { indices };
     }
 
-    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
-        encode_sparse(c)
+    fn encode_into(&self, c: &CompressedVec, out: &mut Vec<u8>) {
+        encode_sparse_into(c, out);
     }
 
-    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
-        decode_sparse(bytes, d, self.k_for(d))
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) {
+        decode_sparse_into(bytes, out, self.k_for(out.len()));
     }
 
     fn delta(&self, d: usize) -> f64 {
@@ -309,29 +398,35 @@ impl Compressor for RandK {
         format!("rand{:.3}", self.ratio)
     }
 
-    fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> CompressedVec {
+    fn compress_into(&self, x: &[f32], rng: &mut Xoshiro256, out: &mut CompressedVec) {
         let d = x.len();
-        let k = self.k_for(d);
-        let mut indices: Vec<u32> =
-            rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
+        let k = self.k_for(d).min(d);
+        // Partial Fisher–Yates directly on the reclaimed u32 index buffer
+        // — draw-for-draw identical to `rng.sample_indices(d, k)` but
+        // without its per-call `Vec<usize>` allocation.
+        let mut indices = reuse_sparse_indices(&mut out.repr);
+        indices.extend(0..d as u32);
+        for i in 0..k {
+            let j = i + rng.below(d - i);
+            indices.swap(i, j);
+        }
+        indices.truncate(k);
         indices.sort_unstable(); // canonical ascending wire order
-        let mut dense = vec![0.0f32; d];
+        out.dense.clear();
+        out.dense.resize(d, 0.0);
         for &i in &indices {
-            dense[i as usize] = x[i as usize];
+            out.dense[i as usize] = x[i as usize];
         }
-        CompressedVec {
-            dense,
-            wire_bytes: self.encoded_bytes(d),
-            repr: WireRepr::Sparse { indices },
-        }
+        out.wire_bytes = self.encoded_bytes(d);
+        out.repr = WireRepr::Sparse { indices };
     }
 
-    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
-        encode_sparse(c)
+    fn encode_into(&self, c: &CompressedVec, out: &mut Vec<u8>) {
+        encode_sparse_into(c, out);
     }
 
-    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
-        decode_sparse(bytes, d, self.k_for(d))
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) {
+        decode_sparse_into(bytes, out, self.k_for(out.len()));
     }
 
     fn delta(&self, d: usize) -> f64 {
@@ -394,38 +489,42 @@ impl Compressor for Qsgd {
         format!("qsgd{}", self.levels)
     }
 
-    fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> CompressedVec {
+    fn compress_into(&self, x: &[f32], rng: &mut Xoshiro256, out: &mut CompressedVec) {
         let d = x.len();
-        let wire_bytes = self.encoded_bytes(d);
+        out.wire_bytes = self.encoded_bytes(d);
+        // Reclaim the symbol buffer from the previous round's repr.
+        let mut symbols = match std::mem::replace(&mut out.repr, WireRepr::Dense) {
+            WireRepr::Levels { mut symbols, .. } => {
+                symbols.clear();
+                symbols
+            }
+            _ => Vec::new(),
+        };
+        out.dense.clear();
         let nrm2: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
         if nrm2 == 0.0 {
-            return CompressedVec {
-                dense: vec![0.0; d],
-                wire_bytes,
-                repr: WireRepr::Levels { norm: 0.0, symbols: vec![0; d] },
-            };
+            out.dense.resize(d, 0.0);
+            symbols.resize(d, 0);
+            out.repr = WireRepr::Levels { norm: 0.0, symbols };
+            return;
         }
         let norm = nrm2.sqrt() as f32;
         let s = self.levels as f64;
-        let mut symbols = Vec::with_capacity(d);
-        let dense = x
-            .iter()
-            .map(|&v| {
-                let r = (v as f64).abs() / norm as f64 * s; // in [0, s(1+ε)]
-                let low = r.floor();
-                let level = if rng.next_f64() < r - low { low + 1.0 } else { low };
-                // f32-rounding of the norm can push r past s; clamp so the
-                // symbol stays in the packed alphabet [-s, s].
-                let level = level.min(s) as i32;
-                let symbol = if v < 0.0 { -level } else { level };
-                symbols.push(symbol);
-                self.dequant(norm, d, symbol)
-            })
-            .collect();
-        CompressedVec { dense, wire_bytes, repr: WireRepr::Levels { norm, symbols } }
+        for &v in x {
+            let r = (v as f64).abs() / norm as f64 * s; // in [0, s(1+ε)]
+            let low = r.floor();
+            let level = if rng.next_f64() < r - low { low + 1.0 } else { low };
+            // f32-rounding of the norm can push r past s; clamp so the
+            // symbol stays in the packed alphabet [-s, s].
+            let level = level.min(s) as i32;
+            let symbol = if v < 0.0 { -level } else { level };
+            symbols.push(symbol);
+            out.dense.push(self.dequant(norm, d, symbol));
+        }
+        out.repr = WireRepr::Levels { norm, symbols };
     }
 
-    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
+    fn encode_into(&self, c: &CompressedVec, out: &mut Vec<u8>) {
         let (norm, symbols) = match &c.repr {
             WireRepr::Levels { norm, symbols } => (*norm, symbols),
             _ => panic!("qsgd encode needs a Levels repr (foreign CompressedVec?)"),
@@ -433,7 +532,8 @@ impl Compressor for Qsgd {
         let d = c.dense.len();
         let bits = self.bits_per_symbol();
         let s = self.levels as i32;
-        let mut out = vec![0u8; self.encoded_bytes(d)];
+        out.clear();
+        out.resize(self.encoded_bytes(d), 0);
         out[..4].copy_from_slice(&norm.to_le_bytes());
         for (i, &sym) in symbols.iter().enumerate() {
             debug_assert!((-s..=s).contains(&sym), "symbol {sym} outside [-{s}, {s}]");
@@ -445,10 +545,10 @@ impl Compressor for Qsgd {
                 }
             }
         }
-        out
     }
 
-    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) {
+        let d = out.len();
         assert_eq!(
             bytes.len(),
             self.encoded_bytes(d),
@@ -459,18 +559,16 @@ impl Compressor for Qsgd {
         let norm = f32::from_le_bytes(bytes[..4].try_into().unwrap());
         let bits = self.bits_per_symbol();
         let s = self.levels as i32;
-        (0..d)
-            .map(|i| {
-                let mut code = 0u32;
-                for b in 0..bits {
-                    let p = i * bits + b;
-                    if bytes[4 + p / 8] >> (p % 8) & 1 == 1 {
-                        code |= 1 << b;
-                    }
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut code = 0u32;
+            for b in 0..bits {
+                let p = i * bits + b;
+                if bytes[4 + p / 8] >> (p % 8) & 1 == 1 {
+                    code |= 1 << b;
                 }
-                self.dequant(norm, d, code as i32 - s)
-            })
-            .collect()
+            }
+            *o = self.dequant(norm, d, code as i32 - s);
+        }
     }
 
     fn delta(&self, d: usize) -> f64 {
@@ -499,28 +597,27 @@ impl Compressor for Identity {
         "identity".into()
     }
 
-    fn compress(&self, x: &[f32], _rng: &mut Xoshiro256) -> CompressedVec {
-        CompressedVec {
-            dense: x.to_vec(),
-            wire_bytes: self.encoded_bytes(x.len()),
-            repr: WireRepr::Dense,
-        }
+    fn compress_into(&self, x: &[f32], _rng: &mut Xoshiro256, out: &mut CompressedVec) {
+        out.dense.clear();
+        out.dense.extend_from_slice(x);
+        out.wire_bytes = self.encoded_bytes(x.len());
+        out.repr = WireRepr::Dense;
     }
 
-    fn encode(&self, c: &CompressedVec) -> Vec<u8> {
-        let mut out = Vec::with_capacity(4 * c.dense.len());
+    fn encode_into(&self, c: &CompressedVec, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(4 * c.dense.len());
         for v in &c.dense {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        out
     }
 
-    fn decode(&self, bytes: &[u8], d: usize) -> Vec<f32> {
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) {
+        let d = out.len();
         assert_eq!(bytes.len(), 4 * d, "identity payload: want {} bytes, got {}", 4 * d, bytes.len());
-        bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect()
+        for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *o = f32::from_le_bytes(c.try_into().unwrap());
+        }
     }
 
     fn delta(&self, _d: usize) -> f64 {
@@ -832,5 +929,85 @@ mod tests {
     #[should_panic(expected = "payload")]
     fn decode_rejects_wrong_length() {
         Sign.decode(&[0u8; 3], 16);
+    }
+
+    #[test]
+    fn prop_compress_into_reused_buffers_match_fresh_compress() {
+        // The zero-allocation path must be oblivious to whatever the
+        // CompressedVec held before — including a repr from a DIFFERENT
+        // operator and a dense buffer of the wrong length.
+        forall(0x1A70, 20, |rng| {
+            let d = 1 + rng.below(300);
+            let x = rng.normal_vec(d, 1.0);
+            for c in operators() {
+                let mut fresh_rng = rng.fork(1);
+                let mut reuse_rng = rng.fork(1);
+                let fresh = c.compress(&x, &mut fresh_rng);
+                // Dirty target: stale Sparse repr + wrong-length dense.
+                let mut reused = CompressedVec {
+                    dense: vec![7.7; d / 2 + 3],
+                    wire_bytes: 999,
+                    repr: WireRepr::Sparse { indices: vec![0, 1, 2] },
+                };
+                c.compress_into(&x, &mut reuse_rng, &mut reused);
+                // ... and then again, so the operator's OWN reclaimed
+                // buffers (indices/symbols) are exercised too.
+                let mut reuse_rng2 = rng.fork(1);
+                c.compress_into(&x, &mut reuse_rng2, &mut reused);
+                let bits = |q: &CompressedVec| {
+                    q.dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                };
+                assert_eq!(bits(&fresh), bits(&reused), "{}: dense drifted", c.name());
+                assert_eq!(fresh.wire_bytes, reused.wire_bytes, "{}", c.name());
+                assert_eq!(
+                    c.encode(&fresh),
+                    c.encode(&reused),
+                    "{}: wire bytes drifted",
+                    c.name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_encode_decode_into_reuse_matches_allocating_forms() {
+        forall(0x0DEC, 20, |rng| {
+            let d = 1 + rng.below(200);
+            let x = rng.normal_vec(d, 1.0);
+            for c in operators() {
+                let q = c.compress(&x, rng);
+                let mut wire = vec![0xEEu8; 5]; // dirty, wrong length
+                c.encode_into(&q, &mut wire);
+                assert_eq!(wire, c.encode(&q), "{}", c.name());
+                assert_eq!(wire.len(), q.wire_bytes, "{}", c.name());
+                let mut dense = vec![3.3f32; d]; // dirty: must be overwritten
+                c.decode_into(&wire, &mut dense);
+                let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&dense), bits(&q.dense), "{}", c.name());
+            }
+        });
+    }
+
+    use crate::testing::MisCosted;
+
+    #[test]
+    fn check_wire_size_is_a_release_mode_error_path() {
+        // The invariant used to be a debug_assert — absent from exactly
+        // the release binaries that produce Figure 2. It must now be a
+        // real error path in every profile.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x = vec![1.0f32, -2.0, 3.0];
+        for c in operators() {
+            let q = c.compress(&x, &mut rng);
+            let wire = c.encode(&q);
+            check_wire_size(c.as_ref(), &q, wire.len())
+                .unwrap_or_else(|e| panic!("honest codec flagged: {e}"));
+        }
+        let lying = MisCosted;
+        let q = lying.compress(&x, &mut rng);
+        let wire = lying.encode(&q);
+        let err = check_wire_size(&lying, &q, wire.len()).unwrap_err();
+        assert!(err.contains("wire-size invariant"), "{err}");
+        assert!(err.contains("miscosted"), "{err}");
     }
 }

@@ -1,31 +1,177 @@
-//! The parallel local-step engine: one implementation of Alg. 1/2
-//! lines 2–4 (per-worker gradient + local update) shared by every
-//! algorithm in [`crate::algorithms`].
+//! The parallel step-loop engine: a persistent [`WorkerPool`] plus one
+//! implementation of Alg. 1/2 lines 2–4 (per-worker gradient + local
+//! update) shared by every algorithm in [`crate::algorithms`].
 //!
 //! The paper's headline claim is linear speedup in the number of workers
-//! K, which only materializes if the K local steps actually run
-//! concurrently (Lian et al. 2017; Wang et al. 2024). The engine owns
-//! one preallocated `d`-length gradient buffer per worker and, when the
-//! oracle can split into per-worker shards
-//! ([`GradientSource::split_workers`]), fans the gradient + momentum
-//! phase out over `std::thread::scope` — no extra dependencies, no
-//! locks: worker `k` touches only `xs[k]`, `bufs[k]`, `moms[k]`, and its
-//! own RNG/sampler shard, so there are no data races *by construction*.
+//! K, which only materializes if *both* halves of the step loop actually
+//! run concurrently (Lian et al. 2017; Wang et al. 2024). PR 1
+//! parallelized the local-step half over `std::thread::scope`, paying a
+//! spawn+join (tens of µs per worker) on **every step** — which both
+//! forced a high sequential-fallback threshold and made the
+//! communication half (gossip mixing, compressed exchange) not worth
+//! threading at all. This revision replaces the per-step spawn with a
+//! **persistent pool**: K parked threads created once per engine (hence
+//! once per `coordinator::Session`), woken by channel sends, executing
+//! borrowed-closure tasks and reporting results in deterministic task
+//! order. The same pool serves the local-step fan-out *and* the
+//! communication round (see [`crate::algorithms::GossipState::mix`] and
+//! [`crate::algorithms::CompressedExchange`]), amortizing thread startup
+//! to zero and cutting per-task dispatch to a channel send/recv pair
+//! (order ~1–2 µs; see the [`PARALLEL_MIN_DIM`] note on how that
+//! estimate set the 4×-lower threshold and how the benches check it).
 //!
-//! **Determinism contract:** the parallel and sequential paths produce
+//! **Determinism contract:** the pooled and sequential paths produce
 //! bit-identical iterates and losses. Each worker's randomness lives in
-//! its own stream, every buffer is per-worker, and the mean loss is
-//! reduced in worker order in both paths. The contract is enforced by
-//! rust/tests/engine_determinism.rs across all of
-//! [`crate::algorithms::ALL_NAMES`].
+//! its own stream, every buffer is per-worker, and every reduction
+//! (mean loss, gradient averaging, gossip weighted sums) happens on the
+//! caller's thread in worker order after a deterministic K-way join —
+//! the thread schedule has nothing to perturb. The contract is enforced
+//! by rust/tests/engine_determinism.rs across all of
+//! [`crate::algorithms::ALL_NAMES`] and all comm phases.
 //!
 //! Sources that cannot split (e.g. [`crate::runtime::XlaGradSource`]'s
 //! single shared PJRT executable) fall back to the sequential
 //! allocation-free path transparently.
 
+use std::sync::mpsc;
+
 use crate::grad::{GradientSource, WorkerGrad};
 use crate::linalg;
 use crate::optim::MomentumState;
+
+/// A borrowed-closure task for [`WorkerPool::run_scoped`]: the closure
+/// may borrow caller state (`run_scoped` blocks until every task has
+/// finished, so the borrows outlive the execution).
+pub type ScopedTask<'a, R> = Box<dyn FnOnce() -> R + Send + 'a>;
+
+/// A lifetime-erased job queued to a pool thread.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent worker pool: parked threads + per-thread channel dispatch,
+/// deterministic K-way join order, joined threads on drop. Std-only (no
+/// rayon/crossbeam in this offline build).
+///
+/// Tasks are distributed round-robin (`task i` → `thread i % n`), each
+/// thread drains its queue in FIFO order, and results are collected into
+/// index-ordered slots before [`WorkerPool::run_scoped`] returns — so
+/// the *completion* schedule never influences the order any caller
+/// observes results in. That, plus per-task-disjoint data, is the whole
+/// determinism argument.
+pub struct WorkerPool {
+    senders: Vec<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` parked workers (clamped to at least one). Threads
+    /// live until the pool is dropped; an idle pool costs nothing but
+    /// the blocked `recv`.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let (tx, rx) = mpsc::channel::<Job>();
+            senders.push(tx);
+            let handle = std::thread::Builder::new()
+                .name(format!("pdsgdm-pool-{i}"))
+                .spawn(move || {
+                    // Parked on recv between dispatches; exits when the
+                    // pool drops its sender.
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("failed to spawn worker-pool thread");
+            handles.push(handle);
+        }
+        Self { senders, handles }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Execute `tasks` on the pool and return their results **in task
+    /// order** (never completion order). Blocks until every task has
+    /// finished; if any task panicked, the panic is re-raised on the
+    /// caller's thread — lowest task index first — after all tasks have
+    /// completed, so no borrow ever outlives this call.
+    pub fn run_scoped<'a, R: Send + 'a>(&self, tasks: Vec<ScopedTask<'a, R>>) -> Vec<R> {
+        let n = tasks.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // SAFETY ARGUMENT for the lifetime erasure below: jobs borrow
+        // data living on the caller's stack (lifetime 'a), so control
+        // must NEVER leave this function — by return OR unwind — while a
+        // dispatched job might still run. The function upholds that by
+        // construction:
+        //  * the only fallible step between dispatching job 0 and the
+        //    join loop is `Sender::send`; on failure the un-sent job is
+        //    returned inside the error and dropped HERE (consuming the
+        //    closure without running it), dispatch stops, and we fall
+        //    through to the join loop before reporting the dead thread;
+        //  * the join loop blocks until one result per *dispatched* job
+        //    has arrived, and a result is only sent after the task
+        //    closure has been consumed, so every borrow ends first;
+        //  * `rx.recv()` can only fail once every dispatched job's
+        //    sender clone is dropped — i.e. after all their closures
+        //    were consumed — so even that panic path escapes with no
+        //    borrow outstanding.
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<R>)>();
+        let mut dispatched = 0usize;
+        let mut dead_thread = false;
+        for (i, task) in tasks.into_iter().enumerate() {
+            let tx = tx.clone();
+            let job: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+                // The receiver outlives every dispatched job; if it is
+                // somehow gone there is nobody left to inform.
+                let _ = tx.send((i, result));
+            });
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(job)
+            };
+            if let Err(mpsc::SendError(job)) = self.senders[i % self.senders.len()].send(job) {
+                drop(job); // consume the closure on the caller's thread
+                dead_thread = true;
+                break;
+            }
+            dispatched += 1;
+        }
+        drop(tx);
+        let mut slots: Vec<Option<std::thread::Result<R>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for _ in 0..dispatched {
+            let (i, result) = rx
+                .recv()
+                .expect("worker-pool task vanished without reporting a result");
+            slots[i] = Some(result);
+        }
+        assert!(!dead_thread, "worker-pool thread died");
+        let mut out = Vec::with_capacity(n);
+        for slot in slots {
+            match slot.expect("worker-pool result slot never filled") {
+                Ok(v) => out.push(v),
+                Err(panic) => std::panic::resume_unwind(panic),
+            }
+        }
+        out
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channels wakes every parked thread with RecvError;
+        // joining makes shutdown observable (no detached threads linger
+        // past the owning Session).
+        self.senders.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
 
 /// What each worker does with its freshly drawn gradient.
 pub enum LocalUpdate<'a> {
@@ -35,7 +181,7 @@ pub enum LocalUpdate<'a> {
     Sgd { eta: f32 },
 }
 
-/// Per-worker slice of a [`LocalUpdate`], movable onto a worker thread.
+/// Per-worker slice of a [`LocalUpdate`], movable onto a pool thread.
 enum WorkerUpdate<'a> {
     Momentum(&'a mut MomentumState, f32),
     Sgd(f32),
@@ -50,21 +196,29 @@ impl WorkerUpdate<'_> {
     }
 }
 
-/// Below this dimension, scoped-thread spawn+join (tens of µs per
-/// worker) costs more than the gradient it parallelizes, so the engine
-/// defaults to the sequential path. Explicit [`LocalStepEngine::
-/// set_parallel`]`(true)` overrides — the determinism tests force the
-/// threaded path at tiny d on purpose.
-const PARALLEL_MIN_DIM: usize = 4096;
+/// Below this dimension, even pool dispatch (one channel send + recv
+/// per worker — order ~1–2 µs on typical hardware, versus tens of µs
+/// for the PR 1 scoped-thread spawn it replaces) costs more than the
+/// gradient it parallelizes, so the engine defaults to the sequential
+/// path. The 4× drop from the spawn-era 4096 follows that cost ratio;
+/// it is an ESTIMATE until the `algo_step`/`mix_round` records in
+/// BENCH_hotpath.json confirm it on a real machine (the committed
+/// baseline is flagged `estimated` — revisit this constant with the
+/// first real bench run; flipping it never changes results, only
+/// wall-clock). Explicit [`LocalStepEngine::set_parallel`]`(true)`
+/// overrides — the determinism tests force the pooled path at tiny d
+/// on purpose.
+const PARALLEL_MIN_DIM: usize = 1024;
 
-/// Owns the per-worker gradient buffers and the threading policy.
+/// Owns the per-worker gradient buffers, the persistent [`WorkerPool`],
+/// and the threading policy.
 ///
 /// Buffers are **lazy**: the K per-worker buffers materialize only when
-/// a path that truly needs K gradients alive at once runs (the
-/// scoped-thread parallel fan-out). Sequential paths consume each
-/// worker's gradient immediately after drawing it, so they reuse ONE
-/// scratch buffer — a non-splittable source like the XLA transformer
-/// (d in the millions) never pays K×d resident memory.
+/// a path that truly needs K gradients alive at once runs (the pooled
+/// parallel fan-out). Sequential paths consume each worker's gradient
+/// immediately after drawing it, so they reuse ONE scratch buffer — a
+/// non-splittable source like the XLA transformer (d in the millions)
+/// never pays K×d resident memory.
 pub struct LocalStepEngine {
     /// Dimension d every buffer is sized to on first use.
     d: usize,
@@ -74,32 +228,56 @@ pub struct LocalStepEngine {
     /// Single reusable gradient buffer for the sequential path.
     scratch: Vec<f32>,
     parallel: bool,
+    /// The persistent pool shared by the local-step fan-out and the
+    /// communication round; `None` until a parallel mode ever engages.
+    pool: Option<WorkerPool>,
 }
 
 impl LocalStepEngine {
     /// Engine for K workers in dimension d. Parallelism defaults on when
     /// the host has more than one core AND the per-worker work is large
-    /// enough to amortize thread spawns (d >= [`PARALLEL_MIN_DIM`]);
+    /// enough to amortize pool dispatch (d >= [`PARALLEL_MIN_DIM`]);
     /// flipping it never changes results, only wall-clock.
     pub fn new(k: usize, d: usize) -> Self {
-        let parallel = d >= PARALLEL_MIN_DIM
-            && std::thread::available_parallelism()
-                .map(|n| n.get() > 1)
-                .unwrap_or(false);
-        Self { d, bufs: vec![Vec::new(); k], scratch: Vec::new(), parallel }
+        let cores = Self::cores();
+        let parallel = d >= PARALLEL_MIN_DIM && cores > 1 && k > 1;
+        let pool = if parallel { Some(WorkerPool::new(k.min(cores))) } else { None };
+        Self { d, bufs: vec![Vec::new(); k], scratch: Vec::new(), parallel, pool }
     }
 
     /// Sequential-only engine (profiling / determinism baselines).
     pub fn sequential(k: usize, d: usize) -> Self {
-        Self { d, bufs: vec![Vec::new(); k], scratch: Vec::new(), parallel: false }
+        Self { d, bufs: vec![Vec::new(); k], scratch: Vec::new(), parallel: false, pool: None }
     }
 
+    fn cores() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Toggle the pooled path. Turning it on lazily spins the pool up if
+    /// this engine never had one (e.g. tiny-d engines force-enabled by
+    /// the determinism tests); turning it off parks the pool but keeps
+    /// it for a later re-enable.
     pub fn set_parallel(&mut self, on: bool) {
+        let k = self.bufs.len();
+        if on && self.pool.is_none() && k > 1 {
+            self.pool = Some(WorkerPool::new(k.min(Self::cores())));
+        }
         self.parallel = on;
     }
 
     pub fn is_parallel(&self) -> bool {
         self.parallel
+    }
+
+    /// The shared pool for the communication phase, or `None` when the
+    /// engine is running sequentially. Algorithms pass this into
+    /// [`crate::algorithms::GossipState::mix`] and
+    /// [`crate::algorithms::CompressedExchange::round`], so ONE pool
+    /// (created once per engine, hence once per `Session`) serves both
+    /// halves of the step loop.
+    pub fn comm_pool(&self) -> Option<&WorkerPool> {
+        if self.parallel { self.pool.as_ref() } else { None }
     }
 
     fn ensure_bufs(bufs: &mut [Vec<f32>], d: usize) {
@@ -128,10 +306,11 @@ impl LocalStepEngine {
             }
             LocalUpdate::Sgd { eta } => (0..k).map(|_| WorkerUpdate::Sgd(eta)).collect(),
         };
-        let losses = if self.parallel && k > 1 {
-            Self::try_parallel(source, xs, &mut self.bufs, self.d, &mut ups)
-        } else {
-            None
+        let losses = match &self.pool {
+            Some(pool) if self.parallel && k > 1 => {
+                Self::try_parallel(source, xs, &mut self.bufs, self.d, &mut ups, pool)
+            }
+            _ => None,
         };
         let losses = match losses {
             Some(l) => l,
@@ -152,9 +331,9 @@ impl LocalStepEngine {
     ///
     /// The sequential path accumulates through the single scratch buffer
     /// — one gradient alive at a time, exactly the pre-engine memory
-    /// profile — while the parallel path (split sources only) fans out
-    /// into the per-worker buffers first. Both reduce in worker order,
-    /// so the result is bit-identical either way.
+    /// profile — while the pooled path (split sources only) fans out
+    /// into the per-worker buffers first. Both reduce in worker order on
+    /// the caller's thread, so the result is bit-identical either way.
     pub fn grad_at_shared_mean_into(
         &mut self,
         source: &mut dyn GradientSource,
@@ -164,21 +343,24 @@ impl LocalStepEngine {
         let k = self.bufs.len();
         assert_eq!(mean_out.len(), self.d);
         assert!(k >= 1);
-        let losses: Vec<f64>;
-        if self.parallel && k > 1 {
-            if let Some(l) = Self::try_parallel_shared(source, x, &mut self.bufs, self.d) {
-                mean_out.copy_from_slice(&self.bufs[0]);
-                for g in &self.bufs[1..] {
-                    linalg::axpy(1.0, g, mean_out);
+        if let Some(pool) = &self.pool {
+            if self.parallel && k > 1 {
+                if let Some(l) =
+                    Self::try_parallel_shared(source, x, &mut self.bufs, self.d, pool)
+                {
+                    mean_out.copy_from_slice(&self.bufs[0]);
+                    for g in &self.bufs[1..] {
+                        linalg::axpy(1.0, g, mean_out);
+                    }
+                    linalg::scale(1.0 / k as f32, mean_out);
+                    return l.iter().sum::<f64>() / k as f64;
                 }
-                linalg::scale(1.0 / k as f32, mean_out);
-                return l.iter().sum::<f64>() / k as f64;
             }
         }
         if self.scratch.len() != self.d {
             self.scratch.resize(self.d, 0.0);
         }
-        losses = (0..k)
+        let losses: Vec<f64> = (0..k)
             .map(|w| {
                 let loss = source.grad_into(w, x, &mut self.scratch);
                 if w == 0 {
@@ -210,9 +392,9 @@ impl LocalStepEngine {
             .collect()
     }
 
-    /// `None` if the source does not split; otherwise one scoped thread
-    /// per worker, each owning (shard, x_k, buf_k, update_k). Buffers
-    /// are materialized only after the split succeeds, so non-splittable
+    /// `None` if the source does not split; otherwise one pool task per
+    /// worker, each owning (shard, x_k, buf_k, update_k). Buffers are
+    /// materialized only after the split succeeds, so non-splittable
     /// sources never allocate them.
     fn try_parallel(
         source: &mut dyn GradientSource,
@@ -220,29 +402,25 @@ impl LocalStepEngine {
         bufs: &mut [Vec<f32>],
         d: usize,
         ups: &mut [WorkerUpdate<'_>],
+        pool: &WorkerPool,
     ) -> Option<Vec<f64>> {
         let workers = source.split_workers()?;
         assert_eq!(workers.len(), xs.len(), "split_workers() must yield K shards");
         Self::ensure_bufs(bufs, d);
-        Some(std::thread::scope(|s| {
-            let handles: Vec<_> = workers
-                .into_iter()
-                .zip(xs.iter_mut())
-                .zip(bufs.iter_mut())
-                .zip(ups.iter_mut())
-                .map(|(((mut shard, x), buf), up)| {
-                    s.spawn(move || {
-                        let loss = shard.grad_into(x, buf);
-                        up.apply(x, buf);
-                        loss
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("worker thread panicked"))
-                .collect()
-        }))
+        let tasks: Vec<ScopedTask<'_, f64>> = workers
+            .into_iter()
+            .zip(xs.iter_mut())
+            .zip(bufs.iter_mut())
+            .zip(ups.iter_mut())
+            .map(|(((mut shard, x), buf), up)| {
+                Box::new(move || {
+                    let loss = shard.grad_into(x, buf);
+                    up.apply(x, buf);
+                    loss
+                }) as ScopedTask<'_, f64>
+            })
+            .collect();
+        Some(pool.run_scoped(tasks))
     }
 
     fn try_parallel_shared(
@@ -250,21 +428,19 @@ impl LocalStepEngine {
         x: &[f32],
         bufs: &mut [Vec<f32>],
         d: usize,
+        pool: &WorkerPool,
     ) -> Option<Vec<f64>> {
         let workers = source.split_workers()?;
         assert_eq!(workers.len(), bufs.len(), "split_workers() must yield K shards");
         Self::ensure_bufs(bufs, d);
-        Some(std::thread::scope(|s| {
-            let handles: Vec<_> = workers
-                .into_iter()
-                .zip(bufs.iter_mut())
-                .map(|(mut shard, buf)| s.spawn(move || shard.grad_into(x, buf)))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("worker thread panicked"))
-                .collect()
-        }))
+        let tasks: Vec<ScopedTask<'_, f64>> = workers
+            .into_iter()
+            .zip(bufs.iter_mut())
+            .map(|(mut shard, buf)| {
+                Box::new(move || shard.grad_into(x, buf)) as ScopedTask<'_, f64>
+            })
+            .collect();
+        Some(pool.run_scoped(tasks))
     }
 }
 
@@ -355,10 +531,16 @@ mod tests {
     #[test]
     fn small_dims_default_to_sequential_but_override_works() {
         let e = LocalStepEngine::new(4, 8);
-        assert!(!e.is_parallel(), "tiny d must not pay thread spawns by default");
+        assert!(!e.is_parallel(), "tiny d must not pay pool dispatch by default");
+        assert!(e.comm_pool().is_none());
         let mut e = LocalStepEngine::new(4, 8);
         e.set_parallel(true);
         assert!(e.is_parallel());
+        if std::thread::available_parallelism().map(|n| n.get() > 1).unwrap_or(false) {
+            assert!(e.comm_pool().is_some(), "forcing parallel must spin the pool up");
+        }
+        e.set_parallel(false);
+        assert!(e.comm_pool().is_none(), "sequential mode exposes no comm pool");
     }
 
     #[test]
@@ -384,5 +566,89 @@ mod tests {
         let (mut src, mut xs) = setup(3, 4, 0.0, 9);
         let mut engine = LocalStepEngine::new(2, 4);
         engine.local_step(&mut src, &mut xs, LocalUpdate::Sgd { eta: 0.1 });
+    }
+
+    #[test]
+    fn pool_returns_results_in_task_order() {
+        let pool = WorkerPool::new(4);
+        for round in 0..20u64 {
+            let tasks: Vec<ScopedTask<'_, u64>> = (0..13u64)
+                .map(|i| {
+                    Box::new(move || {
+                        // Skew completion order: early tasks finish last.
+                        if (i + round) % 3 == 0 {
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        i * 10
+                    }) as ScopedTask<'_, u64>
+                })
+                .collect();
+            let got = pool.run_scoped(tasks);
+            assert_eq!(got, (0..13).map(|i| i * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn pool_tasks_may_borrow_caller_state() {
+        let pool = WorkerPool::new(3);
+        let mut rows = vec![vec![0.0f32; 16]; 5];
+        let tasks: Vec<ScopedTask<'_, ()>> = rows
+            .iter_mut()
+            .enumerate()
+            .map(|(i, row)| {
+                Box::new(move || {
+                    for v in row.iter_mut() {
+                        *v = i as f32;
+                    }
+                }) as ScopedTask<'_, ()>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        for (i, row) in rows.iter().enumerate() {
+            assert!(row.iter().all(|&v| v == i as f32));
+        }
+    }
+
+    #[test]
+    fn pool_handles_more_tasks_than_threads() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<ScopedTask<'_, usize>> =
+            (0..64).map(|i| Box::new(move || i) as ScopedTask<'_, usize>).collect();
+        assert_eq!(pool.run_scoped(tasks), (0..64).collect::<Vec<_>>());
+        assert_eq!(pool.threads(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "task 2 exploded")]
+    fn pool_propagates_task_panics() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<ScopedTask<'_, usize>> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 2 {
+                        panic!("task 2 exploded");
+                    }
+                    i
+                }) as ScopedTask<'_, usize>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+    }
+
+    #[test]
+    fn pool_survives_a_caught_panic_round() {
+        // A panicking task must not poison the pool: threads stay alive
+        // and later rounds still run (the catch_unwind wrapper keeps the
+        // worker loop going).
+        let pool = WorkerPool::new(2);
+        let boom: Vec<ScopedTask<'_, usize>> =
+            vec![Box::new(|| panic!("boom")) as ScopedTask<'_, usize>];
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_scoped(boom);
+        }))
+        .is_err());
+        let tasks: Vec<ScopedTask<'_, usize>> =
+            (0..6).map(|i| Box::new(move || i + 1) as ScopedTask<'_, usize>).collect();
+        assert_eq!(pool.run_scoped(tasks), vec![1, 2, 3, 4, 5, 6]);
     }
 }

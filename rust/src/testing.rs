@@ -7,7 +7,47 @@
 //! deterministic [`crate::rng::Xoshiro256`], so failures are always
 //! reproducible.
 
+use crate::compress::{CompressedVec, Compressor, Identity};
 use crate::rng::Xoshiro256;
+
+/// A codec that lies about its wire cost: behaves exactly like
+/// [`Identity`] but costs one byte it never emits. Shared by the tests
+/// of [`crate::compress::check_wire_size`]'s `Err` arm and of the comm
+/// round's release-mode panic on a miscosted codec — one definition, so
+/// the two cannot drift apart.
+#[derive(Clone, Copy, Debug)]
+pub struct MisCosted;
+
+impl Compressor for MisCosted {
+    fn name(&self) -> String {
+        "miscosted".into()
+    }
+
+    fn compress_into(&self, x: &[f32], rng: &mut Xoshiro256, out: &mut CompressedVec) {
+        Identity.compress_into(x, rng, out);
+        out.wire_bytes += 1; // the lie
+    }
+
+    fn encode_into(&self, c: &CompressedVec, out: &mut Vec<u8>) {
+        Identity.encode_into(c, out);
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) {
+        Identity.decode_into(bytes, out);
+    }
+
+    fn delta(&self, _d: usize) -> f64 {
+        1.0
+    }
+
+    fn encoded_bytes(&self, d: usize) -> usize {
+        4 * d + 1
+    }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
+    }
+}
 
 /// Run `body` against `cases` independently-seeded RNG streams derived
 /// from `seed`. Panics (re-raising the inner panic message) identify the

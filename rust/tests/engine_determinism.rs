@@ -1,22 +1,30 @@
 //! The engine determinism contract: for EVERY algorithm in
-//! `algorithms::ALL_NAMES`, driving the local-step phase through the
-//! parallel `LocalStepEngine` must produce traces **bit-identical** to
-//! the sequential path — same per-worker iterates, same mean losses,
-//! same wire bytes. Randomness lives in per-worker streams and every
-//! buffer is per-worker, so the thread schedule has nothing to perturb;
-//! this test is the executable form of that argument.
+//! `algorithms::ALL_NAMES`, driving the step loop through the persistent
+//! `WorkerPool` — BOTH the local-step phase and the parallel
+//! communication round (gossip mixing / compressed exchange) — must
+//! produce traces **bit-identical** to the sequential path: same
+//! per-worker iterates, same mean losses, same wire bytes. Randomness
+//! lives in per-worker streams, every buffer is per-worker, and all
+//! reductions happen on the caller's thread in worker order, so the
+//! thread schedule has nothing to perturb; these tests are the
+//! executable form of that argument.
 
 use pdsgdm::algorithms::{self, Algorithm, Hyper, StepStats};
 use pdsgdm::comm::Network;
+use pdsgdm::engine::{ScopedTask, WorkerPool};
 use pdsgdm::grad::{GradientSource, Quadratic};
 use pdsgdm::optim::LrSchedule;
 use pdsgdm::testing::forall;
 use pdsgdm::topology::{mixing_matrix, Topology, Weighting};
 
-/// Run `name` for `steps` iterations on a seeded Quadratic oracle;
-/// return (per-step stats, final per-worker iterates).
+/// Run `name` on `topo` for `steps` iterations on a seeded Quadratic
+/// oracle; return (per-step stats, final per-worker iterates).
+/// `parallel = true` forces the pooled path at tiny d — including the
+/// parallel comm round, since the engine's pool is what the algorithms
+/// hand to `GossipState::mix` / `CompressedExchange::round`.
 fn run_algorithm(
     name: &str,
+    topo: Topology,
     k: usize,
     d: usize,
     seed: u64,
@@ -24,7 +32,7 @@ fn run_algorithm(
     steps: u64,
 ) -> (Vec<StepStats>, Vec<Vec<f32>>) {
     let mut src = Quadratic::new(k, d, 1.0, 0.1, seed);
-    let graph = Topology::Ring.build(k, 0);
+    let graph = topo.build(k, 0);
     let w = mixing_matrix(&graph, Weighting::UniformDegree);
     let mut net = Network::new(&graph);
     let x0 = src.init(seed ^ 0xD5);
@@ -43,25 +51,33 @@ fn run_algorithm(
     (stats, xs)
 }
 
-fn assert_bit_identical(name: &str, seq: &(Vec<StepStats>, Vec<Vec<f32>>), par: &(Vec<StepStats>, Vec<Vec<f32>>)) {
+fn assert_bit_identical(
+    name: &str,
+    topo: Topology,
+    seq: &(Vec<StepStats>, Vec<Vec<f32>>),
+    par: &(Vec<StepStats>, Vec<Vec<f32>>),
+) {
     for (t, (s, p)) in seq.0.iter().zip(&par.0).enumerate() {
         assert_eq!(
             s.mean_loss.to_bits(),
             p.mean_loss.to_bits(),
-            "{name}: mean_loss diverged at step {t} ({} vs {})",
+            "{name} on {topo:?}: mean_loss diverged at step {t} ({} vs {})",
             s.mean_loss,
             p.mean_loss
         );
-        assert_eq!(s.bytes, p.bytes, "{name}: wire bytes diverged at step {t}");
-        assert_eq!(s.communicated, p.communicated, "{name}: schedule diverged at step {t}");
+        assert_eq!(s.bytes, p.bytes, "{name} on {topo:?}: wire bytes diverged at step {t}");
+        assert_eq!(
+            s.communicated, p.communicated,
+            "{name} on {topo:?}: schedule diverged at step {t}"
+        );
     }
     for (w, (a, b)) in seq.1.iter().zip(&par.1).enumerate() {
-        assert_eq!(a.len(), b.len(), "{name}: worker {w} dimension mismatch");
+        assert_eq!(a.len(), b.len(), "{name} on {topo:?}: worker {w} dimension mismatch");
         for (i, (x, y)) in a.iter().zip(b).enumerate() {
             assert_eq!(
                 x.to_bits(),
                 y.to_bits(),
-                "{name}: worker {w} coord {i} diverged ({x} vs {y})"
+                "{name} on {topo:?}: worker {w} coord {i} diverged ({x} vs {y})"
             );
         }
     }
@@ -74,9 +90,31 @@ fn prop_parallel_engine_is_bit_identical_for_every_algorithm() {
         let d = 1 + rng.below(48);
         let seed = rng.next_u64();
         for name in algorithms::ALL_NAMES {
-            let seq = run_algorithm(name, k, d, seed, false, 9);
-            let par = run_algorithm(name, k, d, seed, true, 9);
-            assert_bit_identical(name, &seq, &par);
+            let seq = run_algorithm(name, Topology::Ring, k, d, seed, false, 9);
+            let par = run_algorithm(name, Topology::Ring, k, d, seed, true, 9);
+            assert_bit_identical(name, Topology::Ring, &seq, &par);
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_comm_round_is_bit_identical_across_topologies() {
+    // ALL_NAMES × {Ring, Star, Chain}: the pooled comm round
+    // (force-enabled at tiny d via set_parallel) must match the
+    // sequential round bit-for-bit on regular AND irregular graphs —
+    // the star's hub mixes K−1 neighbor terms, the chain's endpoints
+    // only one, so this sweeps every weighted-sum arity the fan-out
+    // can produce. period=2 over 8 steps → 4 comm rounds each.
+    forall(0x70B0107, 3, |rng| {
+        let k = 3 + rng.below(6);
+        let d = 1 + rng.below(32);
+        let seed = rng.next_u64();
+        for topo in [Topology::Ring, Topology::Star, Topology::Chain] {
+            for name in algorithms::ALL_NAMES {
+                let seq = run_algorithm(name, topo, k, d, seed, false, 8);
+                let par = run_algorithm(name, topo, k, d, seed, true, 8);
+                assert_bit_identical(name, topo, &seq, &par);
+            }
         }
     });
 }
@@ -119,4 +157,53 @@ fn parallel_engine_is_bit_identical_on_split_oracles() {
         });
         assert!(bitwise, "mlp={mlp}: iterates diverged");
     }
+}
+
+// ---------------------------------------------------------------------------
+// WorkerPool unit behavior (public API)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn worker_pool_join_order_is_deterministic() {
+    // Results must come back in TASK order no matter which thread
+    // finishes first — we skew completion so late tasks finish early.
+    let pool = WorkerPool::new(4);
+    for round in 0..25u64 {
+        let tasks: Vec<ScopedTask<'_, u64>> = (0..11u64)
+            .map(|i| {
+                Box::new(move || {
+                    if (i + round) % 3 == 0 {
+                        std::thread::sleep(std::time::Duration::from_micros(300));
+                    }
+                    i * 7 + round
+                }) as ScopedTask<'_, u64>
+            })
+            .collect();
+        let got = pool.run_scoped(tasks);
+        assert_eq!(got, (0..11).map(|i| i * 7 + round).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn worker_pool_shutdown_on_drop_is_clean() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    let counter = Arc::new(AtomicUsize::new(0));
+    let pool = WorkerPool::new(3);
+    assert_eq!(pool.threads(), 3);
+    let tasks: Vec<ScopedTask<'_, ()>> = (0..30)
+        .map(|_| {
+            let c = Arc::clone(&counter);
+            Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }) as ScopedTask<'_, ()>
+        })
+        .collect();
+    pool.run_scoped(tasks);
+    assert_eq!(counter.load(Ordering::SeqCst), 30, "every task ran exactly once");
+    // Drop joins every thread; if shutdown leaked a parked thread this
+    // would deadlock the test binary (harness timeout), and if any task
+    // closure were still alive it would hold a counter reference.
+    drop(pool);
+    assert_eq!(Arc::strong_count(&counter), 1, "all task closures were consumed");
 }
