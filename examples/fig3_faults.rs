@@ -1,0 +1,84 @@
+//! Fault & heterogeneity sweep: how an unreliable fabric and non-IID
+//! data bend the convergence curves of Figure 3's algorithm family.
+//!
+//!     cargo run --release --example fig3_faults
+//!
+//! Part 1 sweeps the per-edge message drop probability on the quadratic
+//! workload: gossip renormalizes mixing weights over the neighbors it
+//! actually heard from, so runs stay finite but consensus degrades as
+//! the effective spectral gap shrinks.
+//!
+//! Part 2 sweeps the Dirichlet concentration α on the logistic workload
+//! (α = 100 ≈ IID, α = 0.1 = near single-class shards), comparing
+//! PD-SGDM against Momentum Tracking — the heterogeneity-robust
+//! comparator whose gradient tracker is designed for exactly this skew.
+
+use pdsgdm::config::{ExperimentConfig, WorkloadConfig};
+use pdsgdm::coordinator::{Session, SessionSpec};
+use pdsgdm::data::Sharding;
+use pdsgdm::optim::LrSchedule;
+use pdsgdm::topology::Topology;
+
+fn base(algorithm: &str) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.algorithm = algorithm.into();
+    c.workers = 8;
+    c.topology = Topology::Ring;
+    c.steps = 400;
+    c.eval_every = 40;
+    c.seed = 6;
+    c
+}
+
+fn run(c: ExperimentConfig) -> anyhow::Result<(f64, f64)> {
+    let mut session = Session::build(SessionSpec::new(c))?;
+    session.run_to_stop();
+    let trace = session.into_trace();
+    let peak = trace.points.iter().map(|p| p.consensus).fold(0.0, f64::max);
+    Ok((trace.final_loss(), peak))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== drop-rate sweep (quadratic, ring K=8) ==");
+    println!(
+        "{:<20} {:>10} {:>12} {:>16}",
+        "algorithm", "drop_prob", "final_loss", "peak_consensus"
+    );
+    for algo in ["pd-sgdm", "d-sgd", "momentum-tracking"] {
+        for drop in [0.0, 0.1, 0.2, 0.4] {
+            let mut c = base(algo);
+            c.workload = WorkloadConfig::Quadratic { dim: 64, heterogeneity: 2.0, noise: 0.2 };
+            c.hyper.lr = LrSchedule::Constant { eta: 0.02 };
+            c.faults.drop_prob = drop;
+            c.faults.seed = 17;
+            let (loss, peak) = run(c)?;
+            println!("{algo:<20} {drop:>10.2} {loss:>12.5} {peak:>16.4e}");
+        }
+    }
+
+    println!("\n== Dirichlet-α sweep (logistic, ring K=8) ==");
+    println!(
+        "{:<20} {:>10} {:>12} {:>16}",
+        "algorithm", "alpha", "final_loss", "peak_consensus"
+    );
+    for algo in ["pd-sgdm", "momentum-tracking"] {
+        for alpha in [100.0, 1.0, 0.3, 0.1] {
+            let mut c = base(algo);
+            c.workload =
+                WorkloadConfig::Logistic { n: 2000, dim: 32, classes: 8, batch: 16, l2: 1e-4 };
+            c.hyper.lr = LrSchedule::Constant { eta: 0.05 };
+            c.sharding = Sharding::Dirichlet { alpha };
+            let (loss, peak) = run(c)?;
+            println!("{algo:<20} {alpha:>10.1} {loss:>12.5} {peak:>16.4e}");
+        }
+    }
+
+    println!(
+        "\nDrops renormalize the mixing weights over surviving neighbors, so\n\
+         the fabric never deadlocks — but peak consensus error grows with\n\
+         drop_prob. Under Dirichlet skew (small α), Momentum Tracking's\n\
+         gossiped gradient tracker keeps its momentum aimed at the global\n\
+         objective while plain periodic momentum drifts toward local minima."
+    );
+    Ok(())
+}

@@ -62,6 +62,10 @@ impl Algorithm for DSgd {
         self.engine.set_parallel(on);
     }
 
+    fn set_worker_params(&mut self, k: usize, x: &[f32]) {
+        self.xs[k].copy_from_slice(x);
+    }
+
     fn state_save(&self, w: &mut crate::state::StateWriter) {
         w.tag("d-sgd");
         w.put_f32_mat(&self.xs);
@@ -123,6 +127,10 @@ impl Algorithm for PdSgd {
 
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
+    }
+
+    fn set_worker_params(&mut self, k: usize, x: &[f32]) {
+        self.xs[k].copy_from_slice(x);
     }
 
     fn state_save(&self, w: &mut crate::state::StateWriter) {
@@ -204,6 +212,11 @@ impl Algorithm for DSgdm {
 
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
+    }
+
+    fn set_worker_params(&mut self, k: usize, x: &[f32]) {
+        self.xs[k].copy_from_slice(x);
+        self.moms[k].reset();
     }
 
     fn state_save(&self, w: &mut crate::state::StateWriter) {
@@ -352,6 +365,10 @@ impl Algorithm for ChocoSgd {
 
     fn set_parallel(&mut self, on: bool) {
         self.inner.set_parallel(on);
+    }
+
+    fn set_worker_params(&mut self, k: usize, x: &[f32]) {
+        self.inner.set_worker_params(k, x);
     }
 
     fn state_save(&self, w: &mut crate::state::StateWriter) {
@@ -507,6 +524,12 @@ impl Algorithm for DeepSqueeze {
 
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
+    }
+
+    fn set_worker_params(&mut self, k: usize, x: &[f32]) {
+        self.xs[k].copy_from_slice(x);
+        // A restarted worker carries no accumulated compression residual.
+        self.errs[k].iter_mut().for_each(|e| *e = 0.0);
     }
 
     fn state_save(&self, w: &mut crate::state::StateWriter) {

@@ -194,6 +194,15 @@ impl Algorithm for CpdSgdm {
         self.engine.set_parallel(on);
     }
 
+    fn set_worker_params(&mut self, k: usize, x: &[f32]) {
+        self.xs[k].copy_from_slice(x);
+        self.moms[k].reset();
+        // x̂ is left untouched: every worker holds the same canonical
+        // copy of x̂^(k), so rewriting it here would desynchronize the
+        // fleet's view. The diff compression q = Q(x − x̂) self-corrects
+        // the enlarged residual over the following rounds.
+    }
+
     fn state_save(&self, w: &mut crate::state::StateWriter) {
         w.tag("cpd-sgdm");
         w.put_f32_mat(&self.xs);

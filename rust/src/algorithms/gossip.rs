@@ -100,16 +100,67 @@ impl GossipState {
         // the send loop, not by receiver scheduling), then run one fused
         // weighted-sum pass per worker over (self, received neighbors).
         let inboxes: Vec<Vec<Message>> = (0..k).map(|to| net.recv_all(to)).collect();
+        let faults_active = net.faults_active();
+        let neighbor_counts: Vec<usize> = (0..k).map(|to| net.neighbors(to).len()).collect();
         {
             let w = &self.w;
             let terms_table: Vec<Vec<(f32, &[f32])>> = (0..k)
                 .map(|to| {
                     let msgs = &inboxes[to];
-                    let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(1 + msgs.len());
-                    terms.push((w[(to, to)] as f32, own[to].as_slice()));
+                    if !faults_active {
+                        // Legacy fast path: exactly one message per
+                        // neighbor, weights already sum to 1.
+                        let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(1 + msgs.len());
+                        terms.push((w[(to, to)] as f32, own[to].as_slice()));
+                        for msg in msgs {
+                            let x = msg.payload.dense().expect("gossip exchanges dense payloads");
+                            terms.push((w[(to, msg.from)] as f32, x));
+                        }
+                        return terms;
+                    }
+                    // Hardened path (fault plan installed): a sender may
+                    // be missing (drop/churn) or duplicated (a stale
+                    // delayed copy plus a fresh one). Keep the *last*
+                    // message per sender — `recv_all` injects delayed
+                    // mail before fresh mail, so last is freshest — and
+                    // renormalize the mixing weights over the senders
+                    // actually heard from, in f64, so each row still
+                    // sums to 1 and x̄ drifts only by what was genuinely
+                    // lost, never by renormalization error (DESIGN.md §7).
+                    let mut last: Vec<Option<&[f32]>> = vec![None; k];
                     for msg in msgs {
                         let x = msg.payload.dense().expect("gossip exchanges dense payloads");
-                        terms.push((w[(to, msg.from)] as f32, x));
+                        last[msg.from] = Some(x);
+                    }
+                    let heard = last.iter().filter(|m| m.is_some()).count();
+                    let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(1 + heard);
+                    if heard == neighbor_counts[to] {
+                        // Full house: identical weights *and term order*
+                        // as the fast path (messages arrive in sender
+                        // order), so a zero-rate plan stays bit-identical.
+                        terms.push((w[(to, to)] as f32, own[to].as_slice()));
+                        for (from, x) in last.iter().enumerate() {
+                            if let Some(x) = x {
+                                terms.push((w[(to, from)] as f32, x));
+                            }
+                        }
+                    } else {
+                        let mut total = w[(to, to)];
+                        for (from, x) in last.iter().enumerate() {
+                            if x.is_some() {
+                                total += w[(to, from)];
+                            }
+                        }
+                        // total ≥ w_to,to > 0 for every supported
+                        // weighting; an isolated receiver degenerates to
+                        // the identity (keeps computing locally).
+                        let scale = 1.0 / total;
+                        terms.push(((w[(to, to)] * scale) as f32, own[to].as_slice()));
+                        for (from, x) in last.iter().enumerate() {
+                            if let Some(x) = x {
+                                terms.push(((w[(to, from)] * scale) as f32, x));
+                            }
+                        }
                     }
                     terms
                 })
@@ -271,15 +322,24 @@ impl CompressedExchange {
         // (5) Decode each sender exactly once into its reusable row —
         // from the received bytes where the message crossed a wire, from
         // the local buffer otherwise (own message / K=1 fleet) — fanned
-        // over the pool (decoder j writes only decoded[j]).
+        // over the pool (decoder j writes only decoded[j]). An *absent*
+        // sender (churn) decodes to zero instead: falling back to its
+        // local buffer would silently repair the outage, and x̂_j must
+        // stay frozen for every worker while j is away so the single
+        // canonical replica estimate stays consistent (DESIGN.md §7).
         ensure_rows(&mut self.decoded, k, d);
         {
-            let sources: Vec<&[u8]> = (0..k)
+            let sources: Vec<Option<&[u8]>> = (0..k)
                 .map(|j| {
-                    first_rx[j]
-                        .as_deref()
-                        .map(|v| v.as_slice())
-                        .unwrap_or_else(|| shipped[j].as_slice())
+                    if net.is_absent(j) {
+                        return None;
+                    }
+                    Some(
+                        first_rx[j]
+                            .as_deref()
+                            .map(|v| v.as_slice())
+                            .unwrap_or_else(|| shipped[j].as_slice()),
+                    )
                 })
                 .collect();
             let rows: Vec<ScopedTask<'_, ()>> = self
@@ -287,7 +347,10 @@ impl CompressedExchange {
                 .iter_mut()
                 .zip(sources)
                 .map(|(dec, bytes)| {
-                    Box::new(move || compressor.decode_into(bytes, dec)) as ScopedTask<'_, ()>
+                    Box::new(move || match bytes {
+                        Some(bytes) => compressor.decode_into(bytes, dec),
+                        None => dec.iter_mut().for_each(|v| *v = 0.0),
+                    }) as ScopedTask<'_, ()>
                 })
                 .collect();
             run_rows(pool, rows);
@@ -304,8 +367,11 @@ impl CompressedExchange {
             *wire = Arc::try_unwrap(payload).unwrap_or_default();
         }
         let charged = net.total_bytes - before;
+        // `live_degree` == plain degree without churn, so the faultless
+        // expectation is literally unchanged; under churn only live
+        // links were charged.
         let expected: u64 = (0..k)
-            .map(|i| net.neighbors(i).len() as u64 * self.wires[i].len() as u64)
+            .map(|i| net.live_degree(i) as u64 * self.wires[i].len() as u64)
             .sum();
         assert_eq!(
             charged, expected,
@@ -472,6 +538,90 @@ mod tests {
         let scratch2: Vec<*const f32> = gs.scratch.iter().map(|s| s.as_ptr()).collect();
         assert_eq!(gen2, scratch1, "round outputs must land in the old scratch rows");
         assert_eq!(scratch2, gen1, "old iterate buffers must be recovered as scratch");
+    }
+
+    #[test]
+    fn mix_with_zero_rate_plan_is_bit_identical() {
+        use crate::comm::FaultPlan;
+        forall(0xFA0171, 10, |rng| {
+            let k = 3 + rng.below(6);
+            let d = 1 + rng.below(40);
+            for topo in [Topology::Ring, Topology::Star, Topology::Chain] {
+                let g = topo.build(k, 0);
+                let w = mixing_matrix(&g, Weighting::UniformDegree);
+                let xs0: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+                let mut gs_a = GossipState::new(w.clone());
+                let mut gs_b = GossipState::new(w);
+                let mut net_a = Network::new(&g);
+                let mut net_b = Network::new(&g);
+                net_b.set_fault_plan(FaultPlan::new(k, 0.0, 0.0, 1, 0.0, 1));
+                let mut xs_a = xs0.clone();
+                let mut xs_b = xs0;
+                for _ in 0..2 {
+                    let ba = gs_a.mix(&mut xs_a, &mut net_a, None);
+                    let bb = gs_b.mix(&mut xs_b, &mut net_b, None);
+                    assert_eq!(ba, bb, "{topo:?}: bytes diverged under zero-rate plan");
+                }
+                for (a, b) in xs_a.iter().zip(&xs_b) {
+                    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(bits(a), bits(b), "{topo:?}: zero-rate plan changed the mix");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn mix_renormalizes_over_heard_neighbors() {
+        use crate::comm::FaultPlan;
+        // Every dense message dropped: each worker hears nobody, so the
+        // renormalized round must degenerate to the identity — never a
+        // shrunk iterate (un-renormalized rows would sum to w_kk < 1).
+        let (mut gs, mut net) = setup(5);
+        net.set_fault_plan(FaultPlan::new(5, 1.0, 0.0, 1, 0.0, 3));
+        let xs0: Vec<Vec<f32>> = (0..5).map(|i| vec![1.0 + i as f32; 8]).collect();
+        let mut xs = xs0.clone();
+        let bytes = gs.mix(&mut xs, &mut net, None);
+        assert!(bytes > 0, "drops are lost in flight, still charged");
+        for (got, want) in xs.iter().zip(&xs0) {
+            crate::testing::assert_allclose(got, want, 1e-6, 1e-7);
+        }
+    }
+
+    #[test]
+    fn mix_under_churn_keeps_the_average_of_present_workers_stable() {
+        use crate::comm::FaultPlan;
+        // With worker 2 absent the remaining workers renormalize; the
+        // absent worker's iterate must be untouched and no weight mass
+        // may leak (each surviving row still sums to 1, so iterates stay
+        // inside the convex hull of the inputs).
+        let (mut gs, mut net) = setup(6);
+        net.set_fault_plan(FaultPlan::new(6, 0.0, 0.0, 1, 0.0, 3));
+        net.fault_plan_mut().unwrap().set_absent(2, true);
+        let mut xs: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32; 4]).collect();
+        let lo = 0.0f32;
+        let hi = 5.0f32;
+        gs.mix(&mut xs, &mut net, None);
+        assert_eq!(xs[2], vec![2.0; 4], "absent worker mixes with nobody");
+        for x in &xs {
+            assert!(x.iter().all(|&v| (lo..=hi).contains(&v)), "left the hull: {x:?}");
+        }
+    }
+
+    #[test]
+    fn compressed_round_freezes_absent_senders() {
+        use crate::comm::FaultPlan;
+        let k = 4;
+        let d = 8;
+        let inputs: Vec<Vec<f32>> = (0..k).map(|i| vec![1.0 + i as f32; d]).collect();
+        let mut net = ring_net(k);
+        net.set_fault_plan(FaultPlan::new(k, 0.0, 0.0, 1, 0.0, 9));
+        net.fault_plan_mut().unwrap().set_absent(1, true);
+        let mut ex = CompressedExchange::new(k, 3);
+        let qs = ex.round(&Identity, &mut net, &inputs, None, |_, _| {});
+        assert_eq!(qs[1], vec![0.0; d], "absent sender decodes to zero everywhere");
+        for j in [0usize, 2, 3] {
+            assert_eq!(qs[j], inputs[j], "present senders decode normally");
+        }
     }
 
     #[test]

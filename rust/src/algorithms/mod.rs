@@ -10,6 +10,7 @@
 //! | [`CSgdm`]       | centralized momentum SGD (C-SGDM)   | yes | every step    | grad up+down |
 //! | [`ChocoSgd`]    | CHOCO-SGD, Koloskova et al. [8,9]   | no  | every step    | Q(x−x̂) |
 //! | [`DeepSqueeze`] | DeepSqueeze, Tang et al. [21]       | no  | every step    | Q(x+e) |
+//! | [`MomentumTracking`] | Takezawa et al. 2022           | yes | every step    | x and c |
 //!
 //! All decentralized algorithms drive a byte-metered [`crate::comm::Network`]
 //! and may only exchange data along topology edges; every struct
@@ -19,11 +20,13 @@
 mod baselines;
 mod cpd_sgdm;
 mod gossip;
+mod momentum_tracking;
 mod pd_sgdm;
 
 pub use baselines::{CSgdm, ChocoSgd, DSgd, DSgdm, DeepSqueeze, PdSgd};
 pub use cpd_sgdm::CpdSgdm;
 pub use gossip::{CompressedExchange, GossipState};
+pub use momentum_tracking::MomentumTracking;
 pub use pd_sgdm::PdSgdm;
 
 use crate::comm::Network;
@@ -92,6 +95,16 @@ pub trait Algorithm {
 
     /// Worker k's current iterate x_t^(k).
     fn params(&self, k: usize) -> &[f32];
+
+    /// Overwrite worker `k`'s iterate with `x`, resetting that worker's
+    /// per-worker optimizer state (momentum, error feedback) where one
+    /// exists — the churn rejoin hook: a worker coming back from an
+    /// absence restarts from a checkpointed x̄ as if freshly
+    /// initialized there. The default is a no-op for algorithms with no
+    /// per-worker iterate to reset (e.g. the centralized baseline).
+    fn set_worker_params(&mut self, k: usize, x: &[f32]) {
+        let _ = (k, x);
+    }
 
     /// Write the averaged iterate x̄_t into `out` (resized to d). This is
     /// the evaluation hot path: the default accumulates straight from the
@@ -303,6 +316,11 @@ pub static REGISTRY: &[AlgorithmBuilder] = &[
             Box::new(DeepSqueeze::new(s.workers, s.x0, s.mixing, s.hyper, c, s.seed))
         },
     },
+    AlgorithmBuilder {
+        name: "momentum-tracking",
+        summary: "Momentum Tracking (Takezawa et al. 2022): gradient-tracked momentum, heterogeneity-robust",
+        build: |s| Box::new(MomentumTracking::new(s.workers, s.x0, s.mixing, s.hyper)),
+    },
 ];
 
 /// Registry lookup by CLI name.
@@ -335,7 +353,7 @@ pub(crate) fn load_moms(
 /// All algorithm names the registry accepts (for CLI help and sweeps).
 pub const ALL_NAMES: &[&str] = &[
     "pd-sgdm", "cpd-sgdm", "d-sgd", "pd-sgd", "d-sgdm", "d-sgdm-pm",
-    "c-sgdm", "choco-sgd", "deepsqueeze",
+    "c-sgdm", "choco-sgd", "deepsqueeze", "momentum-tracking",
 ];
 
 /// Legacy positional constructor, kept as a thin shim over

@@ -98,6 +98,11 @@ impl Algorithm for PdSgdm {
         self.engine.set_parallel(on);
     }
 
+    fn set_worker_params(&mut self, k: usize, x: &[f32]) {
+        self.xs[k].copy_from_slice(x);
+        self.moms[k].reset();
+    }
+
     fn state_save(&self, w: &mut crate::state::StateWriter) {
         w.tag("pd-sgdm");
         w.put_f32_mat(&self.xs);

@@ -14,6 +14,8 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use crate::rng::Xoshiro256;
+use crate::state::{StateReader, StateWriter};
 use crate::topology::Graph;
 
 /// What a message carries across an edge.
@@ -76,6 +78,259 @@ impl Message {
     }
 }
 
+/// Distribution of per-worker latency multipliers for straggler
+/// modeling. A worker with multiplier `m` takes `m×` the nominal time
+/// for both compute and communication; the cost model prices each round
+/// at the slowest participant (DESIGN.md §7).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StragglerDist {
+    /// Every worker runs at `factor ×` nominal speed (factor ≥ 1 models
+    /// a uniformly degraded fleet).
+    Constant { factor: f64 },
+    /// Multipliers drawn iid from U[lo, hi].
+    Uniform { lo: f64, hi: f64 },
+    /// Multipliers drawn iid from exp(N(mu, sigma²)) — the classic
+    /// heavy-tailed straggler model (median e^mu, occasional stragglers
+    /// several × slower).
+    LogNormal { mu: f64, sigma: f64 },
+}
+
+impl StragglerDist {
+    /// Parse a CLI/config spec: `constant:F`, `uniform:LO,HI`, or
+    /// `lognormal:MU,SIGMA`. Rejects non-positive or inverted ranges
+    /// with an actionable message.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let bad = |msg: &str| {
+            Err(format!(
+                "straggler spec {spec:?}: {msg} (expected constant:F | uniform:LO,HI | lognormal:MU,SIGMA)"
+            ))
+        };
+        let Some((kind, params)) = spec.split_once(':') else {
+            return bad("missing ':'");
+        };
+        let nums: Vec<f64> = match params
+            .split(',')
+            .map(|p| p.trim().parse::<f64>())
+            .collect::<Result<Vec<_>, _>>()
+        {
+            Ok(v) => v,
+            Err(_) => return bad("parameters must be numbers"),
+        };
+        let dist = match (kind, nums.as_slice()) {
+            ("constant", [factor]) => StragglerDist::Constant { factor: *factor },
+            ("uniform", [lo, hi]) => StragglerDist::Uniform { lo: *lo, hi: *hi },
+            ("lognormal", [mu, sigma]) => StragglerDist::LogNormal { mu: *mu, sigma: *sigma },
+            _ => return bad("unknown kind or wrong parameter count"),
+        };
+        dist.validate().map_err(|e| format!("straggler spec {spec:?}: {e}"))?;
+        Ok(dist)
+    }
+
+    /// Check parameter ranges (latency multipliers must be positive).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            StragglerDist::Constant { factor } => {
+                if !(factor > 0.0 && factor.is_finite()) {
+                    return Err(format!("latency factor must be positive and finite, got {factor}"));
+                }
+            }
+            StragglerDist::Uniform { lo, hi } => {
+                if !(lo > 0.0 && hi.is_finite() && hi >= lo) {
+                    return Err(format!(
+                        "uniform range must satisfy 0 < lo <= hi < inf, got [{lo}, {hi}]"
+                    ));
+                }
+            }
+            StragglerDist::LogNormal { mu, sigma } => {
+                if !(mu.is_finite() && sigma.is_finite() && sigma >= 0.0) {
+                    return Err(format!(
+                        "lognormal needs finite mu and sigma >= 0, got mu={mu} sigma={sigma}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Draw one latency multiplier.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> f64 {
+        match *self {
+            StragglerDist::Constant { factor } => factor,
+            StragglerDist::Uniform { lo, hi } => lo + (hi - lo) * rng.next_f64(),
+            StragglerDist::LogNormal { mu, sigma } => (mu + sigma * rng.normal()).exp(),
+        }
+    }
+
+    /// Per-worker multipliers for a fleet of `k` (worker i gets draw i).
+    pub fn sample_all(&self, k: usize, rng: &mut Xoshiro256) -> Vec<f64> {
+        (0..k).map(|_| self.sample(rng)).collect()
+    }
+}
+
+/// Deterministic fault injector wrapped around [`Network`] delivery.
+///
+/// Owns its own seeded RNG stream (independent of data/model seeds) and
+/// applies, per message, per-edge: **drop** (message charged to the wire
+/// but never delivered — lost in flight), **delay** (buffered across
+/// communication rounds, delivered at a later `recv_all`), and
+/// **reorder** (inbox shuffled before the receiver drains it). Workers
+/// marked *absent* (churn) have every incident link down: sends to or
+/// from them are silently discarded *without* charging bytes.
+///
+/// Determinism contract: a plan whose rates are all zero consumes **no**
+/// RNG draws and takes the exact pre-fault code path, so it is
+/// bit-identical to running with no plan at all (property-tested in
+/// rust/tests/fault_injection.rs). The RNG stream, the in-flight delayed
+/// messages, and the absence flags are all checkpointable via
+/// [`FaultPlan::state_save`] so resumed runs replay faults exactly.
+///
+/// Compressed (`Payload::Encoded`) traffic is exempt from random
+/// drop/delay/reorder: CHOCO-style algorithms maintain a single canonical
+/// replica estimate x̂ per worker, which is only well-defined when every
+/// neighbor decodes the same update stream. Modeling lossy compressed
+/// links would need per-receiver x̂ state (K× memory); absence (churn)
+/// still applies to encoded traffic, and the decode paths freeze x̂ for
+/// absent senders (see `algorithms::gossip::CompressedExchange`).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Probability an individual dense message is lost in flight.
+    pub drop_prob: f64,
+    /// Probability an individual dense message is delayed.
+    pub delay_prob: f64,
+    /// Delay lag is drawn uniformly from {1, …, max_delay} comm rounds.
+    pub max_delay: u64,
+    /// Probability a receiver's inbox is shuffled before draining.
+    pub reorder_prob: f64,
+    rng: Xoshiro256,
+    /// In-flight delayed messages: (deliver at round, message). Delivery
+    /// keys off `Network::rounds` so a message delayed by L rounds is
+    /// visible to the L-th subsequent `recv_all`, however many local
+    /// steps pass in between.
+    delayed: Vec<(u64, Message)>,
+    absent: Vec<bool>,
+    /// Messages dropped so far (random drops + absence discards).
+    pub dropped: u64,
+    /// Messages that entered the delay buffer so far.
+    pub delayed_total: u64,
+}
+
+impl FaultPlan {
+    pub fn new(
+        k: usize,
+        drop_prob: f64,
+        delay_prob: f64,
+        max_delay: u64,
+        reorder_prob: f64,
+        seed: u64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&drop_prob), "drop_prob must be in [0,1]");
+        assert!((0.0..=1.0).contains(&delay_prob), "delay_prob must be in [0,1]");
+        assert!((0.0..=1.0).contains(&reorder_prob), "reorder_prob must be in [0,1]");
+        assert!(max_delay >= 1, "max_delay must be >= 1 round");
+        Self {
+            drop_prob,
+            delay_prob,
+            max_delay,
+            reorder_prob,
+            rng: Xoshiro256::seed_from_u64(seed).fork(0xFA17),
+            delayed: Vec::new(),
+            absent: vec![false; k],
+            dropped: 0,
+            delayed_total: 0,
+        }
+    }
+
+    /// Mark a worker as departed (true) or rejoined (false). While
+    /// absent, all its links are down and it neither sends nor receives.
+    pub fn set_absent(&mut self, w: usize, gone: bool) {
+        self.absent[w] = gone;
+    }
+
+    pub fn is_absent(&self, w: usize) -> bool {
+        self.absent[w]
+    }
+
+    pub fn any_absent(&self) -> bool {
+        self.absent.iter().any(|&b| b)
+    }
+
+    /// Number of delayed messages still in flight.
+    pub fn in_flight(&self) -> usize {
+        self.delayed.len()
+    }
+
+    /// Serialize the mutable fault state (RNG stream, counters, absence
+    /// flags, and every in-flight delayed message) for a `PDSGDM02`
+    /// checkpoint. The rates themselves are config, covered by the
+    /// session fingerprint, and are rebuilt at `Session::build`.
+    pub fn state_save(&self) -> Vec<u8> {
+        let mut w = StateWriter::new();
+        w.tag("fault-plan");
+        w.put_u64s(&self.rng.state());
+        w.put_u64(self.dropped);
+        w.put_u64(self.delayed_total);
+        let absent: Vec<u64> = self.absent.iter().map(|&b| b as u64).collect();
+        w.put_u64s(&absent);
+        w.put_u64(self.delayed.len() as u64);
+        for (due, m) in &self.delayed {
+            w.put_u64(*due);
+            w.put_u64(m.from as u64);
+            w.put_u64(m.to as u64);
+            match &m.payload {
+                Payload::Dense(v) => {
+                    w.put_u64(0);
+                    w.put_f32s(v);
+                }
+                Payload::Encoded(b) => {
+                    w.put_u64(1);
+                    w.put_bytes(b);
+                }
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Restore the state written by [`FaultPlan::state_save`].
+    pub fn state_load(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = StateReader::new(bytes);
+        r.expect_tag("fault-plan")?;
+        let s = r.take_u64s()?;
+        let s: [u64; 4] = s
+            .as_slice()
+            .try_into()
+            .map_err(|_| "fault-plan: rng state must be 4 words".to_string())?;
+        self.rng = Xoshiro256::from_state(s);
+        self.dropped = r.take_u64()?;
+        self.delayed_total = r.take_u64()?;
+        let absent = r.take_u64s()?;
+        if absent.len() != self.absent.len() {
+            return Err(format!(
+                "fault-plan: saved K {} != live K {}",
+                absent.len(),
+                self.absent.len()
+            ));
+        }
+        self.absent = absent.iter().map(|&x| x != 0).collect();
+        let n = r.take_u64()? as usize;
+        self.delayed.clear();
+        for _ in 0..n {
+            let due = r.take_u64()?;
+            let from = r.take_u64()? as usize;
+            let to = r.take_u64()? as usize;
+            let payload = match r.take_u64()? {
+                0 => Payload::Dense(Arc::new(r.take_f32s()?)),
+                1 => Payload::Encoded(Arc::new(r.take_bytes()?.to_vec())),
+                other => return Err(format!("fault-plan: unknown payload kind {other}")),
+            };
+            if from >= self.absent.len() || to >= self.absent.len() {
+                return Err("fault-plan: delayed message endpoint out of range".to_string());
+            }
+            self.delayed.push((due, Message { from, to, payload }));
+        }
+        Ok(())
+    }
+}
+
 /// Per-destination FIFO mailboxes over the topology's edges, with
 /// cumulative traffic statistics.
 #[derive(Debug)]
@@ -83,6 +338,8 @@ pub struct Network {
     k: usize,
     edges: Vec<Vec<usize>>, // adjacency (copied from the Graph)
     inbox: Vec<VecDeque<Message>>,
+    /// Optional fault injector; `None` is the exact pre-fault fast path.
+    faults: Option<FaultPlan>,
     /// Total payload bytes ever sent (sum over messages).
     pub total_bytes: u64,
     /// Per-worker bytes sent (for load-imbalance analysis, e.g. star hub).
@@ -99,6 +356,7 @@ impl Network {
             k: g.k,
             edges: (0..g.k).map(|i| g.neighbors(i).to_vec()).collect(),
             inbox: (0..g.k).map(|_| VecDeque::new()).collect(),
+            faults: None,
             total_bytes: 0,
             bytes_sent: vec![0; g.k],
             rounds: 0,
@@ -121,6 +379,44 @@ impl Network {
         self.edges.iter().map(Vec::len).max().unwrap_or(0)
     }
 
+    /// Install a fault injector. All subsequent sends/receives route
+    /// through it; `None` (the default) is the exact legacy path.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        assert_eq!(plan.absent.len(), self.k, "fault plan sized for wrong K");
+        self.faults = Some(plan);
+    }
+
+    /// Whether a fault plan is installed (gates the hardened recv paths
+    /// in `algorithms::gossip` so faultless runs stay bit-identical).
+    pub fn faults_active(&self) -> bool {
+        self.faults.is_some()
+    }
+
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
+    }
+
+    pub fn fault_plan_mut(&mut self) -> Option<&mut FaultPlan> {
+        self.faults.as_mut()
+    }
+
+    /// Whether worker `i` is currently departed (churn). Always false
+    /// without a fault plan.
+    pub fn is_absent(&self, i: usize) -> bool {
+        self.faults.as_ref().is_some_and(|p| p.absent[i])
+    }
+
+    /// Neighbors of `i` that are currently present (equals `neighbors`
+    /// exactly when no churn is active). Returns 0 links for an absent
+    /// worker — all its edges are down.
+    pub fn live_degree(&self, i: usize) -> usize {
+        match self.faults.as_ref() {
+            None => self.edges[i].len(),
+            Some(p) if p.absent[i] => 0,
+            Some(p) => self.edges[i].iter().filter(|&&j| !p.absent[j]).count(),
+        }
+    }
+
     /// Send a dense f32 payload from `from` to `to` (wire cost 4·d).
     pub fn send(&mut self, from: usize, to: usize, payload: Vec<f32>) {
         self.send_payload(from, to, Payload::Dense(Arc::new(payload)));
@@ -134,11 +430,38 @@ impl Network {
             self.edges[from].contains(&to),
             "({from} -> {to}) is not an edge of the topology"
         );
+        if let Some(plan) = self.faults.as_mut() {
+            if plan.absent[from] || plan.absent[to] {
+                // Link down (churn): the message never enters the fabric,
+                // so nothing is charged to the wire.
+                plan.dropped += 1;
+                return;
+            }
+        }
         let wire_bytes = payload.wire_bytes() as u64;
         self.total_bytes += wire_bytes;
         self.bytes_sent[from] += wire_bytes;
         self.messages += 1;
-        self.inbox[to].push_back(Message { from, to, payload });
+        let msg = Message { from, to, payload };
+        if let Some(plan) = self.faults.as_mut() {
+            // Random faults apply to dense gossip only (see FaultPlan
+            // docs); every draw is gated on its rate so a zero-rate plan
+            // consumes no RNG and stays bit-identical to the `None` path.
+            if matches!(msg.payload, Payload::Dense(_)) {
+                if plan.drop_prob > 0.0 && plan.rng.next_f64() < plan.drop_prob {
+                    // Lost in flight: the sender's NIC already paid for it.
+                    plan.dropped += 1;
+                    return;
+                }
+                if plan.delay_prob > 0.0 && plan.rng.next_f64() < plan.delay_prob {
+                    let lag = 1 + plan.rng.below(plan.max_delay as usize) as u64;
+                    plan.delayed_total += 1;
+                    plan.delayed.push((self.rounds + lag, msg));
+                    return;
+                }
+            }
+        }
+        self.inbox[to].push_back(msg);
     }
 
     /// Broadcast a dense payload from `from` to all its neighbors,
@@ -166,9 +489,36 @@ impl Network {
         }
     }
 
-    /// Drain worker `to`'s inbox.
+    /// Drain worker `to`'s inbox. With a fault plan installed, due
+    /// delayed messages are injected first (stale before fresh, so the
+    /// hardened gossip paths that keep the *last* message per sender see
+    /// the freshest data), then the whole batch may be reordered.
     pub fn recv_all(&mut self, to: usize) -> Vec<Message> {
-        self.inbox[to].drain(..).collect()
+        let rounds = self.rounds;
+        let Some(plan) = self.faults.as_mut() else {
+            return self.inbox[to].drain(..).collect();
+        };
+        let mut out: Vec<Message> = Vec::new();
+        let mut i = 0;
+        while i < plan.delayed.len() {
+            if plan.delayed[i].1.to == to && plan.delayed[i].0 <= rounds {
+                let (_, msg) = plan.delayed.remove(i);
+                // Liveness is re-checked at delivery time: a message in
+                // flight when either endpoint departed is lost.
+                if plan.absent[msg.from] || plan.absent[to] {
+                    plan.dropped += 1;
+                } else {
+                    out.push(msg);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        out.extend(self.inbox[to].drain(..));
+        if plan.reorder_prob > 0.0 && out.len() > 1 && plan.rng.next_f64() < plan.reorder_prob {
+            plan.rng.shuffle(&mut out);
+        }
+        out
     }
 
     /// Mark the end of a bulk exchange (one paper "communication round").
@@ -218,6 +568,21 @@ impl CostModel {
     /// payloads to a zero bandwidth term) over `links` serial links.
     pub fn round_seconds(&self, links: usize, worker_bytes: f64) -> f64 {
         links as f64 * self.alpha + worker_bytes / self.beta
+    }
+
+    /// `round_seconds` under straggler skew: a synchronous gossip round
+    /// completes only when the slowest participant does, so the whole
+    /// round is scaled by that worker's latency multiplier. Callers must
+    /// take the plain `round_seconds` path when no straggler model is
+    /// configured — `x * 1.0` is bit-identical in IEEE 754, but the
+    /// branch keeps the faultless code path literally unchanged.
+    pub fn straggled_round_seconds(
+        &self,
+        links: usize,
+        worker_bytes: f64,
+        slowest_mult: f64,
+    ) -> f64 {
+        self.round_seconds(links, worker_bytes) * slowest_mult
     }
 
     /// Simulated time for `steps` local steps with a communication round
@@ -315,6 +680,166 @@ mod tests {
         let mut net = ring8();
         net.send(0, 1, vec![1.0]);
         net.end_round();
+    }
+
+    #[test]
+    fn zero_rate_fault_plan_is_transparent_and_draws_no_rng() {
+        let mut plain = ring8();
+        let mut faulty = ring8();
+        faulty.set_fault_plan(FaultPlan::new(8, 0.0, 0.0, 1, 0.0, 99));
+        let before = faulty.fault_plan().unwrap().state_save();
+        for net in [&mut plain, &mut faulty] {
+            net.broadcast(0, &[1.0, 2.0, 3.0]);
+            net.broadcast(3, &[4.0; 5]);
+        }
+        for to in 0..8 {
+            let a = plain.recv_all(to);
+            let b = faulty.recv_all(to);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.from, y.from);
+                assert_eq!(x.payload.dense().unwrap(), y.payload.dense().unwrap());
+            }
+        }
+        plain.end_round();
+        faulty.end_round();
+        assert_eq!(plain.total_bytes, faulty.total_bytes);
+        assert_eq!(plain.messages, faulty.messages);
+        // No RNG draw happened: the serialized stream state is untouched.
+        assert_eq!(before, faulty.fault_plan().unwrap().state_save());
+    }
+
+    #[test]
+    fn dropped_messages_are_charged_but_never_delivered() {
+        let mut net = ring8();
+        net.set_fault_plan(FaultPlan::new(8, 1.0, 0.0, 1, 0.0, 7));
+        net.broadcast(0, &[1.0; 10]);
+        assert_eq!(net.total_bytes, 2 * 40, "lost-in-flight still pays the wire");
+        assert!(net.recv_all(1).is_empty());
+        assert!(net.recv_all(7).is_empty());
+        assert_eq!(net.fault_plan().unwrap().dropped, 2);
+        net.end_round();
+    }
+
+    #[test]
+    fn delayed_messages_arrive_a_later_round() {
+        let mut net = ring8();
+        net.set_fault_plan(FaultPlan::new(8, 0.0, 1.0, 1, 0.0, 7));
+        net.send(0, 1, vec![5.0]);
+        assert!(net.recv_all(1).is_empty(), "delayed past this round");
+        assert_eq!(net.fault_plan().unwrap().in_flight(), 1);
+        net.end_round();
+        // Next round: the stashed message is due.
+        let msgs = net.recv_all(1);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].payload.dense().unwrap(), &[5.0]);
+        assert_eq!(net.fault_plan().unwrap().in_flight(), 0);
+        net.end_round();
+    }
+
+    #[test]
+    fn absent_worker_links_are_down_and_uncharged() {
+        let mut net = ring8();
+        net.set_fault_plan(FaultPlan::new(8, 0.0, 0.0, 1, 0.0, 7));
+        net.fault_plan_mut().unwrap().set_absent(1, true);
+        assert!(net.is_absent(1));
+        assert_eq!(net.live_degree(1), 0);
+        assert_eq!(net.live_degree(0), 1, "edge to absent 1 is down");
+        assert_eq!(net.live_degree(4), 2);
+        net.send(0, 1, vec![1.0]); // into the void
+        net.send(1, 2, vec![2.0]); // from the void
+        net.send(0, 7, vec![3.0]); // live edge
+        assert_eq!(net.total_bytes, 4, "only the live edge is charged");
+        assert!(net.recv_all(1).is_empty());
+        assert!(net.recv_all(2).is_empty());
+        assert_eq!(net.recv_all(7).len(), 1);
+        net.end_round();
+        // Rejoin restores the full degree.
+        net.fault_plan_mut().unwrap().set_absent(1, false);
+        assert_eq!(net.live_degree(0), 2);
+    }
+
+    #[test]
+    fn fault_plan_state_roundtrips_in_flight_messages() {
+        let mut net = ring8();
+        net.set_fault_plan(FaultPlan::new(8, 0.3, 0.7, 3, 0.5, 41));
+        for _ in 0..4 {
+            net.broadcast(0, &[1.0; 8]);
+            net.broadcast(2, &[2.0; 8]);
+            net.recv_all(1);
+            net.recv_all(3);
+            net.recv_all(7);
+            net.end_round();
+        }
+        net.fault_plan_mut().unwrap().set_absent(5, true);
+        let saved = net.fault_plan().unwrap().state_save();
+        let mut fresh = FaultPlan::new(8, 0.3, 0.7, 3, 0.5, 0);
+        fresh.state_load(&saved).unwrap();
+        assert_eq!(fresh.state_save(), saved, "save -> load -> save is a fixpoint");
+        assert!(fresh.is_absent(5));
+        assert_eq!(fresh.in_flight(), net.fault_plan().unwrap().in_flight());
+        // Wrong-K plans are rejected, as are truncated payloads.
+        let mut wrong_k = FaultPlan::new(4, 0.0, 0.0, 1, 0.0, 0);
+        assert!(wrong_k.state_load(&saved).is_err());
+        assert!(fresh.state_load(&saved[..saved.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn reorder_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut net = Network::new(&Topology::Complete.build(6, 0));
+            net.set_fault_plan(FaultPlan::new(6, 0.0, 0.0, 1, 1.0, seed));
+            for from in 1..6 {
+                net.send(from, 0, vec![from as f32]);
+            }
+            let order: Vec<usize> = net.recv_all(0).iter().map(|m| m.from).collect();
+            net.end_round();
+            order
+        };
+        assert_eq!(run(11), run(11), "same seed, same shuffle");
+        let mut sorted = run(11);
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![1, 2, 3, 4, 5], "reorder is a permutation");
+    }
+
+    #[test]
+    fn straggler_parse_and_sample() {
+        assert_eq!(
+            StragglerDist::parse("constant:2.5").unwrap(),
+            StragglerDist::Constant { factor: 2.5 }
+        );
+        assert_eq!(
+            StragglerDist::parse("uniform:1,3").unwrap(),
+            StragglerDist::Uniform { lo: 1.0, hi: 3.0 }
+        );
+        assert_eq!(
+            StragglerDist::parse("lognormal:0,0.5").unwrap(),
+            StragglerDist::LogNormal { mu: 0.0, sigma: 0.5 }
+        );
+        for bad in [
+            "constant:-1", "constant:0", "uniform:3,1", "uniform:-1,2", "lognormal:0,-1",
+            "gaussian:1", "constant", "uniform:1", "constant:abc",
+        ] {
+            assert!(StragglerDist::parse(bad).is_err(), "{bad} should be rejected");
+        }
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let d = StragglerDist::parse("uniform:1,3").unwrap();
+        let mults = d.sample_all(64, &mut rng);
+        assert!(mults.iter().all(|&m| (1.0..=3.0).contains(&m)));
+        let ln = StragglerDist::parse("lognormal:0,0.5").unwrap();
+        assert!(ln.sample_all(64, &mut rng).iter().all(|&m| m > 0.0));
+        assert_eq!(
+            StragglerDist::Constant { factor: 4.0 }.sample(&mut rng),
+            4.0
+        );
+    }
+
+    #[test]
+    fn straggled_round_costs_scale_with_slowest() {
+        let cm = CostModel::default();
+        let base = cm.round_seconds(2, 1_000_000.0);
+        assert_eq!(cm.straggled_round_seconds(2, 1_000_000.0, 1.0), base);
+        assert!((cm.straggled_round_seconds(2, 1_000_000.0, 3.0) - 3.0 * base).abs() < 1e-15);
     }
 
     #[test]

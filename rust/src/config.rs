@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 
 use crate::algorithms::Hyper;
-use crate::comm::CostModel;
+use crate::comm::{CostModel, StragglerDist};
 use crate::data::Sharding;
 use crate::optim::LrSchedule;
 use crate::topology::{Topology, Weighting};
@@ -206,6 +206,148 @@ pub struct StopConfig {
     pub sim_seconds_budget: Option<f64>,
 }
 
+/// One scheduled churn event: `worker` departs at the *start* of step
+/// `leave_step` and rejoins at the start of step `rejoin_step`,
+/// restoring its parameters from the versioned checkpoint the session
+/// stashed at departure (see `coordinator`). Steps are 0-based.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnEvent {
+    pub worker: usize,
+    pub leave_step: u64,
+    pub rejoin_step: u64,
+}
+
+impl ChurnEvent {
+    /// Parse a schedule spec: `W@LEAVE:REJOIN[,W@LEAVE:REJOIN...]`,
+    /// e.g. `1@60:120,3@200:260`.
+    pub fn parse_list(spec: &str) -> Result<Vec<ChurnEvent>, String> {
+        let bad = |part: &str, msg: &str| {
+            Err(format!(
+                "churn event {part:?}: {msg} (expected WORKER@LEAVE:REJOIN, e.g. 1@60:120)"
+            ))
+        };
+        let mut out = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((w, steps)) = part.split_once('@') else {
+                return bad(part, "missing '@'");
+            };
+            let Some((leave, rejoin)) = steps.split_once(':') else {
+                return bad(part, "missing ':'");
+            };
+            let (Ok(worker), Ok(leave_step), Ok(rejoin_step)) =
+                (w.trim().parse::<usize>(), leave.trim().parse::<u64>(), rejoin.trim().parse::<u64>())
+            else {
+                return bad(part, "fields must be non-negative integers");
+            };
+            out.push(ChurnEvent { worker, leave_step, rejoin_step });
+        }
+        Ok(out)
+    }
+}
+
+/// The `[faults]` config section: the deterministic fault-injection and
+/// heterogeneity layer (DESIGN.md §7). Everything defaults to off, and a
+/// fully-off section does not install a `FaultPlan` at all — unless
+/// `enabled = true` forces a (zero-rate) plan, which the bit-identity
+/// property tests use to prove the plan itself is transparent.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsConfig {
+    /// Force-install a fault plan even when every rate is zero.
+    pub enabled: bool,
+    /// Per-message probability a dense gossip message is lost in flight.
+    pub drop_prob: f64,
+    /// Per-message probability a dense gossip message is delayed.
+    pub delay_prob: f64,
+    /// Delay lag is uniform over {1, …, max_delay} comm rounds.
+    pub max_delay: u64,
+    /// Per-receiver probability an inbox is shuffled before draining.
+    pub reorder_prob: f64,
+    /// Seed of the fault RNG stream (independent of the data/model seed,
+    /// so the same training run can be replayed under different fault
+    /// realizations and vice versa).
+    pub seed: u64,
+    /// Per-worker latency multiplier distribution (stragglers).
+    pub straggler: Option<StragglerDist>,
+    /// Scheduled leave/rejoin events (worker churn).
+    pub churn: Vec<ChurnEvent>,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            drop_prob: 0.0,
+            delay_prob: 0.0,
+            max_delay: 1,
+            reorder_prob: 0.0,
+            seed: 0,
+            straggler: None,
+            churn: Vec::new(),
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Whether the session should install a `FaultPlan` / straggler
+    /// multipliers at all. False means the run takes the exact legacy
+    /// code path, bit-identical to a build without this module.
+    pub fn is_active(&self) -> bool {
+        self.enabled
+            || self.drop_prob > 0.0
+            || self.delay_prob > 0.0
+            || self.reorder_prob > 0.0
+            || self.straggler.is_some()
+            || !self.churn.is_empty()
+    }
+
+    fn validate(&self, workers: usize) -> Result<(), String> {
+        for (key, p) in [
+            ("faults.drop_prob", self.drop_prob),
+            ("faults.delay_prob", self.delay_prob),
+            ("faults.reorder_prob", self.reorder_prob),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(format!("{key} must be a probability in [0, 1], got {p}"));
+            }
+        }
+        if self.max_delay == 0 {
+            return Err("faults.max_delay must be >= 1 communication round".into());
+        }
+        if let Some(s) = &self.straggler {
+            s.validate().map_err(|e| format!("faults.straggler: {e}"))?;
+        }
+        let mut sorted = self.churn.clone();
+        sorted.sort_by_key(|e| (e.worker, e.leave_step));
+        for (i, e) in sorted.iter().enumerate() {
+            if e.worker >= workers {
+                return Err(format!(
+                    "faults.churn: worker {} does not exist (K = {workers})",
+                    e.worker
+                ));
+            }
+            if e.leave_step >= e.rejoin_step {
+                return Err(format!(
+                    "faults.churn: worker {} must leave before it rejoins (got {}:{})",
+                    e.worker, e.leave_step, e.rejoin_step
+                ));
+            }
+            if let Some(prev) = i.checked_sub(1).map(|j| &sorted[j]) {
+                if prev.worker == e.worker && e.leave_step < prev.rejoin_step {
+                    return Err(format!(
+                        "faults.churn: worker {} has overlapping absence windows",
+                        e.worker
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// The full experiment description (one `configs/*.toml` file).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -223,6 +365,7 @@ pub struct ExperimentConfig {
     pub workload: WorkloadConfig,
     pub cost_model: CostModel,
     pub stop: StopConfig,
+    pub faults: FaultsConfig,
     pub out_dir: String,
 }
 
@@ -243,6 +386,7 @@ impl Default for ExperimentConfig {
             workload: WorkloadConfig::Mlp { n: 4000, dim: 32, classes: 10, hidden: 64, batch: 16 },
             cost_model: CostModel::default(),
             stop: StopConfig::default(),
+            faults: FaultsConfig::default(),
             out_dir: "bench_out".into(),
         }
     }
@@ -274,6 +418,9 @@ impl ExperimentConfig {
             "workload.model", "workload.artifacts_dir",
             "cost.alpha", "cost.beta", "cost.step_seconds",
             "stop.target_loss", "stop.comm_budget_mb", "stop.sim_seconds_budget",
+            "faults.enabled", "faults.drop_prob", "faults.delay_prob",
+            "faults.max_delay", "faults.reorder_prob", "faults.seed",
+            "faults.straggler", "faults.churn",
             "out_dir",
         ];
         for key in doc.keys() {
@@ -298,6 +445,12 @@ impl ExperimentConfig {
             match doc.get(k) {
                 None => Ok(None),
                 Some(v) => v.as_f64().map(|f| Some(f as f32)).ok_or_else(|| format!("{k} must be a number")),
+            }
+        };
+        let get_f64 = |k: &str| -> Result<Option<f64>, String> {
+            match doc.get(k) {
+                None => Ok(None),
+                Some(v) => v.as_f64().map(Some).ok_or_else(|| format!("{k} must be a number")),
             }
         };
 
@@ -428,6 +581,33 @@ impl ExperimentConfig {
         if let Some(v) = get_f32("stop.sim_seconds_budget")? {
             cfg.stop.sim_seconds_budget = Some(v as f64);
         }
+        // faults
+        if let Some(v) = doc.get("faults.enabled") {
+            cfg.faults.enabled = v
+                .as_bool()
+                .ok_or_else(|| "faults.enabled must be a boolean".to_string())?;
+        }
+        if let Some(v) = get_f64("faults.drop_prob")? {
+            cfg.faults.drop_prob = v;
+        }
+        if let Some(v) = get_f64("faults.delay_prob")? {
+            cfg.faults.delay_prob = v;
+        }
+        if let Some(v) = get_usize("faults.max_delay")? {
+            cfg.faults.max_delay = v as u64;
+        }
+        if let Some(v) = get_f64("faults.reorder_prob")? {
+            cfg.faults.reorder_prob = v;
+        }
+        if let Some(v) = get_usize("faults.seed")? {
+            cfg.faults.seed = v as u64;
+        }
+        if let Some(v) = get_str("faults.straggler") {
+            cfg.faults.straggler = Some(StragglerDist::parse(&v)?);
+        }
+        if let Some(v) = get_str("faults.churn") {
+            cfg.faults.churn = ChurnEvent::parse_list(&v)?;
+        }
         if let Some(v) = get_str("out_dir") {
             cfg.out_dir = v;
         }
@@ -446,7 +626,7 @@ impl ExperimentConfig {
     pub fn resume_fingerprint(&self) -> String {
         format!(
             "algo={} k={} eval_every={} seed={} topo={:?} weighting={:?} sharding={:?} \
-             hyper={:?} comp={:?} workload={:?} cost={:?}",
+             hyper={:?} comp={:?} workload={:?} cost={:?} faults={:?}",
             self.algorithm,
             self.workers,
             self.eval_every,
@@ -458,6 +638,7 @@ impl ExperimentConfig {
             self.compressor,
             self.workload,
             self.cost_model,
+            self.faults,
         )
     }
 
@@ -503,6 +684,16 @@ impl ExperimentConfig {
         if self.topology == Topology::Hypercube && !self.workers.is_power_of_two() {
             return Err("hypercube topology requires workers to be a power of two".into());
         }
+        if let Sharding::Dirichlet { alpha } = self.sharding {
+            // α ≤ 0 is outside the Dirichlet's domain; the gamma sampler
+            // would silently hand back NaN/degenerate shards.
+            if !(alpha > 0.0) || !alpha.is_finite() {
+                return Err(format!(
+                    "sharding.alpha must be a finite concentration > 0, got {alpha}"
+                ));
+            }
+        }
+        self.faults.validate(self.workers)?;
         Ok(())
     }
 }
@@ -656,6 +847,94 @@ step_seconds = 0.05
         .unwrap();
         let expect = (4.0f64 / 10000.0).sqrt() as f32;
         assert!((cfg.hyper.lr.eta(0) - expect).abs() < 1e-7);
+    }
+
+    #[test]
+    fn faults_section_parses() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[faults]\nenabled = true\ndrop_prob = 0.1\ndelay_prob = 0.05\nmax_delay = 3\n\
+             reorder_prob = 0.2\nseed = 9\nstraggler = \"lognormal:0,0.5\"\nchurn = \"1@60:120,3@10:30\"",
+        )
+        .unwrap();
+        assert!(cfg.faults.enabled);
+        assert!(cfg.faults.is_active());
+        assert_eq!(cfg.faults.drop_prob, 0.1);
+        assert_eq!(cfg.faults.max_delay, 3);
+        assert_eq!(cfg.faults.seed, 9);
+        assert_eq!(
+            cfg.faults.straggler,
+            Some(crate::comm::StragglerDist::LogNormal { mu: 0.0, sigma: 0.5 })
+        );
+        assert_eq!(
+            cfg.faults.churn,
+            vec![
+                ChurnEvent { worker: 1, leave_step: 60, rejoin_step: 120 },
+                ChurnEvent { worker: 3, leave_step: 10, rejoin_step: 30 },
+            ]
+        );
+        // Off by default, and an absent section is inactive.
+        let plain = ExperimentConfig::default();
+        assert!(!plain.faults.is_active());
+    }
+
+    #[test]
+    fn rejects_out_of_range_fault_probabilities() {
+        for (src, what) in [
+            ("[faults]\ndrop_prob = 1.5", "drop_prob"),
+            ("[faults]\ndrop_prob = -0.1", "drop_prob"),
+            ("[faults]\ndelay_prob = 2", "delay_prob"),
+            ("[faults]\nreorder_prob = -1", "reorder_prob"),
+            ("[faults]\nmax_delay = 0", "max_delay"),
+        ] {
+            let err = ExperimentConfig::from_toml_str(src).unwrap_err();
+            assert!(err.contains(what), "{src}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_straggler_and_churn_specs() {
+        let err = ExperimentConfig::from_toml_str("[faults]\nstraggler = \"constant:-2\"")
+            .unwrap_err();
+        assert!(err.contains("positive"), "{err}");
+        let err = ExperimentConfig::from_toml_str("workers = 4\n[faults]\nchurn = \"9@10:20\"")
+            .unwrap_err();
+        assert!(err.contains("does not exist"), "{err}");
+        let err = ExperimentConfig::from_toml_str("[faults]\nchurn = \"1@20:10\"").unwrap_err();
+        assert!(err.contains("leave before"), "{err}");
+        let err = ExperimentConfig::from_toml_str("[faults]\nchurn = \"1@10:30,1@20:40\"")
+            .unwrap_err();
+        assert!(err.contains("overlapping"), "{err}");
+        let err = ExperimentConfig::from_toml_str("[faults]\nchurn = \"1-10-20\"").unwrap_err();
+        assert!(err.contains("churn event"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_positive_dirichlet_alpha() {
+        for alpha in ["0", "-0.5", "nan"] {
+            let src = format!("[sharding]\nkind = \"dirichlet\"\nalpha = {alpha}");
+            match ExperimentConfig::from_toml_str(&src) {
+                Err(err) => assert!(err.contains("alpha") || err.contains("number"), "{err}"),
+                Ok(_) => panic!("alpha = {alpha} should be rejected"),
+            }
+        }
+        // a legitimate concentration still parses
+        let cfg =
+            ExperimentConfig::from_toml_str("[sharding]\nkind = \"dirichlet\"\nalpha = 0.3")
+                .unwrap();
+        assert_eq!(cfg.sharding, Sharding::Dirichlet { alpha: 0.30000001192092896 });
+    }
+
+    #[test]
+    fn fingerprint_tracks_fault_config() {
+        let mut a = ExperimentConfig::default();
+        let b = ExperimentConfig::default();
+        assert_eq!(a.resume_fingerprint(), b.resume_fingerprint());
+        a.faults.drop_prob = 0.25;
+        assert_ne!(
+            a.resume_fingerprint(),
+            b.resume_fingerprint(),
+            "fault rates must invalidate cross-plan resumes"
+        );
     }
 
     #[test]

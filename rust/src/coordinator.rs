@@ -24,16 +24,18 @@
 //! [`Session::save`]; the legacy x̄-only `PDSGDM01` files still load
 //! through [`load_checkpoint`] (which also extracts x̄ from a v2 file).
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
 use crate::algorithms::{Algorithm, AlgorithmSpec, StepStats};
-use crate::comm::{CostModel, Network};
-use crate::config::{ExperimentConfig, WorkloadConfig};
+use crate::comm::{CostModel, FaultPlan, Network};
+use crate::config::{ChurnEvent, ExperimentConfig, WorkloadConfig};
 use crate::data::Blobs;
 use crate::grad::{GradientSource, Logistic, Mlp, Quadratic};
 use crate::metrics::{Trace, TracePoint};
+use crate::rng::Xoshiro256;
 use crate::state::{StateReader, StateWriter};
 use crate::topology;
 
@@ -85,6 +87,29 @@ pub enum StopCondition {
     /// Stop when any member condition holds (budget sweeps compose:
     /// `Any(vec![Steps(10_000), CommBudgetMb(64.0)])`).
     Any(Vec<StopCondition>),
+}
+
+/// *Why* [`Session::run_until`] returned, queryable via
+/// [`Session::last_stop_reason`]. Distinguishes a target loss genuinely
+/// reached from a run whose evaluated loss went NaN/±inf: a non-finite
+/// loss compares false against every target forever, so before this
+/// existed a `TargetLoss` condition on a diverging run simply never
+/// fired and the loop ran away to its step bound (or, with a bare
+/// `TargetLoss`, forever).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The configured step count was reached.
+    StepLimit,
+    /// The latest evaluated loss hit the target.
+    TargetReached,
+    /// The latest evaluated loss is NaN/±inf — the run diverged and no
+    /// loss target can ever fire, so the session stops instead of
+    /// looping.
+    Diverged,
+    /// The cumulative communication budget was exhausted.
+    CommBudget,
+    /// The simulated wall-clock budget was exhausted.
+    SimSecondsBudget,
 }
 
 /// Mid-run instrumentation hooks. All methods default to no-ops; attach
@@ -195,6 +220,20 @@ pub struct Session<'a> {
     forced_final: bool,
     /// Persistent x̄ scratch — evaluation never re-allocates K×d.
     xbar: Vec<f32>,
+    /// Per-worker compute/latency multipliers from `[faults].straggler`
+    /// (empty = homogeneous fleet, exact legacy cost arithmetic).
+    straggler_mults: Vec<f64>,
+    /// Cached `max(straggler_mults)` — synchronous rounds are priced at
+    /// the slowest worker.
+    straggler_slowest: f64,
+    /// Scheduled leave/rejoin windows from `[faults].churn`.
+    churn: Vec<ChurnEvent>,
+    /// Departure-time checkpoints of currently-absent workers, keyed by
+    /// worker index; a rejoining worker restores its parameters from the
+    /// stashed `PDSGDM02` bytes (the x̄ the fleet had when it left).
+    churn_stash: BTreeMap<usize, Vec<u8>>,
+    /// Why the last [`Session::run_until`] call returned.
+    last_stop_reason: Option<StopReason>,
     /// Spectral gap of the built mixing matrix (0 for borrowed parts).
     pub rho: f64,
     /// The originating config, when built from one.
@@ -265,6 +304,35 @@ impl Session<'static> {
             config.cost_model,
         );
         session.rho = rho;
+        // Fault layer: only installed when the `[faults]` section is
+        // active, so the default path runs byte-for-byte the same code
+        // as before this layer existed (property-tested in
+        // rust/tests/fault_injection.rs).
+        let faults = &config.faults;
+        if faults.is_active() {
+            session.net.get_mut().set_fault_plan(FaultPlan::new(
+                k,
+                faults.drop_prob,
+                faults.delay_prob,
+                faults.max_delay,
+                faults.reorder_prob,
+                faults.seed,
+            ));
+            if let Some(dist) = &faults.straggler {
+                // Own forked stream: multipliers are a pure function of
+                // (fault seed, K), independent of every other RNG in the
+                // run and redrawn identically on resume — they are
+                // deliberately NOT checkpointed.
+                let mut rng = Xoshiro256::seed_from_u64(faults.seed).fork(0x57A6);
+                session.straggler_mults = dist.sample_all(k, &mut rng);
+                session.straggler_slowest = session
+                    .straggler_mults
+                    .iter()
+                    .copied()
+                    .fold(f64::NEG_INFINITY, f64::max);
+            }
+            session.churn = faults.churn.clone();
+        }
         session.config = Some(config);
         if let Some(path) = resume_from {
             session.load(&path)?;
@@ -324,6 +392,11 @@ impl<'a> Session<'a> {
             last_eval: None,
             forced_final: false,
             xbar: Vec::new(),
+            straggler_mults: Vec::new(),
+            straggler_slowest: 1.0,
+            churn: Vec::new(),
+            churn_stash: BTreeMap::new(),
+            last_stop_reason: None,
             rho: 0.0,
             config: None,
         }
@@ -350,6 +423,18 @@ impl<'a> Session<'a> {
         self.sim_seconds
     }
 
+    /// Per-worker straggler latency multipliers (empty when no straggler
+    /// model is configured).
+    pub fn straggler_multipliers(&self) -> &[f64] {
+        &self.straggler_mults
+    }
+
+    /// Why the last [`Session::run_until`] call returned; `None` before
+    /// the first call.
+    pub fn last_stop_reason(&self) -> Option<StopReason> {
+        self.last_stop_reason
+    }
+
     pub fn trace(&self) -> &Trace {
         &self.trace
     }
@@ -372,12 +457,19 @@ impl<'a> Session<'a> {
     /// [`Session::eval_now`] (pull-based) or use [`Session::run_until`]
     /// for cadence-driven evaluation.
     pub fn step(&mut self) -> StepStats {
+        self.process_churn();
         let t = self.t;
         let stats = {
             let Self { algo, source, net, .. } = &mut *self;
             algo.get_mut().step(t, source.get_mut(), net.get_mut())
         };
-        self.sim_seconds += self.cost_model.step_seconds;
+        if self.straggler_mults.is_empty() {
+            self.sim_seconds += self.cost_model.step_seconds;
+        } else {
+            // Synchronous BSP: every iteration waits for the slowest
+            // worker's compute.
+            self.sim_seconds += self.cost_model.step_seconds * self.straggler_slowest;
+        }
         self.cum_bytes += stats.bytes;
         let mut round_seconds = 0.0;
         if stats.communicated && stats.bytes > 0 && self.links_per_worker > 0 {
@@ -402,7 +494,15 @@ impl<'a> Session<'a> {
             } else {
                 stats.bytes as f64 / self.algo.get().k().max(1) as f64
             };
-            round_seconds = self.cost_model.round_seconds(self.links_per_worker, busiest_bytes);
+            round_seconds = if self.straggler_mults.is_empty() {
+                self.cost_model.round_seconds(self.links_per_worker, busiest_bytes)
+            } else {
+                self.cost_model.straggled_round_seconds(
+                    self.links_per_worker,
+                    busiest_bytes,
+                    self.straggler_slowest,
+                )
+            };
             self.sim_seconds += round_seconds;
         }
         if stats.communicated {
@@ -417,6 +517,57 @@ impl<'a> Session<'a> {
             }
         }
         stats
+    }
+
+    /// Apply the churn schedule at the current step, before the
+    /// iteration runs: a worker whose `leave_step` is now gets a
+    /// departure checkpoint stashed and its fabric links cut (every
+    /// message from/to it drops, uncharged); a worker whose
+    /// `rejoin_step` is now gets its links restored and its parameters
+    /// reset from the stashed checkpoint's x̄ — the crash-and-restart
+    /// protocol: local progress made while partitioned is discarded in
+    /// favor of the consensus state the fleet had when it left (PR 4's
+    /// versioned checkpoints are the transport). Rejoin before leave so
+    /// a step that is one worker's rejoin and another's leave stashes
+    /// the post-rejoin state.
+    fn process_churn(&mut self) {
+        if self.churn.is_empty() {
+            return;
+        }
+        let t = self.t;
+        let rejoins: Vec<usize> = self
+            .churn
+            .iter()
+            .filter(|e| e.rejoin_step == t)
+            .map(|e| e.worker)
+            .collect();
+        let leaves: Vec<usize> = self
+            .churn
+            .iter()
+            .filter(|e| e.leave_step == t)
+            .map(|e| e.worker)
+            .collect();
+        for w in rejoins {
+            if let Some(stash) = self.churn_stash.remove(&w) {
+                assert!(
+                    stash.len() > 8 && &stash[..8] == CKPT_MAGIC_V2,
+                    "churn stash is not a PDSGDM02 checkpoint"
+                );
+                let header = read_v2_header(&mut StateReader::new(&stash[8..]))
+                    .expect("churn stash header is valid");
+                self.algo.get_mut().set_worker_params(w, &header.xbar);
+            }
+            if let Some(plan) = self.net.get_mut().fault_plan_mut() {
+                plan.set_absent(w, false);
+            }
+        }
+        for w in leaves {
+            let stash = self.save_state();
+            self.churn_stash.insert(w, stash);
+            if let Some(plan) = self.net.get_mut().fault_plan_mut() {
+                plan.set_absent(w, true);
+            }
+        }
     }
 
     /// Record a [`TracePoint`] at the current step: global loss/accuracy
@@ -449,19 +600,39 @@ impl<'a> Session<'a> {
 
     /// Whether `stop` holds for the current session state.
     pub fn stopped(&self, stop: &StopCondition) -> bool {
+        self.reason_for(stop).is_some()
+    }
+
+    /// The [`StopReason`] `stop` yields right now, or `None` if the
+    /// session should keep running. Single source of truth for
+    /// [`Session::stopped`] and [`Session::last_stop_reason`].
+    ///
+    /// `TargetLoss` treats a non-finite evaluated loss as
+    /// [`StopReason::Diverged`]: NaN/±inf compares false against every
+    /// target, so without this a diverging run under a bare `TargetLoss`
+    /// would loop forever (regression-tested below).
+    fn reason_for(&self, stop: &StopCondition) -> Option<StopReason> {
         match stop {
-            StopCondition::Steps(n) => self.t >= *n,
-            StopCondition::TargetLoss(target) => self
-                .trace
-                .points
-                .last()
-                .map(|p| p.loss <= *target)
-                .unwrap_or(false),
-            StopCondition::CommBudgetMb(mb) => {
-                self.cum_bytes as f64 / (1024.0 * 1024.0) >= *mb
+            StopCondition::Steps(n) => (self.t >= *n).then_some(StopReason::StepLimit),
+            StopCondition::TargetLoss(target) => {
+                self.trace.points.last().and_then(|p| {
+                    if !p.loss.is_finite() {
+                        Some(StopReason::Diverged)
+                    } else if p.loss <= *target {
+                        Some(StopReason::TargetReached)
+                    } else {
+                        None
+                    }
+                })
             }
-            StopCondition::SimSecondsBudget(s) => self.sim_seconds >= *s,
-            StopCondition::Any(conds) => conds.iter().any(|c| self.stopped(c)),
+            StopCondition::CommBudgetMb(mb) => {
+                (self.cum_bytes as f64 / (1024.0 * 1024.0) >= *mb)
+                    .then_some(StopReason::CommBudget)
+            }
+            StopCondition::SimSecondsBudget(s) => {
+                (self.sim_seconds >= *s).then_some(StopReason::SimSecondsBudget)
+            }
+            StopCondition::Any(conds) => conds.iter().find_map(|c| self.reason_for(c)),
         }
     }
 
@@ -504,6 +675,7 @@ impl<'a> Session<'a> {
             self.eval_now();
             self.forced_final = self.eval_every == 0 || self.t % self.eval_every != 0;
         }
+        self.last_stop_reason = self.reason_for(&stop);
         &self.trace
     }
 
@@ -586,6 +758,18 @@ impl<'a> Session<'a> {
         let mut sw = StateWriter::new();
         self.source.get().state_save(&mut sw);
         w.put_bytes(&sw.into_bytes());
+        // Trailing, optional section: present exactly when a fault plan
+        // is installed, so faultless checkpoints keep the pre-fault
+        // layout and older readers (which stop at "source") stay valid.
+        if let Some(plan) = self.net.get().fault_plan() {
+            w.tag("faults");
+            w.put_bytes(&plan.state_save());
+            w.put_u64(self.churn_stash.len() as u64);
+            for (worker, stash) in &self.churn_stash {
+                w.put_u64(*worker as u64);
+                w.put_bytes(stash);
+            }
+        }
 
         let mut out = CKPT_MAGIC_V2.to_vec();
         out.extend_from_slice(&w.into_bytes());
@@ -677,6 +861,35 @@ impl<'a> Session<'a> {
         let ablk = r.take_bytes()?;
         r.expect_tag("source")?;
         let sblk = r.take_bytes()?;
+        // Optional trailing "faults" section (only written when the
+        // saving session had a fault plan installed). Parsed — and its
+        // presence checked against this session's own plan — before any
+        // state is mutated.
+        let faults_blk = if r.is_done() {
+            None
+        } else {
+            r.expect_tag("faults")?;
+            let plan_bytes = r.take_bytes()?;
+            let n = r.take_u64()? as usize;
+            let mut stashes = BTreeMap::new();
+            for _ in 0..n {
+                let worker = r.take_u64()? as usize;
+                let stash = r.take_bytes()?.to_vec();
+                stashes.insert(worker, stash);
+            }
+            Some((plan_bytes, stashes))
+        };
+        if faults_blk.is_some() != self.net.get().faults_active() {
+            return Err(if faults_blk.is_some() {
+                "checkpoint carries fault-injection state but this session has no \
+                 [faults] section configured"
+                    .into()
+            } else {
+                "this session has a [faults] section configured but the checkpoint \
+                 carries no fault-injection state"
+                    .into()
+            });
+        }
         // Everything above was parse + validate only — no session state
         // has been touched yet, so header/shape/truncation errors leave
         // the session exactly as it was. The nested loads below mutate
@@ -692,6 +905,14 @@ impl<'a> Session<'a> {
             net.rounds = rounds;
             net.messages = messages;
             net.bytes_sent.copy_from_slice(&bytes_sent);
+        }
+        if let Some((plan_bytes, stashes)) = faults_blk {
+            self.net
+                .get_mut()
+                .fault_plan_mut()
+                .expect("presence checked against faults_active above")
+                .state_load(plan_bytes)?;
+            self.churn_stash = stashes;
         }
 
         self.t = t;
@@ -1021,6 +1242,69 @@ mod tests {
         ]));
         assert!(s2.sim_seconds() >= 1.0);
         assert!(s2.steps_done() < 5_000);
+    }
+
+    #[test]
+    fn target_loss_on_diverging_run_stops_with_diverged_reason() {
+        // Regression: a non-finite evaluated loss compares false against
+        // every target, so TargetLoss never fired on a diverging run and
+        // the loop ran away to its step bound. eta = 50 on the quadratic
+        // overflows f32 within a few dozen steps.
+        let mut c = quick_config("d-sgd");
+        c.steps = 5_000;
+        c.eval_every = 5;
+        c.hyper.lr = crate::optim::LrSchedule::Constant { eta: 50.0 };
+        let mut s = Session::build(SessionSpec::new(c)).unwrap();
+        s.run_until(StopCondition::Any(vec![
+            StopCondition::Steps(5_000),
+            StopCondition::TargetLoss(1e-12),
+        ]));
+        assert_eq!(s.last_stop_reason(), Some(StopReason::Diverged));
+        assert!(s.steps_done() < 5_000, "diverged run must stop early");
+        assert!(!s.trace().final_loss().is_finite());
+
+        // A healthy run that hits its target reports TargetReached.
+        let mut s2 = Session::build(SessionSpec::new(quick_config("pd-sgdm"))).unwrap();
+        let start = s2.eval_now().loss;
+        s2.run_until(StopCondition::Any(vec![
+            StopCondition::Steps(5_000),
+            StopCondition::TargetLoss(start * 0.5),
+        ]));
+        assert_eq!(s2.last_stop_reason(), Some(StopReason::TargetReached));
+    }
+
+    #[test]
+    fn straggler_multipliers_scale_the_simulated_clock() {
+        let base = run_session(quick_config("pd-sgdm"));
+        let mut c = quick_config("pd-sgdm");
+        c.faults.straggler =
+            Some(crate::comm::StragglerDist::Constant { factor: 2.0 });
+        let mut s = Session::build(SessionSpec::new(c)).unwrap();
+        assert_eq!(s.straggler_multipliers(), &[2.0; 4]);
+        s.run_to_stop();
+        // Every step and round is priced at exactly 2x the slowest
+        // worker, and the fault plan is a zero-rate transparent one, so
+        // the clock doubles while the trajectory is untouched.
+        let t0 = base.points.last().unwrap();
+        let t1 = s.trace().points.last().unwrap();
+        assert_eq!(t0.loss.to_bits(), t1.loss.to_bits());
+        assert!((t1.sim_seconds - 2.0 * t0.sim_seconds).abs() < 1e-9 * t0.sim_seconds.abs());
+    }
+
+    #[test]
+    fn churn_leave_and_rejoin_completes_with_finite_loss() {
+        let mut c = quick_config("pd-sgdm");
+        c.faults.churn = vec![ChurnEvent { worker: 1, leave_step: 8, rejoin_step: 24 }];
+        let mut s = Session::build(SessionSpec::new(c)).unwrap();
+        s.run_until(StopCondition::Steps(10));
+        // Mid-absence: links down, departure checkpoint stashed.
+        assert!(s.net.get().is_absent(1));
+        assert_eq!(s.churn_stash.len(), 1);
+        s.run_to_stop();
+        assert!(!s.net.get().is_absent(1), "worker 1 rejoined at step 24");
+        assert!(s.churn_stash.is_empty());
+        assert!(s.trace().final_loss().is_finite());
+        assert!(s.trace().final_loss() < s.trace().points[0].loss);
     }
 
     #[test]

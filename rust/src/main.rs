@@ -70,6 +70,9 @@ fn print_help() {
                           [--eval-every N] [--period P] [--eta F] [--mu F] [--gamma F]\n\
                           [--topology T] [--compressor SPEC] [--workload W] [--seed N]\n\
                           [--target-loss F] [--comm-budget-mb F] [--sim-seconds F]\n\
+                          [--dirichlet-alpha F] [--drop-prob F] [--delay-prob F]\n\
+                          [--max-delay N] [--reorder-prob F] [--straggler SPEC]\n\
+                          [--churn W@LEAVE:REJOIN,..] [--fault-seed N]\n\
                           [--resume CKPT] [--out CSV] [--ckpt FILE] [--verbose]\n\
            pdsgdm topology --kind ring|chain|complete|star|torus|hypercube|regular-D\n\
                           [--workers K] [--weighting uniform|metropolis|lazy-metropolis]\n\
@@ -78,6 +81,9 @@ fn print_help() {
          \n\
          Workloads: quadratic | logistic | mlp | transformer (needs `make artifacts`).\n\
          Compressors: sign | topR | randR | qsgdL | identity (R ratio, L levels).\n\
+         Faults: --straggler constant:F | uniform:LO,HI | lognormal:MU,SIGMA;\n\
+         --churn 1@60:120 (worker 1 leaves at step 60, rejoins at 120);\n\
+         --dirichlet-alpha sets non-IID label skew (small alpha = more skew).\n\
          Checkpoints: --ckpt writes a full-state PDSGDM02 file; --resume continues\n\
          it bit-identically (give the same config plus the new --steps total)."
     );
@@ -212,6 +218,33 @@ fn cmd_train(flags: Flags) -> Result<()> {
     }
     if let Some(s) = flags.get_parse::<f64>("sim-seconds")? {
         cfg.stop.sim_seconds_budget = Some(s);
+    }
+    // Fault-injection & heterogeneity overrides (see configs/faults.toml).
+    if let Some(a) = flags.get_parse::<f64>("dirichlet-alpha")? {
+        cfg.sharding = pdsgdm::data::Sharding::Dirichlet { alpha: a };
+    }
+    if let Some(p) = flags.get_parse::<f64>("drop-prob")? {
+        cfg.faults.drop_prob = p;
+    }
+    if let Some(p) = flags.get_parse::<f64>("delay-prob")? {
+        cfg.faults.delay_prob = p;
+    }
+    if let Some(n) = flags.get_parse::<u64>("max-delay")? {
+        cfg.faults.max_delay = n;
+    }
+    if let Some(p) = flags.get_parse::<f64>("reorder-prob")? {
+        cfg.faults.reorder_prob = p;
+    }
+    if let Some(s) = flags.get("straggler") {
+        cfg.faults.straggler =
+            Some(pdsgdm::comm::StragglerDist::parse(s).map_err(|e| anyhow!(e))?);
+    }
+    if let Some(c) = flags.get("churn") {
+        cfg.faults.churn =
+            pdsgdm::config::ChurnEvent::parse_list(c).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(s) = flags.get_parse::<u64>("fault-seed")? {
+        cfg.faults.seed = s;
     }
     cfg.validate().map_err(|e| anyhow!(e))?;
 

@@ -1,0 +1,167 @@
+//! Acceptance tests for the fault-injection & heterogeneity layer:
+//!
+//! * a `FaultPlan` with **all rates zero** is bit-identical to a
+//!   faultless run — for every algorithm in `ALL_NAMES` × {Ring, Star,
+//!   Chain} (the layer's central contract: installing the plan must not
+//!   perturb a single bit, so the hardened recv paths and the zero-rate
+//!   plan are property-tested against the legacy execution path);
+//! * a churn run (leave → departure checkpoint → rejoin-and-restore)
+//!   replays its trace bit-identically with the same fault seed;
+//! * a faulty run interrupted mid-absence — with in-flight delayed
+//!   messages and a stashed departure checkpoint — resumes from its
+//!   `PDSGDM02` checkpoint bit-identically (fault RNG, delay buffer,
+//!   absence flags, and churn stashes all round-trip);
+//! * a drop-heavy unreliable fabric still completes with finite loss
+//!   (renormalized mixing never divides by a vanished neighborhood).
+
+use pdsgdm::algorithms::{Algorithm as _, ALL_NAMES};
+use pdsgdm::config::{ChurnEvent, ExperimentConfig, WorkloadConfig};
+use pdsgdm::coordinator::{Session, SessionSpec, StopCondition};
+use pdsgdm::metrics::Trace;
+use pdsgdm::topology::Topology;
+
+fn base_config(algorithm: &str, topology: Topology) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.algorithm = algorithm.into();
+    c.workers = 4;
+    c.steps = 60;
+    c.eval_every = 10;
+    c.seed = 77;
+    c.topology = topology;
+    // noise > 0 so every trace bit depends on the RNG streams.
+    c.workload = WorkloadConfig::Quadratic { dim: 16, heterogeneity: 1.0, noise: 0.2 };
+    c.hyper.lr = pdsgdm::optim::LrSchedule::Constant { eta: 0.02 };
+    c
+}
+
+/// A config whose fault layer is *installed but inert*: `enabled = true`
+/// forces the zero-rate `FaultPlan` onto the network.
+fn zero_rate_faults(mut c: ExperimentConfig) -> ExperimentConfig {
+    c.faults.enabled = true;
+    c
+}
+
+/// Drop + delay + reorder + one worker leaving and rejoining.
+fn full_faults(mut c: ExperimentConfig) -> ExperimentConfig {
+    c.faults.drop_prob = 0.15;
+    c.faults.delay_prob = 0.15;
+    c.faults.max_delay = 2;
+    c.faults.reorder_prob = 0.25;
+    c.faults.seed = 9;
+    c.faults.churn = vec![ChurnEvent { worker: 1, leave_step: 10, rejoin_step: 40 }];
+    c
+}
+
+fn run_to_end(cfg: ExperimentConfig) -> Session<'static> {
+    let mut s = Session::build(SessionSpec::new(cfg)).unwrap();
+    s.run_to_stop();
+    s
+}
+
+fn assert_traces_bit_identical(name: &str, a: &Trace, b: &Trace) {
+    assert_eq!(a.points.len(), b.points.len(), "{name}: point counts differ");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.step, pb.step, "{name}");
+        let t = pa.step;
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "{name}: loss @ step {t}");
+        assert_eq!(pa.comm_mb.to_bits(), pb.comm_mb.to_bits(), "{name}: comm_mb @ {t}");
+        assert_eq!(
+            pa.consensus.to_bits(),
+            pb.consensus.to_bits(),
+            "{name}: consensus @ {t}"
+        );
+        assert_eq!(
+            pa.sim_seconds.to_bits(),
+            pb.sim_seconds.to_bits(),
+            "{name}: sim_seconds @ {t}"
+        );
+    }
+}
+
+fn assert_params_bit_identical(name: &str, a: &Session, b: &Session) {
+    let (a, b) = (a.algo(), b.algo());
+    let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    for k in 0..a.k() {
+        assert_eq!(bits(a.params(k)), bits(b.params(k)), "{name}: worker {k} iterate");
+    }
+}
+
+#[test]
+fn zero_rate_fault_plan_is_bit_identical_for_every_algorithm_and_topology() {
+    for topology in [Topology::Ring, Topology::Star, Topology::Chain] {
+        for name in ALL_NAMES {
+            let label = format!("{name} on {topology:?}");
+            let plain = run_to_end(base_config(name, topology));
+            let faulted = run_to_end(zero_rate_faults(base_config(name, topology)));
+            assert_traces_bit_identical(&label, plain.trace(), faulted.trace());
+            assert_params_bit_identical(&label, &plain, &faulted);
+            assert_eq!(plain.comm_bytes(), faulted.comm_bytes(), "{label}: bytes");
+        }
+    }
+}
+
+#[test]
+fn churn_run_replays_bit_identically_with_same_fault_seed() {
+    for name in ["pd-sgdm", "cpd-sgdm", "momentum-tracking"] {
+        let cfg = full_faults(base_config(name, Topology::Ring));
+        let a = run_to_end(cfg.clone());
+        let b = run_to_end(cfg);
+        let label = format!("{name} churn replay");
+        assert_traces_bit_identical(&label, a.trace(), b.trace());
+        assert_params_bit_identical(&label, &a, &b);
+    }
+}
+
+#[test]
+fn faulty_run_resumes_bit_identically_from_mid_absence_checkpoint() {
+    // Interrupt at step 30: worker 1 is absent (left at 10, rejoins at
+    // 40), a departure checkpoint is stashed, and with delay_prob > 0
+    // the plan likely holds in-flight messages — all of it must survive
+    // the checkpoint round-trip for the resumed trace to match.
+    let cfg = full_faults(base_config("pd-sgdm", Topology::Ring));
+
+    let mut straight = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+    straight.run_until(StopCondition::Steps(60));
+
+    let mut first = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+    first.run_until(StopCondition::Steps(30));
+    let ckpt = first.save_state();
+    drop(first);
+
+    let mut resumed = Session::build(SessionSpec::new(cfg)).unwrap();
+    resumed.load_state(&ckpt).unwrap();
+    assert_eq!(resumed.steps_done(), 30);
+    resumed.run_until(StopCondition::Steps(60));
+
+    assert_traces_bit_identical("pd-sgdm faulty resume", straight.trace(), resumed.trace());
+    assert_params_bit_identical("pd-sgdm faulty resume", &straight, &resumed);
+}
+
+#[test]
+fn faulty_checkpoint_rejected_by_faultless_session() {
+    let mut s = run_to_end(full_faults(base_config("pd-sgdm", Topology::Ring)));
+    let ckpt = s.save_state();
+    let mut plain = Session::build(SessionSpec::new(base_config(
+        "pd-sgdm",
+        Topology::Ring,
+    )))
+    .unwrap();
+    let err = plain.load_state(&ckpt).unwrap_err();
+    assert!(err.contains("config") || err.contains("fault"), "{err}");
+    s.run_until(StopCondition::Steps(60)); // still drivable after save
+}
+
+#[test]
+fn drop_heavy_fabric_still_converges_finitely() {
+    for name in ["pd-sgdm", "d-sgd", "momentum-tracking"] {
+        let mut c = base_config(name, Topology::Ring);
+        c.faults.drop_prob = 0.5;
+        c.faults.seed = 4;
+        let s = run_to_end(c);
+        assert!(s.trace().final_loss().is_finite(), "{name}");
+        assert!(
+            s.trace().final_loss() < s.trace().points[0].loss,
+            "{name}: no progress under 50% drops"
+        );
+    }
+}
