@@ -16,6 +16,9 @@
 //!    fanned over the persistent [`pdsgdm::engine::WorkerPool`], with a
 //!    seq-vs-pool bit-identity assertion before timing (a determinism
 //!    break is a hard bench failure, which CI turns into a red build).
+//!    Plus `mix_round_largek` / `algo_step_largek`: the same phases on
+//!    the exponential graph at K ∈ {64, 256, 1024} (d up to 65536),
+//!    with a no-reallocation assert on the flat arena's data pointer.
 //! 3. L3 micro-kernels: momentum update, gossip mixing, every
 //!    compression operator, and every wire codec (encode+decode
 //!    round-trip, asserting the `wire_bytes == encode(..).len()`
@@ -35,16 +38,26 @@
 use std::time::Duration;
 
 use pdsgdm::algorithms::{Algorithm, CompressedExchange, GossipState, Hyper, PdSgdm};
+use pdsgdm::arena::ParamArena;
 use pdsgdm::benchlib::{bench, black_box, budget, report, smoke, stats_json, JsonSink};
 use pdsgdm::comm::Network;
 use pdsgdm::compress::{Compressor, Identity, Qsgd, RandK, Sign, TopK};
 use pdsgdm::data::{Blobs, Sharding};
 use pdsgdm::engine::WorkerPool;
-use pdsgdm::grad::{GradientSource, Mlp};
+use pdsgdm::grad::{GradientSource, Mlp, Quadratic};
 use pdsgdm::json::Json;
 use pdsgdm::optim::{LrSchedule, MomentumState};
 use pdsgdm::rng::Xoshiro256;
-use pdsgdm::topology::{mixing_matrix, Topology, Weighting};
+use pdsgdm::topology::{build_sparse, mixing_matrix, Topology, Weighting};
+
+/// Fill a fresh K×d arena with unit normals (bench inputs).
+fn normal_arena(k: usize, d: usize, rng: &mut Xoshiro256) -> ParamArena {
+    let mut xs = ParamArena::zeros(k, d);
+    for i in 0..k {
+        xs.row_mut(i).copy_from_slice(&rng.normal_vec(d, 1.0));
+    }
+    xs
+}
 
 // ---------------------------------------------------------------------------
 // Section 1: end-to-end algo.step K-scaling
@@ -165,7 +178,7 @@ fn bench_mix_round(sink: &mut JsonSink) {
         let pool = WorkerPool::new(k.min(cores));
         for &d in ds {
             let mut rng = Xoshiro256::seed_from_u64(0x317);
-            let xs0: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let xs0 = normal_arena(k, d, &mut rng);
             // Determinism first: pooled mixing must be bit-identical.
             {
                 let mut gs_seq = GossipState::new(w.clone());
@@ -178,7 +191,7 @@ fn bench_mix_round(sink: &mut JsonSink) {
                     gs_seq.mix(&mut xa, &mut net_seq, None);
                     gs_pool.mix(&mut xb, &mut net_pool, Some(&pool));
                 }
-                let ok = xa.iter().zip(&xb).all(|(a, b)| bits(a) == bits(b));
+                let ok = bits(xa.as_slice()) == bits(xb.as_slice());
                 assert!(ok, "mix_round K={k} d={d}: pooled mix diverged from sequential");
             }
             let mut median_seq_ns = 0.0f64;
@@ -228,7 +241,7 @@ fn bench_comm_round(sink: &mut JsonSink) {
         let pool = WorkerPool::new(k.min(cores));
         for &d in ds {
             let mut rng = Xoshiro256::seed_from_u64(0xC0);
-            let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let inputs = normal_arena(k, d, &mut rng);
             // Determinism first (Sign is deterministic; the forked
             // per-worker streams make this hold for stochastic codecs
             // too — property-tested in the crate's unit tests).
@@ -238,11 +251,11 @@ fn bench_comm_round(sink: &mut JsonSink) {
                 let mut net_seq = Network::new(&graph);
                 let mut net_pool = Network::new(&graph);
                 for _ in 0..2 {
-                    let a: Vec<Vec<f32>> = ex_seq
+                    let a = ex_seq
                         .round(&Sign, &mut net_seq, &inputs, None, |_, _| {})
-                        .to_vec();
+                        .clone();
                     let b = ex_pool.round(&Sign, &mut net_pool, &inputs, Some(&pool), |_, _| {});
-                    let ok = a.iter().zip(b).all(|(x, y)| bits(x) == bits(y));
+                    let ok = bits(a.as_slice()) == bits(b.as_slice());
                     assert!(ok, "comm_round K={k} d={d}: pooled exchange diverged");
                 }
             }
@@ -252,7 +265,7 @@ fn bench_comm_round(sink: &mut JsonSink) {
                 let mut net = Network::new(&graph);
                 let pool_opt = if mode == "pool" { Some(&pool) } else { None };
                 let stats = bench(2, budget(), || {
-                    black_box(ex.round(&Sign, &mut net, &inputs, pool_opt, |_, _| {}).len());
+                    black_box(ex.round(&Sign, &mut net, &inputs, pool_opt, |_, _| {}).k());
                 });
                 report(
                     &format!("comm_round[sign] K={k} d={d} {mode}"),
@@ -282,6 +295,138 @@ fn bench_comm_round(sink: &mut JsonSink) {
 }
 
 // ---------------------------------------------------------------------------
+// Section 2b: large-K fleet scaling (ISSUE 7 — flat arenas + sparse CSR
+// weights). Exponential graph at K ∈ {64, 256, 1024}: one gossip round
+// and one end-to-end algorithm step, with bit-identity asserts at the
+// sizes where a second fleet copy is cheap and a no-reallocation assert
+// at every K (the arena data pointer must ping-pong between exactly two
+// stable allocations once the scratch arena is materialized).
+// ---------------------------------------------------------------------------
+
+fn bench_largek(sink: &mut JsonSink) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("\n## large-K fleet (expgraph, sparse CSR weights, flat arenas, {cores} cores)\n");
+    for &k in &[64usize, 256, 1024] {
+        // K=1024 mixes at d=65536 (full mode) — the ISSUE 7 acceptance
+        // size; the oracle-driven step uses a smaller d so the quadratic
+        // problem data (two more K×d tables) stays within bench memory.
+        let (d_mix, d_step) = match (smoke(), k) {
+            (true, 1024) => (1024, 512),
+            (true, _) => (512, 256),
+            (false, 1024) => (65_536, 16_384),
+            (false, _) => (16_384, 4_096),
+        };
+        let (graph, mw, rho) = build_sparse(Topology::ExpGraph, k, Weighting::UniformDegree, 0);
+        println!("  K={k} expgraph: rho={rho:.4} edges={}", graph.edge_count());
+
+        // -- mix_round_largek --
+        let mut rng = Xoshiro256::seed_from_u64(0x517 + k as u64);
+        let mut xs = normal_arena(k, d_mix, &mut rng);
+        if k <= 256 {
+            // Pooled mixing must reproduce the sequential round
+            // bit-for-bit (a second fleet copy is cheap at these sizes).
+            let pool = WorkerPool::new(k.min(cores));
+            let mut gs_seq = GossipState::new(mw.clone());
+            let mut gs_pool = GossipState::new(mw.clone());
+            let mut net_seq = Network::new(&graph);
+            let mut net_pool = Network::new(&graph);
+            let mut xa = xs.clone();
+            let mut xb = xs.clone();
+            for _ in 0..2 {
+                gs_seq.mix(&mut xa, &mut net_seq, None);
+                gs_pool.mix(&mut xb, &mut net_pool, Some(&pool));
+            }
+            assert!(
+                bits(xa.as_slice()) == bits(xb.as_slice()),
+                "largek K={k}: pooled mix diverged from sequential"
+            );
+        }
+        let mut gs = GossipState::new(mw.clone());
+        let mut net = Network::new(&graph);
+        let p0 = xs.data_ptr();
+        gs.mix(&mut xs, &mut net, None); // materializes scratch + staging
+        let p1 = xs.data_ptr();
+        for _ in 0..2 {
+            gs.mix(&mut xs, &mut net, None);
+            let p = xs.data_ptr();
+            assert!(p == p0 || p == p1, "largek K={k}: mix reallocated the arena");
+        }
+        let stats = bench(1, budget(), || {
+            black_box(gs.mix(&mut xs, &mut net, None));
+        });
+        report(
+            &format!("mix_round_largek K={k} d={d_mix} expgraph"),
+            &stats,
+            Some(((k * d_mix) as f64, "param")),
+        );
+        let mut fields = vec![
+            ("topology", Json::Str("expgraph".into())),
+            ("k", Json::Num(k as f64)),
+            ("d", Json::Num(d_mix as f64)),
+            ("cores", Json::Num(cores as f64)),
+            ("rho", Json::Num(rho)),
+        ];
+        fields.extend(stats_json(&stats, Some((k * d_mix) as f64)));
+        sink.push("mix_round_largek", fields);
+        drop(gs);
+        drop(xs);
+
+        // -- algo_step_largek --
+        let hyper = Hyper {
+            lr: LrSchedule::Constant { eta: 0.01 },
+            mu: 0.9,
+            weight_decay: 0.0,
+            period: 4,
+            gamma: 0.4,
+        };
+        if k == 64 {
+            // End-to-end determinism at the smallest fleet: the pooled
+            // engine + arena-backed gossip must retrace the sequential
+            // run bit-for-bit.
+            let run = |parallel: bool| -> Vec<u32> {
+                let mut src = Quadratic::new(k, d_step, 1.0, 0.1, 11);
+                let mut algo = PdSgdm::new(k, src.init(1), mw.clone(), hyper.clone());
+                algo.set_parallel(parallel);
+                let mut net = Network::new(&graph);
+                for t in 0..6 {
+                    algo.step(t, &mut src, &mut net);
+                }
+                (0..k)
+                    .flat_map(|i| algo.params(i).iter().map(|x| x.to_bits()))
+                    .collect()
+            };
+            assert!(
+                run(false) == run(true),
+                "largek K={k}: parallel algo trace diverged from sequential"
+            );
+        }
+        let mut src = Quadratic::new(k, d_step, 1.0, 0.1, 13);
+        let mut algo = PdSgdm::new(k, src.init(2), mw.clone(), hyper);
+        algo.set_parallel(true);
+        let mut net = Network::new(&graph);
+        let mut t = 0u64;
+        let stats = bench(1, budget(), || {
+            black_box(algo.step(t, &mut src, &mut net).mean_loss);
+            t += 1;
+        });
+        report(
+            &format!("algo_step_largek[pd-sgdm] K={k} d={d_step} expgraph"),
+            &stats,
+            Some(((k * d_step) as f64, "worker-param")),
+        );
+        let mut fields = vec![
+            ("algo", Json::Str("pd-sgdm".into())),
+            ("topology", Json::Str("expgraph".into())),
+            ("k", Json::Num(k as f64)),
+            ("d", Json::Num(d_step as f64)),
+            ("cores", Json::Num(cores as f64)),
+        ];
+        fields.extend(stats_json(&stats, Some((k * d_step) as f64)));
+        sink.push("algo_step_largek", fields);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Section 3: L3 micro-kernels
 // ---------------------------------------------------------------------------
 
@@ -305,7 +450,7 @@ fn bench_gossip(k: usize, d: usize, sink: &mut JsonSink) {
     let w = mixing_matrix(&g, Weighting::UniformDegree);
     let mut gossip = GossipState::new(w);
     let mut rng = Xoshiro256::seed_from_u64(2);
-    let mut xs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+    let mut xs = normal_arena(k, d, &mut rng);
     let mut net = Network::new(&g);
     let stats = bench(2, budget(), || {
         black_box(gossip.mix(&mut xs, &mut net, None));
@@ -452,6 +597,7 @@ fn main() {
     bench_algo_step(&mut sink);
     bench_mix_round(&mut sink);
     bench_comm_round(&mut sink);
+    bench_largek(&mut sink);
 
     println!("\n## L3 micro-kernels\n");
     let (d_e2e, d_big) = if smoke() { (100_000usize, 200_000usize) } else { (3_454_464, 16_000_000) };

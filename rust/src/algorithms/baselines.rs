@@ -7,12 +7,14 @@ use super::{
     gossip::{self, CompressedExchange, GossipState},
     Algorithm, Hyper, StepStats,
 };
+use crate::arena::ParamArena;
 use crate::comm::Network;
 use crate::compress::Compressor;
 use crate::engine::{LocalStepEngine, LocalUpdate, ScopedTask};
 use crate::grad::GradientSource;
-use crate::linalg::{self, Mat};
-use crate::optim::MomentumState;
+use crate::linalg;
+use crate::optim::{MomentumBank, MomentumState};
+use crate::topology::MixWeights;
 
 // ---------------------------------------------------------------------------
 // D-SGD (Lian et al. 2017): plain decentralized SGD, gossip every step.
@@ -20,18 +22,19 @@ use crate::optim::MomentumState;
 
 pub struct DSgd {
     hyper: Hyper,
-    xs: Vec<Vec<f32>>,
+    xs: ParamArena,
     gossip: GossipState,
     engine: LocalStepEngine,
 }
 
 impl DSgd {
-    pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper) -> Self {
-        assert_eq!(w.rows, k);
+    pub fn new(k: usize, x0: Vec<f32>, w: impl Into<MixWeights>, hyper: Hyper) -> Self {
+        let gossip = GossipState::new(w);
+        assert_eq!(gossip.k(), k);
         let d = x0.len();
         Self {
-            xs: vec![x0; k],
-            gossip: GossipState::new(w),
+            xs: ParamArena::filled(k, &x0),
+            gossip,
             engine: LocalStepEngine::new(k, d),
             hyper,
         }
@@ -44,7 +47,7 @@ impl Algorithm for DSgd {
     }
 
     fn k(&self) -> usize {
-        self.xs.len()
+        self.xs.k()
     }
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
@@ -55,7 +58,7 @@ impl Algorithm for DSgd {
     }
 
     fn params(&self, k: usize) -> &[f32] {
-        &self.xs[k]
+        self.xs.row(k)
     }
 
     fn set_parallel(&mut self, on: bool) {
@@ -63,17 +66,17 @@ impl Algorithm for DSgd {
     }
 
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
-        self.xs[k].copy_from_slice(x);
+        self.xs.row_mut(k).copy_from_slice(x);
     }
 
     fn state_save(&self, w: &mut crate::state::StateWriter) {
         w.tag("d-sgd");
-        w.put_f32_mat(&self.xs);
+        self.xs.state_save(w);
     }
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
         r.expect_tag("d-sgd")?;
-        r.take_f32_mat_into(&mut self.xs, "d-sgd.xs")
+        self.xs.state_load(r, "d-sgd.xs")
     }
 }
 
@@ -83,18 +86,19 @@ impl Algorithm for DSgd {
 
 pub struct PdSgd {
     hyper: Hyper,
-    xs: Vec<Vec<f32>>,
+    xs: ParamArena,
     gossip: GossipState,
     engine: LocalStepEngine,
 }
 
 impl PdSgd {
-    pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper) -> Self {
-        assert_eq!(w.rows, k);
+    pub fn new(k: usize, x0: Vec<f32>, w: impl Into<MixWeights>, hyper: Hyper) -> Self {
+        let gossip = GossipState::new(w);
+        assert_eq!(gossip.k(), k);
         let d = x0.len();
         Self {
-            xs: vec![x0; k],
-            gossip: GossipState::new(w),
+            xs: ParamArena::filled(k, &x0),
+            gossip,
             engine: LocalStepEngine::new(k, d),
             hyper,
         }
@@ -107,7 +111,7 @@ impl Algorithm for PdSgd {
     }
 
     fn k(&self) -> usize {
-        self.xs.len()
+        self.xs.k()
     }
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
@@ -122,7 +126,7 @@ impl Algorithm for PdSgd {
     }
 
     fn params(&self, k: usize) -> &[f32] {
-        &self.xs[k]
+        self.xs.row(k)
     }
 
     fn set_parallel(&mut self, on: bool) {
@@ -130,17 +134,17 @@ impl Algorithm for PdSgd {
     }
 
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
-        self.xs[k].copy_from_slice(x);
+        self.xs.row_mut(k).copy_from_slice(x);
     }
 
     fn state_save(&self, w: &mut crate::state::StateWriter) {
         w.tag("pd-sgd");
-        w.put_f32_mat(&self.xs);
+        self.xs.state_save(w);
     }
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
         r.expect_tag("pd-sgd")?;
-        r.take_f32_mat_into(&mut self.xs, "pd-sgd.xs")
+        self.xs.state_load(r, "pd-sgd.xs")
     }
 }
 
@@ -152,23 +156,28 @@ impl Algorithm for PdSgd {
 
 pub struct DSgdm {
     hyper: Hyper,
-    xs: Vec<Vec<f32>>,
-    moms: Vec<MomentumState>,
+    xs: ParamArena,
+    moms: MomentumBank,
     gossip: GossipState,
     engine: LocalStepEngine,
     gossip_momentum: bool,
 }
 
 impl DSgdm {
-    pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper, gossip_momentum: bool) -> Self {
-        assert_eq!(w.rows, k);
+    pub fn new(
+        k: usize,
+        x0: Vec<f32>,
+        w: impl Into<MixWeights>,
+        hyper: Hyper,
+        gossip_momentum: bool,
+    ) -> Self {
+        let gossip = GossipState::new(w);
+        assert_eq!(gossip.k(), k);
         let d = x0.len();
         Self {
-            xs: vec![x0; k],
-            moms: (0..k)
-                .map(|_| MomentumState::new(d, hyper.mu, hyper.weight_decay))
-                .collect(),
-            gossip: GossipState::new(w),
+            xs: ParamArena::filled(k, &x0),
+            moms: MomentumBank::new(k, d, hyper.mu, hyper.weight_decay),
+            gossip,
             engine: LocalStepEngine::new(k, d),
             hyper,
             gossip_momentum,
@@ -182,7 +191,7 @@ impl Algorithm for DSgdm {
     }
 
     fn k(&self) -> usize {
-        self.xs.len()
+        self.xs.k()
     }
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
@@ -194,20 +203,15 @@ impl Algorithm for DSgdm {
         );
         let mut bytes = self.gossip.mix(&mut self.xs, net, self.engine.comm_pool());
         if self.gossip_momentum {
-            // Move the momentum buffers through the mix and back —
-            // no per-step clone of K d-length vectors.
-            let mut ms: Vec<Vec<f32>> =
-                self.moms.iter_mut().map(|m| std::mem::take(&mut m.m)).collect();
-            bytes += self.gossip.mix(&mut ms, net, self.engine.comm_pool());
-            for (mom, m) in self.moms.iter_mut().zip(ms) {
-                mom.m = m;
-            }
+            // Mix the momentum bank in place — same arena path as the
+            // iterates, no per-step clone of K d-length vectors.
+            bytes += self.gossip.mix(self.moms.arena_mut(), net, self.engine.comm_pool());
         }
         StepStats { mean_loss, communicated: true, bytes }
     }
 
     fn params(&self, k: usize) -> &[f32] {
-        &self.xs[k]
+        self.xs.row(k)
     }
 
     fn set_parallel(&mut self, on: bool) {
@@ -215,15 +219,15 @@ impl Algorithm for DSgdm {
     }
 
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
-        self.xs[k].copy_from_slice(x);
-        self.moms[k].reset();
+        self.xs.row_mut(k).copy_from_slice(x);
+        self.moms.reset_row(k);
     }
 
     fn state_save(&self, w: &mut crate::state::StateWriter) {
         w.tag("d-sgdm");
         w.put_u64(self.gossip_momentum as u64);
-        w.put_f32_mat(&self.xs);
-        super::save_moms(&self.moms, w);
+        self.xs.state_save(w);
+        self.moms.state_save(w);
     }
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
@@ -231,8 +235,8 @@ impl Algorithm for DSgdm {
         if (r.take_u64()? != 0) != self.gossip_momentum {
             return Err("d-sgdm: gossip_momentum flag mismatch".into());
         }
-        r.take_f32_mat_into(&mut self.xs, "d-sgdm.xs")?;
-        super::load_moms(&mut self.moms, r)
+        self.xs.state_load(r, "d-sgdm.xs")?;
+        self.moms.state_load(r)
     }
 }
 
@@ -336,7 +340,7 @@ impl ChocoSgd {
     pub fn new(
         k: usize,
         x0: Vec<f32>,
-        w: Mat,
+        w: impl Into<MixWeights>,
         hyper: Hyper,
         compressor: Box<dyn Compressor>,
         seed: u64,
@@ -397,8 +401,8 @@ impl Algorithm for ChocoSgd {
 
 pub struct DeepSqueeze {
     hyper: Hyper,
-    xs: Vec<Vec<f32>>,
-    errs: Vec<Vec<f32>>,
+    xs: ParamArena,
+    errs: ParamArena,
     gossip: GossipState,
     compressor: Box<dyn Compressor>,
     engine: LocalStepEngine,
@@ -406,38 +410,38 @@ pub struct DeepSqueeze {
     /// buffer tables) shared with CPD-SGDM's code path.
     exchange: CompressedExchange,
     /// Reusable K×d scratch: the error-compensated inputs v_k = x_k + e_k.
-    vs: Vec<Vec<f32>>,
+    vs: ParamArena,
     /// Reusable K×d scratch: the mixed-compressed corrections.
-    mixes: Vec<Vec<f32>>,
+    mixes: ParamArena,
 }
 
 impl DeepSqueeze {
     pub fn new(
         k: usize,
         x0: Vec<f32>,
-        w: Mat,
+        w: impl Into<MixWeights>,
         hyper: Hyper,
         compressor: Box<dyn Compressor>,
         seed: u64,
     ) -> Self {
-        assert_eq!(w.rows, k);
+        let gossip = GossipState::new(w);
+        assert_eq!(gossip.k(), k);
         let d = x0.len();
         Self {
-            xs: vec![x0; k],
-            errs: vec![vec![0.0; d]; k],
-            gossip: GossipState::new(w),
+            xs: ParamArena::filled(k, &x0),
+            errs: ParamArena::zeros(k, d),
+            gossip,
             compressor,
             engine: LocalStepEngine::new(k, d),
             exchange: CompressedExchange::new(k, seed),
-            vs: Vec::new(),
-            mixes: Vec::new(),
+            vs: ParamArena::zeros(k, d),
+            mixes: ParamArena::zeros(k, d),
             hyper,
         }
     }
 
     fn comm_round(&mut self, net: &mut Network) -> u64 {
         let k = self.k();
-        let d = self.xs.first().map(Vec::len).unwrap_or(0);
         let before = net.total_bytes;
         let pool = self.engine.comm_pool();
         // v_k = x_k + e_k into reusable scratch, then the shared
@@ -447,8 +451,7 @@ impl DeepSqueeze {
         // via the on_compressed hook (always caller-thread, worker
         // order), while the mixing below consumes the receiver-side
         // decodes.
-        gossip::ensure_rows(&mut self.vs, k, d);
-        for ((v, x), e) in self.vs.iter_mut().zip(&self.xs).zip(&self.errs) {
+        for ((v, x), e) in self.vs.rows_mut().zip(self.xs.rows()).zip(self.errs.rows()) {
             for ((vv, &xv), &ev) in v.iter_mut().zip(x).zip(e) {
                 *vv = xv + ev;
             }
@@ -461,31 +464,43 @@ impl DeepSqueeze {
             vs,
             pool,
             |i, c| {
-                for ((e, &vv), &cc) in errs[i].iter_mut().zip(&vs[i]).zip(&c.dense) {
+                for ((e, &vv), &cc) in errs.row_mut(i).iter_mut().zip(vs.row(i)).zip(&c.dense) {
                     *e = vv - cc;
                 }
             },
         );
         // x_i += Σ_j w_ij c_j − c_i: one fused weighted-sum per worker
-        // into reusable scratch (was a fresh `mixc` per worker per
-        // round), fanned over the shared engine pool.
-        gossip::ensure_rows(&mut self.mixes, k, d);
+        // into reusable scratch, fanned over the shared engine pool. The
+        // term list walks the sparse weight row (ascending neighbors,
+        // self weight spliced in at its natural column position) so the
+        // summation order matches the old dense row scan bitwise.
         {
-            let w = &self.gossip.w;
+            let w = self.gossip.weights();
             let rows: Vec<ScopedTask<'_, ()>> = self
                 .xs
-                .iter_mut()
-                .zip(self.mixes.iter_mut())
+                .rows_mut()
+                .zip(self.mixes.rows_mut())
                 .enumerate()
                 .map(|(i, (x, mixc))| {
                     let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(k + 1);
-                    for j in 0..k {
-                        let wij = w[(i, j)] as f32;
+                    let sw = w.self_weight(i) as f32;
+                    let mut placed_self = false;
+                    for &(j, wij) in w.neighbors(i) {
+                        if j > i && !placed_self {
+                            if sw != 0.0 {
+                                terms.push((sw, cs.row(i)));
+                            }
+                            placed_self = true;
+                        }
+                        let wij = wij as f32;
                         if wij != 0.0 {
-                            terms.push((wij, cs[j].as_slice()));
+                            terms.push((wij, cs.row(j)));
                         }
                     }
-                    terms.push((-1.0, cs[i].as_slice()));
+                    if !placed_self && sw != 0.0 {
+                        terms.push((sw, cs.row(i)));
+                    }
+                    terms.push((-1.0, cs.row(i)));
                     Box::new(move || {
                         linalg::weighted_sum_into(mixc, &terms);
                         linalg::axpy(1.0, mixc, x);
@@ -504,7 +519,7 @@ impl Algorithm for DeepSqueeze {
     }
 
     fn k(&self) -> usize {
-        self.xs.len()
+        self.xs.k()
     }
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
@@ -519,7 +534,7 @@ impl Algorithm for DeepSqueeze {
     }
 
     fn params(&self, k: usize) -> &[f32] {
-        &self.xs[k]
+        self.xs.row(k)
     }
 
     fn set_parallel(&mut self, on: bool) {
@@ -527,23 +542,23 @@ impl Algorithm for DeepSqueeze {
     }
 
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
-        self.xs[k].copy_from_slice(x);
+        self.xs.row_mut(k).copy_from_slice(x);
         // A restarted worker carries no accumulated compression residual.
-        self.errs[k].iter_mut().for_each(|e| *e = 0.0);
+        self.errs.row_mut(k).fill(0.0);
     }
 
     fn state_save(&self, w: &mut crate::state::StateWriter) {
         w.tag("deepsqueeze");
-        w.put_f32_mat(&self.xs);
-        w.put_f32_mat(&self.errs);
+        self.xs.state_save(w);
+        self.errs.state_save(w);
         // Per-worker compression streams (see CompressedExchange).
         self.exchange.state_save(w);
     }
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
         r.expect_tag("deepsqueeze")?;
-        r.take_f32_mat_into(&mut self.xs, "deepsqueeze.xs")?;
-        r.take_f32_mat_into(&mut self.errs, "deepsqueeze.errs")?;
+        self.xs.state_load(r, "deepsqueeze.xs")?;
+        self.errs.state_load(r, "deepsqueeze.errs")?;
         self.exchange.state_load(r)
     }
 }
@@ -553,6 +568,7 @@ mod tests {
     use super::*;
     use crate::compress::Sign;
     use crate::grad::{GradientSource, Quadratic};
+    use crate::linalg::Mat;
     use crate::optim::LrSchedule;
     use crate::topology::{mixing_matrix, Topology, Weighting};
 
@@ -692,7 +708,7 @@ mod tests {
         let mut src = Quadratic::new(k, 16, 1.0, 0.0, 10);
         let mut algo = DeepSqueeze::new(k, src.init(3), w, hyper(0.02, 1), Box::new(Sign), 3);
         algo.step(0, &mut src, &mut net);
-        let err_norm: f64 = algo.errs.iter().map(|e| crate::linalg::norm(e)).sum();
+        let err_norm: f64 = algo.errs.rows().map(crate::linalg::norm).sum();
         assert!(err_norm > 0.0, "sign compression must leave a residual");
     }
 }

@@ -24,19 +24,21 @@ use super::{
     gossip::{self, CompressedExchange, GossipState},
     Algorithm, Hyper, StepStats,
 };
+use crate::arena::ParamArena;
 use crate::comm::Network;
 use crate::compress::Compressor;
 use crate::engine::{LocalStepEngine, LocalUpdate, ScopedTask};
 use crate::grad::GradientSource;
-use crate::linalg::{self, Mat};
-use crate::optim::MomentumState;
+use crate::linalg;
+use crate::optim::MomentumBank;
+use crate::topology::MixWeights;
 
 pub struct CpdSgdm {
     hyper: Hyper,
-    xs: Vec<Vec<f32>>,
+    xs: ParamArena,
     /// Canonical auxiliary iterates x̂^(k) (shared view, see module doc).
-    hats: Vec<Vec<f32>>,
-    moms: Vec<MomentumState>,
+    hats: ParamArena,
+    moms: MomentumBank,
     gossip: GossipState,
     compressor: Box<dyn Compressor>,
     engine: LocalStepEngine,
@@ -44,35 +46,34 @@ pub struct CpdSgdm {
     /// RNG streams + reusable buffer tables; see `gossip` module docs).
     exchange: CompressedExchange,
     /// Reusable K×d scratch: the q-inputs x_i − x̂_i (line 7).
-    diffs: Vec<Vec<f32>>,
+    diffs: ParamArena,
     /// Reusable K×d scratch: the line-6 consensus corrections.
-    corrs: Vec<Vec<f32>>,
+    corrs: ParamArena,
 }
 
 impl CpdSgdm {
     pub fn new(
         k: usize,
         x0: Vec<f32>,
-        w: Mat,
+        w: impl Into<MixWeights>,
         hyper: Hyper,
         compressor: Box<dyn Compressor>,
         seed: u64,
     ) -> Self {
         assert!(hyper.gamma > 0.0, "consensus step size must be positive");
-        assert_eq!(w.rows, k);
+        let gossip = GossipState::new(w);
+        assert_eq!(gossip.k(), k);
         let d = x0.len();
         Self {
-            xs: vec![x0; k],
-            hats: vec![vec![0.0; d]; k], // x̂_0 = 0 per CHOCO convention
-            moms: (0..k)
-                .map(|_| MomentumState::new(d, hyper.mu, hyper.weight_decay))
-                .collect(),
-            gossip: GossipState::new(w),
+            xs: ParamArena::filled(k, &x0),
+            hats: ParamArena::zeros(k, d), // x̂_0 = 0 per CHOCO convention
+            moms: MomentumBank::new(k, d, hyper.mu, hyper.weight_decay),
+            gossip,
             compressor,
             engine: LocalStepEngine::new(k, d),
             exchange: CompressedExchange::new(k, seed),
-            diffs: Vec::new(),
-            corrs: Vec::new(),
+            diffs: ParamArena::zeros(k, d),
+            corrs: ParamArena::zeros(k, d),
             hyper,
         }
     }
@@ -81,8 +82,8 @@ impl CpdSgdm {
     /// tracked by the Theorem 2 analysis (Lemma 6's second term).
     pub fn hat_residual(&self) -> f64 {
         self.xs
-            .iter()
-            .zip(&self.hats)
+            .rows()
+            .zip(self.hats.rows())
             .map(|(x, h)| {
                 let e = linalg::dist(x, h);
                 e * e
@@ -93,36 +94,47 @@ impl CpdSgdm {
 
     fn comm_round(&mut self, net: &mut Network) -> u64 {
         let k = self.k();
-        let d = self.xs.first().map(Vec::len).unwrap_or(0);
         let gamma = self.hyper.gamma;
         let before = net.total_bytes;
         let pool = self.engine.comm_pool();
 
         // Line 6: consensus correction from the (shared) auxiliary state
         // — Σ_j w_ij (x̂_j − x̂_i); w rows sum to 1 so this equals
-        // Σ_j w_ij x̂_j − x̂_i. One fused weighted-sum per worker into a
-        // reusable scratch row (the old path allocated a fresh `corr`
-        // per worker per round), fanned over the shared engine pool:
-        // worker i reads the frozen x̂ table and writes only
-        // corrs[i]/xs[i], so the schedule is bit-invisible.
-        gossip::ensure_rows(&mut self.corrs, k, d);
+        // Σ_j w_ij x̂_j − x̂_i. The term list walks the sparse weight row
+        // (ascending neighbors) with the self weight spliced in at its
+        // natural column position, so the summation order — and hence the
+        // f32 result — matches the old dense row scan bitwise. One fused
+        // weighted-sum per worker into a reusable scratch row, fanned over
+        // the shared engine pool: worker i reads the frozen x̂ table and
+        // writes only corrs[i]/xs[i], so the schedule is bit-invisible.
         {
-            let w = &self.gossip.w;
+            let w = self.gossip.weights();
             let hats = &self.hats;
             let rows: Vec<ScopedTask<'_, ()>> = self
                 .xs
-                .iter_mut()
-                .zip(self.corrs.iter_mut())
+                .rows_mut()
+                .zip(self.corrs.rows_mut())
                 .enumerate()
                 .map(|(i, (x, corr))| {
                     let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(k + 1);
-                    for j in 0..k {
-                        let wij = w[(i, j)] as f32;
+                    let sw = w.self_weight(i) as f32;
+                    let mut placed_self = false;
+                    for &(j, wij) in w.neighbors(i) {
+                        if j > i && !placed_self {
+                            if sw != 0.0 {
+                                terms.push((sw, hats.row(i)));
+                            }
+                            placed_self = true;
+                        }
+                        let wij = wij as f32;
                         if wij != 0.0 {
-                            terms.push((wij, hats[j].as_slice()));
+                            terms.push((wij, hats.row(j)));
                         }
                     }
-                    terms.push((-1.0, hats[i].as_slice()));
+                    if !placed_self && sw != 0.0 {
+                        terms.push((sw, hats.row(i)));
+                    }
+                    terms.push((-1.0, hats.row(i)));
                     Box::new(move || {
                         linalg::weighted_sum_into(corr, &terms);
                         linalg::axpy(gamma, corr, x);
@@ -133,8 +145,7 @@ impl CpdSgdm {
         }
 
         // Line 7 inputs: q-differences x_i − x̂_i into reusable scratch.
-        gossip::ensure_rows(&mut self.diffs, k, d);
-        for ((diff, x), hat) in self.diffs.iter_mut().zip(&self.xs).zip(&self.hats) {
+        for ((diff, x), hat) in self.diffs.rows_mut().zip(self.xs.rows()).zip(self.hats.rows()) {
             for ((dv, &xv), &hv) in diff.iter_mut().zip(x).zip(hat) {
                 *dv = xv - hv;
             }
@@ -148,7 +159,7 @@ impl CpdSgdm {
         let qs =
             self.exchange
                 .round(self.compressor.as_ref(), net, &self.diffs, pool, |_, _| {});
-        for (hat, q) in self.hats.iter_mut().zip(qs) {
+        for (hat, q) in self.hats.rows_mut().zip(qs.rows()) {
             linalg::axpy(1.0, q, hat);
         }
         net.total_bytes - before
@@ -166,7 +177,7 @@ impl Algorithm for CpdSgdm {
     }
 
     fn k(&self) -> usize {
-        self.xs.len()
+        self.xs.k()
     }
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
@@ -187,7 +198,7 @@ impl Algorithm for CpdSgdm {
     }
 
     fn params(&self, k: usize) -> &[f32] {
-        &self.xs[k]
+        self.xs.row(k)
     }
 
     fn set_parallel(&mut self, on: bool) {
@@ -195,8 +206,8 @@ impl Algorithm for CpdSgdm {
     }
 
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
-        self.xs[k].copy_from_slice(x);
-        self.moms[k].reset();
+        self.xs.row_mut(k).copy_from_slice(x);
+        self.moms.reset_row(k);
         // x̂ is left untouched: every worker holds the same canonical
         // copy of x̂^(k), so rewriting it here would desynchronize the
         // fleet's view. The diff compression q = Q(x − x̂) self-corrects
@@ -205,9 +216,9 @@ impl Algorithm for CpdSgdm {
 
     fn state_save(&self, w: &mut crate::state::StateWriter) {
         w.tag("cpd-sgdm");
-        w.put_f32_mat(&self.xs);
-        w.put_f32_mat(&self.hats);
-        super::save_moms(&self.moms, w);
+        self.xs.state_save(w);
+        self.hats.state_save(w);
+        self.moms.state_save(w);
         // Per-worker compression streams (was: one shared stream — the
         // per-worker bank is what keeps pooled compression deterministic).
         self.exchange.state_save(w);
@@ -215,9 +226,9 @@ impl Algorithm for CpdSgdm {
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
         r.expect_tag("cpd-sgdm")?;
-        r.take_f32_mat_into(&mut self.xs, "cpd-sgdm.xs")?;
-        r.take_f32_mat_into(&mut self.hats, "cpd-sgdm.hats")?;
-        super::load_moms(&mut self.moms, r)?;
+        self.xs.state_load(r, "cpd-sgdm.xs")?;
+        self.hats.state_load(r, "cpd-sgdm.hats")?;
+        self.moms.state_load(r)?;
         self.exchange.state_load(r)
     }
 }
@@ -227,6 +238,7 @@ mod tests {
     use super::*;
     use crate::compress::{Identity, Sign, TopK};
     use crate::grad::Quadratic;
+    use crate::linalg::Mat;
     use crate::optim::LrSchedule;
     use crate::topology::{mixing_matrix, Topology, Weighting};
 
@@ -383,7 +395,7 @@ mod tests {
             6,
         );
         // set distinct worker states; run one round to sync x̂ = x
-        for (i, x) in algo.xs.iter_mut().enumerate() {
+        for (i, x) in algo.xs.rows_mut().enumerate() {
             for (c, v) in x.iter_mut().enumerate() {
                 *v = (i * 4 + c) as f32;
             }
@@ -391,19 +403,23 @@ mod tests {
         // round 1 with x̂=0: x unchanged (correction 0), x̂ <- x exactly.
         let xs_snapshot = algo.xs.clone();
         algo.comm_round(&mut net);
-        for (h, x) in algo.hats.iter().zip(&xs_snapshot) {
+        for (h, x) in algo.hats.rows().zip(xs_snapshot.rows()) {
             crate::testing::assert_allclose(h, x, 1e-6, 1e-7);
         }
         // round 2: x ← x + (Wx̂ − x̂) = W x.
         let expect: Vec<Vec<f32>> = (0..k)
             .map(|i| {
                 (0..4)
-                    .map(|c| (0..k).map(|j| w[(i, j)] as f32 * xs_snapshot[j][c]).sum())
+                    .map(|c| {
+                        (0..k)
+                            .map(|j| w[(i, j)] as f32 * xs_snapshot.row(j)[c])
+                            .sum()
+                    })
                     .collect()
             })
             .collect();
         algo.comm_round(&mut net);
-        for (got, want) in algo.xs.iter().zip(&expect) {
+        for (got, want) in algo.xs.rows().zip(&expect) {
             crate::testing::assert_allclose(got, want, 1e-5, 1e-6);
         }
     }

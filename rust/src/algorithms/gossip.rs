@@ -13,11 +13,12 @@
 
 use std::sync::Arc;
 
+use crate::arena::ParamArena;
 use crate::comm::{Message, Network, Payload};
 use crate::compress::{check_wire_size, CompressedVec, Compressor};
 use crate::engine::{ScopedTask, WorkerPool};
-use crate::linalg::Mat;
 use crate::rng::Xoshiro256;
+use crate::topology::MixWeights;
 
 /// Run one closure per worker: fanned over the pool when present (and
 /// worth it), inline otherwise. Each row must touch only its own
@@ -32,67 +33,76 @@ pub(crate) fn run_rows(pool: Option<&WorkerPool>, rows: Vec<ScopedTask<'_, ()>>)
     }
 }
 
-/// Size a K×d scratch table, reusing existing rows (the only allocation
-/// happens on first use or after a shape change).
-pub(crate) fn ensure_rows(rows: &mut Vec<Vec<f32>>, k: usize, d: usize) {
-    if rows.len() != k {
-        rows.resize_with(k, Vec::new);
-    }
-    for r in rows.iter_mut() {
-        if r.len() != d {
-            r.resize(d, 0.0);
-        }
-    }
-}
-
-/// Mixing matrix + the exchange logic for one full-precision gossip
-/// round: every worker broadcasts its vector to its neighbors, then
-/// forms `x_k ← w_kk x_k + Σ_{j∈N_k} w_kj x_j` from what it received.
+/// Sparse mixing weights + the exchange logic for one full-precision
+/// gossip round: every worker broadcasts its vector to its neighbors,
+/// then forms `x_k ← w_kk x_k + Σ_{j∈N_k} w_kj x_j` from what it
+/// received. Weights live in CSR rows ([`MixWeights`]), so a K=1024
+/// fleet never materializes a K×K dense matrix.
 #[derive(Clone, Debug)]
 pub struct GossipState {
-    pub w: Mat,
-    /// Per-worker reusable mixing outputs; after each round these hold
-    /// the *previous* iterate buffers (recovered from the broadcast
-    /// Arcs), so steady-state rounds allocate nothing in K·d.
-    scratch: Vec<Vec<f32>>,
+    weights: MixWeights,
+    /// Flat K×d arena holding each round's mixing outputs; swapped
+    /// wholesale with the iterate arena at the end of the round, so
+    /// steady-state rounds allocate nothing in K·d.
+    scratch: ParamArena,
+    /// Per-worker broadcast staging buffers: each round copies worker
+    /// k's arena row in, ships it as a shared (Arc) payload, and
+    /// reclaims the allocation once every message clone is dropped.
+    bcast: Vec<Vec<f32>>,
 }
 
 impl GossipState {
-    pub fn new(w: Mat) -> Self {
-        assert!(w.is_doubly_stochastic(1e-6), "Assumption 1 violated");
-        Self { w, scratch: Vec::new() }
+    pub fn new(w: impl Into<MixWeights>) -> Self {
+        let weights = w.into();
+        assert!(weights.is_doubly_stochastic(1e-6), "Assumption 1 violated");
+        Self { weights, scratch: ParamArena::zeros(0, 0), bcast: Vec::new() }
     }
 
     pub fn k(&self) -> usize {
-        self.w.rows
+        self.weights.k()
     }
 
-    /// One communication round over `net`, mixing `xs` in place.
-    /// Charges 4·d bytes per directed link (f32 dense payload).
-    /// Returns the wire bytes this round consumed.
+    /// The CSR mixing weights this state gossips with.
+    pub fn weights(&self) -> &MixWeights {
+        &self.weights
+    }
+
+    /// One communication round over `net`, mixing the K×d iterate arena
+    /// `xs` in place. Charges 4·d bytes per directed link (f32 dense
+    /// payload). Returns the wire bytes this round consumed.
     ///
-    /// §Perf: each worker's buffer is *moved* into a shared (Arc)
-    /// broadcast payload after seeding the self-term; the per-receiver
-    /// fused weighted-sum writes into this state's reusable scratch
-    /// rows — fanned over `pool` when one is supplied — and the original
-    /// buffers are recovered from their Arcs once every message clone is
-    /// dropped. Zero deep copies AND zero K·d allocations per round
-    /// (before: one fresh `weighted_sum` vector per worker per round).
-    /// Pool and sequential schedules are bit-identical: receiver k reads
-    /// frozen inputs and writes only `scratch[k]`, in the same term
-    /// order either way. Measured in EXPERIMENTS.md §Perf (`mix_round`).
-    pub fn mix(&mut self, xs: &mut [Vec<f32>], net: &mut Network, pool: Option<&WorkerPool>) -> u64 {
+    /// §Perf: each worker's arena row is copied into a persistent
+    /// per-worker staging buffer (rows of a flat arena cannot be moved
+    /// out, so one K·d memcpy per round is the floor) and shipped as a
+    /// shared (Arc) payload; the per-receiver fused weighted-sum writes
+    /// into this state's scratch arena — fanned over `pool` when one is
+    /// supplied — whose storage is then *swapped* wholesale with `xs`.
+    /// The staging allocations are recovered from their Arcs once every
+    /// message clone is dropped, so a steady-state round performs zero
+    /// K·d allocation. Pool and sequential schedules are bit-identical:
+    /// receiver k reads frozen inputs and writes only scratch row k, in
+    /// the same term order either way. Measured in EXPERIMENTS.md §Perf
+    /// (`mix_round`).
+    pub fn mix(&mut self, xs: &mut ParamArena, net: &mut Network, pool: Option<&WorkerPool>) -> u64 {
         let k = self.k();
-        assert_eq!(xs.len(), k);
+        assert_eq!(xs.k(), k);
         let before = net.total_bytes;
-        let d = xs.first().map(Vec::len).unwrap_or(0);
-        ensure_rows(&mut self.scratch, k, d);
-        // Phase 1: each worker *moves* its buffer into a shared (Arc)
-        // broadcast payload and keeps one reference for its own self
-        // term — zero deep copies regardless of degree.
+        let d = xs.d();
+        if self.scratch.k() != k || self.scratch.d() != d {
+            self.scratch = ParamArena::zeros(k, d);
+        }
+        if self.bcast.len() != k {
+            self.bcast.resize_with(k, Vec::new);
+        }
+        // Phase 1: copy each worker's arena row into its reusable
+        // staging buffer and ship that as a shared (Arc) broadcast
+        // payload, keeping one reference for the self term.
         let mut own: Vec<Arc<Vec<f32>>> = Vec::with_capacity(k);
         for from in 0..k {
-            let payload = Arc::new(std::mem::take(&mut xs[from]));
+            let mut buf = std::mem::take(&mut self.bcast[from]);
+            buf.clear();
+            buf.extend_from_slice(xs.row(from));
+            let payload = Arc::new(buf);
             own.push(Arc::clone(&payload));
             net.broadcast_shared(from, payload);
         }
@@ -103,18 +113,22 @@ impl GossipState {
         let faults_active = net.faults_active();
         let neighbor_counts: Vec<usize> = (0..k).map(|to| net.neighbors(to).len()).collect();
         {
-            let w = &self.w;
+            let w = &self.weights;
             let terms_table: Vec<Vec<(f32, &[f32])>> = (0..k)
                 .map(|to| {
                     let msgs = &inboxes[to];
                     if !faults_active {
                         // Legacy fast path: exactly one message per
-                        // neighbor, weights already sum to 1.
+                        // neighbor, weights already sum to 1. Messages
+                        // arrive in ascending sender order (fixed by the
+                        // send loop), so a forward-only cursor over the
+                        // CSR row replaces the dense lookup bit-exactly.
+                        let mut cursor = w.row_cursor(to);
                         let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(1 + msgs.len());
-                        terms.push((w[(to, to)] as f32, own[to].as_slice()));
+                        terms.push((w.self_weight(to) as f32, own[to].as_slice()));
                         for msg in msgs {
                             let x = msg.payload.dense().expect("gossip exchanges dense payloads");
-                            terms.push((w[(to, msg.from)] as f32, x));
+                            terms.push((cursor.weight(msg.from) as f32, x));
                         }
                         return terms;
                     }
@@ -138,27 +152,30 @@ impl GossipState {
                         // Full house: identical weights *and term order*
                         // as the fast path (messages arrive in sender
                         // order), so a zero-rate plan stays bit-identical.
-                        terms.push((w[(to, to)] as f32, own[to].as_slice()));
+                        let mut cursor = w.row_cursor(to);
+                        terms.push((w.self_weight(to) as f32, own[to].as_slice()));
                         for (from, x) in last.iter().enumerate() {
                             if let Some(x) = x {
-                                terms.push((w[(to, from)] as f32, x));
+                                terms.push((cursor.weight(from) as f32, x));
                             }
                         }
                     } else {
-                        let mut total = w[(to, to)];
+                        let mut cursor = w.row_cursor(to);
+                        let mut total = w.self_weight(to);
                         for (from, x) in last.iter().enumerate() {
                             if x.is_some() {
-                                total += w[(to, from)];
+                                total += cursor.weight(from);
                             }
                         }
                         // total ≥ w_to,to > 0 for every supported
                         // weighting; an isolated receiver degenerates to
                         // the identity (keeps computing locally).
                         let scale = 1.0 / total;
-                        terms.push(((w[(to, to)] * scale) as f32, own[to].as_slice()));
+                        let mut cursor = w.row_cursor(to);
+                        terms.push(((w.self_weight(to) * scale) as f32, own[to].as_slice()));
                         for (from, x) in last.iter().enumerate() {
                             if let Some(x) = x {
-                                terms.push(((w[(to, from)] * scale) as f32, x));
+                                terms.push(((cursor.weight(from) * scale) as f32, x));
                             }
                         }
                     }
@@ -167,7 +184,7 @@ impl GossipState {
                 .collect();
             let rows: Vec<ScopedTask<'_, ()>> = self
                 .scratch
-                .iter_mut()
+                .rows_mut()
                 .zip(&terms_table)
                 .map(|(dst, terms)| {
                     Box::new(move || crate::linalg::weighted_sum_into(dst, terms))
@@ -177,16 +194,14 @@ impl GossipState {
             run_rows(pool, rows);
         }
         // Phase 3: every per-edge clone is dropped with the inboxes, so
-        // each worker's original buffer is unique again — recover it
-        // into the scratch slot (ready for next round) and move the
-        // freshly mixed row into xs.
+        // each staging buffer is unique again — reclaim its allocation
+        // for next round, then swap the freshly mixed scratch arena
+        // wholesale into xs (the old iterate storage becomes scratch).
         drop(inboxes);
         for (from, payload) in own.into_iter().enumerate() {
-            xs[from] = Arc::try_unwrap(payload).unwrap_or_default();
+            self.bcast[from] = Arc::try_unwrap(payload).unwrap_or_default();
         }
-        for (x, s) in xs.iter_mut().zip(self.scratch.iter_mut()) {
-            std::mem::swap(x, s);
-        }
+        xs.swap_data(&mut self.scratch);
         net.end_round();
         net.total_bytes - before
     }
@@ -217,8 +232,8 @@ pub struct CompressedExchange {
     /// round and reclaimed once every message clone is dropped.
     wires: Vec<Vec<u8>>,
     /// Per-sender receiver-side decode table (one decode per sender per
-    /// round, never one per edge).
-    decoded: Vec<Vec<f32>>,
+    /// round, never one per edge), stored as one flat K×d arena.
+    decoded: ParamArena,
     /// Per-worker compression RNG streams, forked once from the
     /// algorithm seed.
     rngs: Vec<Xoshiro256>,
@@ -230,7 +245,7 @@ impl CompressedExchange {
         Self {
             cvs: (0..k).map(|_| CompressedVec::empty()).collect(),
             wires: vec![Vec::new(); k],
-            decoded: vec![Vec::new(); k],
+            decoded: ParamArena::zeros(k, 0),
             rngs: (0..k).map(|i| base.fork(i as u64)).collect(),
         }
     }
@@ -240,9 +255,9 @@ impl CompressedExchange {
     }
 
     /// Run one compress → encode → send → recv → decode round over
-    /// `inputs` (one vector per worker) and return each sender's message
-    /// as decoded by its receivers (borrowed from the internal table;
-    /// valid until the next round).
+    /// `inputs` (one arena row per worker) and return each sender's
+    /// message as decoded by its receivers (borrowed from the internal
+    /// decode arena; valid until the next round).
     ///
     /// `on_compressed(i, &c)` observes worker i's compressed output on
     /// the sender side — DeepSqueeze uses it for its error-feedback
@@ -258,13 +273,13 @@ impl CompressedExchange {
         &mut self,
         compressor: &dyn Compressor,
         net: &mut Network,
-        inputs: &[Vec<f32>],
+        inputs: &ParamArena,
         pool: Option<&WorkerPool>,
         mut on_compressed: impl FnMut(usize, &CompressedVec),
-    ) -> &[Vec<f32>] {
-        let k = inputs.len();
+    ) -> &ParamArena {
+        let k = inputs.k();
         assert_eq!(k, self.k(), "exchange sized for a different K");
-        let d = inputs.first().map(Vec::len).unwrap_or(0);
+        let d = inputs.d();
         let before = net.total_bytes;
 
         // (1) Sender side: compress + encode into the per-worker tables,
@@ -276,7 +291,7 @@ impl CompressedExchange {
                 .iter_mut()
                 .zip(self.wires.iter_mut())
                 .zip(self.rngs.iter_mut())
-                .zip(inputs)
+                .zip(inputs.rows())
                 .map(|(((cv, wire), rng), input)| {
                     Box::new(move || {
                         compressor.compress_into(input, rng, cv);
@@ -327,7 +342,9 @@ impl CompressedExchange {
         // local buffer would silently repair the outage, and x̂_j must
         // stay frozen for every worker while j is away so the single
         // canonical replica estimate stays consistent (DESIGN.md §7).
-        ensure_rows(&mut self.decoded, k, d);
+        if self.decoded.k() != k || self.decoded.d() != d {
+            self.decoded = ParamArena::zeros(k, d);
+        }
         {
             let sources: Vec<Option<&[u8]>> = (0..k)
                 .map(|j| {
@@ -344,7 +361,7 @@ impl CompressedExchange {
                 .collect();
             let rows: Vec<ScopedTask<'_, ()>> = self
                 .decoded
-                .iter_mut()
+                .rows_mut()
                 .zip(sources)
                 .map(|(dec, bytes)| {
                     Box::new(move || match bytes {
@@ -421,6 +438,7 @@ mod tests {
     use crate::comm::Network;
     use crate::compress::{Identity, Sign};
     use crate::linalg;
+    use crate::linalg::Mat;
     use crate::testing::forall;
     use crate::topology::{mixing_matrix, Topology, Weighting};
 
@@ -430,21 +448,29 @@ mod tests {
         (GossipState::new(w), Network::new(&g))
     }
 
+    fn arena_of(rows: &[Vec<f32>]) -> ParamArena {
+        ParamArena::from_rows(rows)
+    }
+
     #[test]
     fn mix_equals_matrix_product() {
-        let (mut gs, mut net) = setup(5);
-        let mut xs: Vec<Vec<f32>> = (0..5).map(|k| vec![k as f32, -(k as f32)]).collect();
+        let g = Topology::Ring.build(5, 0);
+        let w = mixing_matrix(&g, Weighting::UniformDegree);
+        let mut net = Network::new(&g);
+        let rows: Vec<Vec<f32>> = (0..5).map(|k| vec![k as f32, -(k as f32)]).collect();
         let expect: Vec<Vec<f32>> = (0..5)
             .map(|i| {
                 (0..2)
                     .map(|c| {
-                        (0..5).map(|j| gs.w[(i, j)] as f32 * xs[j][c]).sum::<f32>()
+                        (0..5).map(|j| w[(i, j)] as f32 * rows[j][c]).sum::<f32>()
                     })
                     .collect()
             })
             .collect();
+        let mut gs = GossipState::new(w);
+        let mut xs = arena_of(&rows);
         gs.mix(&mut xs, &mut net, None);
-        for (got, want) in xs.iter().zip(&expect) {
+        for (got, want) in xs.rows().zip(&expect) {
             crate::testing::assert_allclose(got, want, 1e-6, 1e-7);
         }
     }
@@ -456,10 +482,11 @@ mod tests {
             let k = 3 + rng.below(8);
             let (mut gs, mut net) = setup(k);
             let d = 1 + rng.below(50);
-            let mut xs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
-            let before = linalg::mean_of(&xs);
+            let rows: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let mut xs = arena_of(&rows);
+            let before = linalg::mean_of_rows(xs.rows(), d);
             gs.mix(&mut xs, &mut net, None);
-            let after = linalg::mean_of(&xs);
+            let after = linalg::mean_of_rows(xs.rows(), d);
             crate::testing::assert_allclose(&after, &before, 1e-4, 1e-5);
         });
     }
@@ -472,10 +499,11 @@ mod tests {
             let k = 3 + rng.below(8);
             let (mut gs, mut net) = setup(k);
             let d = 1 + rng.below(50);
-            let mut xs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
-            let before = linalg::consensus_error(&xs);
+            let rows: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let mut xs = arena_of(&rows);
+            let before = linalg::consensus_error_rows(xs.rows(), d);
             gs.mix(&mut xs, &mut net, None);
-            let after = linalg::consensus_error(&xs);
+            let after = linalg::consensus_error_rows(xs.rows(), d);
             assert!(after <= before * (1.0 + 1e-6), "consensus grew: {before} -> {after}");
         });
     }
@@ -497,18 +525,20 @@ mod tests {
                 let mut gs_pool = GossipState::new(w);
                 let mut net_seq = Network::new(&g);
                 let mut net_pool = Network::new(&g);
-                let mut xs_seq = xs0.clone();
-                let mut xs_pool = xs0;
+                let mut xs_seq = arena_of(&xs0);
+                let mut xs_pool = arena_of(&xs0);
                 // two rounds so the scratch-reuse path is exercised
                 for _ in 0..2 {
                     let b_seq = gs_seq.mix(&mut xs_seq, &mut net_seq, None);
                     let b_pool = gs_pool.mix(&mut xs_pool, &mut net_pool, Some(&pool));
                     assert_eq!(b_seq, b_pool, "{topo:?}: bytes diverged");
                 }
-                for (a, b) in xs_seq.iter().zip(&xs_pool) {
-                    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
-                    assert_eq!(bits(a), bits(b), "{topo:?}: pooled mix diverged");
-                }
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(
+                    bits(xs_seq.as_slice()),
+                    bits(xs_pool.as_slice()),
+                    "{topo:?}: pooled mix diverged"
+                );
             }
         });
     }
@@ -516,7 +546,7 @@ mod tests {
     #[test]
     fn mix_charges_exact_bytes() {
         let (mut gs, mut net) = setup(6);
-        let mut xs = vec![vec![0.0f32; 100]; 6];
+        let mut xs = ParamArena::zeros(6, 100);
         let bytes = gs.mix(&mut xs, &mut net, None);
         // 6 workers x 2 ring links x 400 bytes
         assert_eq!(bytes, 6 * 2 * 400);
@@ -525,19 +555,22 @@ mod tests {
 
     #[test]
     fn mix_reuses_buffers_across_rounds() {
-        // Steady-state zero-allocation: the pointers of the K iterate
-        // buffers and the K scratch rows must simply swap roles between
-        // consecutive rounds — no fresh K·d allocations.
+        // Steady-state zero-allocation: the iterate arena and the
+        // scratch arena must simply swap storage between consecutive
+        // rounds, and the K broadcast staging buffers must be reclaimed
+        // from their Arcs — no fresh K·d allocations.
         let (mut gs, mut net) = setup(4);
-        let mut xs: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 64]).collect();
-        gs.mix(&mut xs, &mut net, None); // materializes scratch
-        let gen1: Vec<*const f32> = xs.iter().map(|x| x.as_ptr()).collect();
-        let scratch1: Vec<*const f32> = gs.scratch.iter().map(|s| s.as_ptr()).collect();
+        let rows: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 64]).collect();
+        let mut xs = arena_of(&rows);
+        gs.mix(&mut xs, &mut net, None); // materializes scratch + staging
+        let gen1 = xs.data_ptr();
+        let scratch1 = gs.scratch.data_ptr();
+        let bcast1: Vec<*const f32> = gs.bcast.iter().map(|b| b.as_ptr()).collect();
         gs.mix(&mut xs, &mut net, None);
-        let gen2: Vec<*const f32> = xs.iter().map(|x| x.as_ptr()).collect();
-        let scratch2: Vec<*const f32> = gs.scratch.iter().map(|s| s.as_ptr()).collect();
-        assert_eq!(gen2, scratch1, "round outputs must land in the old scratch rows");
-        assert_eq!(scratch2, gen1, "old iterate buffers must be recovered as scratch");
+        assert_eq!(xs.data_ptr(), scratch1, "round output must land in the old scratch arena");
+        assert_eq!(gs.scratch.data_ptr(), gen1, "old iterate storage must be recovered as scratch");
+        let bcast2: Vec<*const f32> = gs.bcast.iter().map(|b| b.as_ptr()).collect();
+        assert_eq!(bcast2, bcast1, "staging buffers must be reclaimed, not reallocated");
     }
 
     #[test]
@@ -555,17 +588,19 @@ mod tests {
                 let mut net_a = Network::new(&g);
                 let mut net_b = Network::new(&g);
                 net_b.set_fault_plan(FaultPlan::new(k, 0.0, 0.0, 1, 0.0, 1));
-                let mut xs_a = xs0.clone();
-                let mut xs_b = xs0;
+                let mut xs_a = arena_of(&xs0);
+                let mut xs_b = arena_of(&xs0);
                 for _ in 0..2 {
                     let ba = gs_a.mix(&mut xs_a, &mut net_a, None);
                     let bb = gs_b.mix(&mut xs_b, &mut net_b, None);
                     assert_eq!(ba, bb, "{topo:?}: bytes diverged under zero-rate plan");
                 }
-                for (a, b) in xs_a.iter().zip(&xs_b) {
-                    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
-                    assert_eq!(bits(a), bits(b), "{topo:?}: zero-rate plan changed the mix");
-                }
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(
+                    bits(xs_a.as_slice()),
+                    bits(xs_b.as_slice()),
+                    "{topo:?}: zero-rate plan changed the mix"
+                );
             }
         });
     }
@@ -579,10 +614,10 @@ mod tests {
         let (mut gs, mut net) = setup(5);
         net.set_fault_plan(FaultPlan::new(5, 1.0, 0.0, 1, 0.0, 3));
         let xs0: Vec<Vec<f32>> = (0..5).map(|i| vec![1.0 + i as f32; 8]).collect();
-        let mut xs = xs0.clone();
+        let mut xs = arena_of(&xs0);
         let bytes = gs.mix(&mut xs, &mut net, None);
         assert!(bytes > 0, "drops are lost in flight, still charged");
-        for (got, want) in xs.iter().zip(&xs0) {
+        for (got, want) in xs.rows().zip(&xs0) {
             crate::testing::assert_allclose(got, want, 1e-6, 1e-7);
         }
     }
@@ -597,12 +632,13 @@ mod tests {
         let (mut gs, mut net) = setup(6);
         net.set_fault_plan(FaultPlan::new(6, 0.0, 0.0, 1, 0.0, 3));
         net.fault_plan_mut().unwrap().set_absent(2, true);
-        let mut xs: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32; 4]).collect();
+        let rows: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32; 4]).collect();
+        let mut xs = arena_of(&rows);
         let lo = 0.0f32;
         let hi = 5.0f32;
         gs.mix(&mut xs, &mut net, None);
-        assert_eq!(xs[2], vec![2.0; 4], "absent worker mixes with nobody");
-        for x in &xs {
+        assert_eq!(xs.row(2), &[2.0; 4][..], "absent worker mixes with nobody");
+        for x in xs.rows() {
             assert!(x.iter().all(|&v| (lo..=hi).contains(&v)), "left the hull: {x:?}");
         }
     }
@@ -612,15 +648,16 @@ mod tests {
         use crate::comm::FaultPlan;
         let k = 4;
         let d = 8;
-        let inputs: Vec<Vec<f32>> = (0..k).map(|i| vec![1.0 + i as f32; d]).collect();
+        let rows: Vec<Vec<f32>> = (0..k).map(|i| vec![1.0 + i as f32; d]).collect();
+        let inputs = arena_of(&rows);
         let mut net = ring_net(k);
         net.set_fault_plan(FaultPlan::new(k, 0.0, 0.0, 1, 0.0, 9));
         net.fault_plan_mut().unwrap().set_absent(1, true);
         let mut ex = CompressedExchange::new(k, 3);
         let qs = ex.round(&Identity, &mut net, &inputs, None, |_, _| {});
-        assert_eq!(qs[1], vec![0.0; d], "absent sender decodes to zero everywhere");
+        assert_eq!(qs.row(1), &vec![0.0; d][..], "absent sender decodes to zero everywhere");
         for j in [0usize, 2, 3] {
-            assert_eq!(qs[j], inputs[j], "present senders decode normally");
+            assert_eq!(qs.row(j), inputs.row(j), "present senders decode normally");
         }
     }
 
@@ -645,7 +682,8 @@ mod tests {
         let k = 5;
         let d = 40;
         let mut rng = Xoshiro256::seed_from_u64(9);
-        let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let rows: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let inputs = arena_of(&rows);
         let mut net = ring_net(k);
         let mut ex = CompressedExchange::new(k, 3);
         let mut hook_order = Vec::new();
@@ -655,9 +693,9 @@ mod tests {
                 hook_order.push(i);
             });
         assert_eq!(hook_order, (0..k).collect::<Vec<_>>(), "hook runs in worker order");
-        assert_eq!(qs.len(), k);
+        assert_eq!(qs.k(), k);
         // Sign decode of x: ±(||x||₁/d) with x's signs
-        for (q, x) in qs.iter().zip(&inputs) {
+        for (q, x) in qs.rows().zip(inputs.rows()) {
             let scale = x.iter().map(|v| v.abs() as f64).sum::<f64>() / d as f64;
             for (qi, xi) in q.iter().zip(x) {
                 assert!((qi.abs() as f64 - scale).abs() < 1e-4);
@@ -675,18 +713,19 @@ mod tests {
         let k = 4;
         let d = 32;
         let mut rng = Xoshiro256::seed_from_u64(10);
-        let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let rows: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let inputs = arena_of(&rows);
         let mut net = ring_net(k);
         let mut ex = CompressedExchange::new(k, 5);
         ex.round(&Sign, &mut net, &inputs, None, |_, _| {});
         let wires1: Vec<*const u8> = ex.wires.iter().map(|w| w.as_ptr()).collect();
-        let decoded1: Vec<*const f32> = ex.decoded.iter().map(|q| q.as_ptr()).collect();
+        let decoded1 = ex.decoded.data_ptr();
         assert!(ex.wires.iter().all(|w| w.len() == Sign.encoded_bytes(d)));
         ex.round(&Sign, &mut net, &inputs, None, |_, _| {});
         let wires2: Vec<*const u8> = ex.wires.iter().map(|w| w.as_ptr()).collect();
-        let decoded2: Vec<*const f32> = ex.decoded.iter().map(|q| q.as_ptr()).collect();
+        let decoded2 = ex.decoded.data_ptr();
         assert_eq!(wires1, wires2, "wire buffers must be recovered, not reallocated");
-        assert_eq!(decoded1, decoded2, "decode table must be reused");
+        assert_eq!(decoded1, decoded2, "decode arena must be reused");
     }
 
     #[test]
@@ -703,7 +742,8 @@ mod tests {
         forall(0xE8C0DE, 6, |rng| {
             let k = 2 + rng.below(6);
             let d = 1 + rng.below(50);
-            let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let rows: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let inputs = arena_of(&rows);
             for op in &ops {
                 for topo in [Topology::Ring, Topology::Star, Topology::Chain] {
                     let g = topo.build(k, 0);
@@ -712,9 +752,9 @@ mod tests {
                     let mut net_seq = Network::new(&g);
                     let mut net_pool = Network::new(&g);
                     for _ in 0..2 {
-                        let a: Vec<Vec<f32>> = ex_seq
+                        let a = ex_seq
                             .round(op.as_ref(), &mut net_seq, &inputs, None, |_, _| {})
-                            .to_vec();
+                            .clone();
                         let b = ex_pool.round(
                             op.as_ref(),
                             &mut net_pool,
@@ -722,11 +762,13 @@ mod tests {
                             Some(&pool),
                             |_, _| {},
                         );
-                        for (x, y) in a.iter().zip(b) {
-                            let bits =
-                                |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
-                            assert_eq!(bits(x), bits(y), "{} {topo:?}", op.name());
-                        }
+                        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                        assert_eq!(
+                            bits(a.as_slice()),
+                            bits(b.as_slice()),
+                            "{} {topo:?}",
+                            op.name()
+                        );
                     }
                     assert_eq!(net_seq.total_bytes, net_pool.total_bytes);
                 }
@@ -740,9 +782,9 @@ mod tests {
         // the worker still sees its own decoded message.
         let mut net = Network::new(&Topology::Ring.build(1, 0));
         let mut ex = CompressedExchange::new(1, 1);
-        let inputs = vec![vec![1.0f32, -2.0, 3.0, -4.0]];
+        let inputs = arena_of(&[vec![1.0f32, -2.0, 3.0, -4.0]]);
         let qs = ex.round(&Identity, &mut net, &inputs, None, |_, _| {});
-        assert_eq!(qs[0], inputs[0]);
+        assert_eq!(qs.row(0), inputs.row(0));
         assert_eq!(net.total_bytes, 0, "own message never crosses the wire");
     }
 
@@ -754,7 +796,7 @@ mod tests {
         // Figure 2 silently).
         let mut net = ring_net(3);
         let mut ex = CompressedExchange::new(3, 2);
-        let inputs = vec![vec![1.0f32; 8]; 3];
+        let inputs = arena_of(&vec![vec![1.0f32; 8]; 3]);
         ex.round(&crate::testing::MisCosted, &mut net, &inputs, None, |_, _| {});
     }
 
@@ -764,7 +806,8 @@ mod tests {
         let k = 4;
         let d = 16;
         let mut rng = Xoshiro256::seed_from_u64(12);
-        let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let rows: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let inputs = arena_of(&rows);
         let mut a = CompressedExchange::new(k, 9);
         // advance the streams, snapshot, then compare the next round of
         // a restored twin against the original
@@ -778,11 +821,9 @@ mod tests {
         let op = crate::compress::RandK { ratio: 0.5 };
         let mut net_a = ring_net(k);
         let mut net_b = ring_net(k);
-        let qa: Vec<Vec<f32>> = a.round(&op, &mut net_a, &inputs, None, |_, _| {}).to_vec();
+        let qa = a.round(&op, &mut net_a, &inputs, None, |_, _| {}).clone();
         let qb = b.round(&op, &mut net_b, &inputs, None, |_, _| {});
-        for (x, y) in qa.iter().zip(qb) {
-            assert_eq!(x, y, "restored streams must continue identically");
-        }
+        assert_eq!(&qa, qb, "restored streams must continue identically");
         // and a K-mismatched bank errors instead of corrupting
         let mut c = CompressedExchange::new(k + 1, 0);
         let err = c.state_load(&mut StateReader::new(&buf)).unwrap_err();

@@ -186,9 +186,12 @@ pub struct AlgorithmSpec {
     pub name: String,
     pub workers: usize,
     pub x0: Vec<f32>,
-    /// Mixing matrix W (defaults to I_K — fine for `c-sgdm`, required
-    /// doubly stochastic for the decentralized algorithms).
-    pub mixing: crate::linalg::Mat,
+    /// Sparse mixing weights W (defaults to I_K — fine for `c-sgdm`,
+    /// required doubly stochastic for the decentralized algorithms).
+    /// Accepts a dense [`crate::linalg::Mat`] through the setter's
+    /// `Into` bound, but never stores one: at K=1024 the CSR rows are
+    /// the only K-scalable representation (DESIGN.md §8).
+    pub mixing: crate::topology::MixWeights,
     pub hyper: Hyper,
     /// δ-contraction operator for the compressed algorithms; `None`
     /// falls back to the paper's choice ([`crate::compress::Sign`]).
@@ -202,15 +205,15 @@ impl AlgorithmSpec {
             name: name.into(),
             workers,
             x0,
-            mixing: crate::linalg::Mat::eye(workers),
+            mixing: crate::topology::MixWeights::identity(workers),
             hyper: Hyper::default(),
             compressor: None,
             seed: 0,
         }
     }
 
-    pub fn mixing(mut self, w: crate::linalg::Mat) -> Self {
-        self.mixing = w;
+    pub fn mixing(mut self, w: impl Into<crate::topology::MixWeights>) -> Self {
+        self.mixing = w.into();
         self
     }
 
@@ -328,28 +331,6 @@ pub fn builder(name: &str) -> Option<&'static AlgorithmBuilder> {
     REGISTRY.iter().find(|b| b.name == name)
 }
 
-/// Shared checkpoint helpers for per-worker momentum banks.
-pub(crate) fn save_moms(moms: &[crate::optim::MomentumState], w: &mut StateWriter) {
-    w.put_u64(moms.len() as u64);
-    for m in moms {
-        m.state_save(w);
-    }
-}
-
-pub(crate) fn load_moms(
-    moms: &mut [crate::optim::MomentumState],
-    r: &mut StateReader,
-) -> Result<(), String> {
-    let k = r.take_u64()? as usize;
-    if k != moms.len() {
-        return Err(format!("momentum bank: saved K {k} != live K {}", moms.len()));
-    }
-    for m in moms.iter_mut() {
-        m.state_load(r)?;
-    }
-    Ok(())
-}
-
 /// All algorithm names the registry accepts (for CLI help and sweeps).
 pub const ALL_NAMES: &[&str] = &[
     "pd-sgdm", "cpd-sgdm", "d-sgd", "pd-sgd", "d-sgdm", "d-sgdm-pm",
@@ -363,7 +344,7 @@ pub fn by_name(
     name: &str,
     k: usize,
     x0: Vec<f32>,
-    w: crate::linalg::Mat,
+    w: impl Into<crate::topology::MixWeights>,
     hyper: Hyper,
     compressor: Option<Box<dyn crate::compress::Compressor>>,
     seed: u64,

@@ -23,19 +23,20 @@
 //! estimate of the *global* gradient even under extreme data skew.
 
 use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
+use crate::arena::ParamArena;
 use crate::comm::Network;
 use crate::grad::GradientSource;
-use crate::linalg::Mat;
+use crate::topology::MixWeights;
 
 pub struct MomentumTracking {
     hyper: Hyper,
-    xs: Vec<Vec<f32>>,
+    xs: ParamArena,
     /// Gradient trackers c^(k) (gossip-averaged alongside x).
-    trackers: Vec<Vec<f32>>,
+    trackers: ParamArena,
     /// Momentum buffers u^(k) (local, never communicated).
-    us: Vec<Vec<f32>>,
+    us: ParamArena,
     /// Previous step's stochastic gradients g_{t-1}^(k).
-    prev_g: Vec<Vec<f32>>,
+    prev_g: ParamArena,
     /// Whether the trackers were seeded with the first gradients.
     started: bool,
     gossip: GossipState,
@@ -46,16 +47,17 @@ pub struct MomentumTracking {
 impl MomentumTracking {
     /// All workers start from the same `x0`; trackers/momenta start at
     /// zero and the trackers are seeded with the first gradients.
-    pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper) -> Self {
-        assert_eq!(w.rows, k);
+    pub fn new(k: usize, x0: Vec<f32>, w: impl Into<MixWeights>, hyper: Hyper) -> Self {
+        let gossip = GossipState::new(w);
+        assert_eq!(gossip.k(), k);
         let d = x0.len();
         Self {
-            xs: vec![x0; k],
-            trackers: vec![vec![0.0; d]; k],
-            us: vec![vec![0.0; d]; k],
-            prev_g: vec![vec![0.0; d]; k],
+            xs: ParamArena::filled(k, &x0),
+            trackers: ParamArena::zeros(k, d),
+            us: ParamArena::zeros(k, d),
+            prev_g: ParamArena::zeros(k, d),
             started: false,
-            gossip: GossipState::new(w),
+            gossip,
             grad: vec![0.0; d],
             hyper,
         }
@@ -68,7 +70,7 @@ impl Algorithm for MomentumTracking {
     }
 
     fn k(&self) -> usize {
-        self.xs.len()
+        self.xs.k()
     }
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
@@ -78,28 +80,34 @@ impl Algorithm for MomentumTracking {
         let wd = self.hyper.weight_decay;
         let mut loss_sum = 0.0;
         for i in 0..k {
-            loss_sum += source.grad_into(i, &self.xs[i], &mut self.grad);
+            loss_sum += source.grad_into(i, self.xs.row(i), &mut self.grad);
             if wd != 0.0 {
-                for (g, &x) in self.grad.iter_mut().zip(&self.xs[i]) {
+                for (g, &x) in self.grad.iter_mut().zip(self.xs.row(i)) {
                     *g += wd * x;
                 }
             }
             if self.started {
                 // c += g_t − g_{t-1}: the tracking recursion.
-                for ((c, &g), &pg) in
-                    self.trackers[i].iter_mut().zip(&self.grad).zip(&self.prev_g[i])
+                for ((c, &g), &pg) in self
+                    .trackers
+                    .row_mut(i)
+                    .iter_mut()
+                    .zip(&self.grad)
+                    .zip(self.prev_g.row(i))
                 {
                     *c += g - pg;
                 }
             } else {
-                self.trackers[i].copy_from_slice(&self.grad);
+                self.trackers.row_mut(i).copy_from_slice(&self.grad);
             }
-            self.prev_g[i].copy_from_slice(&self.grad);
+            self.prev_g.row_mut(i).copy_from_slice(&self.grad);
             // u = mu*u + c; x -= eta*u.
-            for ((u, &c), x) in self.us[i]
+            for ((u, &c), x) in self
+                .us
+                .row_mut(i)
                 .iter_mut()
-                .zip(&self.trackers[i])
-                .zip(self.xs[i].iter_mut())
+                .zip(self.trackers.row(i))
+                .zip(self.xs.row_mut(i).iter_mut())
             {
                 *u = mu * *u + c;
                 *x -= eta * *u;
@@ -113,12 +121,12 @@ impl Algorithm for MomentumTracking {
     }
 
     fn params(&self, k: usize) -> &[f32] {
-        &self.xs[k]
+        self.xs.row(k)
     }
 
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
-        self.xs[k].copy_from_slice(x);
-        self.us[k].iter_mut().for_each(|v| *v = 0.0);
+        self.xs.row_mut(k).copy_from_slice(x);
+        self.us.row_mut(k).fill(0.0);
         // trackers/prev_g stay: the tracking recursion only ever adds
         // g_t − g_{t-1}, so leaving both preserves the conservation law
         // Σ_k c^(k) = Σ_k g^(k) across the restart.
@@ -127,19 +135,19 @@ impl Algorithm for MomentumTracking {
     fn state_save(&self, w: &mut crate::state::StateWriter) {
         w.tag("momentum-tracking");
         w.put_u64(self.started as u64);
-        w.put_f32_mat(&self.xs);
-        w.put_f32_mat(&self.trackers);
-        w.put_f32_mat(&self.us);
-        w.put_f32_mat(&self.prev_g);
+        self.xs.state_save(w);
+        self.trackers.state_save(w);
+        self.us.state_save(w);
+        self.prev_g.state_save(w);
     }
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
         r.expect_tag("momentum-tracking")?;
         self.started = r.take_u64()? != 0;
-        r.take_f32_mat_into(&mut self.xs, "momentum-tracking.xs")?;
-        r.take_f32_mat_into(&mut self.trackers, "momentum-tracking.trackers")?;
-        r.take_f32_mat_into(&mut self.us, "momentum-tracking.us")?;
-        r.take_f32_mat_into(&mut self.prev_g, "momentum-tracking.prev_g")
+        self.xs.state_load(r, "momentum-tracking.xs")?;
+        self.trackers.state_load(r, "momentum-tracking.trackers")?;
+        self.us.state_load(r, "momentum-tracking.us")?;
+        self.prev_g.state_load(r, "momentum-tracking.prev_g")
     }
 }
 
@@ -147,6 +155,7 @@ impl Algorithm for MomentumTracking {
 mod tests {
     use super::*;
     use crate::grad::{GradientSource as _, Quadratic};
+    use crate::linalg::Mat;
     use crate::optim::LrSchedule;
     use crate::topology::{mixing_matrix, Topology, Weighting};
 
@@ -175,10 +184,10 @@ mod tests {
             for i in 0..k {
                 // prev_g holds g at the *pre-gossip* iterate, so compare
                 // against the stored gradients, not fresh ones.
-                for (s, &v) in c_sum.iter_mut().zip(&algo.trackers[i]) {
+                for (s, &v) in c_sum.iter_mut().zip(algo.trackers.row(i)) {
                     *s += v as f64;
                 }
-                for (s, &v) in g_sum.iter_mut().zip(&algo.prev_g[i]) {
+                for (s, &v) in g_sum.iter_mut().zip(algo.prev_g.row(i)) {
                     *s += v as f64;
                 }
             }
@@ -224,10 +233,10 @@ mod tests {
         for t in 0..5 {
             algo.step(t, &mut src, &mut net);
         }
-        let c_before = algo.trackers[2].clone();
+        let c_before = algo.trackers.row(2).to_vec();
         algo.set_worker_params(2, &vec![0.25; 8]);
         assert_eq!(algo.params(2), &[0.25; 8][..]);
-        assert!(algo.us[2].iter().all(|&v| v == 0.0));
-        assert_eq!(algo.trackers[2], c_before, "trackers must survive a restart");
+        assert!(algo.us.row(2).iter().all(|&v| v == 0.0));
+        assert_eq!(algo.trackers.row(2), &c_before[..], "trackers must survive a restart");
     }
 }

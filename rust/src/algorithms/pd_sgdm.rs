@@ -19,32 +19,33 @@
 //! which doubles the payload; see `DSgdm` with `gossip_momentum=true`).
 
 use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
+use crate::arena::ParamArena;
 use crate::comm::Network;
 use crate::engine::{LocalStepEngine, LocalUpdate};
 use crate::grad::GradientSource;
-use crate::linalg::Mat;
-use crate::optim::MomentumState;
+use crate::optim::MomentumBank;
+use crate::topology::MixWeights;
 
 pub struct PdSgdm {
     hyper: Hyper,
-    xs: Vec<Vec<f32>>,
-    moms: Vec<MomentumState>,
+    /// K×d iterate arena (one worker per row).
+    xs: ParamArena,
+    moms: MomentumBank,
     gossip: GossipState,
     engine: LocalStepEngine,
 }
 
 impl PdSgdm {
     /// All workers start from the same `x0` (Alg. 1 input).
-    pub fn new(k: usize, x0: Vec<f32>, w: Mat, hyper: Hyper) -> Self {
+    pub fn new(k: usize, x0: Vec<f32>, w: impl Into<MixWeights>, hyper: Hyper) -> Self {
         assert!(hyper.period >= 1, "p >= 1 (p=1 degenerates to D-SGDM)");
-        assert_eq!(w.rows, k);
+        let gossip = GossipState::new(w);
+        assert_eq!(gossip.k(), k);
         let d = x0.len();
         Self {
-            xs: vec![x0; k],
-            moms: (0..k)
-                .map(|_| MomentumState::new(d, hyper.mu, hyper.weight_decay))
-                .collect(),
-            gossip: GossipState::new(w),
+            xs: ParamArena::filled(k, &x0),
+            moms: MomentumBank::new(k, d, hyper.mu, hyper.weight_decay),
+            gossip,
             engine: LocalStepEngine::new(k, d),
             hyper,
         }
@@ -52,14 +53,14 @@ impl PdSgdm {
 
     /// ||m_t^(k)||² of worker k (Lemma 3 diagnostics).
     pub fn momentum_norm_sq(&self, k: usize) -> f64 {
-        self.moms[k].momentum_norm_sq()
+        self.moms.momentum_norm_sq(k)
     }
 
     /// Overwrite one worker's iterate — used only by failure-injection
     /// tests (simulating corruption); not part of the algorithm.
     pub fn set_params_for_test(&mut self, k: usize, x: Vec<f32>) {
-        assert_eq!(x.len(), self.xs[k].len());
-        self.xs[k] = x;
+        assert_eq!(x.len(), self.xs.d());
+        self.xs.row_mut(k).copy_from_slice(&x);
     }
 }
 
@@ -69,7 +70,7 @@ impl Algorithm for PdSgdm {
     }
 
     fn k(&self) -> usize {
-        self.xs.len()
+        self.xs.k()
     }
 
     fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
@@ -91,7 +92,7 @@ impl Algorithm for PdSgdm {
     }
 
     fn params(&self, k: usize) -> &[f32] {
-        &self.xs[k]
+        self.xs.row(k)
     }
 
     fn set_parallel(&mut self, on: bool) {
@@ -99,20 +100,20 @@ impl Algorithm for PdSgdm {
     }
 
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
-        self.xs[k].copy_from_slice(x);
-        self.moms[k].reset();
+        self.xs.row_mut(k).copy_from_slice(x);
+        self.moms.reset_row(k);
     }
 
     fn state_save(&self, w: &mut crate::state::StateWriter) {
         w.tag("pd-sgdm");
-        w.put_f32_mat(&self.xs);
-        super::save_moms(&self.moms, w);
+        self.xs.state_save(w);
+        self.moms.state_save(w);
     }
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
         r.expect_tag("pd-sgdm")?;
-        r.take_f32_mat_into(&mut self.xs, "pd-sgdm.xs")?;
-        super::load_moms(&mut self.moms, r)
+        self.xs.state_load(r, "pd-sgdm.xs")?;
+        self.moms.state_load(r)
     }
 }
 
@@ -120,6 +121,7 @@ impl Algorithm for PdSgdm {
 mod tests {
     use super::*;
     use crate::grad::Quadratic;
+    use crate::linalg::Mat;
     use crate::optim::LrSchedule;
     use crate::topology::{mixing_matrix, Topology, Weighting};
 

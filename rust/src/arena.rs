@@ -1,0 +1,227 @@
+//! Flat K×d parameter arena — the memory layout that scales the
+//! simulator to K=1024 (ROADMAP item 1, DESIGN.md §8).
+//!
+//! Every algorithm used to hold worker state as `Vec<Vec<f32>>`: K
+//! separately heap-allocated rows, scattered across the allocator, with
+//! a pointer chase per worker access. [`ParamArena`] replaces that with
+//! ONE contiguous `K*d` buffer plus per-worker row views, so
+//!
+//! * row sweeps (local step, gossip accumulation, checkpointing) walk
+//!   memory linearly — the prefetcher sees one stream, not K;
+//! * the whole bank serializes as a single contiguous section
+//!   ([`ParamArena::state_save`], with a shim that still loads the v2
+//!   per-worker layout — see `state.rs`);
+//! * steady-state code paths hold ZERO per-round allocations: rows are
+//!   reused in place and whole banks exchange via [`ParamArena::swap_data`].
+//!
+//! Row views are plain `&[f32]` / `&mut [f32]`, so every slice kernel in
+//! [`crate::linalg`] applies unchanged.
+
+use crate::state::{StateReader, StateWriter};
+
+/// One contiguous K×d worker-state bank with per-worker row views.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamArena {
+    k: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+impl ParamArena {
+    /// K zero rows of length d.
+    pub fn zeros(k: usize, d: usize) -> Self {
+        Self { k, d, data: vec![0.0; k * d] }
+    }
+
+    /// K copies of the shared start iterate `x0` (the paper's common x_0).
+    pub fn filled(k: usize, x0: &[f32]) -> Self {
+        let d = x0.len();
+        let mut data = Vec::with_capacity(k * d);
+        for _ in 0..k {
+            data.extend_from_slice(x0);
+        }
+        Self { k, d, data }
+    }
+
+    /// Build from per-worker rows (interop/test helper; rows must agree
+    /// in length).
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let k = rows.len();
+        let d = rows.first().map_or(0, Vec::len);
+        let mut data = Vec::with_capacity(k * d);
+        for r in rows {
+            assert_eq!(r.len(), d, "ragged arena rows");
+            data.extend_from_slice(r);
+        }
+        Self { k, d, data }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Worker i's iterate as a borrowed row view.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// All rows in worker order. (`d.max(1)` keeps the chunk size legal
+    /// for degenerate d=0 arenas, which then simply yield no rows.)
+    #[inline]
+    pub fn rows(&self) -> std::slice::ChunksExact<'_, f32> {
+        self.data.chunks_exact(self.d.max(1))
+    }
+
+    /// All rows in worker order, mutably — disjoint `&mut [f32]` views,
+    /// ready to fan across a worker pool.
+    #[inline]
+    pub fn rows_mut(&mut self) -> std::slice::ChunksExactMut<'_, f32> {
+        self.data.chunks_exact_mut(self.d.max(1))
+    }
+
+    /// The whole flat buffer (checkpointing, norms over the full bank).
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Base address of the backing buffer — benches assert allocation
+    /// stability (no per-round reallocation) by comparing this across
+    /// rounds.
+    pub fn data_ptr(&self) -> *const f32 {
+        self.data.as_ptr()
+    }
+
+    /// Exchange backing buffers with another same-shape arena without
+    /// copying — the gossip generation swap.
+    pub fn swap_data(&mut self, other: &mut ParamArena) {
+        assert_eq!((self.k, self.d), (other.k, other.d), "arena shape mismatch in swap");
+        std::mem::swap(&mut self.data, &mut other.data);
+    }
+
+    /// Per-worker copies (interop/test helper).
+    pub fn to_rows(&self) -> Vec<Vec<f32>> {
+        self.rows().map(<[f32]>::to_vec).collect()
+    }
+
+    /// Serialize as ONE contiguous section (v3 layout; see state.rs).
+    pub fn state_save(&self, w: &mut StateWriter) {
+        w.put_f32_flat_mat(self.k, self.d, &self.data);
+    }
+
+    /// Restore in place; accepts both the contiguous v3 layout and the
+    /// legacy v2 per-worker layout (strict shape check either way).
+    pub fn state_load(&mut self, r: &mut StateReader, what: &str) -> Result<(), String> {
+        r.take_f32_flat_mat_into(self.k, self.d, &mut self.data, what)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_view_the_flat_buffer() {
+        let mut a = ParamArena::filled(3, &[1.0, 2.0]);
+        assert_eq!((a.k(), a.d()), (3, 2));
+        a.row_mut(1)[0] = 9.0;
+        assert_eq!(a.row(0), &[1.0, 2.0]);
+        assert_eq!(a.row(1), &[9.0, 2.0]);
+        assert_eq!(a.as_slice(), &[1.0, 2.0, 9.0, 2.0, 1.0, 2.0]);
+        let collected: Vec<&[f32]> = a.rows().collect();
+        assert_eq!(collected.len(), 3);
+        assert_eq!(collected[1], &[9.0, 2.0]);
+    }
+
+    #[test]
+    fn rows_mut_are_disjoint_and_cover_everything() {
+        let mut a = ParamArena::zeros(4, 3);
+        for (i, row) in a.rows_mut().enumerate() {
+            for v in row.iter_mut() {
+                *v = i as f32;
+            }
+        }
+        for i in 0..4 {
+            assert!(a.row(i).iter().all(|&v| v == i as f32));
+        }
+    }
+
+    #[test]
+    fn from_rows_round_trips() {
+        let rows = vec![vec![1.0f32, -2.0], vec![0.5, f32::NAN]];
+        let a = ParamArena::from_rows(&rows);
+        let back = a.to_rows();
+        assert_eq!(back[0], rows[0]);
+        assert_eq!(back[1][0], 0.5);
+        assert!(back[1][1].is_nan());
+    }
+
+    #[test]
+    fn swap_data_exchanges_buffers_without_moving_shape() {
+        let mut a = ParamArena::filled(2, &[1.0; 4]);
+        let mut b = ParamArena::filled(2, &[2.0; 4]);
+        let (pa, pb) = (a.data_ptr(), b.data_ptr());
+        a.swap_data(&mut b);
+        assert_eq!(a.data_ptr(), pb);
+        assert_eq!(b.data_ptr(), pa);
+        assert!(a.as_slice().iter().all(|&v| v == 2.0));
+        assert!(b.as_slice().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn swap_rejects_shape_mismatch() {
+        let mut a = ParamArena::zeros(2, 3);
+        let mut b = ParamArena::zeros(3, 2);
+        a.swap_data(&mut b);
+    }
+
+    #[test]
+    fn checkpoint_round_trip_is_bit_exact() {
+        let a = ParamArena::from_rows(&[vec![1.5, -0.0], vec![f32::NAN, 3.25]]);
+        let mut w = StateWriter::new();
+        a.state_save(&mut w);
+        let bytes = w.into_bytes();
+        let mut b = ParamArena::zeros(2, 2);
+        b.state_load(&mut StateReader::new(&bytes), "xs").unwrap();
+        let bits = |a: &ParamArena| a.as_slice().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn legacy_v2_per_worker_layout_still_loads() {
+        // A v2 checkpoint section written with put_f32_mat (u64 K, then
+        // K length-prefixed rows) must load into an arena via the shim.
+        let rows = vec![vec![1.0f32, 2.0, 3.0], vec![-4.0, 5.0, -6.0]];
+        let mut w = StateWriter::new();
+        w.put_f32_mat(&rows);
+        let bytes = w.into_bytes();
+        let mut a = ParamArena::zeros(2, 3);
+        a.state_load(&mut StateReader::new(&bytes), "xs").unwrap();
+        assert_eq!(a.to_rows(), rows);
+    }
+
+    #[test]
+    fn checkpoint_shape_mismatch_is_an_error() {
+        let a = ParamArena::zeros(2, 4);
+        let mut w = StateWriter::new();
+        a.state_save(&mut w);
+        let bytes = w.into_bytes();
+        let mut wrong_k = ParamArena::zeros(3, 4);
+        assert!(wrong_k.state_load(&mut StateReader::new(&bytes), "xs").is_err());
+        let mut wrong_d = ParamArena::zeros(2, 5);
+        assert!(wrong_d.state_load(&mut StateReader::new(&bytes), "xs").is_err());
+    }
+}

@@ -681,9 +681,12 @@ impl ExperimentConfig {
                 return Err(format!("stop.target_loss must be a finite number > 0, got {l}"));
             }
         }
-        if self.topology == Topology::Hypercube && !self.workers.is_power_of_two() {
-            return Err("hypercube topology requires workers to be a power of two".into());
-        }
+        // Topology feasibility (torus factorization, hypercube power of
+        // two, random-regular handshake lemma, ...) lives with the
+        // topology definitions so the CLI and config surface one message.
+        self.topology
+            .validate(self.workers)
+            .map_err(|e| format!("topology: {e}"))?;
         if let Sharding::Dirichlet { alpha } = self.sharding {
             // α ≤ 0 is outside the Dirichlet's domain; the gamma sampler
             // would silently hand back NaN/degenerate shards.
@@ -778,7 +781,22 @@ step_seconds = 0.05
     fn rejects_hypercube_with_non_power_of_two() {
         let err =
             ExperimentConfig::from_toml_str("workers = 6\ntopology = \"hypercube\"").unwrap_err();
-        assert!(err.contains("power of two"), "{err}");
+        assert!(err.contains("hypercube requires K = 2^n"), "{err}");
+    }
+
+    #[test]
+    fn rejects_infeasible_topology_combos() {
+        // The config layer surfaces Topology::validate errors verbatim.
+        let err = ExperimentConfig::from_toml_str("workers = 7\ntopology = \"torus\"")
+            .unwrap_err();
+        assert!(err.contains("no such factorization"), "{err}");
+        let err =
+            ExperimentConfig::from_toml_str("workers = 8\ntopology = \"random-regular:9\"")
+                .unwrap_err();
+        assert!(err.contains("must be < K"), "{err}");
+        assert!(
+            ExperimentConfig::from_toml_str("workers = 256\ntopology = \"expgraph\"").is_ok()
+        );
     }
 
     #[test]

@@ -248,8 +248,10 @@ impl Session<'static> {
         let SessionSpec { config, resume_from } = spec;
         config.validate().map_err(|e| anyhow!(e))?;
         let k = config.workers;
+        // Sparse path: the driver never materializes a dense K×K matrix,
+        // so K=1024 fleets build in O(K·deg) instead of O(K²).
         let (graph, w, rho) =
-            topology::build(config.topology, k, config.weighting, config.seed);
+            topology::build_sparse(config.topology, k, config.weighting, config.seed);
         let net = Network::new(&graph);
 
         let source: Box<dyn GradientSource> = match &config.workload {

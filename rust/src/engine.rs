@@ -35,9 +35,10 @@
 
 use std::sync::mpsc;
 
+use crate::arena::ParamArena;
 use crate::grad::{GradientSource, WorkerGrad};
 use crate::linalg;
-use crate::optim::MomentumState;
+use crate::optim::{self, MomentumBank};
 
 /// A borrowed-closure task for [`WorkerPool::run_scoped`]: the closure
 /// may borrow caller state (`run_scoped` blocks until every task has
@@ -175,22 +176,25 @@ impl Drop for WorkerPool {
 
 /// What each worker does with its freshly drawn gradient.
 pub enum LocalUpdate<'a> {
-    /// Heavy-ball Eq. (8): `m = mu*m + (g + wd*x); x -= eta*m`.
-    Momentum { moms: &'a mut [MomentumState], eta: f32 },
+    /// Heavy-ball Eq. (8): `m = mu*m + (g + wd*x); x -= eta*m`, with the
+    /// K momentum rows living in one flat [`MomentumBank`].
+    Momentum { moms: &'a mut MomentumBank, eta: f32 },
     /// Plain SGD: `x -= eta * g` (the no-momentum baselines).
     Sgd { eta: f32 },
 }
 
 /// Per-worker slice of a [`LocalUpdate`], movable onto a pool thread.
 enum WorkerUpdate<'a> {
-    Momentum(&'a mut MomentumState, f32),
+    Momentum { m: &'a mut [f32], mu: f32, wd: f32, eta: f32 },
     Sgd(f32),
 }
 
 impl WorkerUpdate<'_> {
     fn apply(&mut self, x: &mut [f32], g: &[f32]) {
         match self {
-            WorkerUpdate::Momentum(mom, eta) => mom.step(x, g, *eta),
+            WorkerUpdate::Momentum { m, mu, wd, eta } => {
+                optim::momentum_step(m, x, g, *mu, *wd, *eta)
+            }
             WorkerUpdate::Sgd(eta) => linalg::axpy(-*eta, g, x),
         }
     }
@@ -289,20 +293,22 @@ impl LocalStepEngine {
     }
 
     /// Alg. 1/2 lines 2–4: every worker draws a stochastic gradient at
-    /// its own iterate `xs[k]` and applies `update`. Returns the mean
-    /// minibatch loss across workers.
+    /// its own iterate (row `w` of the flat `xs` arena) and applies
+    /// `update`. Returns the mean minibatch loss across workers.
     pub fn local_step(
         &mut self,
         source: &mut dyn GradientSource,
-        xs: &mut [Vec<f32>],
+        xs: &mut ParamArena,
         update: LocalUpdate<'_>,
     ) -> f64 {
-        let k = xs.len();
+        let k = xs.k();
         assert_eq!(self.bufs.len(), k, "engine sized for a different K");
+        assert_eq!(xs.d(), self.d, "engine sized for a different d");
         let mut ups: Vec<WorkerUpdate<'_>> = match update {
             LocalUpdate::Momentum { moms, eta } => {
-                assert_eq!(moms.len(), k);
-                moms.iter_mut().map(|m| WorkerUpdate::Momentum(m, eta)).collect()
+                assert_eq!(moms.k(), k);
+                let (mu, wd) = (moms.mu(), moms.weight_decay());
+                moms.rows_mut().map(|m| WorkerUpdate::Momentum { m, mu, wd, eta }).collect()
             }
             LocalUpdate::Sgd { eta } => (0..k).map(|_| WorkerUpdate::Sgd(eta)).collect(),
         };
@@ -377,11 +383,11 @@ impl LocalStepEngine {
 
     fn run_sequential(
         source: &mut dyn GradientSource,
-        xs: &mut [Vec<f32>],
+        xs: &mut ParamArena,
         scratch: &mut [f32],
         ups: &mut [WorkerUpdate<'_>],
     ) -> Vec<f64> {
-        xs.iter_mut()
+        xs.rows_mut()
             .zip(ups.iter_mut())
             .enumerate()
             .map(|(w, (x, up))| {
@@ -398,18 +404,18 @@ impl LocalStepEngine {
     /// sources never allocate them.
     fn try_parallel(
         source: &mut dyn GradientSource,
-        xs: &mut [Vec<f32>],
+        xs: &mut ParamArena,
         bufs: &mut [Vec<f32>],
         d: usize,
         ups: &mut [WorkerUpdate<'_>],
         pool: &WorkerPool,
     ) -> Option<Vec<f64>> {
         let workers = source.split_workers()?;
-        assert_eq!(workers.len(), xs.len(), "split_workers() must yield K shards");
+        assert_eq!(workers.len(), xs.k(), "split_workers() must yield K shards");
         Self::ensure_bufs(bufs, d);
         let tasks: Vec<ScopedTask<'_, f64>> = workers
             .into_iter()
-            .zip(xs.iter_mut())
+            .zip(xs.rows_mut())
             .zip(bufs.iter_mut())
             .zip(ups.iter_mut())
             .map(|(((mut shard, x), buf), up)| {
@@ -449,13 +455,13 @@ mod tests {
     use super::*;
     use crate::grad::Quadratic;
 
-    fn setup(k: usize, d: usize, noise: f32, seed: u64) -> (Quadratic, Vec<Vec<f32>>) {
+    fn setup(k: usize, d: usize, noise: f32, seed: u64) -> (Quadratic, ParamArena) {
         let src = Quadratic::new(k, d, 1.0, noise, seed);
-        let xs: Vec<Vec<f32>> = (0..k).map(|i| src.init(seed ^ i as u64)).collect();
-        (src, xs)
+        let rows: Vec<Vec<f32>> = (0..k).map(|i| src.init(seed ^ i as u64)).collect();
+        (src, ParamArena::from_rows(&rows))
     }
 
-    fn run_mode(parallel: bool, momentum: bool) -> (Vec<Vec<f32>>, Vec<f64>) {
+    fn run_mode(parallel: bool, momentum: bool) -> (ParamArena, Vec<f64>) {
         let (k, d) = (4, 33);
         let (mut src, mut xs) = setup(k, d, 0.1, 77);
         let mut engine = if parallel {
@@ -465,8 +471,7 @@ mod tests {
         } else {
             LocalStepEngine::sequential(k, d)
         };
-        let mut moms: Vec<MomentumState> =
-            (0..k).map(|_| MomentumState::new(d, 0.9, 0.0)).collect();
+        let mut moms = MomentumBank::new(k, d, 0.9, 0.0);
         let mut losses = Vec::new();
         for _ in 0..7 {
             let update = if momentum {
@@ -484,9 +489,11 @@ mod tests {
         for momentum in [false, true] {
             let (xs_seq, l_seq) = run_mode(false, momentum);
             let (xs_par, l_par) = run_mode(true, momentum);
-            let bitwise = xs_seq.iter().zip(&xs_par).all(|(a, b)| {
-                a.iter().zip(b).all(|(p, q)| p.to_bits() == q.to_bits())
-            });
+            let bitwise = xs_seq
+                .as_slice()
+                .iter()
+                .zip(xs_par.as_slice())
+                .all(|(p, q)| p.to_bits() == q.to_bits());
             assert!(bitwise, "momentum={momentum}: iterates diverged");
             let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
             assert_eq!(bits(&l_seq), bits(&l_par), "momentum={momentum}: losses diverged");
@@ -500,11 +507,12 @@ mod tests {
         let (mut src2, xs2) = setup(k, d, 0.0, 5);
         let mut engine = LocalStepEngine::sequential(k, d);
         engine.local_step(&mut src, &mut xs, LocalUpdate::Sgd { eta: 0.1 });
-        for (w, x0) in xs2.iter().enumerate() {
+        for w in 0..k {
+            let x0 = xs2.row(w);
             let (_, g) = src2.grad(w, x0);
-            let mut want = x0.clone();
+            let mut want = x0.to_vec();
             linalg::axpy(-0.1, &g, &mut want);
-            assert_eq!(xs[w], want);
+            assert_eq!(xs.row(w), &want[..]);
         }
     }
 

@@ -25,6 +25,7 @@
 
 pub mod algorithms;
 pub mod analysis;
+pub mod arena;
 pub mod benchlib;
 pub mod comm;
 pub mod compress;

@@ -149,42 +149,57 @@ pub fn dist(x: &[f32], y: &[f32]) -> f64 {
         .sqrt()
 }
 
-/// out = mean of the rows (each `xs[k]` is a worker's x_k).
-pub fn mean_of(xs: &[Vec<f32>]) -> Vec<f32> {
-    assert!(!xs.is_empty());
-    let d = xs[0].len();
+/// Mean of equal-length row views — the PRIMARY averaging API: it
+/// consumes any row iterator (arena rows, slices-of-vecs, filtered
+/// subsets) without collecting or cloning. `d` is the row length.
+pub fn mean_of_rows<'a>(rows: impl IntoIterator<Item = &'a [f32]>, d: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; d];
-    for x in xs {
+    let mut n = 0usize;
+    for x in rows {
         axpy(1.0, x, &mut out);
+        n += 1;
     }
-    scale(1.0 / xs.len() as f32, &mut out);
+    assert!(n > 0, "mean of zero rows");
+    scale(1.0 / n as f32, &mut out);
     out
 }
 
-/// Consensus error `sum_k ||x_k - x_bar||^2` — the quantity bounded by
-/// the paper's Lemma 5 / Lemma 6.
-pub fn consensus_error(xs: &[Vec<f32>]) -> f64 {
-    consensus_error_slices(&xs.iter().map(Vec::as_slice).collect::<Vec<_>>())
-}
-
-/// Slice-based consensus error: same math as [`consensus_error`] over
-/// borrowed views, so it never clones a worker iterate. (The driver's
-/// eval path goes further still — `Algorithm::consensus_error_about`
-/// reuses the x̄ it already computed instead of re-averaging here.)
-pub fn consensus_error_slices(xs: &[&[f32]]) -> f64 {
-    assert!(!xs.is_empty());
-    let d = xs[0].len();
-    let mut xbar = vec![0.0f32; d];
-    for x in xs {
-        axpy(1.0, x, &mut xbar);
-    }
-    scale(1.0 / xs.len() as f32, &mut xbar);
-    xs.iter()
+/// Consensus error `sum_k ||x_k - x_bar||^2` over any row iterator —
+/// the quantity bounded by the paper's Lemma 5 / Lemma 6, and the
+/// PRIMARY consensus API (arena rows feed it directly). The iterator is
+/// walked twice (mean, then deviations), hence `Clone`.
+pub fn consensus_error_rows<'a, I>(rows: I, d: usize) -> f64
+where
+    I: IntoIterator<Item = &'a [f32]> + Clone,
+{
+    let xbar = mean_of_rows(rows.clone(), d);
+    rows.into_iter()
         .map(|x| {
             let e = dist(x, &xbar);
             e * e
         })
         .sum()
+}
+
+/// out = mean of the rows (each `xs[k]` is a worker's x_k). Thin
+/// wrapper over [`mean_of_rows`] for per-worker-Vec callers.
+pub fn mean_of(xs: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!xs.is_empty());
+    mean_of_rows(xs.iter().map(Vec::as_slice), xs[0].len())
+}
+
+/// Per-worker-Vec wrapper over [`consensus_error_rows`].
+pub fn consensus_error(xs: &[Vec<f32>]) -> f64 {
+    assert!(!xs.is_empty());
+    consensus_error_rows(xs.iter().map(Vec::as_slice), xs[0].len())
+}
+
+/// Borrowed-view wrapper over [`consensus_error_rows`]. (The driver's
+/// eval path goes further still — `Algorithm::consensus_error_about`
+/// reuses the x̄ it already computed instead of re-averaging here.)
+pub fn consensus_error_slices(xs: &[&[f32]]) -> f64 {
+    assert!(!xs.is_empty());
+    consensus_error_rows(xs.iter().copied(), xs[0].len())
 }
 
 /// Small dense row-major matrix (K x K mixing matrices, covariances).
@@ -230,6 +245,15 @@ impl Mat {
         (0..self.rows)
             .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
             .collect()
+    }
+
+    /// y = A x into a caller-provided buffer (the power-iteration path).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = self.row(i).iter().zip(x).map(|(a, b)| a * b).sum();
+        }
     }
 
     /// C = A B.
@@ -311,19 +335,24 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
-/// |lambda_2(W)| for a symmetric doubly-stochastic W, via power iteration
-/// on the deflated operator `W - (1/K) 1 1^T` (whose leading eigenvalue
-/// is exactly lambda_2 of W, per the paper's Lemma 1).
-pub fn second_eigenvalue_magnitude(w: &Mat, iters: usize, seed: u64) -> f64 {
-    assert_eq!(w.rows, w.cols);
-    let n = w.rows;
+/// |lambda_2| via power iteration on the deflated operator
+/// `W - (1/K) 1 1^T`, generic over HOW `y = W x` is applied — the dense
+/// [`Mat`] and the sparse `topology::MixWeights` both feed this one
+/// implementation, so the K=1024 spectral gap never materializes a
+/// dense K×K matrix.
+pub fn second_eigenvalue_magnitude_op(
+    n: usize,
+    mut matvec: impl FnMut(&[f64], &mut [f64]),
+    iters: usize,
+    seed: u64,
+) -> f64 {
     if n == 1 {
         return 0.0;
     }
     let mut rng = crate::rng::Xoshiro256::seed_from_u64(seed);
     let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     // Deflate the all-ones eigenvector and normalize.
-    let deflate = |v: &mut Vec<f64>| {
+    let deflate = |v: &mut [f64]| {
         let mean = v.iter().sum::<f64>() / n as f64;
         for vi in v.iter_mut() {
             *vi -= mean;
@@ -334,21 +363,35 @@ pub fn second_eigenvalue_magnitude(w: &Mat, iters: usize, seed: u64) -> f64 {
         }
     };
     deflate(&mut v);
+    let mut wv = vec![0.0f64; n];
+    let mut wv2 = vec![0.0f64; n];
     let mut lambda = 0.0;
     for _ in 0..iters {
-        let mut wv = w.matvec(&v);
+        matvec(&v, &mut wv);
         deflate(&mut wv);
         // Rayleigh quotient |v^T W v| on the deflated subspace.
-        let wv2 = w.matvec(&wv);
+        matvec(&wv, &mut wv2);
         lambda = wv.iter().zip(&wv2).map(|(a, b)| a * b).sum::<f64>().abs();
-        v = wv;
+        std::mem::swap(&mut v, &mut wv);
     }
     lambda.min(1.0)
+}
+
+/// |lambda_2(W)| for a symmetric doubly-stochastic dense W (the paper's
+/// Lemma 1 deflation).
+pub fn second_eigenvalue_magnitude(w: &Mat, iters: usize, seed: u64) -> f64 {
+    assert_eq!(w.rows, w.cols);
+    second_eigenvalue_magnitude_op(w.rows, |x, y| w.matvec_into(x, y), iters, seed)
 }
 
 /// Spectral gap rho = 1 - |lambda_2(W)| (paper §3.2).
 pub fn spectral_gap(w: &Mat, seed: u64) -> f64 {
     1.0 - second_eigenvalue_magnitude(w, 400, seed)
+}
+
+/// Spectral gap through the generic matvec (sparse mixing weights).
+pub fn spectral_gap_op(n: usize, matvec: impl FnMut(&[f64], &mut [f64]), seed: u64) -> f64 {
+    1.0 - second_eigenvalue_magnitude_op(n, matvec, 400, seed)
 }
 
 #[cfg(test)]

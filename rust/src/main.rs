@@ -27,7 +27,7 @@ use anyhow::{anyhow, bail, Result};
 use pdsgdm::config::ExperimentConfig;
 use pdsgdm::coordinator::{Session, SessionSpec, VerboseObserver};
 use pdsgdm::metrics;
-use pdsgdm::topology::{mixing_matrix, Topology, Weighting};
+use pdsgdm::topology::{mixing_matrix, MixWeights, Topology, Weighting};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -74,11 +74,16 @@ fn print_help() {
                           [--max-delay N] [--reorder-prob F] [--straggler SPEC]\n\
                           [--churn W@LEAVE:REJOIN,..] [--fault-seed N]\n\
                           [--resume CKPT] [--out CSV] [--ckpt FILE] [--verbose]\n\
-           pdsgdm topology --kind ring|chain|complete|star|torus|hypercube|regular-D\n\
-                          [--workers K] [--weighting uniform|metropolis|lazy-metropolis]\n\
+           pdsgdm topology --kind ring|chain|complete|star|torus|hypercube|expgraph\n\
+                          |random-regular:D  [--workers K] [--seed N]\n\
+                          [--weighting uniform|metropolis|lazy-metropolis]\n\
            pdsgdm inspect  [--artifacts DIR] [--model NAME]\n\
            pdsgdm algorithms\n\
          \n\
+         Topologies: ring | chain | complete | star | torus | hypercube | expgraph\n\
+         | random-regular:D — expgraph (hops i±2^s) and random-regular scale to\n\
+         K=1024 fleets with O(K log K) edges; infeasible (topology, K) pairs are\n\
+         rejected with the reason (torus factorization, 2^n, handshake lemma).\n\
          Workloads: quadratic | logistic | mlp | transformer (needs `make artifacts`).\n\
          Compressors: sign | topR | randR | qsgdL | identity (R ratio, L levels).\n\
          Faults: --straggler constant:F | uniform:LO,HI | lognormal:MU,SIGMA;\n\
@@ -286,6 +291,9 @@ fn cmd_topology(flags: Flags) -> Result<()> {
     let kind = flags.get("kind").unwrap_or("ring");
     let k: usize = flags.get_parse("workers")?.unwrap_or(8);
     let topo = Topology::parse(kind).ok_or_else(|| anyhow!("unknown topology {kind}"))?;
+    // Surface infeasible (topology, K) combos as CLI errors instead of
+    // letting `build` panic (e.g. torus with prime K).
+    topo.validate(k).map_err(|e| anyhow!(e))?;
     let weighting = match flags.get("weighting").unwrap_or("uniform") {
         "uniform" => Weighting::UniformDegree,
         "metropolis" => Weighting::Metropolis,
@@ -293,14 +301,24 @@ fn cmd_topology(flags: Flags) -> Result<()> {
         other => bail!("unknown weighting {other}"),
     };
     let g = topo.build(k, flags.get_parse("seed")?.unwrap_or(0));
-    let w = mixing_matrix(&g, weighting);
-    let rho = pdsgdm::linalg::spectral_gap(&w, 1);
+    // Sparse weights even for display: rho via the CSR operator, so
+    // `topology --workers 1024` never builds a K×K matrix.
+    let mw = MixWeights::from_graph(&g, weighting);
+    let rho = mw.spectral_gap(1);
     println!("topology: {kind}  K={k}  edges={}  rho={rho:.6}", g.edge_count());
     println!("Theorem 1 consensus amplification (1 + 4/rho^2) = {:.2}", 1.0 + 4.0 / (rho * rho));
-    println!("W =");
-    for i in 0..k {
-        let row: Vec<String> = (0..k).map(|j| format!("{:.3}", w[(i, j)])).collect();
-        println!("  [{}]", row.join(" "));
+    if k <= 32 {
+        let w = mixing_matrix(&g, weighting);
+        println!("W =");
+        for i in 0..k {
+            let row: Vec<String> = (0..k).map(|j| format!("{:.3}", w[(i, j)])).collect();
+            println!("  [{}]", row.join(" "));
+        }
+    } else {
+        println!(
+            "(K > 32: dense W print suppressed; avg degree {:.1})",
+            2.0 * g.edge_count() as f64 / k as f64
+        );
     }
     Ok(())
 }

@@ -34,15 +34,7 @@ impl MomentumState {
     /// Weight decay enters the gradient (g + wd * x), matching the
     /// PyTorch SGD the paper's experiments used.
     pub fn step(&mut self, x: &mut [f32], g: &[f32], eta: f32) {
-        debug_assert_eq!(x.len(), self.m.len());
-        debug_assert_eq!(g.len(), self.m.len());
-        let (mu, wd) = (self.mu, self.weight_decay);
-        for ((xi, mi), gi) in x.iter_mut().zip(self.m.iter_mut()).zip(g) {
-            let grad = gi + wd * *xi;
-            let m_new = mu * *mi + grad;
-            *mi = m_new;
-            *xi -= eta * m_new;
-        }
+        momentum_step(&mut self.m, x, g, self.mu, self.weight_decay, eta);
     }
 
     /// ||m||^2 — Lemma 3 bounds this by G^2/(1-mu)^2.
@@ -62,6 +54,98 @@ impl MomentumState {
 
     pub fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
         r.take_f32s_into(&mut self.m, "momentum")
+    }
+}
+
+/// The fused Eq. (8) kernel shared by [`MomentumState::step`] and
+/// [`MomentumBank::step_row`] — ONE loop so the flat-arena bank is
+/// bit-identical to the per-worker state it replaced.
+#[inline]
+pub fn momentum_step(m: &mut [f32], x: &mut [f32], g: &[f32], mu: f32, wd: f32, eta: f32) {
+    debug_assert_eq!(x.len(), m.len());
+    debug_assert_eq!(g.len(), m.len());
+    for ((xi, mi), gi) in x.iter_mut().zip(m.iter_mut()).zip(g) {
+        let grad = gi + wd * *xi;
+        let m_new = mu * *mi + grad;
+        *mi = m_new;
+        *xi -= eta * m_new;
+    }
+}
+
+/// All K workers' momentum buffers in ONE flat K×d arena
+/// (ROADMAP item 1 / DESIGN.md §8): the heavy-ball state analogue of
+/// [`crate::arena::ParamArena`], sharing its contiguous layout,
+/// checkpoint section format, and v2 per-worker loading shim.
+#[derive(Clone, Debug)]
+pub struct MomentumBank {
+    mu: f32,
+    weight_decay: f32,
+    bank: crate::arena::ParamArena,
+}
+
+impl MomentumBank {
+    pub fn new(k: usize, d: usize, mu: f32, weight_decay: f32) -> Self {
+        assert!((0.0..1.0).contains(&mu), "paper requires 0 <= mu < 1");
+        assert!(weight_decay >= 0.0);
+        Self { mu, weight_decay, bank: crate::arena::ParamArena::zeros(k, d) }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.bank.k()
+    }
+
+    #[inline]
+    pub fn mu(&self) -> f32 {
+        self.mu
+    }
+
+    #[inline]
+    pub fn weight_decay(&self) -> f32 {
+        self.weight_decay
+    }
+
+    /// Worker i's fused Eq. (8) update (same kernel as
+    /// [`MomentumState::step`]).
+    pub fn step_row(&mut self, i: usize, x: &mut [f32], g: &[f32], eta: f32) {
+        let (mu, wd) = (self.mu, self.weight_decay);
+        momentum_step(self.bank.row_mut(i), x, g, mu, wd, eta);
+    }
+
+    /// Per-worker momentum rows in worker order — what the engine fans
+    /// across the pool alongside the iterate rows.
+    pub fn rows_mut(&mut self) -> std::slice::ChunksExactMut<'_, f32> {
+        self.bank.rows_mut()
+    }
+
+    /// The underlying arena (gossiped directly by d-sgdm-pm).
+    pub fn arena_mut(&mut self) -> &mut crate::arena::ParamArena {
+        &mut self.bank
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.bank.row(i)
+    }
+
+    /// ||m_i||^2 — Lemma 3 bounds this by G^2/(1-mu)^2.
+    pub fn momentum_norm_sq(&self, i: usize) -> f64 {
+        linalg::dot(self.bank.row(i), self.bank.row(i))
+    }
+
+    /// Zero worker i's buffer (churn rejoin hook).
+    pub fn reset_row(&mut self, i: usize) {
+        self.bank.row_mut(i).iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// One contiguous checkpoint section; loads the v2 per-worker
+    /// momentum layout (u64 K then K length-prefixed rows) via the
+    /// state.rs shim.
+    pub fn state_save(&self, w: &mut crate::state::StateWriter) {
+        self.bank.state_save(w);
+    }
+
+    pub fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        self.bank.state_load(r, "momentum-bank")
     }
 }
 
@@ -211,6 +295,54 @@ mod tests {
     fn theorem_bound_shrinks_with_momentum() {
         assert!(theorem_eta_bound(0.9, 1.0) < theorem_eta_bound(0.5, 1.0));
         assert!((theorem_eta_bound(0.0, 1.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bank_rows_are_bit_identical_to_per_worker_states() {
+        forall(0xBA, 20, |rng| {
+            let k = 1 + rng.below(6);
+            let d = 1 + rng.below(40);
+            let mut bank = MomentumBank::new(k, d, 0.9, 1e-4);
+            let mut states: Vec<MomentumState> =
+                (0..k).map(|_| MomentumState::new(d, 0.9, 1e-4)).collect();
+            let mut xs_bank: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let mut xs_ref = xs_bank.clone();
+            for _ in 0..5 {
+                for i in 0..k {
+                    let g = rng.normal_vec(d, 1.0);
+                    bank.step_row(i, &mut xs_bank[i], &g, 0.05);
+                    states[i].step(&mut xs_ref[i], &g, 0.05);
+                }
+            }
+            for i in 0..k {
+                let a: Vec<u32> = xs_bank[i].iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = xs_ref[i].iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "worker {i} iterate diverged");
+                let a: Vec<u32> = bank.row(i).iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = states[i].m.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "worker {i} momentum diverged");
+            }
+        });
+    }
+
+    #[test]
+    fn bank_loads_legacy_per_worker_momentum_sections() {
+        // The pre-arena checkpoint wrote u64 K then one put_f32s row per
+        // worker; the bank must load that byte stream unchanged.
+        let (k, d) = (3, 5);
+        let mut w = crate::state::StateWriter::new();
+        w.put_u64(k as u64);
+        let rows: Vec<Vec<f32>> =
+            (0..k).map(|i| (0..d).map(|j| (i * d + j) as f32).collect()).collect();
+        for r in &rows {
+            w.put_f32s(r);
+        }
+        let bytes = w.into_bytes();
+        let mut bank = MomentumBank::new(k, d, 0.5, 0.0);
+        bank.state_load(&mut crate::state::StateReader::new(&bytes)).unwrap();
+        for i in 0..k {
+            assert_eq!(bank.row(i), rows[i].as_slice());
+        }
     }
 
     #[test]

@@ -87,7 +87,25 @@ impl StateWriter {
             self.put_f32s(r);
         }
     }
+
+    /// A flat K×d worker-state bank as ONE contiguous section (the v3
+    /// arena layout). The leading [`FLAT_MAT_SENTINEL`] distinguishes it
+    /// from the v2 [`StateWriter::put_f32_mat`] layout, whose first u64
+    /// is a row count — a valid v2 section can never start with the
+    /// sentinel because [`StateReader::take_len`] rejects a row count
+    /// that large.
+    pub fn put_f32_flat_mat(&mut self, k: usize, d: usize, data: &[f32]) {
+        assert_eq!(data.len(), k * d, "flat mat shape mismatch");
+        self.put_u64(FLAT_MAT_SENTINEL);
+        self.put_u64(k as u64);
+        self.put_u64(d as u64);
+        self.put_f32s(data);
+    }
 }
+
+/// Marks a contiguous (v3) worker-state section; see
+/// [`StateWriter::put_f32_flat_mat`].
+pub const FLAT_MAT_SENTINEL: u64 = u64::MAX;
 
 /// Bounds-checked reader over a checkpoint payload.
 #[derive(Debug)]
@@ -195,6 +213,41 @@ impl<'a> StateReader<'a> {
         }
         Ok(())
     }
+
+    /// Restore a flat K×d bank in place. Accepts BOTH layouts: the v3
+    /// contiguous section (leading [`FLAT_MAT_SENTINEL`]) and the legacy
+    /// v2 per-worker layout written by [`StateWriter::put_f32_mat`] /
+    /// the pre-arena momentum banks, whose first u64 is the row count.
+    pub fn take_f32_flat_mat_into(
+        &mut self,
+        k: usize,
+        d: usize,
+        data: &mut [f32],
+        what: &str,
+    ) -> Result<(), String> {
+        if data.len() != k * d {
+            return Err(format!("{what}: live buffer is not {k}x{d}"));
+        }
+        let first = self.take_u64()?;
+        if first == FLAT_MAT_SENTINEL {
+            let sk = self.take_u64()? as usize;
+            let sd = self.take_u64()? as usize;
+            if sk != k || sd != d {
+                return Err(format!("{what}: saved shape {sk}x{sd} != live {k}x{d}"));
+            }
+            self.take_f32s_into(data, what)
+        } else {
+            // v2 shim: `first` is the row count of a per-worker layout.
+            let sk = first as usize;
+            if sk != k {
+                return Err(format!("{what}: saved K {sk} != live K {k}"));
+            }
+            for (i, row) in data.chunks_mut(d.max(1)).enumerate() {
+                self.take_f32s_into(row, &format!("{what}[{i}]"))?;
+            }
+            Ok(())
+        }
+    }
 }
 
 #[cfg(test)]
@@ -273,6 +326,49 @@ mod tests {
         assert!(StateReader::new(&bytes).take_f32s().is_err());
         assert!(StateReader::new(&bytes).take_u64s().is_err());
         assert!(StateReader::new(&bytes).take_bytes().is_err());
+    }
+
+    #[test]
+    fn flat_mat_round_trip_and_v2_shim() {
+        let rows = vec![vec![1.0f32, -0.0], vec![f32::NAN, 4.5], vec![7.0, 8.0]];
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+
+        // v3 contiguous section round-trips bit-exactly.
+        let mut w = StateWriter::new();
+        w.put_f32_flat_mat(3, 2, &flat);
+        let v3 = w.into_bytes();
+        let mut got = vec![0.0f32; 6];
+        StateReader::new(&v3).take_f32_flat_mat_into(3, 2, &mut got, "xs").unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got), bits(&flat));
+
+        // The SAME reader call accepts a legacy v2 per-worker section.
+        let mut w = StateWriter::new();
+        w.put_f32_mat(&rows);
+        let v2 = w.into_bytes();
+        let mut got = vec![0.0f32; 6];
+        StateReader::new(&v2).take_f32_flat_mat_into(3, 2, &mut got, "xs").unwrap();
+        assert_eq!(bits(&got), bits(&flat));
+    }
+
+    #[test]
+    fn flat_mat_shape_mismatch_is_an_error_in_both_layouts() {
+        let flat = vec![0.5f32; 6];
+        let mut w = StateWriter::new();
+        w.put_f32_flat_mat(3, 2, &flat);
+        let v3 = w.into_bytes();
+        let mut wrong = vec![0.0f32; 4];
+        assert!(StateReader::new(&v3).take_f32_flat_mat_into(2, 2, &mut wrong, "xs").is_err());
+        let mut wrong = vec![0.0f32; 6];
+        assert!(StateReader::new(&v3).take_f32_flat_mat_into(2, 3, &mut wrong, "xs").is_err());
+
+        let mut w = StateWriter::new();
+        w.put_f32_mat(&[vec![0.5f32; 2]; 3]);
+        let v2 = w.into_bytes();
+        let mut wrong = vec![0.0f32; 4];
+        assert!(StateReader::new(&v2).take_f32_flat_mat_into(2, 2, &mut wrong, "xs").is_err());
+        let mut wrong = vec![0.0f32; 9];
+        assert!(StateReader::new(&v2).take_f32_flat_mat_into(3, 3, &mut wrong, "xs").is_err());
     }
 
     #[test]

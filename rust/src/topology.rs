@@ -1,13 +1,20 @@
-//! Decentralized-training topologies and their mixing matrices.
+//! Decentralized-training topologies and their mixing weights.
 //!
 //! The paper models the worker fleet as an undirected graph `G = (V, W)`
 //! with a symmetric doubly-stochastic `W` (Assumption 1); all convergence
 //! constants enter through the spectral gap `rho = 1 - |lambda_2(W)|`
 //! (Lemma 1). This module builds the standard families — the paper's
-//! ring, plus chain/complete/star/2-D torus/hypercube/random-regular for
-//! the topology ablation — and two weighting schemes (uniform-degree as
-//! used in the paper's 1/3-ring, and Metropolis–Hastings for irregular
-//! graphs).
+//! ring, plus chain/complete/star/2-D torus/hypercube/exponential-graph/
+//! random-regular for the topology ablation and fleet-scale runs — and
+//! two weighting schemes (uniform-degree as used in the paper's 1/3-ring,
+//! and Metropolis–Hastings for irregular graphs).
+//!
+//! Weights come in two representations: the dense [`Mat`] from
+//! [`mixing_matrix`] (display, small-K analysis) and the sparse
+//! [`MixWeights`] CSR rows (the hot path — gossip at K=1024 touches
+//! O(K·deg) weights, never a K×K matrix). [`MixWeights::from_graph`]
+//! derives the SAME f64 values as the dense path, bit for bit, so
+//! switching representations never perturbs a trajectory (DESIGN.md §8).
 
 use crate::linalg::{self, Mat};
 use crate::rng::Xoshiro256;
@@ -80,6 +87,10 @@ pub enum Topology {
     Torus2d,
     /// Hypercube (requires K a power of two).
     Hypercube,
+    /// Exponential graph: worker i links to (i ± 2^s) mod K for every
+    /// power 2^s < K. Degree ~2·log2(K), spectral gap O(1/log K) — the
+    /// standard fleet-scale topology (Assran et al.'s SGP uses it).
+    ExpGraph,
     /// Random d-regular graph (configuration model with retries).
     RandomRegular { degree: usize },
 }
@@ -93,14 +104,56 @@ impl Topology {
             "star" => Some(Topology::Star),
             "torus" | "torus2d" => Some(Topology::Torus2d),
             "hypercube" => Some(Topology::Hypercube),
-            _ => s.strip_prefix("regular-").and_then(|d| {
-                d.parse().ok().map(|degree| Topology::RandomRegular { degree })
+            "expgraph" | "exponential" => Some(Topology::ExpGraph),
+            _ => s
+                .strip_prefix("random-regular:")
+                .or_else(|| s.strip_prefix("regular-"))
+                .and_then(|d| d.parse().ok().map(|degree| Topology::RandomRegular { degree })),
+        }
+    }
+
+    /// Feasibility check for a (topology, K) pair — the CLI/config layer
+    /// surfaces these as user errors instead of panics deep in `build`.
+    pub fn validate(self, k: usize) -> Result<(), String> {
+        if k == 0 {
+            return Err("need at least one worker".into());
+        }
+        if k == 1 {
+            return Ok(()); // every family degenerates to the single node
+        }
+        match self {
+            Topology::Torus2d => torus_dims(k).map(|_| ()).ok_or_else(|| {
+                format!("torus requires K = r*c with r,c >= 2; K={k} has no such factorization")
             }),
+            Topology::Hypercube => {
+                if k.is_power_of_two() {
+                    Ok(())
+                } else {
+                    Err(format!("hypercube requires K = 2^n, got K={k}"))
+                }
+            }
+            Topology::RandomRegular { degree } => {
+                if degree < 2 {
+                    Err(format!("random-regular requires degree >= 2, got {degree}"))
+                } else if degree >= k {
+                    Err(format!("random-regular degree {degree} must be < K={k}"))
+                } else if (k * degree) % 2 != 0 {
+                    Err(format!(
+                        "random-regular requires even K*degree (handshake lemma); \
+                         K={k} * degree={degree} is odd"
+                    ))
+                } else {
+                    Ok(())
+                }
+            }
+            _ => Ok(()),
         }
     }
 
     pub fn build(self, k: usize, seed: u64) -> Graph {
-        assert!(k >= 1, "need at least one worker");
+        if let Err(e) = self.validate(k) {
+            panic!("{e}");
+        }
         let mut g = Graph::empty(k);
         if k == 1 {
             return g;
@@ -129,7 +182,7 @@ impl Topology {
                 }
             }
             Topology::Torus2d => {
-                let (r, c) = torus_dims(k).expect("torus requires K = r*c, r,c >= 2");
+                let (r, c) = torus_dims(k).expect("validated above");
                 for i in 0..r {
                     for j in 0..c {
                         let id = i * c + j;
@@ -139,7 +192,6 @@ impl Topology {
                 }
             }
             Topology::Hypercube => {
-                assert!(k.is_power_of_two(), "hypercube requires K = 2^n");
                 let bits = k.trailing_zeros();
                 for i in 0..k {
                     for b in 0..bits {
@@ -147,6 +199,15 @@ impl Topology {
                         if j > i {
                             g.add_edge(i, j);
                         }
+                    }
+                }
+            }
+            Topology::ExpGraph => {
+                for i in 0..k {
+                    let mut s = 1usize;
+                    while s < k {
+                        g.add_edge(i, (i + s) % k);
+                        s <<= 1;
                     }
                 }
             }
@@ -254,7 +315,257 @@ pub fn mixing_matrix(g: &Graph, scheme: Weighting) -> Mat {
     w
 }
 
-/// Convenience: (graph, W, rho) for a named topology.
+/// Sparse symmetric doubly-stochastic mixing weights: one CSR row per
+/// RECEIVER holding its `(neighbor, weight)` entries in ascending
+/// neighbor order, plus the diagonal self-weight kept separately for
+/// O(1) access. This is the hot-path representation — gossip at K=1024
+/// walks O(K·deg) entries where the dense [`Mat`] walks K².
+///
+/// Two invariants matter for bit-identity (DESIGN.md §8):
+/// * [`MixWeights::from_graph`] computes each f64 weight with exactly
+///   the operations (and accumulation order) of [`mixing_matrix`], so
+///   sparse and dense derivations agree bit for bit;
+/// * entries are ascending by neighbor index, matching the
+///   ascending-sender inbox order of [`crate::comm::Network`], so the
+///   gossip accumulation visits terms in the same order the dense scan
+///   did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixWeights {
+    k: usize,
+    /// Row extents: receiver i's entries are `entries[row_ptr[i]..row_ptr[i+1]]`.
+    row_ptr: Vec<usize>,
+    /// Off-diagonal `(neighbor, weight)` pairs, ascending per row.
+    entries: Vec<(usize, f64)>,
+    /// Self-weights w_ii.
+    diag: Vec<f64>,
+}
+
+impl MixWeights {
+    /// W = I (the no-mixing default of `AlgorithmSpec`).
+    pub fn identity(k: usize) -> Self {
+        Self { k, row_ptr: vec![0; k + 1], entries: Vec::new(), diag: vec![1.0; k] }
+    }
+
+    /// Derive the weights for `g` under `scheme` WITHOUT materializing a
+    /// dense matrix — same f64 values as [`mixing_matrix`], bit for bit
+    /// (property-tested below).
+    pub fn from_graph(g: &Graph, scheme: Weighting) -> Self {
+        let k = g.k;
+        if k == 1 {
+            return Self::identity(1);
+        }
+        let sorted: Vec<Vec<usize>> = (0..k)
+            .map(|i| {
+                let mut v = g.neighbors(i).to_vec();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let mut row_ptr = Vec::with_capacity(k + 1);
+        row_ptr.push(0usize);
+        let mut entries = Vec::new();
+        let mut diag = vec![0.0f64; k];
+        match scheme {
+            Weighting::UniformDegree => {
+                let dmax = (0..k).map(|i| g.degree(i)).max().unwrap();
+                let wij = 1.0 / (dmax as f64 + 1.0);
+                for i in 0..k {
+                    for &j in &sorted[i] {
+                        entries.push((j, wij));
+                    }
+                    diag[i] = 1.0 - wij * g.degree(i) as f64;
+                    row_ptr.push(entries.len());
+                }
+            }
+            Weighting::Metropolis | Weighting::LazyMetropolis => {
+                let lazy = scheme == Weighting::LazyMetropolis;
+                for i in 0..k {
+                    let start = entries.len();
+                    // Ascending-j accumulation matches the dense row sum
+                    // (absent entries add literal +0.0 there — a no-op).
+                    let mut off = 0.0f64;
+                    for &j in &sorted[i] {
+                        let w = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+                        off += w;
+                        entries.push((j, w));
+                    }
+                    let mut d = 1.0 - off;
+                    if lazy {
+                        for e in &mut entries[start..] {
+                            e.1 *= 0.5;
+                        }
+                        d = d * 0.5 + 0.5;
+                    }
+                    diag[i] = d;
+                    row_ptr.push(entries.len());
+                }
+            }
+        }
+        Self { k, row_ptr, entries, diag }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// w_ii.
+    #[inline]
+    pub fn self_weight(&self, i: usize) -> f64 {
+        self.diag[i]
+    }
+
+    /// Receiver i's off-diagonal `(neighbor, weight)` entries, ascending.
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[(usize, f64)] {
+        &self.entries[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// Off-diagonal degree of receiver i.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Total off-diagonal entries.
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// w_ij by binary search (diagnostics / symmetry checks — hot paths
+    /// walk [`MixWeights::neighbors`] or a [`RowCursor`] instead).
+    pub fn weight(&self, i: usize, j: usize) -> f64 {
+        if i == j {
+            return self.diag[i];
+        }
+        let row = self.neighbors(i);
+        match row.binary_search_by_key(&j, |e| e.0) {
+            Ok(p) => row[p].1,
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Forward-only weight lookup for callers that visit senders in
+    /// ascending order (the gossip inbox invariant).
+    pub fn row_cursor(&self, i: usize) -> RowCursor<'_> {
+        RowCursor { row: self.neighbors(i), pos: 0 }
+    }
+
+    /// Assumption 1 check in O(nnz): symmetric, rows sum to 1, entries
+    /// in [0,1] (symmetry + row-stochastic implies column-stochastic).
+    pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
+        for i in 0..self.k {
+            let s = self.diag[i] + self.neighbors(i).iter().map(|e| e.1).sum::<f64>();
+            if (s - 1.0).abs() > tol || !(-tol..=1.0 + tol).contains(&self.diag[i]) {
+                return false;
+            }
+            for &(j, w) in self.neighbors(i) {
+                if !(-tol..=1.0 + tol).contains(&w) || (self.weight(j, i) - w).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Densify (display / small-K analysis only).
+    pub fn to_mat(&self) -> Mat {
+        let mut m = Mat::zeros(self.k, self.k);
+        for i in 0..self.k {
+            m[(i, i)] = self.diag[i];
+            for &(j, w) in self.neighbors(i) {
+                m[(i, j)] = w;
+            }
+        }
+        m
+    }
+
+    /// y = W x in O(nnz), visiting each row's terms in ascending column
+    /// order with the diagonal at its natural position (mirrors the
+    /// dense row scan).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(y.len(), self.k);
+        for i in 0..self.k {
+            let mut acc = 0.0f64;
+            let mut diag_done = false;
+            for &(j, w) in self.neighbors(i) {
+                if j > i && !diag_done {
+                    acc += self.diag[i] * x[i];
+                    diag_done = true;
+                }
+                acc += w * x[j];
+            }
+            if !diag_done {
+                acc += self.diag[i] * x[i];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Spectral gap rho = 1 - |lambda_2(W)| via sparse power iteration —
+    /// no dense K×K materialization at K=1024.
+    pub fn spectral_gap(&self, seed: u64) -> f64 {
+        linalg::spectral_gap_op(self.k, |x, y| self.matvec_into(x, y), seed)
+    }
+}
+
+/// Forward-only cursor over one ascending CSR row; absent columns read
+/// as weight 0.0 (the dense-lookup semantics).
+pub struct RowCursor<'a> {
+    row: &'a [(usize, f64)],
+    pos: usize,
+}
+
+impl RowCursor<'_> {
+    /// Weight toward column `j`; calls must present `j` in ascending
+    /// order across the cursor's lifetime.
+    #[inline]
+    pub fn weight(&mut self, j: usize) -> f64 {
+        while self.pos < self.row.len() && self.row[self.pos].0 < j {
+            self.pos += 1;
+        }
+        match self.row.get(self.pos) {
+            Some(&(jj, w)) if jj == j => w,
+            _ => 0.0,
+        }
+    }
+}
+
+impl From<&Mat> for MixWeights {
+    /// Sparsify a dense mixing matrix (legacy call sites, hand-built
+    /// test matrices). Off-diagonal zeros are dropped; weights are kept
+    /// bit-exact.
+    fn from(w: &Mat) -> Self {
+        assert_eq!(w.rows, w.cols, "mixing matrix must be square");
+        let k = w.rows;
+        let mut row_ptr = Vec::with_capacity(k + 1);
+        row_ptr.push(0usize);
+        let mut entries = Vec::new();
+        let mut diag = vec![0.0f64; k];
+        for i in 0..k {
+            for j in 0..k {
+                let wij = w[(i, j)];
+                if i == j {
+                    diag[i] = wij;
+                } else if wij != 0.0 {
+                    entries.push((j, wij));
+                }
+            }
+            row_ptr.push(entries.len());
+        }
+        Self { k, row_ptr, entries, diag }
+    }
+}
+
+impl From<Mat> for MixWeights {
+    fn from(w: Mat) -> Self {
+        (&w).into()
+    }
+}
+
+/// Convenience: (graph, W, rho) for a named topology — DENSE weights;
+/// display and small-K analysis only. The driver uses [`build_sparse`].
 pub fn build(topology: Topology, k: usize, scheme: Weighting, seed: u64) -> (Graph, Mat, f64) {
     let g = topology.build(k, seed);
     let w = mixing_matrix(&g, scheme);
@@ -262,8 +573,24 @@ pub fn build(topology: Topology, k: usize, scheme: Weighting, seed: u64) -> (Gra
     (g, w, rho)
 }
 
-/// W as row-major f32, the form the XLA mix artifact and the in-process
-/// gossip kernels consume.
+/// Convenience: (graph, sparse weights, rho) for a named topology — the
+/// fleet-scale path: never materializes a K×K matrix.
+pub fn build_sparse(
+    topology: Topology,
+    k: usize,
+    scheme: Weighting,
+    seed: u64,
+) -> (Graph, MixWeights, f64) {
+    let g = topology.build(k, seed);
+    let mw = MixWeights::from_graph(&g, scheme);
+    let rho = mw.spectral_gap(seed ^ 0xA5A5);
+    (g, mw, rho)
+}
+
+/// W as row-major f32, the form the XLA mix artifact consumes.
+#[deprecated(
+    note = "dense K*K conversion — in-process hot paths read MixWeights rows instead (DESIGN.md §8)"
+)]
 pub fn w_to_f32(w: &Mat) -> Vec<f32> {
     w.data.iter().map(|&x| x as f32).collect()
 }
@@ -279,7 +606,20 @@ mod tests {
         (Topology::Star, 8),
         (Topology::Torus2d, 8),
         (Topology::Hypercube, 8),
+        (Topology::ExpGraph, 8),
         (Topology::RandomRegular { degree: 3 }, 8),
+    ];
+
+    /// The fleet-scale generators at the Ks the large-K path uses.
+    const SCALE_TOPOS: &[(Topology, usize)] = &[
+        (Topology::Torus2d, 16),
+        (Topology::Torus2d, 64),
+        (Topology::ExpGraph, 16),
+        (Topology::ExpGraph, 64),
+        (Topology::ExpGraph, 100),
+        (Topology::RandomRegular { degree: 4 }, 16),
+        (Topology::RandomRegular { degree: 4 }, 64),
+        (Topology::RandomRegular { degree: 3 }, 64),
     ];
 
     #[test]
@@ -392,5 +732,164 @@ mod tests {
         let mx: f64 = x.iter().sum::<f64>() / 12.0;
         let my: f64 = y.iter().sum::<f64>() / 12.0;
         assert!((mx - my).abs() < 1e-9);
+    }
+
+    // ---- sparse MixWeights + fleet-scale generators ------------------
+
+    const SCHEMES: [Weighting; 3] =
+        [Weighting::UniformDegree, Weighting::Metropolis, Weighting::LazyMetropolis];
+
+    #[test]
+    fn prop_sparse_weights_bitwise_equal_dense_derivation() {
+        // The bit-identity cornerstone: from_graph must produce EXACTLY
+        // the f64 values of mixing_matrix, for every family × scheme.
+        for &(t, k) in TOPOS.iter().chain(SCALE_TOPOS) {
+            let g = t.build(k, 3);
+            for scheme in SCHEMES {
+                let dense = mixing_matrix(&g, scheme);
+                let sparse = MixWeights::from_graph(&g, scheme);
+                let bits = |m: &Mat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(
+                    bits(&sparse.to_mat()),
+                    bits(&dense),
+                    "{t:?} K={k} {scheme:?}: sparse derivation diverged from dense"
+                );
+                // And sparsifying the dense matrix is the same object.
+                assert_eq!(sparse, MixWeights::from(&dense), "{t:?} K={k} {scheme:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_generated_graphs_connected_and_weights_doubly_stochastic() {
+        for &(t, k) in SCALE_TOPOS {
+            let g = t.build(k, 11);
+            assert!(g.is_connected(), "{t:?} K={k} disconnected");
+            for scheme in SCHEMES {
+                let mw = MixWeights::from_graph(&g, scheme);
+                assert!(mw.is_doubly_stochastic(1e-9), "{t:?} K={k} {scheme:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_fleet_topologies_beat_ring_spectral_gap() {
+        // The point of expgraph/random-regular: far better mixing than
+        // Ring at equal K.
+        for k in [16usize, 64] {
+            let ring = build_sparse(Topology::Ring, k, Weighting::UniformDegree, 5).2;
+            for t in [Topology::ExpGraph, Topology::RandomRegular { degree: 4 }] {
+                let rho = build_sparse(t, k, Weighting::UniformDegree, 5).2;
+                assert!(
+                    rho > 2.0 * ring,
+                    "{t:?} K={k}: rho={rho} not clearly above ring's {ring}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_and_dense_spectral_gaps_agree() {
+        for &(t, k) in TOPOS {
+            let rho_dense = build(t, k, Weighting::Metropolis, 5).2;
+            let rho_sparse = build_sparse(t, k, Weighting::Metropolis, 5).2;
+            assert!(
+                (rho_dense - rho_sparse).abs() < 1e-9,
+                "{t:?} K={k}: dense rho {rho_dense} vs sparse {rho_sparse}"
+            );
+        }
+    }
+
+    #[test]
+    fn expgraph_structure() {
+        // K=16: node 0 links to ±1, ±2, ±4, +8 — degree 7, log-scaling.
+        let g = Topology::ExpGraph.build(16, 0);
+        let mut n0 = g.neighbors(0).to_vec();
+        n0.sort_unstable();
+        assert_eq!(n0, vec![1, 2, 4, 8, 12, 14, 15]);
+        for i in 0..16 {
+            assert_eq!(g.degree(i), 7);
+        }
+        // K=2 degenerates to the single edge.
+        assert_eq!(Topology::ExpGraph.build(2, 0).edge_count(), 1);
+    }
+
+    #[test]
+    fn mixweights_rows_are_ascending_and_match_weight_lookup() {
+        let g = Topology::ExpGraph.build(16, 0);
+        let mw = MixWeights::from_graph(&g, Weighting::Metropolis);
+        for i in 0..16 {
+            let row = mw.neighbors(i);
+            assert!(row.windows(2).all(|p| p[0].0 < p[1].0), "row {i} not ascending");
+            let mut cur = mw.row_cursor(i);
+            for j in 0..16 {
+                let expect = mw.weight(i, j);
+                if j != i {
+                    assert_eq!(cur.weight(j), expect, "cursor({i},{j})");
+                }
+            }
+            assert_eq!(mw.degree(i), row.len());
+        }
+        assert_eq!(mw.nnz(), 2 * g.edge_count());
+    }
+
+    #[test]
+    fn identity_weights_mix_nothing() {
+        let mw = MixWeights::identity(4);
+        assert!(mw.is_doubly_stochastic(0.0));
+        assert_eq!(mw.nnz(), 0);
+        assert_eq!(mw.self_weight(2), 1.0);
+        // lambda_2(I) = 1 => rho = 0 (disconnected).
+        assert!(mw.spectral_gap(1) < 1e-9);
+    }
+
+    #[test]
+    fn sparse_matvec_matches_dense() {
+        let (g, w, _) = build(Topology::Star, 9, Weighting::Metropolis, 2);
+        let mw = MixWeights::from_graph(&g, Weighting::Metropolis);
+        let x: Vec<f64> = (0..9).map(|i| (i as f64) - 3.5).collect();
+        let dense = w.matvec(&x);
+        let mut sparse = vec![0.0f64; 9];
+        mw.matvec_into(&x, &mut sparse);
+        for (a, b) in dense.iter().zip(&sparse) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn parse_fleet_names() {
+        assert_eq!(Topology::parse("expgraph"), Some(Topology::ExpGraph));
+        assert_eq!(Topology::parse("exponential"), Some(Topology::ExpGraph));
+        assert_eq!(
+            Topology::parse("random-regular:4"),
+            Some(Topology::RandomRegular { degree: 4 })
+        );
+        assert_eq!(Topology::parse("random-regular:x"), None);
+        assert_eq!(Topology::parse("torus"), Some(Topology::Torus2d));
+    }
+
+    #[test]
+    fn validate_rejects_infeasible_combos() {
+        // Non-rectangular torus K.
+        assert!(Topology::Torus2d.validate(7).is_err());
+        assert!(Topology::Torus2d.validate(2).is_err());
+        assert!(Topology::Torus2d.validate(12).is_ok());
+        // Hypercube needs a power of two.
+        assert!(Topology::Hypercube.validate(12).is_err());
+        assert!(Topology::Hypercube.validate(16).is_ok());
+        // Random-regular: odd K*deg, deg >= K, deg < 2.
+        assert!(Topology::RandomRegular { degree: 3 }.validate(5).is_err());
+        assert!(Topology::RandomRegular { degree: 8 }.validate(8).is_err());
+        assert!(Topology::RandomRegular { degree: 1 }.validate(8).is_err());
+        assert!(Topology::RandomRegular { degree: 4 }.validate(8).is_ok());
+        // K=1 degenerates fine everywhere; K=0 never does.
+        assert!(Topology::Torus2d.validate(1).is_ok());
+        assert!(Topology::Ring.validate(0).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "no such factorization")]
+    fn build_panics_with_the_validation_message() {
+        Topology::Torus2d.build(7, 0);
     }
 }

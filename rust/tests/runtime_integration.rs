@@ -13,7 +13,7 @@ use pdsgdm::grad::GradientSource;
 use pdsgdm::linalg;
 use pdsgdm::rng::Xoshiro256;
 use pdsgdm::runtime::Runtime;
-use pdsgdm::topology::{mixing_matrix, w_to_f32, Topology, Weighting};
+use pdsgdm::topology::{mixing_matrix, Topology, Weighting};
 
 fn runtime() -> Option<Runtime> {
     if !pdsgdm::runtime::HAS_PJRT {
@@ -105,7 +105,10 @@ fn mix_artifact_matches_rust_gossip() {
     let d = mix.d;
     let g = Topology::Ring.build(k, 0);
     let w = mixing_matrix(&g, Weighting::UniformDegree);
-    let wf = w_to_f32(&w);
+    // The XLA mix kernel genuinely wants the dense K×K f32 table — the
+    // one consumer the sparse-CSR migration deliberately left dense.
+    #[allow(deprecated)]
+    let wf = pdsgdm::topology::w_to_f32(&w);
     let mut rng = Xoshiro256::seed_from_u64(6);
     let xs_rows: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d, 1.0)).collect();
     let xs_flat: Vec<f32> = xs_rows.iter().flatten().copied().collect();
