@@ -4,7 +4,7 @@
 //! "who wins by how much" faithfully.
 
 use super::{
-    gossip::{self, CompressedExchange, GossipState},
+    gossip::{self, CompressedExchange, GossipState, ReplicaStore},
     Algorithm, Hyper, StepStats,
 };
 use crate::arena::ParamArena;
@@ -413,6 +413,18 @@ pub struct DeepSqueeze {
     vs: ParamArena,
     /// Reusable K×d scratch: the mixed-compressed corrections.
     mixes: ParamArena,
+    /// Per-receiver neighbor replicas of the compressed values c_j, used
+    /// only under lossy compressed links (`FaultPlan::compressed`): each
+    /// slot holds the *last* c_j its receiver decoded (set, not
+    /// accumulated — DeepSqueeze ships one-shot values, not CHOCO
+    /// deltas), so an unheard neighbor mixes at its stale value. Lazily
+    /// materialized at zero ("never heard" mixes as zero, the same
+    /// convention the canonical table uses for absent senders).
+    replicas: ReplicaStore,
+    /// Each worker's own decoded c_k under per-receiver mode (its own
+    /// payload never crosses the wire); lazily sized, zeroed for absent
+    /// workers so it stays a pure function of the current round.
+    own_cs: ParamArena,
 }
 
 impl DeepSqueeze {
@@ -427,6 +439,7 @@ impl DeepSqueeze {
         let gossip = GossipState::new(w);
         assert_eq!(gossip.k(), k);
         let d = x0.len();
+        let replicas = ReplicaStore::new(gossip.weights(), d);
         Self {
             xs: ParamArena::filled(k, &x0),
             errs: ParamArena::zeros(k, d),
@@ -436,6 +449,8 @@ impl DeepSqueeze {
             exchange: CompressedExchange::new(k, seed),
             vs: ParamArena::zeros(k, d),
             mixes: ParamArena::zeros(k, d),
+            replicas,
+            own_cs: ParamArena::zeros(0, d),
             hyper,
         }
     }
@@ -456,25 +471,30 @@ impl DeepSqueeze {
                 *vv = xv + ev;
             }
         }
-        let vs = &self.vs;
-        let errs = &mut self.errs;
-        let cs = self.exchange.round(
-            self.compressor.as_ref(),
-            net,
-            vs,
-            pool,
-            |i, c| {
-                for ((e, &vv), &cc) in errs.row_mut(i).iter_mut().zip(vs.row(i)).zip(&c.dense) {
-                    *e = vv - cc;
-                }
-            },
-        );
-        // x_i += Σ_j w_ij c_j − c_i: one fused weighted-sum per worker
-        // into reusable scratch, fanned over the shared engine pool. The
-        // term list walks the sparse weight row (ascending neighbors,
-        // self weight spliced in at its natural column position) so the
-        // summation order matches the old dense row scan bitwise.
-        {
+        // Lossy compressed links: switch to per-receiver replicas of the
+        // one-shot c values (see field docs). A plan that never opted in
+        // keeps the exact canonical code path — byte-for-byte.
+        let per_receiver = net.fault_plan().map_or(false, |p| p.compressed);
+        if !per_receiver {
+            let vs = &self.vs;
+            let errs = &mut self.errs;
+            let cs = self.exchange.round(
+                self.compressor.as_ref(),
+                net,
+                vs,
+                pool,
+                |i, c| {
+                    for ((e, &vv), &cc) in errs.row_mut(i).iter_mut().zip(vs.row(i)).zip(&c.dense)
+                    {
+                        *e = vv - cc;
+                    }
+                },
+            );
+            // x_i += Σ_j w_ij c_j − c_i: one fused weighted-sum per worker
+            // into reusable scratch, fanned over the shared engine pool. The
+            // term list walks the sparse weight row (ascending neighbors,
+            // self weight spliced in at its natural column position) so the
+            // summation order matches the old dense row scan bitwise.
             let w = self.gossip.weights();
             let rows: Vec<ScopedTask<'_, ()>> = self
                 .xs
@@ -501,6 +521,94 @@ impl DeepSqueeze {
                         terms.push((sw, cs.row(i)));
                     }
                     terms.push((-1.0, cs.row(i)));
+                    Box::new(move || {
+                        linalg::weighted_sum_into(mixc, &terms);
+                        linalg::axpy(1.0, mixc, x);
+                    }) as ScopedTask<'_, ()>
+                })
+                .collect();
+            gossip::run_rows(pool, rows);
+        } else {
+            if !self.replicas.is_materialized() {
+                self.replicas.materialize_zeros();
+            }
+            let d = self.vs.d();
+            if self.own_cs.k() != k || self.own_cs.d() != d {
+                self.own_cs = ParamArena::zeros(k, d);
+            }
+            // An absent worker applies no self payload this round; zero
+            // its own-c row so the mix sees the canonical absent-sender
+            // convention and own_cs never carries hidden cross-round
+            // state (which would have to be checkpointed).
+            for i in 0..k {
+                if net.is_absent(i) {
+                    self.own_cs.row_mut(i).fill(0.0);
+                }
+            }
+            // Error feedback stays sender-side (the on_compressed hook):
+            // e_k depends only on the worker's own compression, so it is
+            // untouched by what receivers did or did not hear.
+            let vs = &self.vs;
+            let errs = &mut self.errs;
+            let replicas = &mut self.replicas;
+            let own_cs = &mut self.own_cs;
+            self.exchange.round_per_receiver(
+                self.compressor.as_ref(),
+                net,
+                vs,
+                pool,
+                |i, c| {
+                    for ((e, &vv), &cc) in errs.row_mut(i).iter_mut().zip(vs.row(i)).zip(&c.dense)
+                    {
+                        *e = vv - cc;
+                    }
+                },
+                |to, from, c| {
+                    if to == from {
+                        own_cs.row_mut(to).copy_from_slice(c);
+                    } else {
+                        let slot = replicas
+                            .slot_of(to, from)
+                            .expect("compressed message arrived off-graph");
+                        // Set, not accumulate: a stale delayed copy then a
+                        // fresh one leaves the freshest (arrival order).
+                        replicas.row_mut(slot).copy_from_slice(c);
+                    }
+                },
+            );
+            // x_i += Σ_j w_ij ĉ_j(i) − c_i against receiver i's own
+            // views: unheard neighbors mix at their stale (or
+            // never-heard zero) replica, full weight. Same splice order
+            // as the canonical path, so zero-rate plans stay
+            // bit-identical while every replica equals the shared table.
+            let w = self.gossip.weights();
+            let replicas = &self.replicas;
+            let own_cs = &self.own_cs;
+            let rows: Vec<ScopedTask<'_, ()>> = self
+                .xs
+                .rows_mut()
+                .zip(self.mixes.rows_mut())
+                .enumerate()
+                .map(|(i, (x, mixc))| {
+                    let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(k + 1);
+                    let sw = w.self_weight(i) as f32;
+                    let mut placed_self = false;
+                    for &(j, wij) in w.neighbors(i) {
+                        if j > i && !placed_self {
+                            if sw != 0.0 {
+                                terms.push((sw, own_cs.row(i)));
+                            }
+                            placed_self = true;
+                        }
+                        let wij = wij as f32;
+                        if wij != 0.0 {
+                            terms.push((wij, replicas.replica(i, j)));
+                        }
+                    }
+                    if !placed_self && sw != 0.0 {
+                        terms.push((sw, own_cs.row(i)));
+                    }
+                    terms.push((-1.0, own_cs.row(i)));
                     Box::new(move || {
                         linalg::weighted_sum_into(mixc, &terms);
                         linalg::axpy(1.0, mixc, x);
@@ -553,13 +661,18 @@ impl Algorithm for DeepSqueeze {
         self.errs.state_save(w);
         // Per-worker compression streams (see CompressedExchange).
         self.exchange.state_save(w);
+        // Per-receiver replicas (flag-only unless a lossy compressed run
+        // has materialized them). own_cs is not stored: it is rebuilt
+        // from scratch every round (absent rows zeroed explicitly).
+        self.replicas.state_save(w);
     }
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
         r.expect_tag("deepsqueeze")?;
         self.xs.state_load(r, "deepsqueeze.xs")?;
         self.errs.state_load(r, "deepsqueeze.errs")?;
-        self.exchange.state_load(r)
+        self.exchange.state_load(r)?;
+        self.replicas.state_load(r)
     }
 }
 

@@ -11,17 +11,31 @@
 //! (line 9)  x̂_{t+1}^(j) = x̂_t^(j) + q_t^(j)
 //! ```
 //!
-//! Every worker holds x̂ copies for itself and its neighbors; because all
-//! copies of x̂^(j) receive exactly the same q^(j) stream they stay
-//! identical, so the simulator stores one canonical x̂ per worker (the
-//! standard CHOCO implementation trick) while still exchanging every
-//! q as its **encoded wire bytes** over the byte-metered network — the
-//! x̂ update applies the receiver-side decode of those bytes, so the
-//! whole codec path (encode → send → recv → decode) runs end-to-end and
-//! the charged byte counts are actual buffer lengths.
+//! Every worker holds x̂ copies for itself and its neighbors. On a
+//! reliable fabric all copies of x̂^(j) receive exactly the same q^(j)
+//! stream and stay identical, so the simulator stores one canonical x̂
+//! per worker (the standard CHOCO implementation trick) while still
+//! exchanging every q as its **encoded wire bytes** over the
+//! byte-metered network — the x̂ update applies the receiver-side decode
+//! of those bytes, so the whole codec path (encode → send → recv →
+//! decode) runs end-to-end and the charged byte counts are actual
+//! buffer lengths.
+//!
+//! Under lossy compressed links (`faults.compressed`) that premise
+//! fails: a dropped q^(j) reaches some receivers and not others, so the
+//! copies genuinely diverge. The algorithm then switches to true
+//! per-receiver replicas ([`gossip::ReplicaStore`], Σdegree·d memory,
+//! lazily materialized from the canonical table): each receiver's view
+//! of each neighbor absorbs only the q's that receiver actually
+//! decoded, line 6 mixes against those views (renormalized in f64 over
+//! the neighbors present under churn), and lost messages merely let one
+//! replica drift until later q's re-contract it. With a zero-rate plan
+//! every receiver hears every q, replicas never diverge from the
+//! canonical table, and the trajectory is bit-identical to the fast
+//! path (property-tested in `rust/tests/fault_injection.rs`).
 
 use super::{
-    gossip::{self, CompressedExchange, GossipState},
+    gossip::{self, CompressedExchange, GossipState, ReplicaStore},
     Algorithm, Hyper, StepStats,
 };
 use crate::arena::ParamArena;
@@ -49,6 +63,11 @@ pub struct CpdSgdm {
     diffs: ParamArena,
     /// Reusable K×d scratch: the line-6 consensus corrections.
     corrs: ParamArena,
+    /// Per-receiver neighbor replicas of x̂, used only under lossy
+    /// compressed links (`FaultPlan::compressed`); lazily materialized
+    /// from the canonical table on the first per-receiver round. The
+    /// canonical `hats` row i doubles as receiver i's view of itself.
+    replicas: ReplicaStore,
 }
 
 impl CpdSgdm {
@@ -64,11 +83,13 @@ impl CpdSgdm {
         let gossip = GossipState::new(w);
         assert_eq!(gossip.k(), k);
         let d = x0.len();
+        let replicas = ReplicaStore::new(gossip.weights(), d);
         Self {
             xs: ParamArena::filled(k, &x0),
             hats: ParamArena::zeros(k, d), // x̂_0 = 0 per CHOCO convention
             moms: MomentumBank::new(k, d, hyper.mu, hyper.weight_decay),
             gossip,
+            replicas,
             compressor,
             engine: LocalStepEngine::new(k, d),
             exchange: CompressedExchange::new(k, seed),
@@ -97,17 +118,26 @@ impl CpdSgdm {
         let gamma = self.hyper.gamma;
         let before = net.total_bytes;
         let pool = self.engine.comm_pool();
+        // Lossy compressed links: switch to per-receiver replica state
+        // (see module doc). A plan that never opted in keeps the exact
+        // canonical code path below — byte-for-byte.
+        let per_receiver = net.fault_plan().map_or(false, |p| p.compressed);
+        if per_receiver && !self.replicas.is_materialized() {
+            // First lossy round: every receiver's view still equals the
+            // canonical table (nothing has been lost yet).
+            self.replicas.materialize_from(&self.hats);
+        }
 
-        // Line 6: consensus correction from the (shared) auxiliary state
-        // — Σ_j w_ij (x̂_j − x̂_i); w rows sum to 1 so this equals
-        // Σ_j w_ij x̂_j − x̂_i. The term list walks the sparse weight row
-        // (ascending neighbors) with the self weight spliced in at its
-        // natural column position, so the summation order — and hence the
-        // f32 result — matches the old dense row scan bitwise. One fused
-        // weighted-sum per worker into a reusable scratch row, fanned over
-        // the shared engine pool: worker i reads the frozen x̂ table and
-        // writes only corrs[i]/xs[i], so the schedule is bit-invisible.
-        {
+        // Line 6: consensus correction — Σ_j w_ij (x̂_j − x̂_i); w rows
+        // sum to 1 so this equals Σ_j w_ij x̂_j − x̂_i. The term list
+        // walks the sparse weight row (ascending neighbors) with the
+        // self weight spliced in at its natural column position, so the
+        // summation order — and hence the f32 result — matches the old
+        // dense row scan bitwise. One fused weighted-sum per worker into
+        // a reusable scratch row, fanned over the shared engine pool:
+        // worker i reads the frozen x̂ state and writes only
+        // corrs[i]/xs[i], so the schedule is bit-invisible.
+        if !per_receiver {
             let w = self.gossip.weights();
             let hats = &self.hats;
             let rows: Vec<ScopedTask<'_, ()>> = self
@@ -142,6 +172,70 @@ impl CpdSgdm {
                 })
                 .collect();
             gossip::run_rows(pool, rows);
+        } else {
+            // Per-receiver line 6: receiver i mixes against *its own*
+            // replicas of each neighbor (stale if a q was lost) and the
+            // canonical hats row for itself (its own q stream is applied
+            // locally every round, so hats.row(i) IS its self view).
+            // Neighbors absent under churn are excluded and the row is
+            // renormalized in f64, mirroring GossipState::mix's hardened
+            // path; with no absent neighbor the term order and weights
+            // are the canonical splice exactly, so zero-rate plans stay
+            // bit-identical while replicas equal the canonical table.
+            let w = self.gossip.weights();
+            let hats = &self.hats;
+            let replicas = &self.replicas;
+            let net_ro = &*net;
+            let rows: Vec<ScopedTask<'_, ()>> = self
+                .xs
+                .rows_mut()
+                .zip(self.corrs.rows_mut())
+                .enumerate()
+                .map(|(i, (x, corr))| {
+                    let nbrs = w.neighbors(i);
+                    let any_absent = nbrs.iter().any(|&(j, _)| net_ro.is_absent(j));
+                    let scale = if any_absent {
+                        let mut total = w.self_weight(i);
+                        for &(j, wij) in nbrs {
+                            if !net_ro.is_absent(j) {
+                                total += wij;
+                            }
+                        }
+                        // total ≥ w_ii > 0: a fully isolated receiver
+                        // degenerates to the identity correction.
+                        1.0 / total
+                    } else {
+                        1.0
+                    };
+                    let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(nbrs.len() + 2);
+                    let sw = (w.self_weight(i) * scale) as f32;
+                    let mut placed_self = false;
+                    for &(j, wij) in nbrs {
+                        if j > i && !placed_self {
+                            if sw != 0.0 {
+                                terms.push((sw, hats.row(i)));
+                            }
+                            placed_self = true;
+                        }
+                        if any_absent && net_ro.is_absent(j) {
+                            continue;
+                        }
+                        let wij = (wij * scale) as f32;
+                        if wij != 0.0 {
+                            terms.push((wij, replicas.replica(i, j)));
+                        }
+                    }
+                    if !placed_self && sw != 0.0 {
+                        terms.push((sw, hats.row(i)));
+                    }
+                    terms.push((-1.0, hats.row(i)));
+                    Box::new(move || {
+                        linalg::weighted_sum_into(corr, &terms);
+                        linalg::axpy(gamma, corr, x);
+                    }) as ScopedTask<'_, ()>
+                })
+                .collect();
+            gossip::run_rows(pool, rows);
         }
 
         // Line 7 inputs: q-differences x_i − x̂_i into reusable scratch.
@@ -152,15 +246,43 @@ impl CpdSgdm {
         }
 
         // Lines 7-9: compress the differences and exchange them through
-        // the shared compress → encode → send → recv → decode round (see
-        // [`CompressedExchange::round`]): the Figure 2 byte counters
-        // measure actual buffer lengths, and every copy of x̂^(j) absorbs
-        // the *receiver-side decode* of q^(j).
-        let qs =
-            self.exchange
-                .round(self.compressor.as_ref(), net, &self.diffs, pool, |_, _| {});
-        for (hat, q) in self.hats.rows_mut().zip(qs.rows()) {
-            linalg::axpy(1.0, q, hat);
+        // the shared compress → encode → send → recv → decode round: the
+        // Figure 2 byte counters measure actual buffer lengths, and every
+        // copy of x̂^(j) absorbs the *receiver-side decode* of q^(j).
+        if !per_receiver {
+            let qs =
+                self.exchange
+                    .round(self.compressor.as_ref(), net, &self.diffs, pool, |_, _| {});
+            for (hat, q) in self.hats.rows_mut().zip(qs.rows()) {
+                linalg::axpy(1.0, q, hat);
+            }
+        } else {
+            // Per-receiver line 9: every q a receiver actually decoded is
+            // *accumulated* into its replica of that sender — CHOCO's x̂
+            // update is an incremental delta, so duplicates (a delayed
+            // stale copy plus a fresh one) are both applied, in arrival
+            // order. A worker's own q lands in the canonical hats row
+            // (its self view), decoded from the same wire bytes the
+            // receivers saw.
+            let hats = &mut self.hats;
+            let replicas = &mut self.replicas;
+            self.exchange.round_per_receiver(
+                self.compressor.as_ref(),
+                net,
+                &self.diffs,
+                pool,
+                |_, _| {},
+                |to, from, q| {
+                    if to == from {
+                        linalg::axpy(1.0, q, hats.row_mut(to));
+                    } else {
+                        let slot = replicas
+                            .slot_of(to, from)
+                            .expect("compressed message arrived off-graph");
+                        linalg::axpy(1.0, q, replicas.row_mut(slot));
+                    }
+                },
+            );
         }
         net.total_bytes - before
     }
@@ -222,6 +344,10 @@ impl Algorithm for CpdSgdm {
         // Per-worker compression streams (was: one shared stream — the
         // per-worker bank is what keeps pooled compression deterministic).
         self.exchange.state_save(w);
+        // Per-receiver replicas (flag-only unless a lossy compressed run
+        // has materialized them) so faulty compressed runs resume
+        // bit-identically.
+        self.replicas.state_save(w);
     }
 
     fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
@@ -229,7 +355,8 @@ impl Algorithm for CpdSgdm {
         self.xs.state_load(r, "cpd-sgdm.xs")?;
         self.hats.state_load(r, "cpd-sgdm.hats")?;
         self.moms.state_load(r)?;
-        self.exchange.state_load(r)
+        self.exchange.state_load(r)?;
+        self.replicas.state_load(r)
     }
 }
 

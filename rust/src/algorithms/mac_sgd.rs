@@ -1,0 +1,229 @@
+//! **MAC-SGD** (Balu et al. 2020, "Decentralized Deep Learning using
+//! Momentum-Accelerated Consensus", arXiv:2010.11166) — decentralized
+//! SGD whose momentum accelerates the *consensus* direction instead of
+//! the gradient: each worker keeps a momentum buffer over its gossip
+//! disagreement `Wx − x` and descends the plain stochastic gradient on
+//! top. ROADMAP item 3's second baseline, closing the comparison set
+//! for the fault/heterogeneity sweeps alongside Momentum Tracking.
+//!
+//! Per worker k, with doubly stochastic W and m_0 = 0:
+//!
+//! ```text
+//! g_t^(k) = grad F(x_t^(k); xi_t^(k))
+//! m_t^(k) = mu * m_{t-1}^(k) + ((W x_t)^(k) − x_t^(k))   (consensus momentum)
+//! x_{t+1}^(k) = x_t^(k) + m_t^(k) − eta * g_t^(k)
+//! ```
+//!
+//! Communication is every step and carries **one** dense payload (the
+//! iterates), i.e. exactly D-SGD's bytes — momentum acceleration of the
+//! mixing comes for free on the wire. Because W is doubly stochastic,
+//! Σ_k ((Wx)^(k) − x^(k)) = 0 every step, so Σ_k m^(k) = 0 forever:
+//! the accelerated consensus never perturbs the averaged iterate, and
+//! x̄ follows the plain SGD recursion (the conservation law the tests
+//! pin, mirroring Momentum Tracking's Σc = Σg invariant). A worker
+//! restarted after churn re-enters with m = 0; the resulting Σm ≠ 0
+//! transient decays geometrically (Σm_{t+1} = mu Σm_t), so the law
+//! self-heals.
+
+use super::{gossip::GossipState, Algorithm, Hyper, StepStats};
+use crate::arena::ParamArena;
+use crate::comm::Network;
+use crate::grad::GradientSource;
+use crate::topology::MixWeights;
+
+pub struct MacSgd {
+    hyper: Hyper,
+    xs: ParamArena,
+    /// Consensus-momentum buffers m^(k) (local, never communicated).
+    ms: ParamArena,
+    /// Reusable K×d scratch holding this step's mixed iterates W x.
+    mixed: ParamArena,
+    gossip: GossipState,
+    /// Reusable d-length gradient scratch.
+    grad: Vec<f32>,
+}
+
+impl MacSgd {
+    /// All workers start from the same `x0`; momenta start at zero.
+    pub fn new(k: usize, x0: Vec<f32>, w: impl Into<MixWeights>, hyper: Hyper) -> Self {
+        let gossip = GossipState::new(w);
+        assert_eq!(gossip.k(), k);
+        let d = x0.len();
+        Self {
+            xs: ParamArena::filled(k, &x0),
+            ms: ParamArena::zeros(k, d),
+            mixed: ParamArena::zeros(k, d),
+            gossip,
+            grad: vec![0.0; d],
+            hyper,
+        }
+    }
+}
+
+impl Algorithm for MacSgd {
+    fn name(&self) -> String {
+        "mac-sgd".into()
+    }
+
+    fn k(&self) -> usize {
+        self.xs.k()
+    }
+
+    fn step(&mut self, t: u64, source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
+        let k = self.k();
+        let eta = self.hyper.lr.eta(t);
+        let mu = self.hyper.mu;
+        let wd = self.hyper.weight_decay;
+        // Consensus half over the metered network: mixed ← W x (the
+        // iterate arena itself must stay at x_t for the gradient and
+        // momentum updates, so the mix runs on a persistent copy).
+        for (dst, src_row) in self.mixed.rows_mut().zip(self.xs.rows()) {
+            dst.copy_from_slice(src_row);
+        }
+        let bytes = self.gossip.mix(&mut self.mixed, net, None);
+        let mut loss_sum = 0.0;
+        for i in 0..k {
+            loss_sum += source.grad_into(i, self.xs.row(i), &mut self.grad);
+            if wd != 0.0 {
+                for (g, &x) in self.grad.iter_mut().zip(self.xs.row(i)) {
+                    *g += wd * x;
+                }
+            }
+            // m = mu*m + (Wx − x); x += m − eta*g.
+            for (((m, &mx), &g), x) in self
+                .ms
+                .row_mut(i)
+                .iter_mut()
+                .zip(self.mixed.row(i))
+                .zip(&self.grad)
+                .zip(self.xs.row_mut(i).iter_mut())
+            {
+                *m = mu * *m + (mx - *x);
+                *x += *m - eta * g;
+            }
+        }
+        StepStats { mean_loss: loss_sum / k as f64, communicated: true, bytes }
+    }
+
+    fn params(&self, k: usize) -> &[f32] {
+        self.xs.row(k)
+    }
+
+    fn set_worker_params(&mut self, k: usize, x: &[f32]) {
+        self.xs.row_mut(k).copy_from_slice(x);
+        // A rejoining worker restarts its consensus momentum; the Σm = 0
+        // law re-contracts geometrically (see module doc).
+        self.ms.row_mut(k).fill(0.0);
+    }
+
+    fn state_save(&self, w: &mut crate::state::StateWriter) {
+        w.tag("mac-sgd");
+        self.xs.state_save(w);
+        self.ms.state_save(w);
+    }
+
+    fn state_load(&mut self, r: &mut crate::state::StateReader) -> Result<(), String> {
+        r.expect_tag("mac-sgd")?;
+        self.xs.state_load(r, "mac-sgd.xs")?;
+        self.ms.state_load(r, "mac-sgd.ms")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::{GradientSource as _, Quadratic};
+    use crate::linalg::Mat;
+    use crate::optim::LrSchedule;
+    use crate::topology::{mixing_matrix, Topology, Weighting};
+
+    fn ring(k: usize) -> (Mat, Network) {
+        let g = Topology::Ring.build(k, 0);
+        (mixing_matrix(&g, Weighting::UniformDegree), Network::new(&g))
+    }
+
+    fn hyper(eta: f32) -> Hyper {
+        Hyper { lr: LrSchedule::Constant { eta }, mu: 0.9, ..Default::default() }
+    }
+
+    #[test]
+    fn consensus_momentum_sums_to_zero() {
+        // Σ_k m^(k) = 0 after every step: doubly stochastic W makes the
+        // per-step impulses Σ_k (Wx − x)^(k) vanish, and m_0 = 0.
+        let k = 4;
+        let d = 8;
+        let mut src = Quadratic::new(k, d, 2.0, 0.0, 11);
+        let (w, mut net) = ring(k);
+        let mut algo = MacSgd::new(k, src.init(1), w, hyper(0.01));
+        for t in 0..10 {
+            algo.step(t, &mut src, &mut net);
+            let mut m_sum = vec![0.0f64; d];
+            for i in 0..k {
+                for (s, &v) in m_sum.iter_mut().zip(algo.ms.row(i)) {
+                    *s += v as f64;
+                }
+            }
+            for m in &m_sum {
+                assert!(m.abs() < 1e-3, "momentum sum drifted: {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn converges_on_heterogeneous_quadratic() {
+        let k = 8;
+        let mut src = Quadratic::new(k, 16, 2.0, 0.05, 12);
+        let opt = src.optimum();
+        let (w, mut net) = ring(k);
+        let mut algo = MacSgd::new(k, src.init(2), w, hyper(0.02));
+        for t in 0..1500 {
+            algo.step(t, &mut src, &mut net);
+        }
+        let err = crate::linalg::dist(&algo.avg_params(), &opt);
+        assert!(err < 0.3, "x̄ is {err} from x*");
+    }
+
+    #[test]
+    fn sends_exactly_dsgd_bytes_per_step() {
+        let k = 6;
+        let d = 50;
+        let mut src = Quadratic::new(k, d, 1.0, 0.1, 13);
+        let (w, mut net) = ring(k);
+        let mut algo = MacSgd::new(k, src.init(3), w, hyper(0.01));
+        let s = algo.step(0, &mut src, &mut net);
+        assert!(s.communicated);
+        // ring degree 2, one dense payload: k * 2 * 4d bytes — the
+        // momentum acceleration is wire-free (half of Momentum Tracking).
+        assert_eq!(s.bytes, (k * 2 * 4 * d) as u64);
+    }
+
+    #[test]
+    fn rejoin_hook_resets_iterate_and_momentum() {
+        let k = 4;
+        let mut src = Quadratic::new(k, 8, 1.0, 0.0, 14);
+        let (w, mut net) = ring(k);
+        let mut algo = MacSgd::new(k, src.init(4), w, hyper(0.02));
+        for t in 0..5 {
+            algo.step(t, &mut src, &mut net);
+        }
+        assert!(algo.ms.row(2).iter().any(|&v| v != 0.0), "momentum should be live");
+        algo.set_worker_params(2, &vec![0.25; 8]);
+        assert_eq!(algo.params(2), &[0.25; 8][..]);
+        assert!(algo.ms.row(2).iter().all(|&v| v == 0.0));
+        // the Σm = 0 law re-contracts geometrically after the reset
+        let d = 8;
+        let sum_abs = |a: &MacSgd| -> f64 {
+            (0..d)
+                .map(|c| (0..k).map(|i| a.ms.row(i)[c] as f64).sum::<f64>().abs())
+                .sum()
+        };
+        let after_reset = sum_abs(&algo);
+        for t in 5..45 {
+            algo.step(t, &mut src, &mut net);
+        }
+        assert!(
+            sum_abs(&algo) < after_reset * 0.2 + 1e-9,
+            "Σm must decay back toward zero after a restart"
+        );
+    }
+}

@@ -11,6 +11,7 @@
 //! | [`ChocoSgd`]    | CHOCO-SGD, Koloskova et al. [8,9]   | no  | every step    | Q(x−x̂) |
 //! | [`DeepSqueeze`] | DeepSqueeze, Tang et al. [21]       | no  | every step    | Q(x+e) |
 //! | [`MomentumTracking`] | Takezawa et al. 2022           | yes | every step    | x and c |
+//! | [`MacSgd`]      | Balu et al. 2020 [MAC]              | yes (consensus) | every step | full x |
 //!
 //! All decentralized algorithms drive a byte-metered [`crate::comm::Network`]
 //! and may only exchange data along topology edges; every struct
@@ -20,12 +21,14 @@
 mod baselines;
 mod cpd_sgdm;
 mod gossip;
+mod mac_sgd;
 mod momentum_tracking;
 mod pd_sgdm;
 
 pub use baselines::{CSgdm, ChocoSgd, DSgd, DSgdm, DeepSqueeze, PdSgd};
 pub use cpd_sgdm::CpdSgdm;
-pub use gossip::{CompressedExchange, GossipState};
+pub use gossip::{CompressedExchange, GossipState, ReplicaStore};
+pub use mac_sgd::MacSgd;
 pub use momentum_tracking::MomentumTracking;
 pub use pd_sgdm::PdSgdm;
 
@@ -324,6 +327,11 @@ pub static REGISTRY: &[AlgorithmBuilder] = &[
         summary: "Momentum Tracking (Takezawa et al. 2022): gradient-tracked momentum, heterogeneity-robust",
         build: |s| Box::new(MomentumTracking::new(s.workers, s.x0, s.mixing, s.hyper)),
     },
+    AlgorithmBuilder {
+        name: "mac-sgd",
+        summary: "MAC-SGD (Balu et al. 2020): momentum-accelerated consensus, D-SGD bytes",
+        build: |s| Box::new(MacSgd::new(s.workers, s.x0, s.mixing, s.hyper)),
+    },
 ];
 
 /// Registry lookup by CLI name.
@@ -334,7 +342,7 @@ pub fn builder(name: &str) -> Option<&'static AlgorithmBuilder> {
 /// All algorithm names the registry accepts (for CLI help and sweeps).
 pub const ALL_NAMES: &[&str] = &[
     "pd-sgdm", "cpd-sgdm", "d-sgd", "pd-sgd", "d-sgdm", "d-sgdm-pm",
-    "c-sgdm", "choco-sgd", "deepsqueeze", "momentum-tracking",
+    "c-sgdm", "choco-sgd", "deepsqueeze", "momentum-tracking", "mac-sgd",
 ];
 
 /// Legacy positional constructor, kept as a thin shim over

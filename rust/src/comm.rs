@@ -184,13 +184,19 @@ impl StragglerDist {
 /// messages, and the absence flags are all checkpointable via
 /// [`FaultPlan::state_save`] so resumed runs replay faults exactly.
 ///
-/// Compressed (`Payload::Encoded`) traffic is exempt from random
-/// drop/delay/reorder: CHOCO-style algorithms maintain a single canonical
-/// replica estimate x̂ per worker, which is only well-defined when every
-/// neighbor decodes the same update stream. Modeling lossy compressed
-/// links would need per-receiver x̂ state (K× memory); absence (churn)
-/// still applies to encoded traffic, and the decode paths freeze x̂ for
-/// absent senders (see `algorithms::gossip::CompressedExchange`).
+/// Compressed (`Payload::Encoded`) traffic participates in random
+/// drop/delay only when the plan opts in via [`FaultPlan::compressed`]
+/// (config `faults.compressed`, CLI `--fault-compressed`). CHOCO-style
+/// algorithms then switch from the single canonical replica estimate x̂
+/// to per-receiver replicas keyed by the sparse neighbor lists
+/// (Σdegree·d memory, see `algorithms::gossip::ReplicaStore`), so a
+/// lost q merely lets one receiver's replica drift instead of
+/// corrupting a shared table. With the flag off (the default), encoded
+/// traffic stays exempt and the canonical single-x̂ fast path is
+/// bit-identical to the pre-fault code. Absence (churn) applies to
+/// encoded traffic regardless of the flag, and the decode paths freeze
+/// or renormalize around absent senders (see
+/// `algorithms::gossip::CompressedExchange`).
 #[derive(Clone, Debug)]
 pub struct FaultPlan {
     /// Probability an individual dense message is lost in flight.
@@ -201,6 +207,11 @@ pub struct FaultPlan {
     pub max_delay: u64,
     /// Probability a receiver's inbox is shuffled before draining.
     pub reorder_prob: f64,
+    /// Whether random drop/delay also applies to `Payload::Encoded`
+    /// messages (lossy compressed links). Off by default so dense-only
+    /// plans keep the exact pre-existing RNG draw sequence; set by
+    /// `Session::build` from `faults.compressed`.
+    pub compressed: bool,
     rng: Xoshiro256,
     /// In-flight delayed messages: (deliver at round, message). Delivery
     /// keys off `Network::rounds` so a message delayed by L rounds is
@@ -208,10 +219,29 @@ pub struct FaultPlan {
     /// steps pass in between.
     delayed: Vec<(u64, Message)>,
     absent: Vec<bool>,
-    /// Messages dropped so far (random drops + absence discards).
+    /// Messages dropped so far (random drops + absence discards),
+    /// across both payload kinds.
     pub dropped: u64,
-    /// Messages that entered the delay buffer so far.
+    /// Messages that entered the delay buffer so far, across both
+    /// payload kinds.
     pub delayed_total: u64,
+    /// The `Payload::Encoded` subset of `dropped` (dense drops are
+    /// `dropped - dropped_encoded`).
+    pub dropped_encoded: u64,
+    /// The `Payload::Encoded` subset of `delayed_total`.
+    pub delayed_encoded: u64,
+}
+
+/// A point-in-time snapshot of what the fault fabric actually did,
+/// split dense vs encoded — surfaced through `coordinator::Observer`
+/// and the CLI summary so faulty runs report fabric activity instead of
+/// only loss curves.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultCounters {
+    pub dropped: u64,
+    pub dropped_encoded: u64,
+    pub delayed_total: u64,
+    pub delayed_encoded: u64,
 }
 
 impl FaultPlan {
@@ -232,11 +262,24 @@ impl FaultPlan {
             delay_prob,
             max_delay,
             reorder_prob,
+            compressed: false,
             rng: Xoshiro256::seed_from_u64(seed).fork(0xFA17),
             delayed: Vec::new(),
             absent: vec![false; k],
             dropped: 0,
             delayed_total: 0,
+            dropped_encoded: 0,
+            delayed_encoded: 0,
+        }
+    }
+
+    /// Snapshot the dense/encoded counter split for reporting.
+    pub fn counters(&self) -> FaultCounters {
+        FaultCounters {
+            dropped: self.dropped,
+            dropped_encoded: self.dropped_encoded,
+            delayed_total: self.delayed_total,
+            delayed_encoded: self.delayed_encoded,
         }
     }
 
@@ -269,6 +312,8 @@ impl FaultPlan {
         w.put_u64s(&self.rng.state());
         w.put_u64(self.dropped);
         w.put_u64(self.delayed_total);
+        w.put_u64(self.dropped_encoded);
+        w.put_u64(self.delayed_encoded);
         let absent: Vec<u64> = self.absent.iter().map(|&b| b as u64).collect();
         w.put_u64s(&absent);
         w.put_u64(self.delayed.len() as u64);
@@ -302,6 +347,8 @@ impl FaultPlan {
         self.rng = Xoshiro256::from_state(s);
         self.dropped = r.take_u64()?;
         self.delayed_total = r.take_u64()?;
+        self.dropped_encoded = r.take_u64()?;
+        self.delayed_encoded = r.take_u64()?;
         let absent = r.take_u64s()?;
         if absent.len() != self.absent.len() {
             return Err(format!(
@@ -435,6 +482,9 @@ impl Network {
                 // Link down (churn): the message never enters the fabric,
                 // so nothing is charged to the wire.
                 plan.dropped += 1;
+                if matches!(payload, Payload::Encoded(_)) {
+                    plan.dropped_encoded += 1;
+                }
                 return;
             }
         }
@@ -444,18 +494,26 @@ impl Network {
         self.messages += 1;
         let msg = Message { from, to, payload };
         if let Some(plan) = self.faults.as_mut() {
-            // Random faults apply to dense gossip only (see FaultPlan
-            // docs); every draw is gated on its rate so a zero-rate plan
+            // Random faults apply to dense gossip always, and to encoded
+            // traffic only when the plan opts in (see FaultPlan docs);
+            // every draw is gated on its rate so a zero-rate plan
             // consumes no RNG and stays bit-identical to the `None` path.
-            if matches!(msg.payload, Payload::Dense(_)) {
+            let encoded = matches!(msg.payload, Payload::Encoded(_));
+            if !encoded || plan.compressed {
                 if plan.drop_prob > 0.0 && plan.rng.next_f64() < plan.drop_prob {
                     // Lost in flight: the sender's NIC already paid for it.
                     plan.dropped += 1;
+                    if encoded {
+                        plan.dropped_encoded += 1;
+                    }
                     return;
                 }
                 if plan.delay_prob > 0.0 && plan.rng.next_f64() < plan.delay_prob {
                     let lag = 1 + plan.rng.below(plan.max_delay as usize) as u64;
                     plan.delayed_total += 1;
+                    if encoded {
+                        plan.delayed_encoded += 1;
+                    }
                     plan.delayed.push((self.rounds + lag, msg));
                     return;
                 }
@@ -507,6 +565,9 @@ impl Network {
                 // flight when either endpoint departed is lost.
                 if plan.absent[msg.from] || plan.absent[to] {
                     plan.dropped += 1;
+                    if matches!(msg.payload, Payload::Encoded(_)) {
+                        plan.dropped_encoded += 1;
+                    }
                 } else {
                     out.push(msg);
                 }
@@ -757,6 +818,57 @@ mod tests {
         // Rejoin restores the full degree.
         net.fault_plan_mut().unwrap().set_absent(1, false);
         assert_eq!(net.live_degree(0), 2);
+    }
+
+    #[test]
+    fn compressed_flag_gates_encoded_faults() {
+        // Default: encoded traffic is exempt from random faults, and the
+        // exemption consumes no RNG draws.
+        let mut net = ring8();
+        net.set_fault_plan(FaultPlan::new(8, 1.0, 0.0, 1, 0.0, 7));
+        let before = net.fault_plan().unwrap().state_save();
+        net.broadcast_encoded(0, Arc::new(vec![1u8; 16]));
+        assert_eq!(net.recv_all(1).len(), 1, "exempt without the opt-in");
+        assert_eq!(net.recv_all(7).len(), 1);
+        assert_eq!(before, net.fault_plan().unwrap().state_save());
+        net.end_round();
+
+        // Opt-in: encoded messages now drop on the same 0xFA17 stream,
+        // still pay the wire, and the encoded counter splits them out.
+        let mut net = ring8();
+        let mut plan = FaultPlan::new(8, 1.0, 0.0, 1, 0.0, 7);
+        plan.compressed = true;
+        net.set_fault_plan(plan);
+        net.broadcast_encoded(0, Arc::new(vec![1u8; 16]));
+        assert_eq!(net.total_bytes, 2 * 16, "lost-in-flight still pays the wire");
+        assert!(net.recv_all(1).is_empty());
+        assert!(net.recv_all(7).is_empty());
+        let c = net.fault_plan().unwrap().counters();
+        assert_eq!(c.dropped, 2);
+        assert_eq!(c.dropped_encoded, 2);
+        net.end_round();
+    }
+
+    #[test]
+    fn encoded_delays_arrive_and_split_counters_roundtrip() {
+        let mut net = ring8();
+        let mut plan = FaultPlan::new(8, 0.0, 1.0, 1, 0.0, 7);
+        plan.compressed = true;
+        net.set_fault_plan(plan);
+        net.send_payload(0, 1, Payload::Encoded(Arc::new(vec![9u8; 5])));
+        assert!(net.recv_all(1).is_empty(), "delayed past this round");
+        let c = net.fault_plan().unwrap().counters();
+        assert_eq!((c.delayed_total, c.delayed_encoded), (1, 1));
+        net.end_round();
+        let msgs = net.recv_all(1);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].payload.encoded().unwrap(), &[9u8; 5]);
+        // The split counters survive a checkpoint round-trip.
+        let saved = net.fault_plan().unwrap().state_save();
+        let mut fresh = FaultPlan::new(8, 0.0, 1.0, 1, 0.0, 0);
+        fresh.state_load(&saved).unwrap();
+        assert_eq!(fresh.counters(), net.fault_plan().unwrap().counters());
+        net.end_round();
     }
 
     #[test]

@@ -274,6 +274,13 @@ pub struct FaultsConfig {
     pub straggler: Option<StragglerDist>,
     /// Scheduled leave/rejoin events (worker churn).
     pub churn: Vec<ChurnEvent>,
+    /// Extend drop/delay/reorder to the compressed (`Payload::Encoded`)
+    /// gossip of the CHOCO-family algorithms, which then maintain
+    /// per-receiver x̂ replicas (DESIGN.md §7). Deliberately excluded
+    /// from `is_active()`: the flag only widens *which* payloads an
+    /// otherwise-active plan touches, so `compressed = true` with no
+    /// active plan is a config error, not a silent no-op.
+    pub compressed: bool,
 }
 
 impl Default for FaultsConfig {
@@ -287,6 +294,7 @@ impl Default for FaultsConfig {
             seed: 0,
             straggler: None,
             churn: Vec::new(),
+            compressed: false,
         }
     }
 }
@@ -420,7 +428,7 @@ impl ExperimentConfig {
             "stop.target_loss", "stop.comm_budget_mb", "stop.sim_seconds_budget",
             "faults.enabled", "faults.drop_prob", "faults.delay_prob",
             "faults.max_delay", "faults.reorder_prob", "faults.seed",
-            "faults.straggler", "faults.churn",
+            "faults.straggler", "faults.churn", "faults.compressed",
             "out_dir",
         ];
         for key in doc.keys() {
@@ -608,6 +616,11 @@ impl ExperimentConfig {
         if let Some(v) = get_str("faults.churn") {
             cfg.faults.churn = ChurnEvent::parse_list(&v)?;
         }
+        if let Some(v) = doc.get("faults.compressed") {
+            cfg.faults.compressed = v
+                .as_bool()
+                .ok_or_else(|| "faults.compressed must be a boolean".to_string())?;
+        }
         if let Some(v) = get_str("out_dir") {
             cfg.out_dir = v;
         }
@@ -693,6 +706,24 @@ impl ExperimentConfig {
             if !(alpha > 0.0) || !alpha.is_finite() {
                 return Err(format!(
                     "sharding.alpha must be a finite concentration > 0, got {alpha}"
+                ));
+            }
+        }
+        if self.faults.compressed {
+            if !self.faults.is_active() {
+                return Err(
+                    "faults.compressed = true has no effect without an active fault plan; \
+                     enable faults.enabled or a non-zero drop/delay/reorder rate"
+                        .into(),
+                );
+            }
+            const COMPRESSED_ALGOS: [&str; 3] = ["cpd-sgdm", "choco-sgd", "deepsqueeze"];
+            if !COMPRESSED_ALGOS.contains(&self.algorithm.as_str()) {
+                return Err(format!(
+                    "faults.compressed only applies to the compressed-gossip algorithms \
+                     (cpd-sgdm, choco-sgd, deepsqueeze); {} exchanges dense payloads, \
+                     which the fault plan already covers",
+                    self.algorithm
                 ));
             }
         }
@@ -940,6 +971,40 @@ step_seconds = 0.05
             ExperimentConfig::from_toml_str("[sharding]\nkind = \"dirichlet\"\nalpha = 0.3")
                 .unwrap();
         assert_eq!(cfg.sharding, Sharding::Dirichlet { alpha: 0.30000001192092896 });
+    }
+
+    #[test]
+    fn compressed_faults_parse_and_validate() {
+        // Accepted: a compressed-gossip algorithm under an active plan.
+        let cfg = ExperimentConfig::from_toml_str(
+            "algorithm = \"cpd-sgdm\"\ncompressor = \"sign\"\n[faults]\ndrop_prob = 0.3\ncompressed = true",
+        )
+        .unwrap();
+        assert!(cfg.faults.compressed);
+        assert!(cfg.faults.is_active());
+        // `compressed` alone must NOT activate a plan — and is therefore
+        // rejected rather than silently inert.
+        let err = ExperimentConfig::from_toml_str(
+            "algorithm = \"cpd-sgdm\"\n[faults]\ncompressed = true",
+        )
+        .unwrap_err();
+        assert!(err.contains("without an active fault plan"), "{err}");
+        // Dense-only algorithms have no encoded payloads to fault.
+        let err = ExperimentConfig::from_toml_str(
+            "algorithm = \"pd-sgdm\"\n[faults]\ndrop_prob = 0.3\ncompressed = true",
+        )
+        .unwrap_err();
+        assert!(err.contains("cpd-sgdm, choco-sgd, deepsqueeze"), "{err}");
+        assert!(err.contains("pd-sgdm"), "{err}");
+        // Type error keeps the established message shape.
+        let err = ExperimentConfig::from_toml_str("[faults]\ncompressed = 1").unwrap_err();
+        assert!(err.contains("faults.compressed must be a boolean"), "{err}");
+        // `enabled = true` (zero-rate plan) counts as active: that is the
+        // configuration the bit-identity property tests run under.
+        assert!(ExperimentConfig::from_toml_str(
+            "algorithm = \"choco-sgd\"\ncompressor = \"sign\"\n[faults]\nenabled = true\ncompressed = true",
+        )
+        .is_ok());
     }
 
     #[test]

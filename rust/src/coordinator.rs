@@ -30,7 +30,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 
 use crate::algorithms::{Algorithm, AlgorithmSpec, StepStats};
-use crate::comm::{CostModel, FaultPlan, Network};
+use crate::comm::{CostModel, FaultCounters, FaultPlan, Network};
 use crate::config::{ChurnEvent, ExperimentConfig, WorkloadConfig};
 use crate::data::Blobs;
 use crate::grad::{GradientSource, Logistic, Mlp, Quadratic};
@@ -129,6 +129,13 @@ pub trait Observer {
         let _ = (t, bytes, round_seconds);
     }
 
+    /// After an evaluation point was recorded. Only called on sessions
+    /// with an installed fault plan: the plan's cumulative drop/delay
+    /// counters at that step (encoded = compressed-gossip subset).
+    fn on_fault_counters(&mut self, step: u64, counters: &FaultCounters) {
+        let _ = (step, counters);
+    }
+
     /// After an evaluation point was recorded.
     fn on_eval(&mut self, label: &str, point: &TracePoint) {
         let _ = (label, point);
@@ -145,6 +152,13 @@ impl Observer for VerboseObserver {
         eprintln!(
             "[{}] step {:>6}  loss {:.4}  acc {:.3}  comm {:.2} MB  consensus {:.3e}",
             label, p.step, p.loss, p.accuracy, p.comm_mb, p.consensus
+        );
+    }
+
+    fn on_fault_counters(&mut self, step: u64, c: &FaultCounters) {
+        eprintln!(
+            "[faults] step {:>6}  dropped {} ({} encoded)  delayed {} ({} encoded)",
+            step, c.dropped, c.dropped_encoded, c.delayed_total, c.delayed_encoded
         );
     }
 }
@@ -312,14 +326,19 @@ impl Session<'static> {
         // rust/tests/fault_injection.rs).
         let faults = &config.faults;
         if faults.is_active() {
-            session.net.get_mut().set_fault_plan(FaultPlan::new(
+            let mut plan = FaultPlan::new(
                 k,
                 faults.drop_prob,
                 faults.delay_prob,
                 faults.max_delay,
                 faults.reorder_prob,
                 faults.seed,
-            ));
+            );
+            // Opt the compressed (Payload::Encoded) gossip into the same
+            // drop/delay/reorder model; config::validate already rejected
+            // the flag for dense-only algorithms.
+            plan.compressed = faults.compressed;
+            session.net.get_mut().set_fault_plan(plan);
             if let Some(dist) = &faults.straggler {
                 // Own forked stream: multipliers are a pure function of
                 // (fault seed, K), independent of every other RNG in the
@@ -429,6 +448,12 @@ impl<'a> Session<'a> {
     /// model is configured).
     pub fn straggler_multipliers(&self) -> &[f64] {
         &self.straggler_mults
+    }
+
+    /// Snapshot of the installed fault plan's cumulative drop/delay
+    /// counters; `None` when the session runs fault-free.
+    pub fn fault_counters(&self) -> Option<FaultCounters> {
+        self.net.get().fault_plan().map(|p| p.counters())
     }
 
     /// Why the last [`Session::run_until`] call returned; `None` before
@@ -594,8 +619,12 @@ impl<'a> Session<'a> {
         self.trace.push(point);
         self.last_eval = Some(point.step);
         self.forced_final = false; // direct pulls are deliberate; run_until overrides
+        let counters = self.fault_counters();
         for obs in self.observers.iter_mut() {
             obs.on_eval(&self.trace.label, &point);
+            if let Some(c) = &counters {
+                obs.on_fault_counters(point.step, c);
+            }
         }
         point
     }
@@ -1291,6 +1320,32 @@ mod tests {
         let t1 = s.trace().points.last().unwrap();
         assert_eq!(t0.loss.to_bits(), t1.loss.to_bits());
         assert!((t1.sim_seconds - 2.0 * t0.sim_seconds).abs() < 1e-9 * t0.sim_seconds.abs());
+    }
+
+    #[test]
+    fn compressed_fault_session_runs_and_reports_counters() {
+        use std::cell::Cell;
+        use std::rc::Rc;
+        let mut c = quick_config("cpd-sgdm");
+        c.compressor = Some("sign".into());
+        c.faults.drop_prob = 0.5;
+        c.faults.compressed = true;
+        let mut s = Session::build(SessionSpec::new(c)).unwrap();
+        // The counter hook fires on every eval of a faulted session.
+        struct Probe(Rc<Cell<u64>>);
+        impl Observer for Probe {
+            fn on_fault_counters(&mut self, _step: u64, c: &FaultCounters) {
+                self.0.set(c.dropped_encoded);
+            }
+        }
+        let seen = Rc::new(Cell::new(0));
+        s.observe(Box::new(Probe(Rc::clone(&seen))));
+        s.run_to_stop();
+        let counters = s.fault_counters().expect("fault plan installed");
+        assert!(counters.dropped_encoded > 0, "a 50% plan must drop encoded payloads");
+        assert!(counters.dropped >= counters.dropped_encoded);
+        assert_eq!(seen.get(), counters.dropped_encoded, "observer saw the final snapshot");
+        assert!(s.trace().final_loss().is_finite());
     }
 
     #[test]

@@ -73,6 +73,7 @@ fn print_help() {
                           [--dirichlet-alpha F] [--drop-prob F] [--delay-prob F]\n\
                           [--max-delay N] [--reorder-prob F] [--straggler SPEC]\n\
                           [--churn W@LEAVE:REJOIN,..] [--fault-seed N]\n\
+                          [--fault-compressed]\n\
                           [--resume CKPT] [--out CSV] [--ckpt FILE] [--verbose]\n\
            pdsgdm topology --kind ring|chain|complete|star|torus|hypercube|expgraph\n\
                           |random-regular:D  [--workers K] [--seed N]\n\
@@ -88,7 +89,9 @@ fn print_help() {
          Compressors: sign | topR | randR | qsgdL | identity (R ratio, L levels).\n\
          Faults: --straggler constant:F | uniform:LO,HI | lognormal:MU,SIGMA;\n\
          --churn 1@60:120 (worker 1 leaves at step 60, rejoins at 120);\n\
-         --dirichlet-alpha sets non-IID label skew (small alpha = more skew).\n\
+         --dirichlet-alpha sets non-IID label skew (small alpha = more skew);\n\
+         --fault-compressed extends drop/delay/reorder to the compressed gossip\n\
+         of cpd-sgdm | choco-sgd | deepsqueeze (needs an active fault plan).\n\
          Checkpoints: --ckpt writes a full-state PDSGDM02 file; --resume continues\n\
          it bit-identically (give the same config plus the new --steps total)."
     );
@@ -108,7 +111,7 @@ impl Flags {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got {a}"))?;
-            let boolean = ["verbose"].contains(&key);
+            let boolean = ["verbose", "fault-compressed"].contains(&key);
             if boolean {
                 map.insert(key.to_string(), "true".to_string());
                 i += 1;
@@ -251,6 +254,9 @@ fn cmd_train(flags: Flags) -> Result<()> {
     if let Some(s) = flags.get_parse::<u64>("fault-seed")? {
         cfg.faults.seed = s;
     }
+    if flags.has("fault-compressed") {
+        cfg.faults.compressed = true;
+    }
     cfg.validate().map_err(|e| anyhow!(e))?;
 
     eprintln!(
@@ -275,6 +281,12 @@ fn cmd_train(flags: Flags) -> Result<()> {
     }
     session.run_to_stop();
     print!("{}", metrics::summary_table(std::slice::from_ref(session.trace())));
+    if let Some(c) = session.fault_counters() {
+        eprintln!(
+            "faults: dropped {} messages ({} encoded), delayed {} ({} encoded)",
+            c.dropped, c.dropped_encoded, c.delayed_total, c.delayed_encoded
+        );
+    }
 
     if let Some(out) = flags.get("out") {
         metrics::write_csv(Path::new(out), std::slice::from_ref(session.trace()))?;

@@ -12,7 +12,12 @@
 //!   `PDSGDM02` checkpoint bit-identically (fault RNG, delay buffer,
 //!   absence flags, and churn stashes all round-trip);
 //! * a drop-heavy unreliable fabric still completes with finite loss
-//!   (renormalized mixing never divides by a vanished neighborhood).
+//!   (renormalized mixing never divides by a vanished neighborhood);
+//! * lossy **compressed** links (`faults.compressed = true`): the
+//!   per-receiver x̂-replica path is bit-identical to the canonical
+//!   single-x̂ path at zero rates, converges finitely under 50% encoded
+//!   drops, and resumes byte-identically from a mid-run checkpoint with
+//!   replica arenas and in-flight encoded messages in the file.
 
 use pdsgdm::algorithms::{Algorithm as _, ALL_NAMES};
 use pdsgdm::config::{ChurnEvent, ExperimentConfig, WorkloadConfig};
@@ -88,7 +93,7 @@ fn assert_params_bit_identical(name: &str, a: &Session, b: &Session) {
 
 #[test]
 fn zero_rate_fault_plan_is_bit_identical_for_every_algorithm_and_topology() {
-    for topology in [Topology::Ring, Topology::Star, Topology::Chain] {
+    for topology in [Topology::Ring, Topology::Star, Topology::Chain, Topology::ExpGraph] {
         for name in ALL_NAMES {
             let label = format!("{name} on {topology:?}");
             let plain = run_to_end(base_config(name, topology));
@@ -149,6 +154,93 @@ fn faulty_checkpoint_rejected_by_faultless_session() {
     let err = plain.load_state(&ckpt).unwrap_err();
     assert!(err.contains("config") || err.contains("fault"), "{err}");
     s.run_until(StopCondition::Steps(60)); // still drivable after save
+}
+
+/// The algorithms whose gossip is compressed (`Payload::Encoded`) and
+/// which therefore hold per-receiver x̂ replicas under lossy links.
+const COMPRESSED_ALGOS: [&str; 3] = ["cpd-sgdm", "choco-sgd", "deepsqueeze"];
+
+#[test]
+fn zero_rate_compressed_plan_is_bit_identical_on_every_topology() {
+    // The per-receiver replica machinery turns on with `compressed =
+    // true`, so a zero-rate compressed plan runs the replica code path
+    // end to end — and must still reproduce the canonical single-x̂ run
+    // bit for bit (every receiver hears every neighbor, every replica
+    // stays equal to the sender's own x̂, and the renormalization never
+    // engages). K=4 ExpGraph is the complete graph, so the three
+    // topologies cover degree-2 rings, the star's hub/leaf asymmetry,
+    // and an all-to-all neighborhood.
+    for topology in [Topology::Ring, Topology::Star, Topology::ExpGraph] {
+        for name in COMPRESSED_ALGOS {
+            let label = format!("{name} on {topology:?} (compressed zero-rate)");
+            let plain = run_to_end(base_config(name, topology));
+            let mut cfg = zero_rate_faults(base_config(name, topology));
+            cfg.faults.compressed = true;
+            let faulted = run_to_end(cfg);
+            assert_traces_bit_identical(&label, plain.trace(), faulted.trace());
+            assert_params_bit_identical(&label, &plain, &faulted);
+            assert_eq!(plain.comm_bytes(), faulted.comm_bytes(), "{label}: bytes");
+        }
+    }
+}
+
+#[test]
+fn drop_heavy_compressed_links_still_converge_finitely() {
+    for topology in [Topology::Ring, Topology::ExpGraph] {
+        for name in COMPRESSED_ALGOS {
+            let mut c = base_config(name, topology);
+            c.faults.drop_prob = 0.5;
+            c.faults.seed = 4;
+            c.faults.compressed = true;
+            let s = run_to_end(c);
+            let label = format!("{name} on {topology:?}");
+            assert!(s.trace().final_loss().is_finite(), "{label}");
+            assert!(
+                s.trace().final_loss() < s.trace().points[0].loss,
+                "{label}: no progress under 50% compressed drops"
+            );
+        }
+    }
+}
+
+#[test]
+fn compressed_faulty_run_resumes_bit_identically_from_mid_run_checkpoint() {
+    // Interrupt at step 30 under compressed drops + delays: the
+    // checkpoint carries the per-receiver replica arenas (the new
+    // "hat-replicas" section), the fault RNG mid-stream, and possibly
+    // in-flight delayed *encoded* messages — all must survive the
+    // round-trip for the resumed run to match the straight run, and the
+    // two final checkpoints must be byte-identical.
+    for name in COMPRESSED_ALGOS {
+        let mut cfg = base_config(name, Topology::Ring);
+        cfg.faults.drop_prob = 0.3;
+        cfg.faults.delay_prob = 0.2;
+        cfg.faults.max_delay = 2;
+        cfg.faults.seed = 21;
+        cfg.faults.compressed = true;
+
+        let mut straight = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+        straight.run_until(StopCondition::Steps(60));
+
+        let mut first = Session::build(SessionSpec::new(cfg.clone())).unwrap();
+        first.run_until(StopCondition::Steps(30));
+        let ckpt = first.save_state();
+        drop(first);
+
+        let mut resumed = Session::build(SessionSpec::new(cfg)).unwrap();
+        resumed.load_state(&ckpt).unwrap();
+        assert_eq!(resumed.steps_done(), 30);
+        resumed.run_until(StopCondition::Steps(60));
+
+        let label = format!("{name} compressed faulty resume");
+        assert_traces_bit_identical(&label, straight.trace(), resumed.trace());
+        assert_params_bit_identical(&label, &straight, &resumed);
+        assert_eq!(
+            straight.save_state(),
+            resumed.save_state(),
+            "{label}: final checkpoints must be byte-identical"
+        );
+    }
 }
 
 #[test]
