@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     }
     // Streamed progress is an Observer, not a driver flag — swap in your
     // own implementation for dashboards/early stopping.
-    session.observe(Box::new(VerboseObserver));
+    session.observe(Box::new(VerboseObserver::default()));
     session.run_to_stop();
 
     println!("\n{}", metrics::summary_table(std::slice::from_ref(session.trace())));

@@ -65,6 +65,10 @@ impl Algorithm for DSgd {
         self.engine.set_parallel(on);
     }
 
+    fn install_shared_pool(&mut self, pool: std::sync::Arc<crate::engine::WorkerPool>) {
+        self.engine.install_shared_pool(pool);
+    }
+
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
         self.xs.row_mut(k).copy_from_slice(x);
     }
@@ -131,6 +135,10 @@ impl Algorithm for PdSgd {
 
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
+    }
+
+    fn install_shared_pool(&mut self, pool: std::sync::Arc<crate::engine::WorkerPool>) {
+        self.engine.install_shared_pool(pool);
     }
 
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
@@ -218,6 +226,10 @@ impl Algorithm for DSgdm {
         self.engine.set_parallel(on);
     }
 
+    fn install_shared_pool(&mut self, pool: std::sync::Arc<crate::engine::WorkerPool>) {
+        self.engine.install_shared_pool(pool);
+    }
+
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
         self.xs.row_mut(k).copy_from_slice(x);
         self.moms.reset_row(k);
@@ -299,6 +311,10 @@ impl Algorithm for CSgdm {
         self.engine.set_parallel(on);
     }
 
+    fn install_shared_pool(&mut self, pool: std::sync::Arc<crate::engine::WorkerPool>) {
+        self.engine.install_shared_pool(pool);
+    }
+
     fn params(&self, _k: usize) -> &[f32] {
         &self.x
     }
@@ -369,6 +385,10 @@ impl Algorithm for ChocoSgd {
 
     fn set_parallel(&mut self, on: bool) {
         self.inner.set_parallel(on);
+    }
+
+    fn install_shared_pool(&mut self, pool: std::sync::Arc<crate::engine::WorkerPool>) {
+        self.inner.install_shared_pool(pool);
     }
 
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
@@ -647,6 +667,10 @@ impl Algorithm for DeepSqueeze {
 
     fn set_parallel(&mut self, on: bool) {
         self.engine.set_parallel(on);
+    }
+
+    fn install_shared_pool(&mut self, pool: std::sync::Arc<crate::engine::WorkerPool>) {
+        self.engine.install_shared_pool(pool);
     }
 
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {

@@ -327,6 +327,10 @@ impl Algorithm for CpdSgdm {
         self.engine.set_parallel(on);
     }
 
+    fn install_shared_pool(&mut self, pool: std::sync::Arc<crate::engine::WorkerPool>) {
+        self.engine.install_shared_pool(pool);
+    }
+
     fn set_worker_params(&mut self, k: usize, x: &[f32]) {
         self.xs.row_mut(k).copy_from_slice(x);
         self.moms.reset_row(k);

@@ -96,6 +96,14 @@ pub trait Algorithm {
     /// profiling baselines and the determinism tests themselves.
     fn set_parallel(&mut self, _on: bool) {}
 
+    /// Adopt a shared [`crate::engine::WorkerPool`] for the local-step
+    /// and communication fan-outs (and engage the parallel path). The
+    /// service daemon uses this to multiplex N concurrent sessions onto
+    /// one thread budget. Default is a no-op for algorithms with no
+    /// engine (e.g. Momentum Tracking, MAC-SGD run their phases on the
+    /// caller thread).
+    fn install_shared_pool(&mut self, _pool: std::sync::Arc<crate::engine::WorkerPool>) {}
+
     /// Worker k's current iterate x_t^(k).
     fn params(&self, k: usize) -> &[f32];
 

@@ -204,6 +204,12 @@ pub struct StopConfig {
     pub comm_budget_mb: Option<f64>,
     /// Stop once α–β simulated wall-clock reaches this many seconds.
     pub sim_seconds_budget: Option<f64>,
+    /// Stop once *real* elapsed time reaches this many seconds — a host
+    /// deadline, distinct from `sim_seconds_budget` (the simulated α–β
+    /// clock). The timer starts when the session is built and restarts
+    /// on resume; like every `[stop]` budget it is excluded from the
+    /// resume fingerprint.
+    pub wall_clock_seconds: Option<f64>,
 }
 
 /// One scheduled churn event: `worker` departs at the *start* of step
@@ -426,6 +432,14 @@ impl ExperimentConfig {
             "workload.model", "workload.artifacts_dir",
             "cost.alpha", "cost.beta", "cost.step_seconds",
             "stop.target_loss", "stop.comm_budget_mb", "stop.sim_seconds_budget",
+            "stop.wall_clock_seconds",
+            // `[serve]` and `[job]` are consumed by `ServeConfig` and the
+            // service job queue; they're listed here so one TOML file can
+            // be both an experiment config and a daemon/job description.
+            "serve.listen", "serve.max_concurrent", "serve.pool_threads",
+            "serve.state_dir", "serve.spool_dir", "serve.poll_ms",
+            "serve.exit_when_idle",
+            "job.name", "job.priority",
             "faults.enabled", "faults.drop_prob", "faults.delay_prob",
             "faults.max_delay", "faults.reorder_prob", "faults.seed",
             "faults.straggler", "faults.churn", "faults.compressed",
@@ -589,6 +603,9 @@ impl ExperimentConfig {
         if let Some(v) = get_f32("stop.sim_seconds_budget")? {
             cfg.stop.sim_seconds_budget = Some(v as f64);
         }
+        if let Some(v) = get_f64("stop.wall_clock_seconds")? {
+            cfg.stop.wall_clock_seconds = Some(v);
+        }
         // faults
         if let Some(v) = doc.get("faults.enabled") {
             cfg.faults.enabled = v
@@ -679,6 +696,7 @@ impl ExperimentConfig {
         for (key, v) in [
             ("stop.comm_budget_mb", self.stop.comm_budget_mb),
             ("stop.sim_seconds_budget", self.stop.sim_seconds_budget),
+            ("stop.wall_clock_seconds", self.stop.wall_clock_seconds),
         ] {
             if let Some(v) = v {
                 if !(v > 0.0) || !v.is_finite() {
@@ -728,6 +746,135 @@ impl ExperimentConfig {
             }
         }
         self.faults.validate(self.workers)?;
+        Ok(())
+    }
+}
+
+/// The `[serve]` config section: how the training service daemon
+/// (`pdsgdm serve`) listens, schedules, and drains. Lives in the same
+/// TOML file as an experiment config or on its own — `ServeConfig`
+/// reads only `serve.*` keys and ignores the rest, so the daemon can be
+/// pointed at any shipped config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// `host:port` for the metrics/jobs HTTP listener. Port 0 asks the
+    /// OS for an ephemeral port (the bound address is logged).
+    pub listen: String,
+    /// How many sessions run at once; queued jobs wait for a slot.
+    pub max_concurrent: usize,
+    /// Worker threads in the one shared `engine::WorkerPool` all
+    /// concurrent sessions multiplex onto. `None` = available
+    /// parallelism. With `max_concurrent` sessions in flight, total CPU
+    /// demand is roughly `max_concurrent` step loops fanning onto these
+    /// threads — size it to the host, not per job.
+    pub pool_threads: Option<usize>,
+    /// Daemon working directory: spooled job copies, per-job logs,
+    /// drain checkpoints, the drain manifest, and result CSVs.
+    pub state_dir: String,
+    /// Optional hot-spool directory watched for `*.toml` job files
+    /// (what `pdsgdm submit` writes into). `None` = only jobs named on
+    /// the command line.
+    pub spool_dir: Option<String>,
+    /// Main-loop poll interval (drain flag, spool scan, idle check).
+    pub poll_ms: u64,
+    /// Exit once the queue is empty and no session is running — used by
+    /// CI and batch runs; a long-lived daemon keeps waiting for work.
+    pub exit_when_idle: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:9090".into(),
+            max_concurrent: 2,
+            pool_threads: None,
+            state_dir: "serve_state".into(),
+            spool_dir: None,
+            poll_ms: 200,
+            exit_when_idle: false,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_toml_str(src: &str) -> Result<Self, String> {
+        let doc = parse_toml(src)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::from_toml_str(&src)
+    }
+
+    /// Read the `serve.*` keys out of any parsed document. Unknown keys
+    /// are NOT rejected here — the same file usually holds a full
+    /// experiment config, which does its own strict check.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let mut cfg = ServeConfig::default();
+        if let Some(v) = doc.get("serve.listen") {
+            cfg.listen = v
+                .as_str()
+                .ok_or_else(|| "serve.listen must be a string".to_string())?
+                .to_string();
+        }
+        if let Some(v) = doc.get("serve.max_concurrent") {
+            cfg.max_concurrent = v
+                .as_i64()
+                .filter(|&i| i >= 0)
+                .ok_or_else(|| "serve.max_concurrent must be a non-negative integer".to_string())?
+                as usize;
+        }
+        if let Some(v) = doc.get("serve.pool_threads") {
+            cfg.pool_threads = Some(
+                v.as_i64()
+                    .filter(|&i| i >= 0)
+                    .ok_or_else(|| "serve.pool_threads must be a non-negative integer".to_string())?
+                    as usize,
+            );
+        }
+        if let Some(v) = doc.get("serve.state_dir") {
+            cfg.state_dir = v
+                .as_str()
+                .ok_or_else(|| "serve.state_dir must be a string".to_string())?
+                .to_string();
+        }
+        if let Some(v) = doc.get("serve.spool_dir") {
+            cfg.spool_dir = Some(
+                v.as_str()
+                    .ok_or_else(|| "serve.spool_dir must be a string".to_string())?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = doc.get("serve.poll_ms") {
+            cfg.poll_ms = v
+                .as_i64()
+                .filter(|&i| i >= 0)
+                .ok_or_else(|| "serve.poll_ms must be a non-negative integer".to_string())?
+                as u64;
+        }
+        if let Some(v) = doc.get("serve.exit_when_idle") {
+            cfg.exit_when_idle = v
+                .as_bool()
+                .ok_or_else(|| "serve.exit_when_idle must be a boolean".to_string())?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_concurrent == 0 {
+            return Err("serve.max_concurrent must be >= 1".into());
+        }
+        if self.pool_threads == Some(0) {
+            return Err("serve.pool_threads must be >= 1".into());
+        }
+        if self.poll_ms == 0 {
+            return Err("serve.poll_ms must be >= 1".into());
+        }
+        if self.listen.is_empty() {
+            return Err("serve.listen must be host:port".into());
+        }
         Ok(())
     }
 }
@@ -1027,5 +1174,68 @@ step_seconds = 0.05
         assert_eq!(cfg.topology, Topology::Ring); // paper: ring
         assert_eq!(cfg.hyper.mu, 0.9); // paper: 0.9
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn wall_clock_budget_parses_and_validates() {
+        let cfg =
+            ExperimentConfig::from_toml_str("[stop]\nwall_clock_seconds = 2.5").unwrap();
+        assert_eq!(cfg.stop.wall_clock_seconds, Some(2.5));
+        assert!(ExperimentConfig::from_toml_str("[stop]\nwall_clock_seconds = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[stop]\nwall_clock_seconds = -3").is_err());
+        // Like every [stop] budget, it is not part of the resume identity.
+        let mut a = ExperimentConfig::default();
+        a.stop.wall_clock_seconds = Some(10.0);
+        assert_eq!(
+            a.resume_fingerprint(),
+            ExperimentConfig::default().resume_fingerprint()
+        );
+    }
+
+    #[test]
+    fn serve_section_parses_with_defaults_and_overrides() {
+        let src = "\
+algorithm = \"pd-sgdm\"
+
+[serve]
+listen = \"127.0.0.1:0\"
+max_concurrent = 3
+pool_threads = 4
+state_dir = \"/tmp/pdsgdm_serve\"
+poll_ms = 50
+exit_when_idle = true
+";
+        // The same file parses as both an experiment and a serve config.
+        assert!(ExperimentConfig::from_toml_str(src).is_ok());
+        let s = ServeConfig::from_toml_str(src).unwrap();
+        assert_eq!(s.listen, "127.0.0.1:0");
+        assert_eq!(s.max_concurrent, 3);
+        assert_eq!(s.pool_threads, Some(4));
+        assert_eq!(s.state_dir, "/tmp/pdsgdm_serve");
+        assert_eq!(s.spool_dir, None);
+        assert_eq!(s.poll_ms, 50);
+        assert!(s.exit_when_idle);
+        // No [serve] section at all → defaults.
+        let d = ServeConfig::from_toml_str("algorithm = \"d-sgd\"").unwrap();
+        assert_eq!(d, ServeConfig::default());
+    }
+
+    #[test]
+    fn serve_section_rejects_degenerate_values() {
+        assert!(ServeConfig::from_toml_str("[serve]\nmax_concurrent = 0").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\npool_threads = 0").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\npoll_ms = 0").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nlisten = 9090").is_err());
+    }
+
+    #[test]
+    fn job_keys_are_accepted_by_the_experiment_parser() {
+        // `pdsgdm submit` appends a [job] section to the spooled copy;
+        // the strict experiment parser must keep accepting the file.
+        let cfg = ExperimentConfig::from_toml_str(
+            "algorithm = \"pd-sgdm\"\n[job]\nname = \"run-a\"\npriority = 5",
+        )
+        .unwrap();
+        assert_eq!(cfg.algorithm, "pd-sgdm");
     }
 }

@@ -84,6 +84,13 @@ pub enum StopCondition {
     CommBudgetMb(f64),
     /// Stop once the α–β simulated wall-clock reaches this many seconds.
     SimSecondsBudget(f64),
+    /// Stop once *real* elapsed time since the session was assembled
+    /// reaches this many seconds — a deadline for service jobs, distinct
+    /// from [`StopCondition::SimSecondsBudget`] (which tracks the
+    /// simulated α–β clock, not the host's). The anchor instant is
+    /// deliberately not checkpointed: a resumed job gets a fresh
+    /// deadline window.
+    WallClockSeconds(f64),
     /// Stop when any member condition holds (budget sweeps compose:
     /// `Any(vec![Steps(10_000), CommBudgetMb(64.0)])`).
     Any(Vec<StopCondition>),
@@ -110,6 +117,21 @@ pub enum StopReason {
     CommBudget,
     /// The simulated wall-clock budget was exhausted.
     SimSecondsBudget,
+    /// The real elapsed-time deadline passed.
+    WallClock,
+}
+
+/// How [`Session::run_until_interruptible`] ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunOutcome {
+    /// The stop condition fired — the normal end of a run.
+    Stopped(StopReason),
+    /// The interrupt callback returned true mid-run (e.g. the service
+    /// daemon draining on SIGTERM). The session is left at a clean step
+    /// boundary with a final evaluation recorded, ready for
+    /// [`Session::save`]; resuming that checkpoint drops the off-cadence
+    /// point and reproduces the uninterrupted trace bit-identically.
+    Interrupted,
 }
 
 /// Mid-run instrumentation hooks. All methods default to no-ops; attach
@@ -143,23 +165,53 @@ pub trait Observer {
 }
 
 /// Reproduces the driver's old `verbose: true` stderr lines as an
-/// [`Observer`].
-#[derive(Clone, Copy, Debug, Default)]
-pub struct VerboseObserver;
+/// [`Observer`]. Lines go through a pluggable [`std::io::Write`] sink:
+/// the default (`VerboseObserver::default()` / [`VerboseObserver::stderr`])
+/// writes to the process stderr exactly as before, while the service
+/// daemon points each job at its own log file so concurrent sessions
+/// never interleave on one stream.
+#[derive(Default)]
+pub struct VerboseObserver {
+    /// `None` = process stderr (the CLI default); `Some` = captured sink.
+    sink: Option<Box<dyn std::io::Write + Send>>,
+}
+
+impl VerboseObserver {
+    /// The classic stderr observer (same as `default()`).
+    pub fn stderr() -> Self {
+        Self::default()
+    }
+
+    /// Route every progress line into `sink` instead of stderr. Write
+    /// errors are swallowed — observability must never kill a run.
+    pub fn to_sink(sink: Box<dyn std::io::Write + Send>) -> Self {
+        Self { sink: Some(sink) }
+    }
+
+    fn emit(&mut self, line: std::fmt::Arguments<'_>) {
+        use std::io::Write as _;
+        match &mut self.sink {
+            Some(s) => {
+                let _ = writeln!(s, "{line}");
+            }
+            None => eprintln!("{line}"),
+        }
+    }
+}
 
 impl Observer for VerboseObserver {
     fn on_eval(&mut self, label: &str, p: &TracePoint) {
-        eprintln!(
+        self.emit(format_args!(
             "[{}] step {:>6}  loss {:.4}  acc {:.3}  comm {:.2} MB  consensus {:.3e}",
             label, p.step, p.loss, p.accuracy, p.comm_mb, p.consensus
-        );
+        ));
     }
 
     fn on_fault_counters(&mut self, step: u64, c: &FaultCounters) {
-        eprintln!(
+        self.emit(format_args!(
             "[faults] step {:>6}  dropped {} ({} encoded)  delayed {} ({} encoded)",
             step, c.dropped, c.dropped_encoded, c.delayed_total, c.delayed_encoded
-        );
+        ));
     }
 }
 
@@ -248,6 +300,10 @@ pub struct Session<'a> {
     churn_stash: BTreeMap<usize, Vec<u8>>,
     /// Why the last [`Session::run_until`] call returned.
     last_stop_reason: Option<StopReason>,
+    /// Real-time anchor for [`StopCondition::WallClockSeconds`], taken
+    /// when the session is assembled. Deliberately not checkpointed: a
+    /// resumed job measures its deadline from its own start.
+    wall_start: std::time::Instant,
     /// Spectral gap of the built mixing matrix (0 for borrowed parts).
     pub rho: f64,
     /// The originating config, when built from one.
@@ -418,6 +474,7 @@ impl<'a> Session<'a> {
             churn: Vec::new(),
             churn_stash: BTreeMap::new(),
             last_stop_reason: None,
+            wall_start: std::time::Instant::now(),
             rho: 0.0,
             config: None,
         }
@@ -427,6 +484,15 @@ impl<'a> Session<'a> {
     /// subsequent callback in attachment order.
     pub fn observe(&mut self, obs: Box<dyn Observer + 'a>) {
         self.observers.push(obs);
+    }
+
+    /// Run this session's engine fan-outs on a shared worker pool (see
+    /// [`crate::engine::LocalStepEngine::install_shared_pool`]). The
+    /// service daemon calls this so N concurrent sessions multiplex
+    /// onto one thread budget instead of N pools oversubscribing the
+    /// host. No-op for algorithms that own no engine.
+    pub fn install_shared_pool(&mut self, pool: std::sync::Arc<crate::engine::WorkerPool>) {
+        self.algo.get_mut().install_shared_pool(pool);
     }
 
     /// Global iterations completed so far.
@@ -663,6 +729,10 @@ impl<'a> Session<'a> {
             StopCondition::SimSecondsBudget(s) => {
                 (self.sim_seconds >= *s).then_some(StopReason::SimSecondsBudget)
             }
+            StopCondition::WallClockSeconds(s) => {
+                (self.wall_start.elapsed().as_secs_f64() >= *s)
+                    .then_some(StopReason::WallClock)
+            }
             StopCondition::Any(conds) => conds.iter().find_map(|c| self.reason_for(c)),
         }
     }
@@ -679,6 +749,25 @@ impl<'a> Session<'a> {
     /// `Any` would be silently inert. (Config-built sessions can't get
     /// here: `validate` rejects `eval_every == 0`.)
     pub fn run_until(&mut self, stop: StopCondition) -> &Trace {
+        self.run_until_interruptible(stop, &mut || false);
+        &self.trace
+    }
+
+    /// [`Session::run_until`] with a cooperative interrupt: `interrupt`
+    /// is polled before every step, and when it returns true the loop
+    /// exits at the current (clean) step boundary with
+    /// [`RunOutcome::Interrupted`]. The session records a final
+    /// evaluation exactly as an off-cadence stop would, so a checkpoint
+    /// written right after can be resumed bit-identically — this is how
+    /// the service daemon drains running jobs on SIGTERM.
+    ///
+    /// Same `TargetLoss`/`eval_every` panic contract as
+    /// [`Session::run_until`].
+    pub fn run_until_interruptible(
+        &mut self,
+        stop: StopCondition,
+        interrupt: &mut dyn FnMut() -> bool,
+    ) -> RunOutcome {
         fn wants_loss(stop: &StopCondition) -> bool {
             match stop {
                 StopCondition::TargetLoss(_) => true,
@@ -695,6 +784,18 @@ impl<'a> Session<'a> {
             self.eval_now();
         }
         while !self.stopped(&stop) {
+            if interrupt() {
+                // Drain: leave the session exactly as an off-cadence
+                // stop would — the final point marked forced, so a
+                // resume drops it and replays the uninterrupted trace.
+                if self.last_eval != Some(self.t) {
+                    self.eval_now();
+                    self.forced_final =
+                        self.eval_every == 0 || self.t % self.eval_every != 0;
+                }
+                self.last_stop_reason = None;
+                return RunOutcome::Interrupted;
+            }
             self.step();
             let on_cadence = self.eval_every > 0 && self.t % self.eval_every == 0;
             if on_cadence || self.stopped(&stop) {
@@ -707,7 +808,10 @@ impl<'a> Session<'a> {
             self.forced_final = self.eval_every == 0 || self.t % self.eval_every != 0;
         }
         self.last_stop_reason = self.reason_for(&stop);
-        &self.trace
+        RunOutcome::Stopped(
+            self.last_stop_reason
+                .expect("loop exited because the stop condition held"),
+        )
     }
 
     /// The stop condition implied by the config: its step count plus any
@@ -727,6 +831,9 @@ impl<'a> Session<'a> {
         }
         if let Some(s) = cfg.stop.sim_seconds_budget {
             conds.push(StopCondition::SimSecondsBudget(s));
+        }
+        if let Some(s) = cfg.stop.wall_clock_seconds {
+            conds.push(StopCondition::WallClockSeconds(s));
         }
         if conds.len() == 1 {
             conds.pop().unwrap()
@@ -992,7 +1099,7 @@ pub fn run(
 ) -> Trace {
     let mut session = Session::from_parts(algo, source, net, opts.eval_every, opts.cost_model);
     if opts.verbose {
-        session.observe(Box::new(VerboseObserver));
+        session.observe(Box::new(VerboseObserver::default()));
     }
     session.run_until(StopCondition::Steps(opts.steps));
     session.into_trace()
@@ -1445,5 +1552,121 @@ mod tests {
             Err(e) => e.to_string(),
         };
         assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn wall_clock_stop_fires_and_reports_reason() {
+        let mut s = Session::build(SessionSpec::new(quick_config("pd-sgdm"))).unwrap();
+        // A zero deadline is already past; a huge one is not.
+        assert!(s.stopped(&StopCondition::WallClockSeconds(0.0)));
+        assert!(!s.stopped(&StopCondition::WallClockSeconds(1e9)));
+        s.run_until(StopCondition::Any(vec![
+            StopCondition::Steps(1_000_000),
+            StopCondition::WallClockSeconds(0.0),
+        ]));
+        assert_eq!(s.steps_done(), 0, "expired deadline must not step");
+        assert_eq!(s.last_stop_reason(), Some(StopReason::WallClock));
+    }
+
+    #[test]
+    fn wall_clock_stop_wires_through_config() {
+        let mut c = quick_config("pd-sgdm");
+        c.steps = 100_000_000; // far beyond what 50 ms of quadratic steps reach
+        c.stop.wall_clock_seconds = Some(0.05);
+        let mut s = Session::build(SessionSpec::new(c)).unwrap();
+        s.run_to_stop();
+        assert_eq!(s.last_stop_reason(), Some(StopReason::WallClock));
+        assert!(s.steps_done() > 0, "a 50 ms budget allows at least one step");
+        assert!(s.steps_done() < 100_000_000);
+    }
+
+    #[test]
+    fn interrupted_run_resumes_bit_identically() {
+        // Reference: an uninterrupted run to the step limit.
+        let straight = run_session(quick_config("pd-sgdm"));
+
+        // Interrupted run: drain after 7 steps (off the eval cadence of
+        // 20), checkpoint, resume in a fresh session, finish.
+        let mut s = Session::build(SessionSpec::new(quick_config("pd-sgdm"))).unwrap();
+        let mut budget = 7u64;
+        let outcome = s.run_until_interruptible(StopCondition::Steps(60), &mut || {
+            if budget == 0 {
+                true
+            } else {
+                budget -= 1;
+                false
+            }
+        });
+        assert_eq!(outcome, RunOutcome::Interrupted);
+        assert_eq!(s.steps_done(), 7);
+        assert_eq!(s.last_stop_reason(), None, "an interrupt is not a stop");
+        // The drain recorded a forced off-cadence point at t=7.
+        assert_eq!(s.trace().points.last().unwrap().step, 7);
+        let bytes = s.save_state();
+
+        let mut r = Session::build(SessionSpec::new(quick_config("pd-sgdm"))).unwrap();
+        r.load_state(&bytes).unwrap();
+        let outcome = r.run_until_interruptible(StopCondition::Steps(60), &mut || false);
+        assert_eq!(outcome, RunOutcome::Stopped(StopReason::StepLimit));
+
+        // Resume dropped the forced t=7 point: the trace matches the
+        // uninterrupted run bit for bit.
+        let resumed = r.trace();
+        let steps: Vec<u64> = resumed.points.iter().map(|p| p.step).collect();
+        assert_eq!(steps, vec![0, 20, 40, 60]);
+        assert_eq!(straight.points.len(), resumed.points.len());
+        for (a, b) in straight.points.iter().zip(&resumed.points) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+            assert_eq!(a.consensus.to_bits(), b.consensus.to_bits());
+            assert_eq!(a.comm_mb.to_bits(), b.comm_mb.to_bits());
+            assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits());
+        }
+    }
+
+    #[test]
+    fn interrupt_on_cadence_does_not_duplicate_the_eval_point() {
+        let mut s = Session::build(SessionSpec::new(quick_config("pd-sgdm"))).unwrap();
+        // Stop the interrupted loop exactly at the cadence step 20.
+        let mut budget = 20u64;
+        let outcome = s.run_until_interruptible(StopCondition::Steps(60), &mut || {
+            if budget == 0 {
+                true
+            } else {
+                budget -= 1;
+                false
+            }
+        });
+        assert_eq!(outcome, RunOutcome::Interrupted);
+        let steps: Vec<u64> = s.trace().points.iter().map(|p| p.step).collect();
+        assert_eq!(steps, vec![0, 20], "cadence point recorded once, not twice");
+    }
+
+    #[derive(Clone, Default)]
+    struct SharedBuf(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
+
+    impl std::io::Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn verbose_observer_routes_lines_to_the_sink() {
+        let buf = SharedBuf::default();
+        let mut s = Session::build(SessionSpec::new(quick_config("pd-sgdm"))).unwrap();
+        s.observe(Box::new(VerboseObserver::to_sink(Box::new(buf.clone()))));
+        s.run_until(StopCondition::Steps(20));
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        // Same line format the stderr default prints (regression: CLI
+        // output is unchanged, only the destination is pluggable).
+        assert!(text.contains("[pd-sgdm"), "{text}");
+        assert!(text.contains("loss"), "{text}");
+        assert!(text.contains("step      0"), "t=0 eval line present: {text}");
+        assert!(text.lines().count() >= 2, "initial + final eval: {text}");
     }
 }

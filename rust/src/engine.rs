@@ -33,7 +33,7 @@
 //! single shared PJRT executable) fall back to the sequential
 //! allocation-free path transparently.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::arena::ParamArena;
 use crate::grad::{GradientSource, WorkerGrad};
@@ -58,8 +58,15 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// the *completion* schedule never influences the order any caller
 /// observes results in. That, plus per-task-disjoint data, is the whole
 /// determinism argument.
+///
+/// The pool is `Sync` (senders sit behind mutexes), so ONE pool can be
+/// shared — via `Arc` — by several sessions running on different
+/// threads, the way the service daemon multiplexes concurrent jobs onto
+/// a fixed thread budget. Concurrent `run_scoped` calls are safe: each
+/// call has a private result channel and per-task-disjoint borrows, and
+/// each pool thread just interleaves the two callers' FIFO jobs.
 pub struct WorkerPool {
-    senders: Vec<mpsc::Sender<Job>>,
+    senders: Vec<Mutex<mpsc::Sender<Job>>>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -73,7 +80,7 @@ impl WorkerPool {
         let mut handles = Vec::with_capacity(threads);
         for i in 0..threads {
             let (tx, rx) = mpsc::channel::<Job>();
-            senders.push(tx);
+            senders.push(Mutex::new(tx));
             let handle = std::thread::Builder::new()
                 .name(format!("pdsgdm-pool-{i}"))
                 .spawn(move || {
@@ -134,7 +141,11 @@ impl WorkerPool {
             let job: Job = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(job)
             };
-            if let Err(mpsc::SendError(job)) = self.senders[i % self.senders.len()].send(job) {
+            let send_result = self.senders[i % self.senders.len()]
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .send(job);
+            if let Err(mpsc::SendError(job)) = send_result {
                 drop(job); // consume the closure on the caller's thread
                 dead_thread = true;
                 break;
@@ -234,7 +245,9 @@ pub struct LocalStepEngine {
     parallel: bool,
     /// The persistent pool shared by the local-step fan-out and the
     /// communication round; `None` until a parallel mode ever engages.
-    pool: Option<WorkerPool>,
+    /// Behind `Arc` so the service daemon can hand several engines (one
+    /// per concurrent session) the SAME pool instead of K threads each.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl LocalStepEngine {
@@ -245,7 +258,7 @@ impl LocalStepEngine {
     pub fn new(k: usize, d: usize) -> Self {
         let cores = Self::cores();
         let parallel = d >= PARALLEL_MIN_DIM && cores > 1 && k > 1;
-        let pool = if parallel { Some(WorkerPool::new(k.min(cores))) } else { None };
+        let pool = if parallel { Some(Arc::new(WorkerPool::new(k.min(cores)))) } else { None };
         Self { d, bufs: vec![Vec::new(); k], scratch: Vec::new(), parallel, pool }
     }
 
@@ -265,9 +278,20 @@ impl LocalStepEngine {
     pub fn set_parallel(&mut self, on: bool) {
         let k = self.bufs.len();
         if on && self.pool.is_none() && k > 1 {
-            self.pool = Some(WorkerPool::new(k.min(Self::cores())));
+            self.pool = Some(Arc::new(WorkerPool::new(k.min(Self::cores()))));
         }
         self.parallel = on;
+    }
+
+    /// Adopt an externally owned pool (and engage the pooled path).
+    /// This is how the service daemon multiplexes N concurrent sessions
+    /// onto one thread budget: every session's engine dispatches into
+    /// the same `Arc<WorkerPool>` instead of spinning up K threads each.
+    /// Determinism is unaffected — results are joined in task order per
+    /// call, regardless of which pool executes them.
+    pub fn install_shared_pool(&mut self, pool: Arc<WorkerPool>) {
+        self.pool = Some(pool);
+        self.parallel = true;
     }
 
     pub fn is_parallel(&self) -> bool {
@@ -281,7 +305,7 @@ impl LocalStepEngine {
     /// (created once per engine, hence once per `Session`) serves both
     /// halves of the step loop.
     pub fn comm_pool(&self) -> Option<&WorkerPool> {
-        if self.parallel { self.pool.as_ref() } else { None }
+        if self.parallel { self.pool.as_deref() } else { None }
     }
 
     fn ensure_bufs(bufs: &mut [Vec<f32>], d: usize) {
@@ -641,6 +665,56 @@ mod tests {
             })
             .collect();
         pool.run_scoped(tasks);
+    }
+
+    #[test]
+    fn pool_is_shareable_across_threads() {
+        // Two caller threads drive the SAME pool concurrently (the
+        // daemon's concurrent-session shape). Each caller must still see
+        // its own results in its own task order.
+        let pool = Arc::new(WorkerPool::new(3));
+        let mut joins = Vec::new();
+        for caller in 0..2u64 {
+            let pool = Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let tasks: Vec<ScopedTask<'_, u64>> = (0..9u64)
+                        .map(|i| Box::new(move || caller * 1000 + i) as ScopedTask<'_, u64>)
+                        .collect();
+                    let got = pool.run_scoped(tasks);
+                    assert_eq!(got, (0..9).map(|i| caller * 1000 + i).collect::<Vec<_>>());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn install_shared_pool_matches_sequential_bitwise() {
+        // Engines driven by one shared external pool must reproduce the
+        // sequential trajectory exactly, like every other pooled mode.
+        let (k, d) = (4, 33);
+        let shared = Arc::new(WorkerPool::new(2));
+        let (mut src_a, mut xs_a) = setup(k, d, 0.1, 99);
+        let mut eng_a = LocalStepEngine::sequential(k, d);
+        eng_a.install_shared_pool(Arc::clone(&shared));
+        assert!(eng_a.is_parallel());
+        assert!(eng_a.comm_pool().is_some());
+        let (mut src_b, mut xs_b) = setup(k, d, 0.1, 99);
+        let mut eng_b = LocalStepEngine::sequential(k, d);
+        for _ in 0..7 {
+            let la = eng_a.local_step(&mut src_a, &mut xs_a, LocalUpdate::Sgd { eta: 0.05 });
+            let lb = eng_b.local_step(&mut src_b, &mut xs_b, LocalUpdate::Sgd { eta: 0.05 });
+            assert_eq!(la.to_bits(), lb.to_bits());
+        }
+        let bitwise = xs_a
+            .as_slice()
+            .iter()
+            .zip(xs_b.as_slice())
+            .all(|(p, q)| p.to_bits() == q.to_bits());
+        assert!(bitwise, "shared-pool iterates diverged from sequential");
     }
 
     #[test]

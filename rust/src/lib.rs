@@ -40,6 +40,7 @@ pub mod metrics;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod state;
 pub mod testing;
 pub mod topology;

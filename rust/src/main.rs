@@ -17,6 +17,11 @@
 //! * `inspect --artifacts DIR --model NAME` — validate artifacts and show
 //!   the model manifest (d, layout, mix Ks).
 //! * `algorithms` — list implemented algorithms with summaries.
+//! * `serve [--config FILE] [JOB.toml ...]` — run the training service
+//!   daemon: a job queue, N concurrent sessions on one shared worker
+//!   pool, `/metrics` + `/jobs` over HTTP, graceful drain on SIGTERM.
+//! * `submit --spool DIR JOB.toml ...` — drop job files into a running
+//!   daemon's spool directory.
 //!
 //! (Arg parsing is in-crate: no clap in this offline build environment.)
 
@@ -47,6 +52,8 @@ fn real_main() -> Result<()> {
         "train" => cmd_train(flags),
         "topology" => cmd_topology(flags),
         "inspect" => cmd_inspect(flags),
+        "serve" => cmd_serve(flags),
+        "submit" => cmd_submit(flags),
         "algorithms" => {
             for b in pdsgdm::algorithms::REGISTRY {
                 println!("{:<12} {}", b.name, b.summary);
@@ -70,6 +77,7 @@ fn print_help() {
                           [--eval-every N] [--period P] [--eta F] [--mu F] [--gamma F]\n\
                           [--topology T] [--compressor SPEC] [--workload W] [--seed N]\n\
                           [--target-loss F] [--comm-budget-mb F] [--sim-seconds F]\n\
+                          [--wall-clock-seconds F] [--threads N]\n\
                           [--dirichlet-alpha F] [--drop-prob F] [--delay-prob F]\n\
                           [--max-delay N] [--reorder-prob F] [--straggler SPEC]\n\
                           [--churn W@LEAVE:REJOIN,..] [--fault-seed N]\n\
@@ -80,6 +88,10 @@ fn print_help() {
                           [--weighting uniform|metropolis|lazy-metropolis]\n\
            pdsgdm inspect  [--artifacts DIR] [--model NAME]\n\
            pdsgdm algorithms\n\
+           pdsgdm serve    [--config FILE] [--listen HOST:PORT] [--threads N]\n\
+                          [--max-concurrent N] [--state-dir DIR] [--spool DIR]\n\
+                          [--poll-ms MS] [--exit-when-idle] [JOB.toml ...]\n\
+           pdsgdm submit   --spool DIR [--name NAME] [--priority P] JOB.toml ...\n\
          \n\
          Topologies: ring | chain | complete | star | torus | hypercube | expgraph\n\
          | random-regular:D — expgraph (hops i±2^s) and random-regular scale to\n\
@@ -93,25 +105,36 @@ fn print_help() {
          --fault-compressed extends drop/delay/reorder to the compressed gossip\n\
          of cpd-sgdm | choco-sgd | deepsqueeze (needs an active fault plan).\n\
          Checkpoints: --ckpt writes a full-state PDSGDM02 file; --resume continues\n\
-         it bit-identically (give the same config plus the new --steps total)."
+         it bit-identically (give the same config plus the new --steps total).\n\
+         Serve: jobs are experiment TOMLs (+ optional [job] name/priority); the\n\
+         daemon multiplexes --max-concurrent sessions onto one --threads pool,\n\
+         exports Prometheus text at /metrics and JSON at /jobs, and on SIGTERM\n\
+         drains running jobs to PDSGDM02 checkpoints — restarting with the same\n\
+         --state-dir resumes them bit-identically (see DESIGN.md section 9)."
     );
 }
 
-/// `--key value` / `--flag` parser.
+/// `--key value` / `--flag` parser. Bare arguments are collected as
+/// positionals (job files for `serve`/`submit`); commands that take
+/// none call [`Flags::no_positionals`] to keep the legacy error.
 struct Flags {
     map: BTreeMap<String, String>,
+    positionals: Vec<String>,
 }
 
 impl Flags {
     fn parse(args: &[String]) -> Result<Self> {
         let mut map = BTreeMap::new();
+        let mut positionals = Vec::new();
         let mut i = 0;
         while i < args.len() {
             let a = &args[i];
-            let key = a
-                .strip_prefix("--")
-                .ok_or_else(|| anyhow!("expected --flag, got {a}"))?;
-            let boolean = ["verbose", "fault-compressed"].contains(&key);
+            let Some(key) = a.strip_prefix("--") else {
+                positionals.push(a.clone());
+                i += 1;
+                continue;
+            };
+            let boolean = ["verbose", "fault-compressed", "exit-when-idle"].contains(&key);
             if boolean {
                 map.insert(key.to_string(), "true".to_string());
                 i += 1;
@@ -123,7 +146,14 @@ impl Flags {
                 i += 2;
             }
         }
-        Ok(Self { map })
+        Ok(Self { map, positionals })
+    }
+
+    fn no_positionals(&self) -> Result<()> {
+        match self.positionals.first() {
+            Some(a) => bail!("expected --flag, got {a}"),
+            None => Ok(()),
+        }
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -146,6 +176,7 @@ impl Flags {
 }
 
 fn cmd_train(flags: Flags) -> Result<()> {
+    flags.no_positionals()?;
     let mut cfg = match flags.get("config") {
         Some(path) => ExperimentConfig::from_file(Path::new(path)).map_err(|e| anyhow!(e))?,
         None => ExperimentConfig::default(),
@@ -227,6 +258,9 @@ fn cmd_train(flags: Flags) -> Result<()> {
     if let Some(s) = flags.get_parse::<f64>("sim-seconds")? {
         cfg.stop.sim_seconds_budget = Some(s);
     }
+    if let Some(s) = flags.get_parse::<f64>("wall-clock-seconds")? {
+        cfg.stop.wall_clock_seconds = Some(s);
+    }
     // Fault-injection & heterogeneity overrides (see configs/faults.toml).
     if let Some(a) = flags.get_parse::<f64>("dirichlet-alpha")? {
         cfg.sharding = pdsgdm::data::Sharding::Dirichlet { alpha: a };
@@ -268,6 +302,12 @@ fn cmd_train(flags: Flags) -> Result<()> {
         spec = spec.resume_from(ckpt);
     }
     let mut session = Session::build(spec)?;
+    if let Some(n) = flags.get_parse::<usize>("threads")? {
+        if n == 0 {
+            bail!("--threads must be >= 1");
+        }
+        session.install_shared_pool(std::sync::Arc::new(pdsgdm::engine::WorkerPool::new(n)));
+    }
     eprintln!("spectral gap rho = {:.4}", session.rho);
     if session.steps_done() > 0 {
         eprintln!(
@@ -277,7 +317,7 @@ fn cmd_train(flags: Flags) -> Result<()> {
         );
     }
     if flags.has("verbose") {
-        session.observe(Box::new(VerboseObserver));
+        session.observe(Box::new(VerboseObserver::default()));
     }
     session.run_to_stop();
     print!("{}", metrics::summary_table(std::slice::from_ref(session.trace())));
@@ -299,7 +339,94 @@ fn cmd_train(flags: Flags) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(flags: Flags) -> Result<()> {
+    let mut serve = match flags.get("config") {
+        Some(p) => pdsgdm::config::ServeConfig::from_file(Path::new(p)).map_err(|e| anyhow!(e))?,
+        None => pdsgdm::config::ServeConfig::default(),
+    };
+    if let Some(l) = flags.get("listen") {
+        serve.listen = l.to_string();
+    }
+    if let Some(n) = flags.get_parse("max-concurrent")? {
+        serve.max_concurrent = n;
+    }
+    if let Some(n) = flags.get_parse("threads")? {
+        serve.pool_threads = Some(n);
+    }
+    if let Some(d) = flags.get("state-dir") {
+        serve.state_dir = d.to_string();
+    }
+    if let Some(d) = flags.get("spool") {
+        serve.spool_dir = Some(d.to_string());
+    }
+    if let Some(ms) = flags.get_parse("poll-ms")? {
+        serve.poll_ms = ms;
+    }
+    if flags.has("exit-when-idle") {
+        serve.exit_when_idle = true;
+    }
+    serve.validate().map_err(|e| anyhow!(e))?;
+    let daemon = pdsgdm::service::Daemon::new(serve).map_err(|e| anyhow!(e))?;
+    for job in &flags.positionals {
+        let id = daemon.submit_file(Path::new(job)).map_err(|e| anyhow!(e))?;
+        eprintln!("[serve] queued {job} as job {id}");
+    }
+    daemon.run().map_err(|e| anyhow!(e))
+}
+
+fn cmd_submit(flags: Flags) -> Result<()> {
+    let spool = flags
+        .get("spool")
+        .ok_or_else(|| anyhow!("--spool DIR required (the daemon's serve.spool_dir)"))?;
+    if flags.positionals.is_empty() {
+        bail!("submit needs at least one JOB.toml");
+    }
+    std::fs::create_dir_all(spool)?;
+    let name = flags.get("name");
+    let priority = flags.get_parse::<i64>("priority")?;
+    if name.is_some() && flags.positionals.len() > 1 {
+        bail!("--name applies to a single job; submit the files one at a time");
+    }
+    for (i, job) in flags.positionals.iter().enumerate() {
+        let mut src =
+            std::fs::read_to_string(job).map_err(|e| anyhow!("{job}: {e}"))?;
+        if name.is_some() || priority.is_some() {
+            if src.contains("[job]") {
+                bail!(
+                    "{job} already has a [job] section; edit the file instead of \
+                     passing --name/--priority"
+                );
+            }
+            src.push_str("\n[job]\n");
+            if let Some(n) = name {
+                src.push_str(&format!("name = \"{n}\"\n"));
+            }
+            if let Some(p) = priority {
+                src.push_str(&format!("priority = {p}\n"));
+            }
+        }
+        // Validate before spooling so a typo is rejected here, with the
+        // file name, instead of asynchronously by the daemon.
+        pdsgdm::service::queue::parse_job_toml(&src).map_err(|e| anyhow!("{job}: {e}"))?;
+        // Sortable unique name: the daemon scans the spool in
+        // lexicographic order, so epoch-first keeps submission order.
+        let epoch_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis())
+            .unwrap_or(0);
+        let file = format!("{epoch_ms:013}-{:05}-{i:03}.toml", std::process::id());
+        let dest = Path::new(spool).join(&file);
+        // Write-then-rename so the daemon never scans a half-written job.
+        let tmp = Path::new(spool).join(format!(".{file}.tmp"));
+        std::fs::write(&tmp, &src)?;
+        std::fs::rename(&tmp, &dest)?;
+        eprintln!("submitted {job} -> {}", dest.display());
+    }
+    Ok(())
+}
+
 fn cmd_topology(flags: Flags) -> Result<()> {
+    flags.no_positionals()?;
     let kind = flags.get("kind").unwrap_or("ring");
     let k: usize = flags.get_parse("workers")?.unwrap_or(8);
     let topo = Topology::parse(kind).ok_or_else(|| anyhow!("unknown topology {kind}"))?;
@@ -336,6 +463,7 @@ fn cmd_topology(flags: Flags) -> Result<()> {
 }
 
 fn cmd_inspect(flags: Flags) -> Result<()> {
+    flags.no_positionals()?;
     let dir = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
     let model = flags.get("model").unwrap_or("tiny");
     let rt = pdsgdm::runtime::Runtime::new(&dir)?;

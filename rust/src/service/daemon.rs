@@ -1,0 +1,593 @@
+//! The serve loop: N runner threads multiplex queued jobs onto ONE
+//! shared [`WorkerPool`], an HTTP listener exports `/metrics` and
+//! `/jobs`, and SIGTERM/SIGINT triggers a graceful drain — running
+//! sessions stop at a clean step boundary, checkpoint to `PDSGDM02`,
+//! and a `drain.json` manifest lets the next `pdsgdm serve` resume
+//! every interrupted job bit-identically.
+//!
+//! Filesystem layout under `serve.state_dir`:
+//!
+//! ```text
+//! jobs/job-<id>.toml   canonical copy of every submitted job
+//! logs/job-<id>.log    per-job VerboseObserver lines
+//! ckpt/job-<id>.ckpt   drain checkpoints (PDSGDM02)
+//! out/<name>.csv       result traces of completed jobs
+//! drain.json           manifest of interrupted + still-queued jobs
+//! drain.last.json      the consumed manifest from the previous run
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::ServeConfig;
+use crate::coordinator::{RunOutcome, Session, SessionSpec, VerboseObserver};
+use crate::engine::WorkerPool;
+use crate::json::{obj, Json};
+use crate::metrics::write_csv;
+use crate::service::http::{self, Handler, HttpServer, Response};
+use crate::service::metrics_export::{MetricsObserver, MetricsRegistry};
+use crate::service::queue::{parse_job_toml, JobQueue, JobState};
+
+/// Process-wide drain flag flipped by the SIGTERM/SIGINT handler.
+/// Async-signal-safe: the handler does one atomic store.
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    // No libc crate in this offline build; `signal(2)` is declared
+    // directly. Registering an atomic-store-only handler is the
+    // canonical async-signal-safe pattern.
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+    }
+    let h: extern "C" fn(i32) = on_signal;
+    unsafe {
+        signal(15, h as usize); // SIGTERM
+        signal(2, h as usize); // SIGINT
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// The training service. Construct with [`Daemon::new`], enqueue work
+/// with [`Daemon::submit_file`]/[`Daemon::submit_toml`] (or a spool
+/// directory), then [`Daemon::run`] until drained or idle.
+pub struct Daemon {
+    cfg: ServeConfig,
+    queue: Arc<JobQueue>,
+    registry: Arc<MetricsRegistry>,
+    pool: Arc<WorkerPool>,
+    /// In-process drain request ([`Daemon::request_drain`], tests).
+    drain: Arc<AtomicBool>,
+    /// Bound HTTP address once [`Daemon::run`] is up (port 0 resolves
+    /// here); lets tests scrape an ephemeral port.
+    bound: Arc<Mutex<Option<std::net::SocketAddr>>>,
+}
+
+impl Daemon {
+    pub fn new(cfg: ServeConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        let state = PathBuf::from(&cfg.state_dir);
+        for sub in ["jobs", "logs", "ckpt", "out"] {
+            std::fs::create_dir_all(state.join(sub))
+                .map_err(|e| format!("create {}/{sub}: {e}", cfg.state_dir))?;
+        }
+        let threads = cfg.pool_threads.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+        Ok(Self {
+            cfg,
+            queue: Arc::new(JobQueue::new()),
+            registry: Arc::new(MetricsRegistry::new()),
+            pool: Arc::new(WorkerPool::new(threads)),
+            drain: Arc::new(AtomicBool::new(false)),
+            bound: Arc::new(Mutex::new(None)),
+        })
+    }
+
+    pub fn queue(&self) -> &Arc<JobQueue> {
+        &self.queue
+    }
+
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
+    }
+
+    /// Ask the daemon to drain (same path as SIGTERM, minus the
+    /// signal). Used by tests and embedders.
+    pub fn request_drain(&self) {
+        self.drain.store(true, Ordering::SeqCst);
+    }
+
+    fn draining(&self) -> bool {
+        self.drain.load(Ordering::SeqCst) || SIGNAL_DRAIN.load(Ordering::SeqCst)
+    }
+
+    /// The HTTP listener's bound address once [`Daemon::run`] is up.
+    pub fn http_addr(&self) -> Option<std::net::SocketAddr> {
+        *self.bound.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn state_dir(&self) -> PathBuf {
+        PathBuf::from(&self.cfg.state_dir)
+    }
+
+    /// Submit a job TOML by path. The file is copied into
+    /// `state_dir/jobs/` so the daemon owns a canonical version.
+    pub fn submit_file(&self, path: &Path) -> Result<u64, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        self.submit_toml(&src)
+    }
+
+    /// Submit a job from TOML source (an experiment config plus an
+    /// optional `[job]` section); returns the job id.
+    pub fn submit_toml(&self, src: &str) -> Result<u64, String> {
+        self.submit_spec(src, None, None)
+    }
+
+    fn submit_spec(
+        &self,
+        src: &str,
+        name_override: Option<String>,
+        resume_from: Option<PathBuf>,
+    ) -> Result<u64, String> {
+        let mut spec = parse_job_toml(src)?;
+        if name_override.is_some() {
+            spec.name = name_override;
+        }
+        let id = self.queue.submit(spec, resume_from, None);
+        let copy = self.state_dir().join("jobs").join(format!("job-{id}.toml"));
+        std::fs::write(&copy, src).map_err(|e| format!("spool {copy:?}: {e}"))?;
+        self.queue.set_source_path(id, copy);
+        Ok(id)
+    }
+
+    /// Re-submit everything a previous run's `drain.json` recorded:
+    /// drained jobs resume from their checkpoints (keeping their names,
+    /// so metrics and result files line up), still-queued jobs start
+    /// fresh. The manifest is renamed once consumed so a later restart
+    /// doesn't double-submit.
+    fn recover(&self) -> Result<(), String> {
+        let manifest = self.state_dir().join("drain.json");
+        let Ok(src) = std::fs::read_to_string(&manifest) else {
+            return Ok(());
+        };
+        let doc = Json::parse(&src).map_err(|e| format!("drain.json: {e}"))?;
+        let jobs_of = |key: &str| -> Vec<Json> {
+            doc.get(key).and_then(|v| v.as_arr()).map(<[Json]>::to_vec).unwrap_or_default()
+        };
+        for entry in jobs_of("drained").iter().chain(jobs_of("queued").iter()) {
+            let Some(job_file) = entry.get("job_file").and_then(Json::as_str) else {
+                return Err("drain.json entry missing job_file".into());
+            };
+            let name = entry.get("name").and_then(Json::as_str).map(str::to_string);
+            let ckpt = entry.get("checkpoint").and_then(Json::as_str).map(PathBuf::from);
+            let src = std::fs::read_to_string(job_file)
+                .map_err(|e| format!("drain.json job {job_file}: {e}"))?;
+            self.submit_spec(&src, name, ckpt)?;
+        }
+        let consumed = self.state_dir().join("drain.last.json");
+        std::fs::rename(&manifest, &consumed)
+            .map_err(|e| format!("consume drain.json: {e}"))?;
+        Ok(())
+    }
+
+    /// Scan the spool directory: every `*.toml` (lexicographic order —
+    /// `pdsgdm submit` writes sortable names) is submitted and renamed
+    /// `*.toml.submitted`, or `*.toml.rejected` if it doesn't parse.
+    fn scan_spool(&self) {
+        let Some(dir) = &self.cfg.spool_dir else { return };
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        let mut files: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+            .collect();
+        files.sort();
+        for path in files {
+            let verdict = match self.submit_file(&path) {
+                Ok(id) => {
+                    eprintln!("[serve] spool {path:?} -> job {id}");
+                    "submitted"
+                }
+                Err(e) => {
+                    eprintln!("[serve] spool {path:?} rejected: {e}");
+                    "rejected"
+                }
+            };
+            let mut renamed = path.clone().into_os_string();
+            renamed.push(format!(".{verdict}"));
+            let _ = std::fs::rename(&path, renamed);
+        }
+    }
+
+    fn routes(&self) -> Handler {
+        let registry = Arc::clone(&self.registry);
+        let queue = Arc::clone(&self.queue);
+        Arc::new(move |path| match path {
+            "/metrics" => Some(Response::metrics(registry.render())),
+            "/jobs" => Some(Response::json(jobs_json(&queue))),
+            "/healthz" => Some(Response::text(200, "ok\n")),
+            _ => None,
+        })
+    }
+
+    fn publish_state_counts(&self) {
+        let snap = self.queue.snapshot();
+        let counts: Vec<(&'static str, usize)> = JobState::ALL
+            .iter()
+            .map(|s| (s.as_str(), snap.iter().filter(|j| j.state == *s).count()))
+            .collect();
+        self.registry.set_state_counts(&counts);
+    }
+
+    /// Serve until drained (SIGTERM/SIGINT/[`Daemon::request_drain`])
+    /// or — with `serve.exit_when_idle` — until the queue empties.
+    pub fn run(&self) -> Result<(), String> {
+        // A daemon restarted in-process (tests) must not inherit the
+        // previous run's signal; a real signal landing here re-sets it.
+        SIGNAL_DRAIN.store(false, Ordering::SeqCst);
+        install_signal_handlers();
+        self.recover()?;
+
+        let mut server =
+            HttpServer::spawn(&self.cfg.listen, self.routes()).map_err(|e| {
+                format!("bind {}: {e}", self.cfg.listen)
+            })?;
+        *self.bound.lock().unwrap_or_else(|p| p.into_inner()) = Some(server.addr());
+        eprintln!("[serve] listening on http://{}", server.addr());
+
+        let runners: Vec<_> = (0..self.cfg.max_concurrent)
+            .map(|i| {
+                let queue = Arc::clone(&self.queue);
+                let registry = Arc::clone(&self.registry);
+                let pool = Arc::clone(&self.pool);
+                let drain = Arc::clone(&self.drain);
+                let state = self.state_dir();
+                std::thread::Builder::new()
+                    .name(format!("pdsgdm-runner-{i}"))
+                    .spawn(move || runner_loop(&queue, &registry, &pool, &drain, &state))
+                    .expect("spawn runner thread")
+            })
+            .collect();
+
+        loop {
+            if self.draining() {
+                break;
+            }
+            self.scan_spool();
+            self.publish_state_counts();
+            if self.cfg.exit_when_idle && self.queue.active_counts() == (0, 0) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(self.cfg.poll_ms));
+        }
+
+        let drained = self.draining();
+        // No more claims; runners finish (or checkpoint) their current
+        // job and exit.
+        self.queue.close();
+        for r in runners {
+            let _ = r.join();
+        }
+        self.publish_state_counts();
+        if drained {
+            self.write_drain_manifest()?;
+            eprintln!("[serve] drained; manifest at {:?}", self.state_dir().join("drain.json"));
+        }
+        server.shutdown();
+        Ok(())
+    }
+
+    /// Atomically write `drain.json`: which jobs were interrupted (and
+    /// where their checkpoints are) and which never started.
+    fn write_drain_manifest(&self) -> Result<(), String> {
+        let snap = self.queue.snapshot();
+        let entry = |j: &crate::service::queue::Job| {
+            let mut pairs = vec![
+                ("id", Json::Num(j.id as f64)),
+                ("name", Json::Str(j.name.clone())),
+                (
+                    "job_file",
+                    Json::Str(
+                        j.source_path.as_ref().map(|p| p.display().to_string()).unwrap_or_default(),
+                    ),
+                ),
+            ];
+            if let Some(ck) = &j.checkpoint {
+                pairs.push(("checkpoint", Json::Str(ck.display().to_string())));
+                pairs.push(("steps", Json::Num(j.steps_done as f64)));
+            }
+            obj(pairs)
+        };
+        let of_state = |s: JobState| -> Json {
+            Json::Arr(snap.iter().filter(|j| j.state == s).map(entry).collect())
+        };
+        let manifest = obj(vec![
+            ("version", Json::Num(1.0)),
+            ("drained", of_state(JobState::Drained)),
+            ("queued", of_state(JobState::Queued)),
+        ]);
+        let path = self.state_dir().join("drain.json");
+        let tmp = self.state_dir().join("drain.json.tmp");
+        std::fs::write(&tmp, manifest.to_string_compact())
+            .map_err(|e| format!("write {tmp:?}: {e}"))?;
+        std::fs::rename(&tmp, &path).map_err(|e| format!("rename {tmp:?}: {e}"))
+    }
+}
+
+/// `/jobs` body: the queue snapshot as a JSON array.
+fn jobs_json(queue: &JobQueue) -> String {
+    let jobs: Vec<Json> = queue
+        .snapshot()
+        .iter()
+        .map(|j| {
+            let mut pairs = vec![
+                ("id", Json::Num(j.id as f64)),
+                ("name", Json::Str(j.name.clone())),
+                ("state", Json::Str(j.state.as_str().into())),
+                ("priority", Json::Num(j.priority as f64)),
+                ("steps_done", Json::Num(j.steps_done as f64)),
+            ];
+            if let Some(l) = j.final_loss {
+                pairs.push(("final_loss", Json::Num(l)));
+            }
+            if let Some(r) = j.stop_reason {
+                pairs.push(("stop_reason", Json::Str(format!("{r:?}"))));
+            }
+            if let Some(e) = &j.error {
+                pairs.push(("error", Json::Str(e.clone())));
+            }
+            obj(pairs)
+        })
+        .collect();
+    obj(vec![("jobs", Json::Arr(jobs))]).to_string_compact()
+}
+
+/// One runner thread: claim → build the session *in this thread*
+/// (sessions hold non-Send trait objects, so they never cross threads)
+/// → run to the stop condition or the drain interrupt.
+fn runner_loop(
+    queue: &Arc<JobQueue>,
+    registry: &Arc<MetricsRegistry>,
+    pool: &Arc<WorkerPool>,
+    drain: &Arc<AtomicBool>,
+    state: &Path,
+) {
+    while let Some(job) = queue.claim() {
+        match run_job(&job, registry, pool, drain, state) {
+            Ok(JobEnd::Completed { steps, loss, reason }) => {
+                queue.mark_completed(job.id, steps, loss, reason);
+            }
+            Ok(JobEnd::Drained { steps, checkpoint }) => {
+                queue.mark_drained(job.id, steps, checkpoint);
+            }
+            Err(e) => {
+                eprintln!("[serve] job {} ({}) failed: {e}", job.id, job.name);
+                queue.mark_failed(job.id, e);
+            }
+        }
+    }
+}
+
+enum JobEnd {
+    Completed { steps: u64, loss: f64, reason: Option<crate::coordinator::StopReason> },
+    Drained { steps: u64, checkpoint: PathBuf },
+}
+
+fn run_job(
+    job: &crate::service::queue::Job,
+    registry: &Arc<MetricsRegistry>,
+    pool: &Arc<WorkerPool>,
+    drain: &Arc<AtomicBool>,
+    state: &Path,
+) -> Result<JobEnd, String> {
+    let mut spec = SessionSpec::new(job.config.clone());
+    if let Some(ck) = &job.resume_from {
+        spec = spec.resume_from(ck.clone());
+    }
+    let mut session = Session::build(spec).map_err(|e| e.to_string())?;
+    // All concurrent sessions fan onto the one shared pool instead of
+    // spinning up max_concurrent private pools.
+    session.install_shared_pool(Arc::clone(pool));
+    session.observe(Box::new(MetricsObserver::new(job.name.clone(), Arc::clone(registry))));
+    if let Ok(log) = std::fs::File::create(state.join("logs").join(format!("job-{}.log", job.id)))
+    {
+        session.observe(Box::new(VerboseObserver::to_sink(Box::new(log))));
+    }
+    let stop = session.stop_condition();
+    let outcome = session.run_until_interruptible(stop, &mut || {
+        drain.load(Ordering::Relaxed) || SIGNAL_DRAIN.load(Ordering::Relaxed)
+    });
+    match outcome {
+        RunOutcome::Stopped(reason) => {
+            let out = state.join("out").join(format!("{}.csv", job.name));
+            write_csv(&out, std::slice::from_ref(session.trace()))
+                .map_err(|e| format!("write {out:?}: {e}"))?;
+            Ok(JobEnd::Completed {
+                steps: session.steps_done(),
+                loss: session.trace().final_loss(),
+                reason: Some(reason),
+            })
+        }
+        RunOutcome::Interrupted => {
+            let ck = state.join("ckpt").join(format!("job-{}.ckpt", job.id));
+            session.save(&ck).map_err(|e| e.to_string())?;
+            Ok(JobEnd::Drained { steps: session.steps_done(), checkpoint: ck })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_state(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pdsgdm_daemon_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn serve_cfg(state: &Path) -> ServeConfig {
+        ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            max_concurrent: 2,
+            pool_threads: Some(2),
+            state_dir: state.display().to_string(),
+            spool_dir: None,
+            poll_ms: 10,
+            exit_when_idle: true,
+        }
+    }
+
+    const QUICK_JOB: &str = "\
+algorithm = \"pd-sgdm\"
+workers = 4
+steps = 60
+eval_every = 20
+
+[workload]
+kind = \"quadratic\"
+dim = 16
+heterogeneity = 1.0
+noise = 0.05
+
+[hyper]
+eta = 0.05
+";
+
+    #[test]
+    fn daemon_runs_submitted_jobs_to_completion_and_serves_http() {
+        let state = temp_state("basic");
+        let daemon = Daemon::new(serve_cfg(&state)).unwrap();
+        daemon.submit_toml(&format!("{QUICK_JOB}[job]\nname = \"alpha\"\n")).unwrap();
+        daemon.submit_toml(&format!("{QUICK_JOB}[job]\nname = \"beta\"\n")).unwrap();
+
+        // Scrape while running: move run() to a thread, poll the addr.
+        std::thread::scope(|scope| {
+            let handle = scope.spawn(|| daemon.run().unwrap());
+            let addr = loop {
+                if let Some(a) = daemon.http_addr() {
+                    break a;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            };
+            let (status, body) = http::get(addr, "/healthz").unwrap();
+            assert_eq!((status, body.as_str()), (200, "ok\n"));
+            handle.join().unwrap();
+        });
+
+        let snap = daemon.queue().snapshot();
+        assert_eq!(snap.len(), 2);
+        for j in &snap {
+            assert_eq!(j.state, JobState::Completed, "{}: {:?}", j.name, j.error);
+            assert_eq!(j.steps_done, 60);
+            assert!(j.final_loss.unwrap().is_finite());
+        }
+        assert!(state.join("out/alpha.csv").is_file());
+        assert!(state.join("out/beta.csv").is_file());
+        assert!(state.join("logs/job-1.log").metadata().unwrap().len() > 0);
+        let text = daemon.registry().render();
+        assert!(text.contains("pdsgdm_job_steps_total{job=\"alpha\"} 60"), "{text}");
+        std::fs::remove_dir_all(&state).unwrap();
+    }
+
+    #[test]
+    fn failed_jobs_are_marked_not_fatal() {
+        let state = temp_state("fail");
+        let daemon = Daemon::new(serve_cfg(&state)).unwrap();
+        // Transformer without artifacts fails at Session::build.
+        daemon
+            .submit_toml(
+                "algorithm = \"pd-sgdm\"\nsteps = 5\n\
+                 [workload]\nkind = \"transformer\"\nmodel = \"tiny\"\n\
+                 artifacts_dir = \"/definitely/not/here\"\n",
+            )
+            .unwrap();
+        daemon.submit_toml(QUICK_JOB).unwrap();
+        daemon.run().unwrap();
+        let snap = daemon.queue().snapshot();
+        assert_eq!(snap[0].state, JobState::Failed);
+        assert!(snap[0].error.as_deref().unwrap().contains("make artifacts"));
+        assert_eq!(snap[1].state, JobState::Completed);
+        std::fs::remove_dir_all(&state).unwrap();
+    }
+
+    #[test]
+    fn drain_checkpoints_running_jobs_and_restart_resumes_bit_identically() {
+        let state = temp_state("drain");
+        // Reference: the same job run uninterrupted in a daemon.
+        let ref_state = temp_state("drain_ref");
+        let job = format!(
+            "{}[job]\nname = \"long\"\n",
+            QUICK_JOB.replace("steps = 60", "steps = 6000").replace("eval_every = 20", "eval_every = 1000")
+        );
+        let reference = Daemon::new(serve_cfg(&ref_state)).unwrap();
+        reference.submit_toml(&job).unwrap();
+        reference.run().unwrap();
+        let want = std::fs::read_to_string(ref_state.join("out/long.csv")).unwrap();
+
+        // Interrupted: drain once the job has made some progress.
+        let daemon = Daemon::new(serve_cfg(&state)).unwrap();
+        daemon.submit_toml(&job).unwrap();
+        std::thread::scope(|scope| {
+            let handle = scope.spawn(|| daemon.run().unwrap());
+            while daemon.registry().steps_total("long") == 0 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            daemon.request_drain();
+            handle.join().unwrap();
+        });
+        let snap = daemon.queue().snapshot();
+        // The drain raced job completion; only assert the interesting
+        // path when the interrupt landed mid-run.
+        if snap[0].state == JobState::Drained {
+            assert!(snap[0].checkpoint.as_ref().unwrap().is_file());
+            assert!(snap[0].steps_done < 6000);
+            assert!(state.join("drain.json").is_file());
+
+            // Restart on the same state dir: recover() resumes the job.
+            let daemon2 = Daemon::new(serve_cfg(&state)).unwrap();
+            daemon2.run().unwrap();
+            assert!(!state.join("drain.json").is_file(), "manifest consumed");
+            let snap2 = daemon2.queue().snapshot();
+            assert_eq!(snap2[0].state, JobState::Completed, "{:?}", snap2[0].error);
+            assert_eq!(snap2[0].steps_done, 6000);
+        }
+        let got = std::fs::read_to_string(state.join("out/long.csv")).unwrap();
+        assert_eq!(want, got, "resumed trace must match the uninterrupted run");
+        std::fs::remove_dir_all(&state).unwrap();
+        std::fs::remove_dir_all(&ref_state).unwrap();
+    }
+
+    #[test]
+    fn spool_directory_feeds_the_queue() {
+        let state = temp_state("spool");
+        let spool = state.join("inbox");
+        std::fs::create_dir_all(&spool).unwrap();
+        std::fs::write(spool.join("a.toml"), QUICK_JOB).unwrap();
+        std::fs::write(spool.join("b.toml"), "definitely not toml = = =").unwrap();
+        let mut cfg = serve_cfg(&state);
+        cfg.spool_dir = Some(spool.display().to_string());
+        let daemon = Daemon::new(cfg).unwrap();
+        // Seed one job so exit_when_idle doesn't win the race against
+        // the first spool scan (the scan runs before the idle check).
+        daemon.submit_toml(QUICK_JOB).unwrap();
+        daemon.run().unwrap();
+        assert!(spool.join("a.toml.submitted").is_file());
+        assert!(spool.join("b.toml.rejected").is_file());
+        let snap = daemon.queue().snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap.iter().all(|j| j.state == JobState::Completed));
+        std::fs::remove_dir_all(&state).unwrap();
+    }
+}

@@ -1,0 +1,243 @@
+//! Minimal HTTP/1.1 server on `std::net::TcpListener` — enough to
+//! serve `/metrics` and `/jobs` to a scraper, nothing more. GET only,
+//! `Connection: close`, one short-lived handler thread per connection.
+//! No external crates: this repo is offline by design.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A response the route handler hands back.
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Self { status, content_type: "text/plain; charset=utf-8", body: body.into() }
+    }
+
+    pub fn json(body: impl Into<String>) -> Self {
+        Self { status: 200, content_type: "application/json", body: body.into() }
+    }
+
+    /// Prometheus text exposition content type.
+    pub fn metrics(body: impl Into<String>) -> Self {
+        Self {
+            status: 200,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: body.into(),
+        }
+    }
+}
+
+/// Route handler: path (query string already stripped) → response, or
+/// `None` for 404.
+pub type Handler = Arc<dyn Fn(&str) -> Option<Response> + Send + Sync>;
+
+/// Background accept loop bound to one socket. Dropping the server (or
+/// calling [`HttpServer::shutdown`]) stops the loop.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `bind` (e.g. `127.0.0.1:9090`; port 0 = ephemeral) and
+    /// start accepting. The listener is non-blocking so the loop can
+    /// poll the stop flag between connections.
+    pub fn spawn(bind: &str, handler: Handler) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("pdsgdm-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let handler = Arc::clone(&handler);
+                            // One short-lived thread per connection; the
+                            // scrape endpoints answer in microseconds, so
+                            // there's no pool to manage.
+                            let _ = std::thread::Builder::new()
+                                .name("pdsgdm-http-conn".into())
+                                .spawn(move || handle_conn(stream, &handler));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            })
+            .expect("spawn http accept thread");
+        Ok(Self { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join it. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, handler: &Handler) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+
+    // Read until the end of the request head; 8 KiB is plenty for a
+    // scraper's GET and bounds a hostile sender.
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    let head_end = loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if let Some(pos) = find_head_end(&buf) {
+                    break pos;
+                }
+                if buf.len() > 8192 {
+                    respond(&mut stream, &Response::text(431, "request head too large\n"));
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]);
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next()) {
+        (Some(m), Some(t)) => (m, t),
+        _ => {
+            respond(&mut stream, &Response::text(400, "bad request\n"));
+            return;
+        }
+    };
+    if method != "GET" {
+        respond(&mut stream, &Response::text(405, "method not allowed; GET only\n"));
+        return;
+    }
+    let path = target.split('?').next().unwrap_or(target);
+    match handler(path) {
+        Some(r) => respond(&mut stream, &r),
+        None => respond(&mut stream, &Response::text(404, "not found\n")),
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn respond(stream: &mut TcpStream, r: &Response) {
+    let reason = match r.status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        431 => "Request Header Fields Too Large",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        r.status,
+        reason,
+        r.content_type,
+        r.body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(r.body.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Blocking GET against a local address; returns `(status, body)`.
+/// Shared by the daemon's tests and the metrics exposition test — and
+/// small enough to double as documentation of the wire format.
+pub fn get(addr: SocketAddr, path: &str) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let head_end = find_head_end(text.as_bytes())
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "no header end"))?;
+    let status = text
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "no status"))?;
+    Ok((status, text[head_end + 4..].to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_server() -> HttpServer {
+        let handler: Handler = Arc::new(|path| match path {
+            "/hello" => Some(Response::text(200, "hi\n")),
+            "/json" => Some(Response::json("{\"ok\":true}")),
+            _ => None,
+        });
+        HttpServer::spawn("127.0.0.1:0", handler).unwrap()
+    }
+
+    #[test]
+    fn serves_known_routes_and_404s_unknown() {
+        let server = test_server();
+        let (status, body) = get(server.addr(), "/hello").unwrap();
+        assert_eq!((status, body.as_str()), (200, "hi\n"));
+        let (status, body) = get(server.addr(), "/json").unwrap();
+        assert_eq!((status, body.as_str()), (200, "{\"ok\":true}"));
+        let (status, _) = get(server.addr(), "/nope").unwrap();
+        assert_eq!(status, 404);
+        // Query strings are stripped before routing.
+        let (status, _) = get(server.addr(), "/hello?x=1").unwrap();
+        assert_eq!(status, 200);
+    }
+
+    #[test]
+    fn rejects_non_get_methods() {
+        let server = test_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        write!(stream, "POST /hello HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 405"), "{raw}");
+    }
+
+    #[test]
+    fn shutdown_stops_accepting() {
+        let mut server = test_server();
+        let addr = server.addr();
+        server.shutdown();
+        // The listener is dropped with the accept loop; new connections
+        // must fail (or at minimum never be served).
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(get(addr, "/hello").is_err());
+    }
+}

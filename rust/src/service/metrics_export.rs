@@ -1,0 +1,441 @@
+//! Observer-fed metrics registry + Prometheus text exposition.
+//!
+//! The daemon attaches one [`MetricsObserver`] per running session; the
+//! observer forwards the existing [`crate::coordinator::Observer`]
+//! callbacks into a shared [`MetricsRegistry`]. Nothing else writes
+//! metrics — the exporter sees exactly what any other observer sees, so
+//! the numbers can't drift from the trace.
+//!
+//! [`MetricsRegistry::render`] emits Prometheus text exposition format
+//! 0.0.4: one `# HELP`/`# TYPE` pair per metric family, then one sample
+//! per job label. Families render in a fixed order and jobs in
+//! `BTreeMap` order, so scrapes are deterministic (golden-testable).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::comm::FaultCounters;
+use crate::coordinator::Observer;
+use crate::metrics::TracePoint;
+
+/// Per-job counters and gauges, all fed by observer callbacks.
+#[derive(Clone, Debug, Default)]
+struct JobMetrics {
+    steps_total: u64,
+    comm_rounds_total: u64,
+    wire_bytes_total: u64,
+    evals_total: u64,
+    last_loss: Option<f64>,
+    consensus_error: Option<f64>,
+    sim_seconds: f64,
+    faults: Option<FaultCounters>,
+}
+
+struct Inner {
+    jobs: BTreeMap<String, JobMetrics>,
+    /// `pdsgdm_jobs_state{state=...}` gauges, set by the daemon from
+    /// queue snapshots (the one aggregate not derivable per-job).
+    states: BTreeMap<&'static str, usize>,
+}
+
+/// Shared metrics store: one per daemon, behind an `Arc`.
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+    /// Daemon start, for uptime and per-second rate gauges.
+    started: Instant,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner { jobs: BTreeMap::new(), states: BTreeMap::new() }),
+            started: Instant::now(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Ensure `job` exists (so a queued-then-drained job still exports
+    /// zeroed counters instead of vanishing).
+    pub fn touch(&self, job: &str) {
+        self.lock().jobs.entry(job.to_string()).or_default();
+    }
+
+    /// Update the `pdsgdm_jobs_state` gauges from a queue snapshot.
+    pub fn set_state_counts(&self, counts: &[(&'static str, usize)]) {
+        let mut inner = self.lock();
+        for (state, n) in counts {
+            inner.states.insert(state, *n);
+        }
+    }
+
+    /// Total steps recorded for `job` — used by tests and the daemon's
+    /// drain heuristics; mirrors `pdsgdm_job_steps_total`.
+    pub fn steps_total(&self, job: &str) -> u64 {
+        self.lock().jobs.get(job).map_or(0, |j| j.steps_total)
+    }
+
+    fn with_job(&self, job: &str, f: impl FnOnce(&mut JobMetrics)) {
+        let mut inner = self.lock();
+        f(inner.jobs.entry(job.to_string()).or_default());
+    }
+
+    /// Render the whole registry as Prometheus text exposition 0.0.4.
+    pub fn render(&self) -> String {
+        let inner = self.lock();
+        let uptime = self.started.elapsed().as_secs_f64();
+        let mut out = String::with_capacity(4096);
+
+        // Escape a label value per the exposition format: backslash,
+        // double-quote and newline.
+        fn esc(v: &str) -> String {
+            v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+        }
+        // One family: HELP/TYPE once, then every sample.
+        fn family(
+            out: &mut String,
+            name: &str,
+            kind: &str,
+            help: &str,
+            samples: &[(String, f64)],
+        ) {
+            if samples.is_empty() {
+                return;
+            }
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+            for (labels, v) in samples {
+                // Counters/gauges are finite by construction; NaN would
+                // corrupt the exposition, so skip defensively.
+                if v.is_finite() {
+                    out.push_str(&format!("{name}{labels} {v}\n"));
+                }
+            }
+        }
+        let job_label = |j: &str| format!("{{job=\"{}\"}}", esc(j));
+
+        family(
+            &mut out,
+            "pdsgdm_daemon_up",
+            "gauge",
+            "1 while the training service is alive.",
+            &[(String::new(), 1.0)],
+        );
+        family(
+            &mut out,
+            "pdsgdm_daemon_uptime_seconds",
+            "gauge",
+            "Seconds since the daemon started.",
+            &[(String::new(), uptime)],
+        );
+        let states: Vec<(String, f64)> = inner
+            .states
+            .iter()
+            .map(|(s, n)| (format!("{{state=\"{s}\"}}"), *n as f64))
+            .collect();
+        family(
+            &mut out,
+            "pdsgdm_jobs_state",
+            "gauge",
+            "Jobs currently in each lifecycle state.",
+            &states,
+        );
+
+        let collect = |f: &dyn Fn(&JobMetrics) -> Option<f64>| -> Vec<(String, f64)> {
+            inner
+                .jobs
+                .iter()
+                .filter_map(|(name, m)| f(m).map(|v| (job_label(name), v)))
+                .collect()
+        };
+
+        family(
+            &mut out,
+            "pdsgdm_job_steps_total",
+            "counter",
+            "Global training iterations completed by this job.",
+            &collect(&|m| Some(m.steps_total as f64)),
+        );
+        family(
+            &mut out,
+            "pdsgdm_job_comm_rounds_total",
+            "counter",
+            "Gossip/communication rounds completed by this job.",
+            &collect(&|m| Some(m.comm_rounds_total as f64)),
+        );
+        family(
+            &mut out,
+            "pdsgdm_job_wire_bytes_total",
+            "counter",
+            "Wire bytes moved by this job's communication rounds.",
+            &collect(&|m| Some(m.wire_bytes_total as f64)),
+        );
+        family(
+            &mut out,
+            "pdsgdm_job_evals_total",
+            "counter",
+            "Evaluation points recorded by this job.",
+            &collect(&|m| Some(m.evals_total as f64)),
+        );
+        family(
+            &mut out,
+            "pdsgdm_job_last_loss",
+            "gauge",
+            "Global loss at this job's most recent evaluation.",
+            &collect(&|m| m.last_loss),
+        );
+        family(
+            &mut out,
+            "pdsgdm_job_consensus_error",
+            "gauge",
+            "Consensus error at this job's most recent evaluation.",
+            &collect(&|m| m.consensus_error),
+        );
+        family(
+            &mut out,
+            "pdsgdm_job_sim_seconds",
+            "gauge",
+            "Simulated alpha-beta wall-clock reached by this job.",
+            &collect(&|m| Some(m.sim_seconds)),
+        );
+        family(
+            &mut out,
+            "pdsgdm_job_rounds_per_second",
+            "gauge",
+            "Communication rounds per real second since daemon start.",
+            &collect(&|m| {
+                (uptime > 0.0).then(|| m.comm_rounds_total as f64 / uptime)
+            }),
+        );
+        family(
+            &mut out,
+            "pdsgdm_job_wire_bytes_per_second",
+            "gauge",
+            "Wire bytes per real second since daemon start.",
+            &collect(&|m| (uptime > 0.0).then(|| m.wire_bytes_total as f64 / uptime)),
+        );
+        // Fault counters, split dense vs encoded via a `kind` label.
+        let fault_samples = |f: &dyn Fn(&FaultCounters) -> (u64, u64)| -> Vec<(String, f64)> {
+            inner
+                .jobs
+                .iter()
+                .filter_map(|(name, m)| m.faults.as_ref().map(|c| (name, f(c))))
+                .flat_map(|(name, (dense, encoded))| {
+                    [
+                        (
+                            format!("{{job=\"{}\",kind=\"dense\"}}", esc(name)),
+                            dense as f64,
+                        ),
+                        (
+                            format!("{{job=\"{}\",kind=\"encoded\"}}", esc(name)),
+                            encoded as f64,
+                        ),
+                    ]
+                })
+                .collect()
+        };
+        family(
+            &mut out,
+            "pdsgdm_job_dropped_messages_total",
+            "counter",
+            "Messages dropped by the fault plan (encoded = compressed-gossip subset).",
+            &fault_samples(&|c| (c.dropped, c.dropped_encoded)),
+        );
+        family(
+            &mut out,
+            "pdsgdm_job_delayed_messages_total",
+            "counter",
+            "Messages delayed by the fault plan (encoded = compressed-gossip subset).",
+            &fault_samples(&|c| (c.delayed_total, c.delayed_encoded)),
+        );
+        out
+    }
+}
+
+/// Bridges one session's [`Observer`] callbacks into the shared
+/// registry. The session knows nothing about metrics; the daemon
+/// attaches this like any other observer.
+pub struct MetricsObserver {
+    job: String,
+    registry: Arc<MetricsRegistry>,
+}
+
+impl MetricsObserver {
+    pub fn new(job: impl Into<String>, registry: Arc<MetricsRegistry>) -> Self {
+        let job = job.into();
+        registry.touch(&job);
+        Self { job, registry }
+    }
+}
+
+impl Observer for MetricsObserver {
+    fn on_step(&mut self, _t: u64, _stats: &crate::algorithms::StepStats) {
+        self.registry.with_job(&self.job, |m| m.steps_total += 1);
+    }
+
+    fn on_comm_round(&mut self, _t: u64, bytes: u64, _round_seconds: f64) {
+        self.registry.with_job(&self.job, |m| {
+            m.comm_rounds_total += 1;
+            m.wire_bytes_total += bytes;
+        });
+    }
+
+    fn on_eval(&mut self, _label: &str, p: &TracePoint) {
+        self.registry.with_job(&self.job, |m| {
+            m.evals_total += 1;
+            m.last_loss = Some(p.loss);
+            m.consensus_error = Some(p.consensus);
+            m.sim_seconds = p.sim_seconds;
+        });
+    }
+
+    fn on_fault_counters(&mut self, _step: u64, counters: &FaultCounters) {
+        // The plan's counters are already cumulative; store the latest.
+        self.registry.with_job(&self.job, |m| m.faults = Some(*counters));
+    }
+}
+
+/// Minimal Prometheus text-format checks shared by unit tests and the
+/// exposition golden test: every non-comment line is
+/// `name[{labels}] value`, every sample's family has HELP+TYPE above
+/// it, and no family is declared twice.
+pub fn validate_exposition(text: &str) -> Result<(), String> {
+    let mut declared: BTreeMap<String, String> = BTreeMap::new();
+    for (no, line) in text.lines().enumerate() {
+        let err = |msg: &str| Err(format!("line {}: {msg}: {line}", no + 1));
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let kw = parts.next().unwrap_or("");
+            let name = parts.next().unwrap_or("");
+            if !matches!(kw, "HELP" | "TYPE") {
+                return err("unknown comment keyword");
+            }
+            if name.is_empty() {
+                return err("missing metric family name");
+            }
+            if kw == "TYPE" {
+                let t = parts.next().unwrap_or("");
+                if !matches!(t, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                    return err("bad metric type");
+                }
+                if declared.insert(name.to_string(), t.to_string()).is_some() {
+                    return err("duplicate metric family");
+                }
+            }
+            continue;
+        }
+        // Sample line: name or name{...}, then exactly one value token.
+        let name_end = line.find(['{', ' ']).ok_or_else(|| format!("line {}: no value: {line}", no + 1))?;
+        let name = &line[..name_end];
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            return err("bad metric name");
+        }
+        if !declared.contains_key(name) {
+            return err("sample before HELP/TYPE declaration");
+        }
+        let rest = &line[name_end..];
+        let value_part = if let Some(stripped) = rest.strip_prefix('{') {
+            let close = stripped.find('}').ok_or_else(|| format!("line {}: unclosed labels: {line}", no + 1))?;
+            &stripped[close + 1..]
+        } else {
+            rest
+        };
+        let value = value_part.trim();
+        if value.parse::<f64>().is_err() {
+            return err("value is not a number");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(reg: &Arc<MetricsRegistry>, job: &str, steps: u64, bytes: u64) {
+        let mut obs = MetricsObserver::new(job, Arc::clone(reg));
+        for t in 0..steps {
+            obs.on_step(t, &crate::algorithms::StepStats::default());
+            obs.on_comm_round(t, bytes, 0.5);
+        }
+        obs.on_eval(
+            job,
+            &TracePoint {
+                step: steps,
+                loss: 0.25,
+                accuracy: 0.9,
+                comm_mb: 1.0,
+                consensus: 1e-3,
+                grad_norm_sq: 0.0,
+                sim_seconds: 2.0,
+            },
+        );
+    }
+
+    #[test]
+    fn observer_feeds_counters_and_render_is_valid_exposition() {
+        let reg = Arc::new(MetricsRegistry::new());
+        feed(&reg, "job-a", 5, 100);
+        feed(&reg, "job-b", 3, 40);
+        reg.set_state_counts(&[("running", 2), ("queued", 0)]);
+        assert_eq!(reg.steps_total("job-a"), 5);
+        let text = reg.render();
+        validate_exposition(&text).unwrap();
+        assert!(text.contains("pdsgdm_job_steps_total{job=\"job-a\"} 5"), "{text}");
+        assert!(text.contains("pdsgdm_job_wire_bytes_total{job=\"job-b\"} 120"), "{text}");
+        assert!(text.contains("pdsgdm_job_last_loss{job=\"job-a\"} 0.25"), "{text}");
+        assert!(text.contains("pdsgdm_jobs_state{state=\"running\"} 2"), "{text}");
+        assert!(text.contains("pdsgdm_daemon_up 1"), "{text}");
+    }
+
+    #[test]
+    fn fault_counters_export_dense_and_encoded_kinds() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let mut obs = MetricsObserver::new("f", Arc::clone(&reg));
+        obs.on_fault_counters(
+            10,
+            &FaultCounters { dropped: 7, dropped_encoded: 3, delayed_total: 5, delayed_encoded: 1 },
+        );
+        let text = reg.render();
+        validate_exposition(&text).unwrap();
+        assert!(text.contains("pdsgdm_job_dropped_messages_total{job=\"f\",kind=\"dense\"} 7"));
+        assert!(text.contains("pdsgdm_job_dropped_messages_total{job=\"f\",kind=\"encoded\"} 3"));
+        assert!(text.contains("pdsgdm_job_delayed_messages_total{job=\"f\",kind=\"dense\"} 5"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Arc::new(MetricsRegistry::new());
+        reg.touch("we\"ird\\job");
+        let text = reg.render();
+        validate_exposition(&text).unwrap();
+        assert!(text.contains("job=\"we\\\"ird\\\\job\""), "{text}");
+    }
+
+    #[test]
+    fn validator_rejects_malformed_expositions() {
+        assert!(validate_exposition("pdsgdm_x 1").is_err(), "sample before TYPE");
+        assert!(validate_exposition(
+            "# HELP a h\n# TYPE a counter\n# HELP a h\n# TYPE a counter\na 1"
+        )
+        .is_err());
+        assert!(validate_exposition("# HELP a h\n# TYPE a counter\na one").is_err());
+        assert!(validate_exposition("# TYPE a wat\na 1").is_err());
+        assert!(validate_exposition("# HELP a h\n# TYPE a gauge\na{x=\"y\" 1").is_err());
+    }
+}

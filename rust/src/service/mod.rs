@@ -1,0 +1,32 @@
+//! Training service daemon: a long-lived `pdsgdm serve` process that
+//! accepts `SessionSpec`-shaped job descriptions, multiplexes N
+//! concurrent [`crate::coordinator::Session`]s onto ONE shared
+//! [`crate::engine::WorkerPool`], exports Prometheus-text metrics over
+//! a hand-rolled HTTP/1.1 listener, and drains gracefully on SIGTERM —
+//! every running job is checkpointed to the versioned `PDSGDM02` format
+//! and resumed bit-identically on restart.
+//!
+//! Layout:
+//!
+//! ```text
+//! queue          FIFO/priority job queue + lifecycle states
+//! metrics_export Observer-fed registry -> Prometheus exposition text
+//! http           minimal offline HTTP/1.1 server (std::net only)
+//! daemon         the serve loop: runners, signals, drain manifest
+//! ```
+//!
+//! Everything is offline and dependency-free: HTTP sits directly on
+//! `std::net::TcpListener`, JSON comes from [`crate::json`], TOML jobs
+//! reuse [`crate::config::parse_toml`], and metrics flow ONLY through
+//! the existing [`crate::coordinator::Observer`] hooks — the daemon
+//! never reaches into session internals.
+
+pub mod daemon;
+pub mod http;
+pub mod metrics_export;
+pub mod queue;
+
+pub use daemon::Daemon;
+pub use http::{HttpServer, Response};
+pub use metrics_export::{MetricsObserver, MetricsRegistry};
+pub use queue::{Job, JobQueue, JobState};

@@ -1,0 +1,329 @@
+//! FIFO/priority job queue for the training service.
+//!
+//! A job is an [`crate::coordinator::SessionSpec`]-shaped description:
+//! an [`ExperimentConfig`] plus optional `[job]` metadata (`name`,
+//! `priority`) and an optional checkpoint to resume from. Runner
+//! threads block on [`JobQueue::claim`]; the queue hands out the
+//! highest-priority (ties: lowest id, i.e. submission order) queued
+//! job. All state lives behind one mutex — the queue is the single
+//! source of truth the `/jobs` endpoint, the metrics aggregates, and
+//! the drain manifest all read.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Condvar, Mutex};
+
+use crate::config::{parse_toml, ExperimentConfig};
+use crate::coordinator::StopReason;
+
+/// Lifecycle of a job inside the daemon.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting for a runner slot.
+    Queued,
+    /// A runner thread owns it and is stepping its session.
+    Running,
+    /// Ran to its stop condition; results are on disk.
+    Completed,
+    /// The session errored (message on [`Job::error`]).
+    Failed,
+    /// Interrupted by drain; a `PDSGDM02` checkpoint holds its state.
+    Drained,
+}
+
+impl JobState {
+    /// Stable lowercase name used in `/jobs` JSON and metric labels.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+            JobState::Failed => "failed",
+            JobState::Drained => "drained",
+        }
+    }
+
+    pub const ALL: [JobState; 5] = [
+        JobState::Queued,
+        JobState::Running,
+        JobState::Completed,
+        JobState::Failed,
+        JobState::Drained,
+    ];
+}
+
+/// One submitted job and everything the daemon knows about it.
+#[derive(Clone, Debug)]
+pub struct Job {
+    /// Dense id in submission order (1-based; doubles as FIFO key).
+    pub id: u64,
+    /// Label for metrics/logs: `[job] name`, else `job-<id>`.
+    pub name: String,
+    /// Higher claims first; equal priorities run in submission order.
+    pub priority: i64,
+    pub config: ExperimentConfig,
+    /// Resume this checkpoint before stepping (drain/restart path).
+    pub resume_from: Option<PathBuf>,
+    /// The spooled TOML this job was parsed from, for the manifest.
+    pub source_path: Option<PathBuf>,
+    pub state: JobState,
+    /// Failure message when `state == Failed`.
+    pub error: Option<String>,
+    /// Steps completed at the last state transition.
+    pub steps_done: u64,
+    pub final_loss: Option<f64>,
+    pub stop_reason: Option<StopReason>,
+    /// Checkpoint written when this job was drained.
+    pub checkpoint: Option<PathBuf>,
+}
+
+/// A parsed job file: the experiment config plus `[job]` metadata.
+pub struct JobSpec {
+    pub name: Option<String>,
+    pub priority: i64,
+    pub config: ExperimentConfig,
+}
+
+/// Parse a job TOML: a normal experiment config with an optional
+/// `[job]` section (`name`, `priority`). The experiment parser already
+/// whitelists the `job.*` keys, so one strict parse validates both.
+pub fn parse_job_toml(src: &str) -> Result<JobSpec, String> {
+    let config = ExperimentConfig::from_toml_str(src)?;
+    let doc = parse_toml(src)?;
+    let name = doc
+        .get("job.name")
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| "job.name must be a string".to_string())
+        })
+        .transpose()?;
+    let priority = doc
+        .get("job.priority")
+        .map(|v| v.as_i64().ok_or_else(|| "job.priority must be an integer".to_string()))
+        .transpose()?
+        .unwrap_or(0);
+    Ok(JobSpec { name, priority, config })
+}
+
+struct Inner {
+    jobs: BTreeMap<u64, Job>,
+    next_id: u64,
+    /// No more claims after close: runners see `None` and exit.
+    closed: bool,
+}
+
+/// Thread-safe priority queue + job table. Cheap to share behind an
+/// `Arc`; every accessor takes the one lock briefly.
+pub struct JobQueue {
+    inner: Mutex<Inner>,
+    /// Signals runners blocked in [`JobQueue::claim`].
+    ready: Condvar,
+}
+
+impl Default for JobQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JobQueue {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner { jobs: BTreeMap::new(), next_id: 1, closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // A runner panicking while holding the lock must not wedge the
+        // daemon; the job table stays consistent (states are written in
+        // single operations).
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Enqueue a job; returns its id. `name` defaults to `job-<id>`.
+    pub fn submit(&self, spec: JobSpec, resume_from: Option<PathBuf>, source_path: Option<PathBuf>) -> u64 {
+        let mut inner = self.lock();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let name = spec.name.unwrap_or_else(|| format!("job-{id}"));
+        inner.jobs.insert(
+            id,
+            Job {
+                id,
+                name,
+                priority: spec.priority,
+                config: spec.config,
+                resume_from,
+                source_path,
+                state: JobState::Queued,
+                error: None,
+                steps_done: 0,
+                final_loss: None,
+                stop_reason: None,
+                checkpoint: None,
+            },
+        );
+        self.ready.notify_one();
+        id
+    }
+
+    /// Block until a queued job is available (highest priority, then
+    /// submission order), mark it running, and return a clone. Returns
+    /// `None` once the queue is closed — the runner's exit signal.
+    pub fn claim(&self) -> Option<Job> {
+        let mut inner = self.lock();
+        loop {
+            if let Some(id) = inner
+                .jobs
+                .values()
+                .filter(|j| j.state == JobState::Queued)
+                .max_by_key(|j| (j.priority, std::cmp::Reverse(j.id)))
+                .map(|j| j.id)
+            {
+                let job = inner.jobs.get_mut(&id).expect("id just selected");
+                job.state = JobState::Running;
+                return Some(job.clone());
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self
+                .ready
+                .wait(inner)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+        }
+    }
+
+    /// Record where the spooled canonical copy of a job's TOML lives
+    /// (the id is needed to name the copy, so this runs post-submit).
+    pub fn set_source_path(&self, id: u64, path: PathBuf) {
+        if let Some(j) = self.lock().jobs.get_mut(&id) {
+            j.source_path = Some(path);
+        }
+    }
+
+    /// Stop handing out jobs and wake every blocked runner.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn mark_completed(&self, id: u64, steps: u64, loss: f64, reason: Option<StopReason>) {
+        let mut inner = self.lock();
+        if let Some(j) = inner.jobs.get_mut(&id) {
+            j.state = JobState::Completed;
+            j.steps_done = steps;
+            j.final_loss = Some(loss);
+            j.stop_reason = reason;
+        }
+    }
+
+    pub fn mark_failed(&self, id: u64, error: String) {
+        let mut inner = self.lock();
+        if let Some(j) = inner.jobs.get_mut(&id) {
+            j.state = JobState::Failed;
+            j.error = Some(error);
+        }
+    }
+
+    pub fn mark_drained(&self, id: u64, steps: u64, checkpoint: PathBuf) {
+        let mut inner = self.lock();
+        if let Some(j) = inner.jobs.get_mut(&id) {
+            j.state = JobState::Drained;
+            j.steps_done = steps;
+            j.checkpoint = Some(checkpoint);
+        }
+    }
+
+    /// All jobs in id (submission) order — the `/jobs` endpoint and the
+    /// drain manifest render from this snapshot.
+    pub fn snapshot(&self) -> Vec<Job> {
+        self.lock().jobs.values().cloned().collect()
+    }
+
+    /// `(queued, running)` counts for the idle check and aggregates.
+    pub fn active_counts(&self) -> (usize, usize) {
+        let inner = self.lock();
+        let queued = inner.jobs.values().filter(|j| j.state == JobState::Queued).count();
+        let running = inner.jobs.values().filter(|j| j.state == JobState::Running).count();
+        (queued, running)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, priority: i64) -> JobSpec {
+        JobSpec {
+            name: Some(name.into()),
+            priority,
+            config: ExperimentConfig::default(),
+        }
+    }
+
+    #[test]
+    fn claims_by_priority_then_submission_order() {
+        let q = JobQueue::new();
+        q.submit(spec("low-a", 0), None, None);
+        q.submit(spec("high", 5), None, None);
+        q.submit(spec("low-b", 0), None, None);
+        q.close(); // claims still drain the queue after close
+        let order: Vec<String> = std::iter::from_fn(|| q.claim().map(|j| j.name)).collect();
+        assert_eq!(order, ["high", "low-a", "low-b"]);
+        assert!(q.claim().is_none(), "closed and empty");
+    }
+
+    #[test]
+    fn claim_blocks_until_submit_and_close_releases() {
+        use std::sync::Arc;
+        let q = Arc::new(JobQueue::new());
+        let q2 = Arc::clone(&q);
+        let claimer = std::thread::spawn(move || q2.claim().map(|j| j.name));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.submit(spec("late", 0), None, None);
+        assert_eq!(claimer.join().unwrap().as_deref(), Some("late"));
+
+        let q3 = Arc::clone(&q);
+        let waiter = std::thread::spawn(move || q3.claim());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(waiter.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn lifecycle_marks_update_the_snapshot() {
+        let q = JobQueue::new();
+        let a = q.submit(spec("a", 0), None, None);
+        let b = q.submit(spec("b", 0), None, None);
+        let claimed = q.claim().unwrap();
+        assert_eq!(claimed.id, a);
+        q.mark_completed(a, 60, 0.125, Some(StopReason::StepLimit));
+        q.mark_drained(b, 0, PathBuf::from("/tmp/b.ckpt"));
+        let snap = q.snapshot();
+        assert_eq!(snap[0].state, JobState::Completed);
+        assert_eq!(snap[0].final_loss, Some(0.125));
+        assert_eq!(snap[1].state, JobState::Drained);
+        assert_eq!(snap[1].checkpoint.as_deref(), Some(std::path::Path::new("/tmp/b.ckpt")));
+        assert_eq!(q.active_counts(), (0, 0));
+    }
+
+    #[test]
+    fn job_toml_round_trips_name_and_priority() {
+        let s = parse_job_toml(
+            "algorithm = \"pd-sgdm\"\nsteps = 10\n[job]\nname = \"mlp-a\"\npriority = 3",
+        )
+        .unwrap();
+        assert_eq!(s.name.as_deref(), Some("mlp-a"));
+        assert_eq!(s.priority, 3);
+        assert_eq!(s.config.steps, 10);
+        // defaults
+        let s = parse_job_toml("algorithm = \"pd-sgdm\"").unwrap();
+        assert_eq!(s.name, None);
+        assert_eq!(s.priority, 0);
+        // bad types surface as errors, not defaults
+        assert!(parse_job_toml("[job]\npriority = \"high\"").is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Integration tests for the training service: concurrent jobs on one
+//! shared pool, the Prometheus `/metrics` + JSON `/jobs` endpoints over
+//! real TCP, and checkpoint-loading robustness (truncation/garbage
+//! fuzz) backing the daemon's drain/resume path.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use pdsgdm::config::{ExperimentConfig, ServeConfig};
+use pdsgdm::coordinator::{Session, SessionSpec, StopCondition};
+use pdsgdm::json::Json;
+use pdsgdm::service::metrics_export::validate_exposition;
+use pdsgdm::service::queue::JobState;
+use pdsgdm::service::{http, Daemon};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "pdsgdm_svc_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A quadratic job big enough to still be running when the test
+/// scrapes mid-flight (tens of thousands of cheap steps).
+fn job_toml(name: &str, steps: u64) -> String {
+    format!(
+        "algorithm = \"pd-sgdm\"\nworkers = 4\nsteps = {steps}\neval_every = 2000\n\
+         [workload]\nkind = \"quadratic\"\ndim = 16\nheterogeneity = 1.0\nnoise = 0.05\n\
+         [hyper]\neta = 0.05\n\
+         [job]\nname = \"{name}\"\n"
+    )
+}
+
+/// Extract the value of an exposition sample line by its exact prefix,
+/// e.g. `pdsgdm_job_steps_total{job="svc-a"}`.
+fn sample(text: &str, prefix: &str) -> Option<f64> {
+    text.lines()
+        .find_map(|l| l.strip_prefix(prefix).map(|v| v.trim().parse().expect("numeric sample")))
+}
+
+#[test]
+fn concurrent_jobs_export_valid_monotone_metrics_over_http() {
+    let state = temp_dir("metrics");
+    let daemon = Daemon::new(ServeConfig {
+        listen: "127.0.0.1:0".into(),
+        max_concurrent: 2,
+        pool_threads: Some(2),
+        state_dir: state.display().to_string(),
+        spool_dir: None,
+        poll_ms: 10,
+        exit_when_idle: true,
+    })
+    .unwrap();
+    const STEPS: u64 = 40_000;
+    daemon.submit_toml(&job_toml("svc-a", STEPS)).unwrap();
+    daemon.submit_toml(&job_toml("svc-b", STEPS)).unwrap();
+
+    let steps_line = |job: &str| format!("pdsgdm_job_steps_total{{job=\"{job}\"}}");
+    let (scrape1, scrape2) = std::thread::scope(|scope| {
+        let handle = scope.spawn(|| daemon.run().unwrap());
+        let addr = loop {
+            if let Some(a) = daemon.http_addr() {
+                break a;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        // Wait until both runners picked up their job and stepped.
+        while daemon.registry().steps_total("svc-a") == 0
+            || daemon.registry().steps_total("svc-b") == 0
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let (status, scrape1) = http::get(addr, "/metrics").unwrap();
+        assert_eq!(status, 200);
+        std::thread::sleep(Duration::from_millis(20));
+        let (_, scrape2) = http::get(addr, "/metrics").unwrap();
+
+        // The JSON endpoint serves the queue snapshot mid-run too.
+        let (status, jobs) = http::get(addr, "/jobs").unwrap();
+        assert_eq!(status, 200);
+        let doc = Json::parse(&jobs).unwrap();
+        assert_eq!(doc.get("jobs").and_then(|j| j.as_arr()).unwrap().len(), 2);
+
+        // Unknown routes 404 without killing the daemon.
+        let (status, _) = http::get(addr, "/nope").unwrap();
+        assert_eq!(status, 404);
+
+        handle.join().unwrap();
+        (scrape1, scrape2)
+    });
+
+    // Both scrapes are well-formed exposition text with unique families.
+    validate_exposition(&scrape1).unwrap();
+    validate_exposition(&scrape2).unwrap();
+    for text in [&scrape1, &scrape2] {
+        assert!(text.contains("# TYPE pdsgdm_job_steps_total counter"), "{text}");
+        assert!(text.contains("pdsgdm_daemon_up 1"), "{text}");
+    }
+    // Counters are monotone between scrapes, for both concurrent jobs.
+    for job in ["svc-a", "svc-b"] {
+        let a = sample(&scrape1, &steps_line(job)).unwrap();
+        let b = sample(&scrape2, &steps_line(job)).unwrap();
+        assert!(a >= 1.0, "{job} stepped before scrape 1");
+        assert!(b >= a, "{job} steps_total went backwards: {a} -> {b}");
+        assert!(b <= STEPS as f64);
+    }
+
+    // After the daemon exits, everything completed and the final
+    // registry state reflects the full run.
+    let snap = daemon.queue().snapshot();
+    assert!(snap.iter().all(|j| j.state == JobState::Completed), "{snap:?}");
+    let final_text = daemon.registry().render();
+    validate_exposition(&final_text).unwrap();
+    for job in ["svc-a", "svc-b"] {
+        assert_eq!(sample(&final_text, &steps_line(job)), Some(STEPS as f64));
+        assert!(sample(&final_text, &format!("pdsgdm_job_last_loss{{job=\"{job}\"}}")).is_some());
+        assert!(
+            sample(&final_text, &format!("pdsgdm_job_wire_bytes_total{{job=\"{job}\"}}"))
+                .unwrap()
+                > 0.0
+        );
+    }
+    assert_eq!(sample(&final_text, "pdsgdm_jobs_state{state=\"completed\"}"), Some(2.0));
+    std::fs::remove_dir_all(&state).unwrap();
+}
+
+fn fuzz_config() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.algorithm = "pd-sgdm".into();
+    c.workers = 4;
+    c.steps = 30;
+    c.eval_every = 10;
+    c.workload = pdsgdm::config::WorkloadConfig::Quadratic {
+        dim: 16,
+        heterogeneity: 1.0,
+        noise: 0.05,
+    };
+    c
+}
+
+/// `load_state` must return a clean `Err` — never panic — whatever
+/// bytes it is fed. This is the property the daemon's restart path
+/// leans on: a half-written drain checkpoint fails the resume with a
+/// message instead of taking the service down.
+#[test]
+fn load_state_survives_truncation_at_every_offset() {
+    let mut s = Session::build(SessionSpec::new(fuzz_config())).unwrap();
+    s.run_until(StopCondition::Steps(30));
+    let bytes = s.save_state();
+    assert!(bytes.len() > 200, "fuzz needs a real checkpoint");
+
+    // Every prefix in the header region, then a coarse sweep of the
+    // interior, then every cut near the tail.
+    let cuts: Vec<usize> = (0..bytes.len().min(96))
+        .chain((96..bytes.len()).step_by(23))
+        .chain(bytes.len().saturating_sub(48)..bytes.len())
+        .collect();
+    for cut in cuts {
+        let mut fresh = Session::build(SessionSpec::new(fuzz_config())).unwrap();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fresh.load_state(&bytes[..cut])
+        }));
+        match outcome {
+            Ok(Ok(())) => panic!("checkpoint truncated to {cut}/{} loaded cleanly", bytes.len()),
+            Ok(Err(_)) => {}
+            Err(_) => panic!("load_state panicked on truncation to {cut}/{}", bytes.len()),
+        }
+    }
+}
+
+#[test]
+fn load_state_survives_garbage_and_bit_flips() {
+    let mut s = Session::build(SessionSpec::new(fuzz_config())).unwrap();
+    s.run_until(StopCondition::Steps(30));
+    let bytes = s.save_state();
+
+    // Pure garbage of assorted sizes (deterministic xorshift filler).
+    let mut state = 0x9e3779b97f4a7c15u64;
+    let mut rand_byte = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        (state >> 32) as u8
+    };
+    for len in [0usize, 1, 7, 8, 9, 64, 1024, bytes.len()] {
+        let garbage: Vec<u8> = (0..len).map(|_| rand_byte()).collect();
+        let mut fresh = Session::build(SessionSpec::new(fuzz_config())).unwrap();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fresh.load_state(&garbage)
+        }));
+        match outcome {
+            Ok(Ok(())) => panic!("{len} bytes of garbage loaded cleanly"),
+            Ok(Err(_)) => {}
+            Err(_) => panic!("load_state panicked on {len} bytes of garbage"),
+        }
+    }
+
+    // Single-byte corruption sweep: flips may still load (a flipped
+    // f32 payload byte is valid data) but must never panic. Skip the
+    // magic — a corrupted magic is just the garbage case above.
+    for pos in (8..bytes.len()).step_by(11) {
+        let mut mutated = bytes.clone();
+        mutated[pos] ^= 0xff;
+        let mut fresh = Session::build(SessionSpec::new(fuzz_config())).unwrap();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fresh.load_state(&mutated)
+        }));
+        assert!(outcome.is_ok(), "load_state panicked on bit-flip at byte {pos}");
+    }
+}
+
+/// End-to-end drain property at the service level: a daemon killed
+/// mid-job (cooperative drain — the SIGTERM handler sets the same
+/// flag) resumes from its manifest and produces byte-identical output.
+#[test]
+fn drained_daemon_restart_reproduces_uninterrupted_output() {
+    let ref_state = temp_dir("e2e_ref");
+    let state = temp_dir("e2e");
+    let job = job_toml("e2e", 60_000);
+
+    let make = |dir: &PathBuf| {
+        Daemon::new(ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            max_concurrent: 1,
+            pool_threads: Some(2),
+            state_dir: dir.display().to_string(),
+            spool_dir: None,
+            poll_ms: 10,
+            exit_when_idle: true,
+        })
+        .unwrap()
+    };
+
+    let reference = make(&ref_state);
+    reference.submit_toml(&job).unwrap();
+    reference.run().unwrap();
+    let want = std::fs::read_to_string(ref_state.join("out/e2e.csv")).unwrap();
+
+    let daemon = make(&state);
+    daemon.submit_toml(&job).unwrap();
+    std::thread::scope(|scope| {
+        let handle = scope.spawn(|| daemon.run().unwrap());
+        while daemon.registry().steps_total("e2e") < 500 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        daemon.request_drain();
+        handle.join().unwrap();
+    });
+    if daemon.queue().snapshot()[0].state == JobState::Drained {
+        assert!(state.join("drain.json").is_file());
+        let restarted = make(&state);
+        restarted.run().unwrap();
+        let snap = restarted.queue().snapshot();
+        assert_eq!(snap[0].state, JobState::Completed, "{:?}", snap[0].error);
+    }
+    let got = std::fs::read_to_string(state.join("out/e2e.csv")).unwrap();
+    assert_eq!(want, got, "drain + resume must be bit-identical");
+    std::fs::remove_dir_all(&state).unwrap();
+    std::fs::remove_dir_all(&ref_state).unwrap();
+}
