@@ -11,12 +11,15 @@
 //! α–β model priced at the busiest worker. All of Figure 2's x-axes
 //! (communication MB) come from these counters.
 
-use std::collections::VecDeque;
+pub mod transport;
+
 use std::sync::Arc;
 
 use crate::rng::Xoshiro256;
 use crate::state::{StateReader, StateWriter};
 use crate::topology::Graph;
+
+use transport::{InProc, Transport, TransportCounters};
 
 /// What a message carries across an edge.
 ///
@@ -384,7 +387,9 @@ impl FaultPlan {
 pub struct Network {
     k: usize,
     edges: Vec<Vec<usize>>, // adjacency (copied from the Graph)
-    inbox: Vec<VecDeque<Message>>,
+    /// How messages move: the in-memory inbox (`InProc`, default — the
+    /// exact legacy path) or a socket fabric between OS processes.
+    transport: Box<dyn Transport>,
     /// Optional fault injector; `None` is the exact pre-fault fast path.
     faults: Option<FaultPlan>,
     /// Total payload bytes ever sent (sum over messages).
@@ -399,16 +404,34 @@ pub struct Network {
 
 impl Network {
     pub fn new(g: &Graph) -> Self {
+        Self::with_transport(g, Box::new(InProc::new(g.k)))
+    }
+
+    /// A network whose messages move through `transport` instead of the
+    /// in-memory inbox. Byte accounting, fault injection, and edge
+    /// checks are identical — only delivery changes.
+    pub fn with_transport(g: &Graph, transport: Box<dyn Transport>) -> Self {
         Self {
             k: g.k,
             edges: (0..g.k).map(|i| g.neighbors(i).to_vec()).collect(),
-            inbox: (0..g.k).map(|_| VecDeque::new()).collect(),
+            transport,
             faults: None,
             total_bytes: 0,
             bytes_sent: vec![0; g.k],
             rounds: 0,
             messages: 0,
         }
+    }
+
+    /// Backend-specific access (round tags, death notices on the
+    /// socket transport).
+    pub fn transport_mut(&mut self) -> &mut dyn Transport {
+        self.transport.as_mut()
+    }
+
+    /// The transport's robustness counters (all-zero for in-proc).
+    pub fn transport_counters(&self) -> TransportCounters {
+        self.transport.counters()
     }
 
     pub fn k(&self) -> usize {
@@ -519,7 +542,7 @@ impl Network {
                 }
             }
         }
-        self.inbox[to].push_back(msg);
+        self.transport.enqueue(msg);
     }
 
     /// Broadcast a dense payload from `from` to all its neighbors,
@@ -554,7 +577,7 @@ impl Network {
     pub fn recv_all(&mut self, to: usize) -> Vec<Message> {
         let rounds = self.rounds;
         let Some(plan) = self.faults.as_mut() else {
-            return self.inbox[to].drain(..).collect();
+            return self.transport.drain(to);
         };
         let mut out: Vec<Message> = Vec::new();
         let mut i = 0;
@@ -575,7 +598,7 @@ impl Network {
                 i += 1;
             }
         }
-        out.extend(self.inbox[to].drain(..));
+        out.extend(self.transport.drain(to));
         if plan.reorder_prob > 0.0 && out.len() > 1 && plan.rng.next_f64() < plan.reorder_prob {
             plan.rng.shuffle(&mut out);
         }
@@ -585,10 +608,7 @@ impl Network {
     /// Mark the end of a bulk exchange (one paper "communication round").
     pub fn end_round(&mut self) {
         self.rounds += 1;
-        debug_assert!(
-            self.inbox.iter().all(|q| q.is_empty()),
-            "round ended with undelivered messages"
-        );
+        debug_assert!(self.transport.is_empty(), "round ended with undelivered messages");
     }
 
     pub fn total_megabytes(&self) -> f64 {

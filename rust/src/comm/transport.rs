@@ -1,0 +1,1873 @@
+//! Real multi-process transport behind the `Network` abstraction.
+//!
+//! Everything the simulator moves through an in-memory inbox can also
+//! move over an actual wire: this module defines the [`Transport`]
+//! trait (how a [`Network`](crate::comm::Network) delivers
+//! [`Message`]s), the [`InProc`] backend (the legacy `VecDeque` inbox,
+//! byte-for-byte identical to the pre-trait code), and
+//! [`SocketTransport`], a TCP / Unix-domain-socket backend carrying
+//! length-prefixed, CRC32-checked frames between worker OS processes.
+//!
+//! The contract (DESIGN.md §10): a loopback socket run on the same
+//! seed reproduces the in-memory run **bit-identically** — same CSV,
+//! same byte accounting, same sim-seconds — because every worker
+//! process replays the exact sequential schedule (`engine::
+//! momentum_row_step` + the gossip term order of `GossipState::mix`)
+//! for its own row, and the coordinator replays the exact `Session`
+//! accounting over a real in-proc `Network`.
+//!
+//! Robustness is built in, not bolted on: connect/send retries with
+//! exponential backoff + deterministic jitter, read/write deadlines on
+//! every socket op, heartbeat frames with a miss threshold, and
+//! peer-death detection that maps a lost peer onto the existing
+//! churn machinery (`FaultPlan::set_absent` → renormalized mixing), so
+//! a crashed worker degrades the round instead of hanging the fabric.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::algorithms::{Algorithm, StepStats};
+use crate::comm::{FaultPlan, Message, Network, Payload};
+use crate::config::{ExperimentConfig, TransportBackend, TransportConfig};
+use crate::grad::GradientSource;
+use crate::topology::MixWeights;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected polynomial) — hand-rolled, std-only.
+// ---------------------------------------------------------------------------
+
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut b = 0;
+        while b < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            b += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32-IEEE of `bytes` (the common `cksum`/zlib polynomial).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// Frame codec.
+// ---------------------------------------------------------------------------
+
+/// Largest frame body this implementation accepts (guards against a
+/// corrupt length prefix allocating gigabytes).
+pub const MAX_FRAME_BYTES: usize = 1 << 28; // 256 MiB
+
+/// Fixed header after the length prefix: kind u8 + from u32 + to u32 +
+/// step u64.
+const FRAME_HEADER: usize = 1 + 4 + 4 + 8;
+/// Minimum body length: header + trailing CRC32.
+const MIN_BODY: usize = FRAME_HEADER + 4;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Worker → coordinator (or worker → worker) introduction. Payload:
+    /// UTF-8 listen address (may be empty on worker-to-worker links).
+    Hello = 1,
+    /// Coordinator → worker: the full worker address book. Payload:
+    /// UTF-8 lines `"<idx> <addr>"`.
+    PeerTable = 2,
+    /// One gossip payload for communication round `step`. Payload:
+    /// f32-LE parameter vector.
+    Dense = 3,
+    /// Liveness probe; empty payload.
+    Heartbeat = 4,
+    /// Worker → coordinator row report at eval step `step`. Payload:
+    /// `loss f64 | d u32 | x f32·d | n u32 | counters u64·n`.
+    Eval = 5,
+    /// Graceful goodbye; empty payload.
+    Bye = 6,
+}
+
+impl FrameKind {
+    pub fn from_u8(b: u8) -> Option<FrameKind> {
+        match b {
+            1 => Some(FrameKind::Hello),
+            2 => Some(FrameKind::PeerTable),
+            3 => Some(FrameKind::Dense),
+            4 => Some(FrameKind::Heartbeat),
+            5 => Some(FrameKind::Eval),
+            6 => Some(FrameKind::Bye),
+            _ => None,
+        }
+    }
+}
+
+/// One wire frame. Layout:
+/// `len u32 LE | kind u8 | from u32 | to u32 | step u64 | payload | crc32 u32`
+/// where `len` counts everything after itself (so `kind..=crc`) and the
+/// CRC covers `kind..payload` (everything the CRC itself doesn't).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub from: u32,
+    pub to: u32,
+    pub step: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, from: usize, to: usize, step: u64, payload: Vec<u8>) -> Frame {
+        Frame { kind, from: from as u32, to: to as u32, step, payload }
+    }
+}
+
+/// Why a frame could not be decoded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Not enough bytes yet — keep the buffer, read more.
+    Incomplete,
+    /// The stream is damaged (bad CRC, bad kind, absurd length). The
+    /// link cannot be resynchronized and should be torn down.
+    Corrupt(String),
+}
+
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let body_len = FRAME_HEADER + f.payload.len() + 4;
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(f.kind as u8);
+    out.extend_from_slice(&f.from.to_le_bytes());
+    out.extend_from_slice(&f.to.to_le_bytes());
+    out.extend_from_slice(&f.step.to_le_bytes());
+    out.extend_from_slice(&f.payload);
+    let crc = crc32(&out[4..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode one frame from the front of `buf`. Returns the frame and the
+/// number of bytes consumed, `Incomplete` if more bytes are needed, or
+/// `Corrupt` if the stream is unrecoverable.
+pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
+    if buf.len() < 4 {
+        return Err(FrameError::Incomplete);
+    }
+    let body_len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if body_len < MIN_BODY {
+        return Err(FrameError::Corrupt(format!("frame body {body_len} below minimum {MIN_BODY}")));
+    }
+    if body_len > MAX_FRAME_BYTES {
+        return Err(FrameError::Corrupt(format!(
+            "frame body {body_len} exceeds cap {MAX_FRAME_BYTES}"
+        )));
+    }
+    if buf.len() < 4 + body_len {
+        return Err(FrameError::Incomplete);
+    }
+    let body = &buf[4..4 + body_len];
+    let (content, crc_bytes) = body.split_at(body_len - 4);
+    let want = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+    let got = crc32(content);
+    if want != got {
+        return Err(FrameError::Corrupt(format!("crc mismatch: stored {want:#010x} computed {got:#010x}")));
+    }
+    let kind = FrameKind::from_u8(content[0])
+        .ok_or_else(|| FrameError::Corrupt(format!("unknown frame kind {}", content[0])))?;
+    let from = u32::from_le_bytes([content[1], content[2], content[3], content[4]]);
+    let to = u32::from_le_bytes([content[5], content[6], content[7], content[8]]);
+    let step = u64::from_le_bytes([
+        content[9], content[10], content[11], content[12], content[13], content[14], content[15],
+        content[16],
+    ]);
+    let payload = content[FRAME_HEADER..].to_vec();
+    Ok((Frame { kind, from, to, step, payload }, 4 + body_len))
+}
+
+/// Dense gossip payload: raw f32 little-endian, `4·d` bytes — the same
+/// wire size `Payload::Dense::wire_bytes` charges, so measured socket
+/// traffic equals the simulated byte accounting.
+pub fn encode_dense(x: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * x.len());
+    for v in x {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_dense(b: &[u8]) -> Result<Vec<f32>, String> {
+    if b.len() % 4 != 0 {
+        return Err(format!("dense payload length {} not a multiple of 4", b.len()));
+    }
+    Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Transport counters.
+// ---------------------------------------------------------------------------
+
+/// Cumulative robustness counters, surfaced through
+/// `Observer::on_transport_counters` into the CLI summary and
+/// `/metrics` (DESIGN.md §10).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportCounters {
+    pub connect_retries: u64,
+    pub send_retries: u64,
+    pub reconnects: u64,
+    pub timeouts: u64,
+    pub heartbeats_sent: u64,
+    pub heartbeat_misses: u64,
+    pub peers_dead: u64,
+    pub frames_sent: u64,
+    pub frames_received: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub crc_errors: u64,
+}
+
+impl TransportCounters {
+    pub fn merge(&mut self, o: &TransportCounters) {
+        self.connect_retries += o.connect_retries;
+        self.send_retries += o.send_retries;
+        self.reconnects += o.reconnects;
+        self.timeouts += o.timeouts;
+        self.heartbeats_sent += o.heartbeats_sent;
+        self.heartbeat_misses += o.heartbeat_misses;
+        self.peers_dead += o.peers_dead;
+        self.frames_sent += o.frames_sent;
+        self.frames_received += o.frames_received;
+        self.bytes_sent += o.bytes_sent;
+        self.bytes_received += o.bytes_received;
+        self.crc_errors += o.crc_errors;
+    }
+
+    fn fields(&self) -> [u64; 12] {
+        [
+            self.connect_retries,
+            self.send_retries,
+            self.reconnects,
+            self.timeouts,
+            self.heartbeats_sent,
+            self.heartbeat_misses,
+            self.peers_dead,
+            self.frames_sent,
+            self.frames_received,
+            self.bytes_sent,
+            self.bytes_received,
+            self.crc_errors,
+        ]
+    }
+
+    /// `(snake_case name, value)` pairs in wire order — the single list
+    /// the CLI summary and the `/metrics` exporter both walk, so a new
+    /// counter shows up everywhere by construction.
+    pub fn named(&self) -> [(&'static str, u64); 12] {
+        let f = self.fields();
+        [
+            ("connect_retries", f[0]),
+            ("send_retries", f[1]),
+            ("reconnects", f[2]),
+            ("timeouts", f[3]),
+            ("heartbeats_sent", f[4]),
+            ("heartbeat_misses", f[5]),
+            ("peers_dead", f[6]),
+            ("frames_sent", f[7]),
+            ("frames_received", f[8]),
+            ("bytes_sent", f[9]),
+            ("bytes_received", f[10]),
+            ("crc_errors", f[11]),
+        ]
+    }
+
+    /// Count-prefixed u64 list; decoders skip fields they don't know,
+    /// so old readers tolerate new counters.
+    pub fn encode(&self) -> Vec<u8> {
+        let fs = self.fields();
+        let mut out = Vec::with_capacity(4 + 8 * fs.len());
+        out.extend_from_slice(&(fs.len() as u32).to_le_bytes());
+        for f in fs {
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode from the front of `b`; returns (counters, bytes consumed).
+    pub fn decode(b: &[u8]) -> Result<(TransportCounters, usize), String> {
+        if b.len() < 4 {
+            return Err("counters: truncated count".into());
+        }
+        let n = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+        if n > 1024 {
+            return Err(format!("counters: absurd field count {n}"));
+        }
+        let need = 4 + 8 * n;
+        if b.len() < need {
+            return Err("counters: truncated fields".into());
+        }
+        let mut vals = [0u64; 12];
+        for i in 0..n.min(12) {
+            let o = 4 + 8 * i;
+            vals[i] = u64::from_le_bytes([
+                b[o], b[o + 1], b[o + 2], b[o + 3], b[o + 4], b[o + 5], b[o + 6], b[o + 7],
+            ]);
+        }
+        let c = TransportCounters {
+            connect_retries: vals[0],
+            send_retries: vals[1],
+            reconnects: vals[2],
+            timeouts: vals[3],
+            heartbeats_sent: vals[4],
+            heartbeat_misses: vals[5],
+            peers_dead: vals[6],
+            frames_sent: vals[7],
+            frames_received: vals[8],
+            bytes_sent: vals[9],
+            bytes_received: vals[10],
+            crc_errors: vals[11],
+        };
+        Ok((c, need))
+    }
+}
+
+/// Eval report payload: `loss f64 | d u32 | x f32·d | counters`.
+pub fn encode_eval(loss: f64, x: &[f32], counters: &TransportCounters) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + 4 + 4 * x.len() + 4 + 96);
+    out.extend_from_slice(&loss.to_le_bytes());
+    out.extend_from_slice(&(x.len() as u32).to_le_bytes());
+    for v in x {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&counters.encode());
+    out
+}
+
+pub fn decode_eval(b: &[u8]) -> Result<(f64, Vec<f32>, TransportCounters), String> {
+    if b.len() < 12 {
+        return Err("eval payload: truncated header".into());
+    }
+    let loss = f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]);
+    let d = u32::from_le_bytes([b[8], b[9], b[10], b[11]]) as usize;
+    if d > MAX_FRAME_BYTES / 4 {
+        return Err(format!("eval payload: absurd dimension {d}"));
+    }
+    let xs_end = 12 + 4 * d;
+    if b.len() < xs_end {
+        return Err("eval payload: truncated parameter vector".into());
+    }
+    let x = decode_dense(&b[12..xs_end])?;
+    let (counters, _) = TransportCounters::decode(&b[xs_end..])?;
+    Ok((loss, x, counters))
+}
+
+// ---------------------------------------------------------------------------
+// Transport trait + the in-memory backend.
+// ---------------------------------------------------------------------------
+
+/// How a `Network` moves messages between workers. `InProc` is the
+/// default (the legacy in-memory inbox); `SocketTransport` puts the
+/// same messages on a real wire between OS processes.
+pub trait Transport: std::fmt::Debug + Send {
+    /// Queue `msg` for delivery to `msg.to`.
+    fn enqueue(&mut self, msg: Message);
+    /// Remove and return every deliverable message addressed to `to`,
+    /// in the transport's canonical order (ascending sender for the
+    /// socket backend; arrival order for in-proc).
+    fn drain(&mut self, to: usize) -> Vec<Message>;
+    /// True when no undelivered messages remain (end-of-round check).
+    fn is_empty(&self) -> bool;
+    /// Robustness counters; all-zero for the in-memory backend.
+    fn counters(&self) -> TransportCounters {
+        TransportCounters::default()
+    }
+    /// Escape hatch for backend-specific control (round tags, death
+    /// notices) without widening the trait.
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}
+
+/// The legacy per-destination FIFO mailboxes — the Arc fast path. This
+/// is exactly the `Vec<VecDeque<Message>>` the `Network` used to own,
+/// so the default path is byte-for-byte identical to the pre-trait
+/// code.
+#[derive(Debug, Default)]
+pub struct InProc {
+    inbox: Vec<VecDeque<Message>>,
+}
+
+impl InProc {
+    pub fn new(k: usize) -> InProc {
+        InProc { inbox: (0..k).map(|_| VecDeque::new()).collect() }
+    }
+}
+
+impl Transport for InProc {
+    fn enqueue(&mut self, msg: Message) {
+        self.inbox[msg.to].push_back(msg);
+    }
+
+    fn drain(&mut self, to: usize) -> Vec<Message> {
+        self.inbox[to].drain(..).collect()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.inbox.iter().all(|q| q.is_empty())
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backoff, streams, listeners.
+// ---------------------------------------------------------------------------
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Exponential backoff with deterministic jitter: attempt `a` waits in
+/// `[cap/2, cap]` where `cap = min(base · 2^a, max)`. Jitter is hashed
+/// from `(attempt, salt)` so tests are reproducible but concurrent
+/// workers (distinct salts) still desynchronize.
+pub fn backoff_delay_ms(attempt: u32, base_ms: u64, max_ms: u64, salt: u64) -> u64 {
+    let base = base_ms.max(1);
+    let cap = base.saturating_mul(1u64 << attempt.min(20)).min(max_ms.max(base)).max(1);
+    let half = cap / 2;
+    half + splitmix64(salt ^ ((attempt as u64) << 32)) % (cap - half + 1)
+}
+
+/// A connected byte stream over either backend.
+#[derive(Debug)]
+pub enum Stream {
+    Tcp(std::net::TcpStream),
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl Stream {
+    /// Connect to `"tcp:host:port"` or `"unix:/path"`, with a connect
+    /// timeout for TCP (Unix sockets connect locally or fail fast).
+    pub fn connect(addr: &str, timeout: Duration) -> std::io::Result<Stream> {
+        if let Some(hostport) = addr.strip_prefix("tcp:") {
+            use std::net::ToSocketAddrs;
+            let sa = hostport
+                .to_socket_addrs()?
+                .next()
+                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidInput, "no address"))?;
+            let s = std::net::TcpStream::connect_timeout(&sa, timeout)?;
+            s.set_nodelay(true)?;
+            Ok(Stream::Tcp(s))
+        } else if let Some(path) = addr.strip_prefix("unix:") {
+            Ok(Stream::Unix(std::os::unix::net::UnixStream::connect(path)?))
+        } else {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("address {addr:?} must start with tcp: or unix:"),
+            ))
+        }
+    }
+
+    /// Read/write deadlines applied to every subsequent socket op.
+    pub fn set_deadlines(&self, read: Option<Duration>, write: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => {
+                s.set_read_timeout(read)?;
+                s.set_write_timeout(write)
+            }
+            Stream::Unix(s) => {
+                s.set_read_timeout(read)?;
+                s.set_write_timeout(write)
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound accept socket over either backend.
+#[derive(Debug)]
+pub enum Listener {
+    Tcp(std::net::TcpListener),
+    Unix(std::os::unix::net::UnixListener, PathBuf),
+}
+
+impl Listener {
+    pub fn bind(backend: TransportBackend, host: &str, sock_path: &Path) -> Result<Listener, String> {
+        match backend {
+            TransportBackend::Tcp => {
+                let l = std::net::TcpListener::bind((host, 0))
+                    .map_err(|e| format!("bind tcp {host}: {e}"))?;
+                l.set_nonblocking(true).map_err(|e| format!("tcp nonblocking: {e}"))?;
+                Ok(Listener::Tcp(l))
+            }
+            TransportBackend::Unix => {
+                let _ = std::fs::remove_file(sock_path);
+                let l = std::os::unix::net::UnixListener::bind(sock_path)
+                    .map_err(|e| format!("bind unix {sock_path:?}: {e}"))?;
+                l.set_nonblocking(true).map_err(|e| format!("unix nonblocking: {e}"))?;
+                Ok(Listener::Unix(l, sock_path.to_path_buf()))
+            }
+        }
+    }
+
+    /// The `tcp:`/`unix:` address peers dial to reach this listener.
+    pub fn addr_string(&self) -> Result<String, String> {
+        match self {
+            Listener::Tcp(l) => {
+                let a = l.local_addr().map_err(|e| e.to_string())?;
+                Ok(format!("tcp:{a}"))
+            }
+            Listener::Unix(_, p) => Ok(format!("unix:{}", p.display())),
+        }
+    }
+
+    /// Accept one connection, polling until `deadline`.
+    pub fn accept(&self, deadline: Instant) -> Result<Stream, String> {
+        loop {
+            let r = match self {
+                Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                    let _ = s.set_nodelay(true);
+                    Stream::Tcp(s)
+                }),
+                Listener::Unix(l, _) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            };
+            match r {
+                Ok(s) => return Ok(s),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err("accept timed out".into());
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(format!("accept: {e}")),
+            }
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, p) = self {
+            let _ = std::fs::remove_file(&*p);
+        }
+    }
+}
+
+fn io_timeout(tcfg: &TransportConfig) -> Duration {
+    Duration::from_millis(tcfg.io_timeout_ms.max(1))
+}
+
+/// Dial `addr` with per-attempt backoff + jitter; counts retries.
+pub fn connect_with_retry(
+    addr: &str,
+    tcfg: &TransportConfig,
+    salt: u64,
+    counters: &mut TransportCounters,
+) -> Result<Stream, String> {
+    let mut last = String::new();
+    for attempt in 0..=tcfg.connect_retries {
+        match Stream::connect(addr, io_timeout(tcfg)) {
+            Ok(s) => {
+                s.set_deadlines(Some(io_timeout(tcfg)), Some(io_timeout(tcfg)))
+                    .map_err(|e| format!("deadlines on {addr}: {e}"))?;
+                return Ok(s);
+            }
+            Err(e) => {
+                last = e.to_string();
+                if attempt < tcfg.connect_retries {
+                    counters.connect_retries += 1;
+                    std::thread::sleep(Duration::from_millis(backoff_delay_ms(
+                        attempt,
+                        tcfg.retry_base_ms,
+                        tcfg.retry_max_ms,
+                        salt,
+                    )));
+                }
+            }
+        }
+    }
+    Err(format!("connect {addr}: gave up after {} attempts: {last}", tcfg.connect_retries + 1))
+}
+
+// ---------------------------------------------------------------------------
+// PeerLink: one framed, supervised connection.
+// ---------------------------------------------------------------------------
+
+/// What `PeerLink::pump` produced this poll.
+#[derive(Debug)]
+enum LinkEvent {
+    Frame(Frame),
+    /// Nothing available inside the poll slice.
+    Idle,
+    /// The peer is gone (EOF, hard error, or corrupt stream).
+    Dead(String),
+}
+
+#[derive(Debug)]
+struct PeerLink {
+    peer: usize,
+    stream: Option<Stream>,
+    /// Dial address, when this side is the dialer (enables reconnect).
+    addr: Option<String>,
+    buf: Vec<u8>,
+    last_heard: Instant,
+    last_sent: Instant,
+    misses: u32,
+    salt: u64,
+}
+
+impl PeerLink {
+    fn new(peer: usize, stream: Stream, addr: Option<String>, salt: u64) -> PeerLink {
+        let now = Instant::now();
+        PeerLink { peer, stream: Some(stream), addr, buf: Vec::new(), last_heard: now, last_sent: now, misses: 0, salt }
+    }
+
+    fn alive(&self) -> bool {
+        self.stream.is_some()
+    }
+
+    fn kill(&mut self) {
+        self.stream = None;
+        self.buf.clear();
+    }
+
+    /// Write a whole frame, retrying transient timeouts with backoff
+    /// and attempting one reconnect (fresh dial + Hello) on a hard
+    /// error when this side owns the dial address. Returns false when
+    /// the link is declared dead.
+    fn send_frame(&mut self, f: &Frame, tcfg: &TransportConfig, c: &mut TransportCounters) -> bool {
+        let bytes = encode_frame(f);
+        for attempt in 0..=tcfg.connect_retries {
+            let Some(s) = self.stream.as_mut() else { return false };
+            match s.write_all(&bytes).and_then(|()| s.flush()) {
+                Ok(()) => {
+                    self.last_sent = Instant::now();
+                    c.frames_sent += 1;
+                    c.bytes_sent += bytes.len() as u64;
+                    return true;
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    c.send_retries += 1;
+                    c.timeouts += 1;
+                    std::thread::sleep(Duration::from_millis(backoff_delay_ms(
+                        attempt,
+                        tcfg.retry_base_ms,
+                        tcfg.retry_max_ms,
+                        self.salt,
+                    )));
+                }
+                Err(_) => {
+                    // Hard error: try to re-dial once, then resend from
+                    // the top of the retry budget.
+                    if !self.reconnect(tcfg, c) {
+                        self.kill();
+                        return false;
+                    }
+                }
+            }
+        }
+        self.kill();
+        false
+    }
+
+    fn reconnect(&mut self, tcfg: &TransportConfig, c: &mut TransportCounters) -> bool {
+        let Some(addr) = self.addr.clone() else { return false };
+        match connect_with_retry(&addr, tcfg, self.salt ^ 0xDEAD, c) {
+            Ok(s) => {
+                self.stream = Some(s);
+                self.buf.clear();
+                c.reconnects += 1;
+                self.last_heard = Instant::now();
+                self.misses = 0;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Poll the socket for up to `slice`, append whatever arrived, and
+    /// decode at most one frame from the front of the buffer.
+    fn pump(&mut self, slice: Duration, c: &mut TransportCounters) -> LinkEvent {
+        // A complete frame may already be buffered from a prior poll.
+        match self.try_decode(c) {
+            Some(ev) => return ev,
+            None => {}
+        }
+        let Some(s) = self.stream.as_mut() else { return LinkEvent::Dead("link closed".into()) };
+        if s.set_deadlines(Some(slice.max(Duration::from_millis(1))), None).is_err() {
+            self.kill();
+            return LinkEvent::Dead("deadline set failed".into());
+        }
+        let mut tmp = [0u8; 64 * 1024];
+        match s.read(&mut tmp) {
+            Ok(0) => {
+                self.kill();
+                LinkEvent::Dead("peer closed connection".into())
+            }
+            Ok(n) => {
+                c.bytes_received += n as u64;
+                self.buf.extend_from_slice(&tmp[..n]);
+                self.last_heard = Instant::now();
+                self.misses = 0;
+                self.try_decode(c).unwrap_or(LinkEvent::Idle)
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                LinkEvent::Idle
+            }
+            Err(e) => {
+                self.kill();
+                LinkEvent::Dead(format!("read: {e}"))
+            }
+        }
+    }
+
+    fn try_decode(&mut self, c: &mut TransportCounters) -> Option<LinkEvent> {
+        match decode_frame(&self.buf) {
+            Ok((f, used)) => {
+                self.buf.drain(..used);
+                c.frames_received += 1;
+                Some(LinkEvent::Frame(f))
+            }
+            Err(FrameError::Incomplete) => None,
+            Err(FrameError::Corrupt(why)) => {
+                c.crc_errors += 1;
+                self.kill();
+                Some(LinkEvent::Dead(format!("corrupt stream: {why}")))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SocketTransport: the worker-process backend.
+// ---------------------------------------------------------------------------
+
+/// Socket backend for ONE worker process: a framed link per topology
+/// neighbor. `enqueue` ships this worker's round payload; `drain`
+/// blocks until every live neighbor's payload for the current round
+/// arrived (or the neighbor is declared dead via heartbeat misses /
+/// the round deadline), returning messages in ascending sender order —
+/// the same order the in-proc send loop produces.
+pub struct SocketTransport {
+    me: usize,
+    cfg: TransportConfig,
+    links: BTreeMap<usize, PeerLink>,
+    /// Round tag stamped on outgoing Dense frames and required on
+    /// incoming ones.
+    round_step: u64,
+    /// Current round's received payloads, keyed by sender.
+    pending: BTreeMap<usize, Vec<f32>>,
+    /// Peers declared dead but not yet reported via `take_newly_dead`.
+    fresh_deaths: BTreeSet<usize>,
+    counters: TransportCounters,
+}
+
+impl std::fmt::Debug for SocketTransport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SocketTransport")
+            .field("me", &self.me)
+            .field("links", &self.links.keys().collect::<Vec<_>>())
+            .field("round_step", &self.round_step)
+            .finish()
+    }
+}
+
+impl SocketTransport {
+    pub fn new(me: usize, cfg: TransportConfig) -> SocketTransport {
+        SocketTransport {
+            me,
+            cfg,
+            links: BTreeMap::new(),
+            round_step: 0,
+            pending: BTreeMap::new(),
+            fresh_deaths: BTreeSet::new(),
+            counters: TransportCounters::default(),
+        }
+    }
+
+    fn add_link(&mut self, peer: usize, stream: Stream, addr: Option<String>) {
+        let salt = (self.me as u64) << 32 | peer as u64;
+        self.links.insert(peer, PeerLink::new(peer, stream, addr, salt));
+    }
+
+    /// Tag the upcoming communication round. Must be called before the
+    /// round's broadcast.
+    pub fn begin_round(&mut self, step: u64) {
+        self.round_step = step;
+    }
+
+    /// Peers that died since the last call — the caller maps these onto
+    /// `FaultPlan::set_absent` before mixing.
+    pub fn take_newly_dead(&mut self) -> Vec<usize> {
+        let out: Vec<usize> = self.fresh_deaths.iter().copied().collect();
+        self.fresh_deaths.clear();
+        out
+    }
+
+    pub fn live_peers(&self) -> usize {
+        self.links.values().filter(|l| l.alive()).count()
+    }
+
+    fn declare_dead(&mut self, peer: usize, _why: &str) {
+        if let Some(l) = self.links.get_mut(&peer) {
+            if l.alive() {
+                l.kill();
+            }
+        }
+        if self.fresh_deaths.insert(peer) {
+            self.counters.peers_dead += 1;
+        }
+    }
+
+    /// Send `Bye` on every live link (graceful teardown).
+    pub fn send_bye(&mut self) {
+        let cfg = self.cfg.clone();
+        let mut c = std::mem::take(&mut self.counters);
+        for l in self.links.values_mut() {
+            if l.alive() {
+                let f = Frame::new(FrameKind::Bye, 0, 0, 0, Vec::new());
+                let _ = l.send_frame(&f, &cfg, &mut c);
+            }
+        }
+        self.counters = c;
+    }
+}
+
+impl Transport for SocketTransport {
+    fn enqueue(&mut self, msg: Message) {
+        let x = msg
+            .payload
+            .dense()
+            .expect("socket transport carries dense gossip only (validated by config)");
+        let frame = Frame::new(FrameKind::Dense, msg.from, msg.to, self.round_step, encode_dense(x));
+        let cfg = self.cfg.clone();
+        let mut c = std::mem::take(&mut self.counters);
+        let ok = match self.links.get_mut(&msg.to) {
+            Some(l) if l.alive() => l.send_frame(&frame, &cfg, &mut c),
+            _ => false,
+        };
+        self.counters = c;
+        if !ok {
+            self.declare_dead(msg.to, "send failed");
+        }
+    }
+
+    fn drain(&mut self, to: usize) -> Vec<Message> {
+        assert_eq!(to, self.me, "a worker process drains only its own mailbox");
+        let cfg = self.cfg.clone();
+        let heartbeat = Duration::from_millis(cfg.heartbeat_ms.max(1));
+        let deadline = Instant::now() + Duration::from_millis(cfg.round_timeout_ms.max(1));
+        let slice = Duration::from_millis(10);
+        loop {
+            let waiting: Vec<usize> = self
+                .links
+                .iter()
+                .filter(|(p, l)| l.alive() && !self.pending.contains_key(*p))
+                .map(|(p, _)| *p)
+                .collect();
+            if waiting.is_empty() {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                // Hard round deadline: whoever is still silent is gone.
+                let mut c = std::mem::take(&mut self.counters);
+                c.timeouts += waiting.len() as u64;
+                self.counters = c;
+                for p in waiting {
+                    self.declare_dead(p, "round deadline");
+                }
+                break;
+            }
+            for p in waiting {
+                let mut c = std::mem::take(&mut self.counters);
+                let link = self.links.get_mut(&p).expect("link exists");
+                // Keepalive: prove liveness to a peer we're waiting on.
+                if now.duration_since(link.last_sent) >= heartbeat && link.alive() {
+                    let hb = Frame::new(FrameKind::Heartbeat, self.me, p, 0, Vec::new());
+                    if link.send_frame(&hb, &cfg, &mut c) {
+                        c.heartbeats_sent += 1;
+                    }
+                }
+                let ev = link.pump(slice, &mut c);
+                // Miss accounting: one miss per elapsed heartbeat
+                // interval of silence; threshold crossings kill the link.
+                let silent = now.duration_since(link.last_heard);
+                let intervals = (silent.as_millis() as u64) / cfg.heartbeat_ms.max(1);
+                let mut crossed = false;
+                if intervals > link.misses as u64 {
+                    link.misses = intervals as u32;
+                    c.heartbeat_misses += 1;
+                    crossed = link.misses >= cfg.heartbeat_misses;
+                }
+                self.counters = c;
+                match ev {
+                    LinkEvent::Frame(f) => self.handle_frame(p, f),
+                    LinkEvent::Idle => {
+                        if crossed {
+                            self.declare_dead(p, "heartbeat misses");
+                        }
+                    }
+                    LinkEvent::Dead(why) => self.declare_dead(p, &why),
+                }
+            }
+        }
+        let me = self.me;
+        std::mem::take(&mut self.pending)
+            .into_iter()
+            .map(|(from, x)| Message { from, to: me, payload: Payload::Dense(Arc::new(x)) })
+            .collect()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    fn counters(&self) -> TransportCounters {
+        self.counters
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+impl SocketTransport {
+    fn handle_frame(&mut self, peer: usize, f: Frame) {
+        match f.kind {
+            FrameKind::Dense => {
+                if f.step != self.round_step {
+                    // Per-link FIFO makes this unreachable in a healthy
+                    // run; a tagged mismatch means the stream is skewed.
+                    self.counters.crc_errors += 1;
+                    self.declare_dead(peer, "round tag mismatch");
+                    return;
+                }
+                match decode_dense(&f.payload) {
+                    Ok(x) => {
+                        self.pending.insert(f.from as usize, x);
+                    }
+                    Err(_) => {
+                        self.counters.crc_errors += 1;
+                        self.declare_dead(peer, "bad dense payload");
+                    }
+                }
+            }
+            FrameKind::Heartbeat => {}
+            FrameKind::Bye => self.declare_dead(peer, "peer said goodbye"),
+            _ => {
+                // Hello/PeerTable/Eval never appear on worker-worker
+                // links after the handshake.
+                self.declare_dead(peer, "protocol violation");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single-row gossip mixing (the worker-process half of GossipState::mix).
+// ---------------------------------------------------------------------------
+
+/// Mix one worker's row from its own pre-mix copy plus the messages it
+/// received, with the exact term order and arithmetic of
+/// `GossipState::mix` (self term first, then senders ascending; full
+/// house uses the raw weights, a partial house renormalizes in f64) —
+/// so a socket worker's row stays bit-identical to the in-proc run
+/// while degrading exactly like churn when peers are lost.
+///
+/// `msgs` must be sorted by ascending sender (the socket drain order).
+pub fn mix_one_row(
+    w: &MixWeights,
+    to: usize,
+    own: &[f32],
+    msgs: &[Message],
+    neighbor_count: usize,
+    out: &mut [f32],
+) {
+    let heard = msgs.len();
+    let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(1 + heard);
+    if heard == neighbor_count {
+        let mut cursor = w.row_cursor(to);
+        terms.push((w.self_weight(to) as f32, own));
+        for msg in msgs {
+            let x = msg.payload.dense().expect("gossip exchanges dense payloads");
+            terms.push((cursor.weight(msg.from) as f32, x));
+        }
+    } else {
+        let mut cursor = w.row_cursor(to);
+        let mut total = w.self_weight(to);
+        for msg in msgs {
+            total += cursor.weight(msg.from);
+        }
+        let scale = 1.0 / total;
+        let mut cursor = w.row_cursor(to);
+        terms.push(((w.self_weight(to) * scale) as f32, own));
+        for msg in msgs {
+            let x = msg.payload.dense().expect("gossip exchanges dense payloads");
+            terms.push(((cursor.weight(msg.from) * scale) as f32, x));
+        }
+    }
+    crate::linalg::weighted_sum_into(out, &terms);
+}
+
+// ---------------------------------------------------------------------------
+// Worker process runtime (`pdsgdm worker`).
+// ---------------------------------------------------------------------------
+
+fn unix_sock_dir(coordinator_addr: &str) -> Option<PathBuf> {
+    coordinator_addr
+        .strip_prefix("unix:")
+        .and_then(|p| Path::new(p).parent().map(Path::to_path_buf))
+}
+
+/// Run ONE worker as this OS process: replay the exact sequential
+/// schedule for row `me` (local momentum steps + gossip mixing over the
+/// socket fabric) and report rows to the coordinator at eval steps.
+pub fn run_worker(cfg: &ExperimentConfig, me: usize, coordinator: &str) -> Result<(), String> {
+    let tcfg = cfg.transport.clone().ok_or("config has no [transport] section")?;
+    let k = cfg.workers;
+    if me >= k {
+        return Err(format!("worker index {me} out of range for K={k}"));
+    }
+    let (graph, weights, _rho) =
+        crate::topology::build_sparse(cfg.topology, k, cfg.weighting, cfg.seed);
+    let mut source = crate::coordinator::build_source(cfg).map_err(|e| e.to_string())?;
+    let mut x = source.init(cfg.seed);
+    let d = x.len();
+    let mut m = vec![0.0f32; d];
+    let mut scratch = vec![0.0f32; d];
+    let mut premix = vec![0.0f32; d];
+    let mut mixed = vec![0.0f32; d];
+
+    // -- Handshake ---------------------------------------------------------
+    let sock_path = unix_sock_dir(coordinator)
+        .map(|dir| dir.join(format!("w{me}.sock")))
+        .unwrap_or_default();
+    let listener = Listener::bind(tcfg.backend, &tcfg.host, &sock_path)?;
+    let my_addr = listener.addr_string()?;
+
+    let mut counters = TransportCounters::default();
+    let coord_stream = connect_with_retry(coordinator, &tcfg, 0xC0 ^ me as u64, &mut counters)?;
+    let mut coord = PeerLink::new(usize::MAX, coord_stream, Some(coordinator.to_string()), me as u64);
+    {
+        let hello = Frame::new(FrameKind::Hello, me, 0, 0, my_addr.clone().into_bytes());
+        if !coord.send_frame(&hello, &tcfg, &mut counters) {
+            return Err("failed to send Hello to coordinator".into());
+        }
+    }
+    // Wait for the address book.
+    let table_deadline = Instant::now() + Duration::from_millis(tcfg.round_timeout_ms.max(1));
+    let peers: BTreeMap<usize, String> = loop {
+        match coord.pump(Duration::from_millis(20), &mut counters) {
+            LinkEvent::Frame(f) if f.kind == FrameKind::PeerTable => {
+                let text = String::from_utf8(f.payload)
+                    .map_err(|_| "peer table is not UTF-8".to_string())?;
+                let mut map = BTreeMap::new();
+                for line in text.lines().filter(|l| !l.is_empty()) {
+                    let (idx, addr) = line
+                        .split_once(' ')
+                        .ok_or_else(|| format!("malformed peer table line {line:?}"))?;
+                    let idx: usize =
+                        idx.parse().map_err(|_| format!("bad worker index in {line:?}"))?;
+                    map.insert(idx, addr.to_string());
+                }
+                break map;
+            }
+            LinkEvent::Frame(f) => return Err(format!("unexpected {:?} before peer table", f.kind)),
+            LinkEvent::Idle => {
+                if Instant::now() >= table_deadline {
+                    return Err("timed out waiting for peer table".into());
+                }
+            }
+            LinkEvent::Dead(why) => return Err(format!("lost coordinator: {why}")),
+        }
+    };
+
+    // Neighbor links: dial every lower-id neighbor (its listener was
+    // bound before the coordinator released the peer table), accept
+    // from every higher-id one, identifying each accepted stream by its
+    // Hello frame.
+    let mut st = SocketTransport::new(me, tcfg.clone());
+    let neighbors: Vec<usize> = graph.neighbors(me).to_vec();
+    for &j in neighbors.iter().filter(|&&j| j < me) {
+        let addr = peers.get(&j).ok_or_else(|| format!("no address for worker {j}"))?;
+        let s = connect_with_retry(addr, &tcfg, ((me as u64) << 16) | j as u64, &mut counters)?;
+        let mut link = PeerLink::new(j, s, Some(addr.clone()), ((me as u64) << 16) | j as u64);
+        let hello = Frame::new(FrameKind::Hello, me, j, 0, Vec::new());
+        if !link.send_frame(&hello, &tcfg, &mut counters) {
+            return Err(format!("failed Hello to worker {j}"));
+        }
+        st.links.insert(j, link);
+    }
+    let expect_accepts = neighbors.iter().filter(|&&j| j > me).count();
+    let accept_deadline = Instant::now() + Duration::from_millis(tcfg.round_timeout_ms.max(1));
+    for _ in 0..expect_accepts {
+        let s = listener.accept(accept_deadline)?;
+        s.set_deadlines(Some(io_timeout(&tcfg)), Some(io_timeout(&tcfg)))
+            .map_err(|e| format!("deadlines: {e}"))?;
+        // Identify the dialer.
+        let mut tmp = PeerLink::new(usize::MAX, s, None, me as u64 ^ 0xACCE);
+        let hello_deadline = Instant::now() + io_timeout(&tcfg);
+        let from = loop {
+            match tmp.pump(Duration::from_millis(20), &mut counters) {
+                LinkEvent::Frame(f) if f.kind == FrameKind::Hello => break f.from as usize,
+                LinkEvent::Frame(f) => return Err(format!("expected Hello, got {:?}", f.kind)),
+                LinkEvent::Idle => {
+                    if Instant::now() >= hello_deadline {
+                        return Err("timed out waiting for neighbor Hello".into());
+                    }
+                }
+                LinkEvent::Dead(why) => return Err(format!("neighbor lost during Hello: {why}")),
+            }
+        };
+        if !neighbors.contains(&from) || from <= me {
+            return Err(format!("unexpected Hello from worker {from}"));
+        }
+        tmp.peer = from;
+        st.links.insert(from, tmp);
+    }
+
+    // -- Training loop -----------------------------------------------------
+    let mut net = Network::with_transport(&graph, Box::new(st));
+    // Zero-rate plan from step 0: bit-identical to no plan (DESIGN.md
+    // §7) and gives peer deaths a place to land (`set_absent`).
+    net.set_fault_plan(FaultPlan::new(k, 0.0, 0.0, 1, 0.0, cfg.seed));
+
+    let mu = cfg.hyper.mu;
+    let wd = cfg.hyper.weight_decay;
+    let period = cfg.hyper.period.max(1);
+    let steps = cfg.steps;
+    let mut last_loss = f64::NAN;
+    for t in 0..steps {
+        let eta = cfg.hyper.lr.eta(t);
+        last_loss =
+            crate::engine::momentum_row_step(source.as_mut(), me, &mut x, &mut m, &mut scratch, mu, wd, eta);
+        if (t + 1) % period == 0 {
+            let sock = net
+                .transport_mut()
+                .as_any_mut()
+                .downcast_mut::<SocketTransport>()
+                .expect("worker network runs on SocketTransport");
+            sock.begin_round(t);
+            premix.copy_from_slice(&x);
+            net.broadcast_shared(me, Arc::new(x.clone()));
+            let mut msgs = net.recv_all(me);
+            msgs.sort_by_key(|m| m.from);
+            let newly_dead = net
+                .transport_mut()
+                .as_any_mut()
+                .downcast_mut::<SocketTransport>()
+                .expect("worker network runs on SocketTransport")
+                .take_newly_dead();
+            for j in newly_dead {
+                if let Some(plan) = net.fault_plan_mut() {
+                    plan.set_absent(j, true);
+                }
+            }
+            mix_one_row(&weights, me, &premix, &msgs, neighbors.len(), &mut mixed);
+            x.copy_from_slice(&mixed);
+            net.end_round();
+        }
+        let s = t + 1;
+        if s % cfg.eval_every == 0 || s >= steps {
+            // Snapshot = fabric counters + this process's coordinator-link
+            // and handshake counters, embedded in the report.
+            let mut snapshot = net.transport_counters();
+            snapshot.merge(&counters);
+            let eval = Frame::new(FrameKind::Eval, me, 0, s, encode_eval(last_loss, &x, &snapshot));
+            if !coord.send_frame(&eval, &tcfg, &mut counters) {
+                return Err("lost coordinator while reporting eval".into());
+            }
+        }
+    }
+
+    // -- Teardown ----------------------------------------------------------
+    {
+        let bye = Frame::new(FrameKind::Bye, me, 0, steps, Vec::new());
+        let _ = coord.send_frame(&bye, &tcfg, &mut counters);
+    }
+    if let Some(sock) = net.transport_mut().as_any_mut().downcast_mut::<SocketTransport>() {
+        sock.send_bye();
+    }
+    // Linger until the coordinator hangs up so slower neighbors never
+    // see a premature EOF mid-round; bounded so a dead coordinator
+    // can't wedge the process.
+    let linger = Instant::now() + Duration::from_millis(tcfg.round_timeout_ms.max(1));
+    loop {
+        let mut c = TransportCounters::default();
+        match coord.pump(Duration::from_millis(50), &mut c) {
+            LinkEvent::Dead(_) => break,
+            _ if Instant::now() >= linger => break,
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator: child supervision + the Session-side Algorithm.
+// ---------------------------------------------------------------------------
+
+struct WorkerSlot {
+    link: PeerLink,
+    child: std::process::Child,
+    live: bool,
+    counters: TransportCounters,
+}
+
+/// Supervises K worker processes: spawn, handshake, collect eval
+/// reports, detect deaths, optional scripted kill (the fault-injection
+/// hook the peer-loss tests and the CI kill leg use).
+pub struct CoordinatorHub {
+    tcfg: TransportConfig,
+    slots: Vec<WorkerSlot>,
+    counters: TransportCounters,
+    kill: Option<(usize, u64)>,
+    killed: bool,
+    _listener: Listener,
+    scratch_dir: Option<PathBuf>,
+}
+
+impl CoordinatorHub {
+    /// Kill every child (used on error paths and at teardown).
+    fn kill_all(&mut self) {
+        for s in self.slots.iter_mut() {
+            let _ = s.child.kill();
+            let _ = s.child.wait();
+        }
+    }
+
+    fn cleanup(&mut self) {
+        if let Some(dir) = self.scratch_dir.take() {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+
+    /// Blocking collect of every live worker's Eval report for `step`.
+    /// Returns workers that died during the collect.
+    fn collect(&mut self, step: u64, rows: &mut [Vec<f32>], losses: &mut [f64]) -> Vec<usize> {
+        let deadline = Instant::now() + Duration::from_millis(self.tcfg.round_timeout_ms.max(1));
+        let mut got: Vec<bool> = self.slots.iter().map(|s| !s.live).collect();
+        let mut newly_dead = Vec::new();
+        while got.iter().any(|g| !g) {
+            let timed_out = Instant::now() >= deadline;
+            for (w, slot) in self.slots.iter_mut().enumerate() {
+                if got[w] {
+                    continue;
+                }
+                // A reaped child that can no longer report is dead even
+                // if its socket lingers.
+                let exited = matches!(slot.child.try_wait(), Ok(Some(_)));
+                match slot.link.pump(Duration::from_millis(10), &mut self.counters) {
+                    LinkEvent::Frame(f) => match f.kind {
+                        FrameKind::Eval if f.step == step => {
+                            match decode_eval(&f.payload) {
+                                Ok((loss, x, c)) => {
+                                    if x.len() == rows[w].len() {
+                                        rows[w].copy_from_slice(&x);
+                                    }
+                                    losses[w] = loss;
+                                    slot.counters = c;
+                                }
+                                Err(_) => {
+                                    self.counters.crc_errors += 1;
+                                }
+                            }
+                            got[w] = true;
+                        }
+                        FrameKind::Eval => { /* stale report; keep reading */ }
+                        FrameKind::Heartbeat | FrameKind::Hello => {}
+                        FrameKind::Bye => {
+                            slot.live = false;
+                            got[w] = true;
+                            newly_dead.push(w);
+                        }
+                        _ => {}
+                    },
+                    LinkEvent::Idle => {
+                        if exited || timed_out {
+                            if timed_out && !exited {
+                                self.counters.timeouts += 1;
+                                let _ = slot.child.kill();
+                            }
+                            slot.live = false;
+                            got[w] = true;
+                            newly_dead.push(w);
+                        }
+                    }
+                    LinkEvent::Dead(_) => {
+                        slot.live = false;
+                        got[w] = true;
+                        newly_dead.push(w);
+                    }
+                }
+            }
+        }
+        for &w in &newly_dead {
+            self.counters.peers_dead += 1;
+            let _ = w;
+        }
+        // Scripted kill: SIGKILL one worker after its report at the
+        // first eval step ≥ the trigger — peers then discover the death
+        // through the transport, which is exactly what the peer-loss
+        // tests assert.
+        if let Some((kw, ks)) = self.kill {
+            if !self.killed && step >= ks {
+                if let Some(slot) = self.slots.get_mut(kw) {
+                    let _ = slot.child.kill();
+                }
+                self.killed = true;
+            }
+        }
+        newly_dead
+    }
+
+    /// Aggregate coordinator-side + latest per-worker counters.
+    fn aggregate(&self) -> TransportCounters {
+        let mut total = self.counters;
+        for s in &self.slots {
+            total.merge(&s.counters);
+        }
+        total
+    }
+}
+
+impl Drop for CoordinatorHub {
+    fn drop(&mut self) {
+        self.kill_all();
+        self.cleanup();
+    }
+}
+
+/// The coordinator-side `Algorithm`: holds the authoritative K×d row
+/// set (synced from worker Eval reports at eval steps), replays the
+/// in-proc byte accounting on its local `Network` so `Session`'s
+/// sim-seconds/comm-MB stay bit-identical, and maps worker deaths onto
+/// the absence machinery.
+pub struct RemoteGossip {
+    k: usize,
+    period: u64,
+    eval_every: u64,
+    steps: u64,
+    rows: Vec<Vec<f32>>,
+    losses: Vec<f64>,
+    dummy: Arc<Vec<f32>>,
+    hub: CoordinatorHub,
+    shared: Arc<Mutex<TransportCounters>>,
+    name: String,
+    pub peers_lost: usize,
+}
+
+impl RemoteGossip {
+    pub fn shared_counters(&self) -> Arc<Mutex<TransportCounters>> {
+        Arc::clone(&self.shared)
+    }
+}
+
+impl Algorithm for RemoteGossip {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn step(&mut self, t: u64, _source: &mut dyn GradientSource, net: &mut Network) -> StepStats {
+        let mut stats = StepStats::default();
+        if (t + 1) % self.period == 0 {
+            // Replay the exact in-proc wire charge on the local
+            // accounting Network: a full dense broadcast per worker.
+            let before = net.total_bytes;
+            for from in 0..self.k {
+                net.broadcast_shared(from, Arc::clone(&self.dummy));
+            }
+            for to in 0..self.k {
+                let _ = net.recv_all(to);
+            }
+            net.end_round();
+            stats.communicated = true;
+            stats.bytes = net.total_bytes - before;
+        }
+        let s = t + 1;
+        if s % self.eval_every == 0 || s >= self.steps {
+            let dead = self.hub.collect(s, &mut self.rows, &mut self.losses);
+            for w in dead {
+                if !net.faults_active() {
+                    net.set_fault_plan(FaultPlan::new(self.k, 0.0, 0.0, 1, 0.0, 0));
+                }
+                if let Some(plan) = net.fault_plan_mut() {
+                    plan.set_absent(w, true);
+                }
+                self.peers_lost += 1;
+            }
+            let live = self.hub.slots.iter().filter(|s| s.live).count();
+            if live > 0 {
+                stats.mean_loss = self
+                    .hub
+                    .slots
+                    .iter()
+                    .zip(&self.losses)
+                    .filter(|(s, _)| s.live)
+                    .map(|(_, l)| *l)
+                    .sum::<f64>()
+                    / live as f64;
+            }
+            *self.shared.lock().unwrap() = self.hub.aggregate();
+        }
+        stats
+    }
+
+    fn params(&self, k: usize) -> &[f32] {
+        &self.rows[k]
+    }
+
+    fn state_save(&self, _w: &mut crate::state::StateWriter) {
+        // Socket sessions are not checkpointable: the momentum banks
+        // live in the worker processes. `cmd_train` rejects --ckpt.
+    }
+
+    fn state_load(&mut self, _r: &mut crate::state::StateReader) -> Result<(), String> {
+        Err("socket-transport sessions cannot restore checkpoints".into())
+    }
+}
+
+/// Everything `pdsgdm train` needs back from a socket run.
+pub struct TransportRunOutcome {
+    pub trace: crate::metrics::Trace,
+    pub counters: TransportCounters,
+    pub peers_lost: usize,
+    pub rho: f64,
+    pub wall_seconds: f64,
+}
+
+static SCRATCH_NONCE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Collect K worker Hellos (each carrying its listen address), send
+/// every worker the full address book, and adopt the children into
+/// supervised slots. Children stay in `children` until adopted, so the
+/// caller can kill the stragglers on error.
+fn handshake(
+    hub: &mut CoordinatorHub,
+    k: usize,
+    children: &mut Vec<std::process::Child>,
+) -> Result<(), String> {
+    let tcfg = hub.tcfg.clone();
+    let mut hellos: BTreeMap<usize, (PeerLink, String)> = BTreeMap::new();
+    let deadline = Instant::now() + Duration::from_millis(tcfg.round_timeout_ms.max(1)) * 2;
+    while hellos.len() < k {
+        // A child that died before saying Hello aborts the run.
+        for (w, c) in children.iter_mut().enumerate() {
+            if !hellos.contains_key(&w) {
+                if let Ok(Some(status)) = c.try_wait() {
+                    return Err(format!("worker {w} exited during handshake: {status}"));
+                }
+            }
+        }
+        let stream = hub._listener.accept(deadline).map_err(|e| format!("handshake: {e}"))?;
+        let _ = stream.set_deadlines(Some(io_timeout(&tcfg)), Some(io_timeout(&tcfg)));
+        let mut link = PeerLink::new(usize::MAX, stream, None, 0xC00D);
+        let hello_deadline = Instant::now() + io_timeout(&tcfg);
+        loop {
+            match link.pump(Duration::from_millis(20), &mut hub.counters) {
+                LinkEvent::Frame(f) if f.kind == FrameKind::Hello => {
+                    let w = f.from as usize;
+                    let addr = String::from_utf8(f.payload).unwrap_or_default();
+                    if w >= k || addr.is_empty() {
+                        return Err(format!("bad Hello from worker {w}"));
+                    }
+                    link.peer = w;
+                    hellos.insert(w, (link, addr));
+                    break;
+                }
+                LinkEvent::Frame(f) => return Err(format!("expected Hello, got {:?}", f.kind)),
+                LinkEvent::Idle => {
+                    if Instant::now() >= hello_deadline {
+                        return Err("timed out waiting for worker Hello".into());
+                    }
+                }
+                LinkEvent::Dead(why) => return Err(format!("worker died in handshake: {why}")),
+            }
+        }
+    }
+    let table: String = (0..k).map(|w| format!("{w} {}\n", hellos[&w].1)).collect();
+    for w in 0..k {
+        let (mut link, _) = hellos.remove(&w).expect("hello collected");
+        let f = Frame::new(FrameKind::PeerTable, 0, w, 0, table.clone().into_bytes());
+        if !link.send_frame(&f, &tcfg, &mut hub.counters) {
+            return Err(format!("failed to send peer table to worker {w}"));
+        }
+        hub.slots.push(WorkerSlot {
+            link,
+            child: children.remove(0),
+            live: true,
+            counters: TransportCounters::default(),
+        });
+    }
+    Ok(())
+}
+
+/// Spawn K `pdsgdm worker` processes, wire them up over
+/// loopback-TCP/Unix sockets, and drive a full `Session` run whose
+/// trace is bit-identical to the in-memory run on the same seed.
+/// `worker_exe` is the binary to spawn (`std::env::current_exe()` from
+/// the CLI; `env!("CARGO_BIN_EXE_pdsgdm")` from integration tests).
+pub fn run_coordinator(
+    cfg: &ExperimentConfig,
+    worker_exe: &Path,
+    verbose: bool,
+) -> Result<TransportRunOutcome, String> {
+    let tcfg = cfg.transport.clone().ok_or("config has no [transport] section")?;
+    let k = cfg.workers;
+    let (graph, _weights, rho) =
+        crate::topology::build_sparse(cfg.topology, k, cfg.weighting, cfg.seed);
+    let mut source = crate::coordinator::build_source(cfg).map_err(|e| e.to_string())?;
+    let x0 = source.init(cfg.seed);
+    let d = x0.len();
+
+    // Scratch dir: worker config + Unix sockets live here for the run.
+    let nonce = SCRATCH_NONCE.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let scratch = tcfg
+        .socket_dir
+        .as_ref()
+        .map(PathBuf::from)
+        .unwrap_or_else(std::env::temp_dir)
+        .join(format!("pdsgdm-{}-{nonce}", std::process::id()));
+    std::fs::create_dir_all(&scratch).map_err(|e| format!("create {scratch:?}: {e}"))?;
+    let cfg_path = scratch.join("config.toml");
+    std::fs::write(&cfg_path, cfg.to_toml()?).map_err(|e| format!("write {cfg_path:?}: {e}"))?;
+
+    let listener = Listener::bind(tcfg.backend, &tcfg.host, &scratch.join("coord.sock"))?;
+    let coord_addr = listener.addr_string()?;
+
+    let mut children = Vec::with_capacity(k);
+    for w in 0..k {
+        let child = std::process::Command::new(worker_exe)
+            .arg("worker")
+            .arg("--config")
+            .arg(&cfg_path)
+            .arg("--worker")
+            .arg(w.to_string())
+            .arg("--coordinator")
+            .arg(&coord_addr)
+            .stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::null())
+            .stderr(if verbose { std::process::Stdio::inherit() } else { std::process::Stdio::null() })
+            .spawn()
+            .map_err(|e| format!("spawn worker {w}: {e}"))?;
+        children.push(child);
+    }
+    let mut hub = CoordinatorHub {
+        tcfg: tcfg.clone(),
+        slots: Vec::new(),
+        counters: TransportCounters::default(),
+        kill: tcfg.kill_worker,
+        killed: false,
+        _listener: listener,
+        scratch_dir: Some(scratch),
+    };
+
+    // Handshake: K Hellos carrying listen addresses, then the table.
+    // On failure, kill every child the handshake didn't adopt into a
+    // slot (the hub's Drop reaps the adopted ones).
+    if let Err(e) = handshake(&mut hub, k, &mut children) {
+        for c in children.iter_mut() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        return Err(e);
+    }
+
+    // Session: exact in-proc accounting over a local InProc Network.
+    let mut net = Network::new(&graph);
+    let shared = Arc::new(Mutex::new(TransportCounters::default()));
+    let mut algo = RemoteGossip {
+        k,
+        period: cfg.hyper.period.max(1),
+        eval_every: cfg.eval_every.max(1),
+        steps: cfg.steps,
+        rows: (0..k).map(|_| x0.clone()).collect(),
+        losses: vec![f64::NAN; k],
+        dummy: Arc::new(x0),
+        hub,
+        shared: Arc::clone(&shared),
+        name: format!("pd-sgdm(p={})", cfg.hyper.period),
+        peers_lost: 0,
+    };
+    let wall = Instant::now();
+    let trace = {
+        let mut session = crate::coordinator::Session::from_parts(
+            &mut algo,
+            source.as_mut(),
+            &mut net,
+            cfg.eval_every,
+            cfg.cost_model,
+        );
+        session.rho = rho;
+        session.set_transport_counters(Arc::clone(&shared));
+        if verbose {
+            session.observe(Box::new(crate::coordinator::VerboseObserver::stderr()));
+        }
+        session.run_until(crate::coordinator::StopCondition::Steps(cfg.steps)).clone()
+    };
+    let wall_seconds = wall.elapsed().as_secs_f64();
+    let peers_lost = algo.peers_lost;
+
+    // Graceful teardown: hang up (workers linger on the coordinator
+    // link), then reap with a bounded wait.
+    for s in algo.hub.slots.iter_mut() {
+        s.link.kill();
+    }
+    let reap_deadline = Instant::now() + Duration::from_secs(10);
+    for s in algo.hub.slots.iter_mut() {
+        loop {
+            match s.child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < reap_deadline => {
+                    std::thread::sleep(Duration::from_millis(10))
+                }
+                _ => {
+                    let _ = s.child.kill();
+                    let _ = s.child.wait();
+                    break;
+                }
+            }
+        }
+    }
+    let counters = algo.hub.aggregate();
+    algo.hub.cleanup();
+    Ok(TransportRunOutcome { trace, counters, peers_lost, rho, wall_seconds })
+}
+
+// ---------------------------------------------------------------------------
+// Tests.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{Topology, Weighting};
+
+    #[test]
+    fn crc32_check_value() {
+        // The standard CRC-32/ISO-HDLC check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip_all_kinds() {
+        for (kind, payload) in [
+            (FrameKind::Hello, b"tcp:127.0.0.1:9".to_vec()),
+            (FrameKind::PeerTable, b"0 tcp:a\n1 tcp:b\n".to_vec()),
+            (FrameKind::Dense, encode_dense(&[1.0, -2.5, 3.25])),
+            (FrameKind::Heartbeat, Vec::new()),
+            (FrameKind::Eval, encode_eval(0.5, &[1.0], &TransportCounters::default())),
+            (FrameKind::Bye, Vec::new()),
+        ] {
+            let f = Frame::new(kind, 3, 7, 42, payload);
+            let bytes = encode_frame(&f);
+            let (g, used) = decode_frame(&bytes).expect("decodes");
+            assert_eq!(used, bytes.len());
+            assert_eq!(f, g);
+        }
+    }
+
+    #[test]
+    fn frame_decode_is_incremental() {
+        let f = Frame::new(FrameKind::Dense, 0, 1, 9, encode_dense(&[4.0; 10]));
+        let bytes = encode_frame(&f);
+        for cut in 0..bytes.len() {
+            assert_eq!(decode_frame(&bytes[..cut]), Err(FrameError::Incomplete), "cut={cut}");
+        }
+        // Two concatenated frames decode one at a time.
+        let mut two = bytes.clone();
+        two.extend_from_slice(&bytes);
+        let (_, used) = decode_frame(&two).unwrap();
+        assert_eq!(used, bytes.len());
+        let (g, _) = decode_frame(&two[used..]).unwrap();
+        assert_eq!(g, f);
+    }
+
+    #[test]
+    fn frame_rejects_corruption() {
+        let f = Frame::new(FrameKind::Dense, 2, 3, 5, encode_dense(&[1.0, 2.0]));
+        let mut bytes = encode_frame(&f);
+        let last = bytes.len() - 6;
+        bytes[last] ^= 0x40;
+        assert!(matches!(decode_frame(&bytes), Err(FrameError::Corrupt(_))));
+        // Absurd length prefix must not allocate.
+        let huge = u32::MAX.to_le_bytes();
+        assert!(matches!(decode_frame(&huge), Err(FrameError::Corrupt(_))));
+    }
+
+    #[test]
+    fn counters_roundtrip_and_truncation() {
+        let mut c = TransportCounters::default();
+        c.connect_retries = 1;
+        c.heartbeat_misses = 7;
+        c.bytes_sent = 1 << 40;
+        c.crc_errors = 3;
+        let b = c.encode();
+        let (d, used) = TransportCounters::decode(&b).unwrap();
+        assert_eq!(used, b.len());
+        assert_eq!(c, d);
+        for cut in 0..b.len() {
+            let _ = TransportCounters::decode(&b[..cut]);
+        }
+    }
+
+    #[test]
+    fn eval_payload_roundtrip() {
+        let mut c = TransportCounters::default();
+        c.timeouts = 2;
+        let x = vec![0.5f32, -1.5, 2.25];
+        let b = encode_eval(-0.125, &x, &c);
+        let (loss, y, d) = decode_eval(&b).unwrap();
+        assert_eq!(loss, -0.125);
+        assert_eq!(x, y);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn backoff_stays_in_bounds_and_grows() {
+        let mut prev_cap = 0;
+        for a in 0..10 {
+            let d = backoff_delay_ms(a, 25, 1600, 0x5EED);
+            let cap = (25u64 << a.min(20)).min(1600);
+            assert!(d >= cap / 2 && d <= cap, "attempt {a}: {d} not in [{}, {cap}]", cap / 2);
+            assert!(cap >= prev_cap);
+            prev_cap = cap;
+        }
+        // Deterministic for a fixed (attempt, salt).
+        assert_eq!(backoff_delay_ms(3, 25, 1600, 9), backoff_delay_ms(3, 25, 1600, 9));
+    }
+
+    #[test]
+    fn inproc_transport_is_fifo_per_destination() {
+        let mut t = InProc::new(3);
+        for from in [2usize, 0, 1] {
+            t.enqueue(Message { from, to: 1, payload: Payload::Dense(Arc::new(vec![from as f32])) });
+        }
+        assert!(!t.is_empty());
+        let msgs = t.drain(1);
+        assert_eq!(msgs.iter().map(|m| m.from).collect::<Vec<_>>(), vec![2, 0, 1]);
+        assert!(t.is_empty());
+        assert!(t.drain(0).is_empty());
+    }
+
+    /// `mix_one_row` must reproduce `GossipState::mix` bit-exactly —
+    /// both with a full house (the bit-identity contract) and with a
+    /// missing sender (the renormalized degradation path).
+    #[test]
+    fn mix_one_row_matches_gossip_state() {
+        use crate::algorithms::GossipState;
+        use crate::arena::ParamArena;
+
+        let k = 5;
+        let d = 7;
+        let g = Topology::Ring.build(k, 0);
+        let w = MixWeights::from_graph(&g, Weighting::UniformDegree);
+        let rows: Vec<Vec<f32>> =
+            (0..k).map(|i| (0..d).map(|j| (i * d + j) as f32 * 0.25 - 3.0).collect()).collect();
+
+        // Reference: the real mixer over an in-proc network.
+        let mut arena = ParamArena::zeros(k, d);
+        for i in 0..k {
+            arena.row_mut(i).copy_from_slice(&rows[i]);
+        }
+        let mut net = Network::new(&g);
+        let mut gs = GossipState::new(w.clone());
+        gs.mix(&mut arena, &mut net, None);
+
+        // Full house: each row mixed in isolation from its messages.
+        for to in 0..k {
+            let msgs: Vec<Message> = g
+                .neighbors(to)
+                .iter()
+                .map(|&from| Message {
+                    from,
+                    to,
+                    payload: Payload::Dense(Arc::new(rows[from].clone())),
+                })
+                .collect();
+            let mut msgs = msgs;
+            msgs.sort_by_key(|m| m.from);
+            let mut out = vec![0.0f32; d];
+            mix_one_row(&w, to, &rows[to], &msgs, g.neighbors(to).len(), &mut out);
+            assert_eq!(out, arena.row(to), "row {to} diverged from GossipState::mix");
+        }
+
+        // Partial house: drop sender `lost` for receiver `to`; compare
+        // against the hardened in-proc path under churn absence.
+        let to = 2usize;
+        let lost = g.neighbors(to)[0];
+        let mut arena2 = ParamArena::zeros(k, d);
+        for i in 0..k {
+            arena2.row_mut(i).copy_from_slice(&rows[i]);
+        }
+        let mut net2 = Network::new(&g);
+        net2.set_fault_plan(FaultPlan::new(k, 0.0, 0.0, 1, 0.0, 0));
+        net2.fault_plan_mut().unwrap().set_absent(lost, true);
+        let mut gs2 = GossipState::new(w.clone());
+        gs2.mix(&mut arena2, &mut net2, None);
+
+        let mut msgs: Vec<Message> = g
+            .neighbors(to)
+            .iter()
+            .filter(|&&from| from != lost)
+            .map(|&from| Message { from, to, payload: Payload::Dense(Arc::new(rows[from].clone())) })
+            .collect();
+        msgs.sort_by_key(|m| m.from);
+        let mut out = vec![0.0f32; d];
+        mix_one_row(&w, to, &rows[to], &msgs, g.neighbors(to).len(), &mut out);
+        assert_eq!(out, arena2.row(to), "renormalized partial-house mix diverged");
+    }
+
+    #[test]
+    fn dense_payload_rejects_ragged_length() {
+        assert!(decode_dense(&[0u8; 5]).is_err());
+        assert_eq!(decode_dense(&[]).unwrap(), Vec::<f32>::new());
+    }
+}

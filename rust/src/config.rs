@@ -362,6 +362,98 @@ impl FaultsConfig {
     }
 }
 
+/// Which socket family the multi-process transport uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportBackend {
+    /// Loopback (or LAN) TCP with `TCP_NODELAY`.
+    Tcp,
+    /// Unix-domain stream sockets in a per-run scratch directory.
+    Unix,
+}
+
+/// The `[transport]` config section. Its *presence* switches `pdsgdm
+/// train` from the in-memory simulator to real multi-process training:
+/// a coordinator spawns one `pdsgdm worker` OS process per worker and
+/// gossip moves over sockets as CRC32-checked frames (DESIGN.md §10).
+/// All durations are milliseconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportConfig {
+    pub backend: TransportBackend,
+    /// Bind/dial host for the TCP backend.
+    pub host: String,
+    /// Scratch directory for Unix sockets + the worker config file.
+    /// `None` = the OS temp dir.
+    pub socket_dir: Option<String>,
+    /// Dial attempts per connect are `connect_retries + 1`.
+    pub connect_retries: u32,
+    /// First retry backoff; doubles per attempt (with jitter) ...
+    pub retry_base_ms: u64,
+    /// ... up to this cap.
+    pub retry_max_ms: u64,
+    /// Read/write deadline applied to every socket op.
+    pub io_timeout_ms: u64,
+    /// Keepalive cadence while blocked waiting on a peer.
+    pub heartbeat_ms: u64,
+    /// Silent heartbeat intervals before a peer is declared dead.
+    pub heartbeat_misses: u32,
+    /// Hard deadline on one gossip round / eval collect.
+    pub round_timeout_ms: u64,
+    /// Fault-injection hook: SIGKILL worker `.0` at the first eval step
+    /// >= `.1` (config syntax `"W@STEP"`). Drives the peer-loss tests
+    /// and the CI kill leg.
+    pub kill_worker: Option<(usize, u64)>,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            backend: TransportBackend::Tcp,
+            host: "127.0.0.1".into(),
+            socket_dir: None,
+            connect_retries: 8,
+            retry_base_ms: 25,
+            retry_max_ms: 1600,
+            io_timeout_ms: 5_000,
+            heartbeat_ms: 500,
+            heartbeat_misses: 10,
+            round_timeout_ms: 30_000,
+            kill_worker: None,
+        }
+    }
+}
+
+impl TransportConfig {
+    fn validate(&self) -> Result<(), String> {
+        for (key, v) in [
+            ("transport.retry_base_ms", self.retry_base_ms),
+            ("transport.io_timeout_ms", self.io_timeout_ms),
+            ("transport.heartbeat_ms", self.heartbeat_ms),
+            ("transport.round_timeout_ms", self.round_timeout_ms),
+        ] {
+            if v == 0 {
+                return Err(format!("{key} must be >= 1"));
+            }
+        }
+        if self.retry_max_ms < self.retry_base_ms {
+            return Err("transport.retry_max_ms must be >= transport.retry_base_ms".into());
+        }
+        if self.heartbeat_misses == 0 {
+            return Err("transport.heartbeat_misses must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Parse the `"W@STEP"` kill-hook syntax.
+pub fn parse_kill_spec(s: &str) -> Result<(usize, u64), String> {
+    let (w, step) = s
+        .split_once('@')
+        .ok_or_else(|| format!("kill spec {s:?} must be WORKER@STEP"))?;
+    let w = w.trim().parse().map_err(|_| format!("bad worker in kill spec {s:?}"))?;
+    let step = step.trim().parse().map_err(|_| format!("bad step in kill spec {s:?}"))?;
+    Ok((w, step))
+}
+
 /// The full experiment description (one `configs/*.toml` file).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -380,6 +472,9 @@ pub struct ExperimentConfig {
     pub cost_model: CostModel,
     pub stop: StopConfig,
     pub faults: FaultsConfig,
+    /// `Some` = real multi-process socket training; `None` = the
+    /// in-memory simulator (the default, byte-for-byte the legacy path).
+    pub transport: Option<TransportConfig>,
     pub out_dir: String,
 }
 
@@ -401,6 +496,7 @@ impl Default for ExperimentConfig {
             cost_model: CostModel::default(),
             stop: StopConfig::default(),
             faults: FaultsConfig::default(),
+            transport: None,
             out_dir: "bench_out".into(),
         }
     }
@@ -443,6 +539,11 @@ impl ExperimentConfig {
             "faults.enabled", "faults.drop_prob", "faults.delay_prob",
             "faults.max_delay", "faults.reorder_prob", "faults.seed",
             "faults.straggler", "faults.churn", "faults.compressed",
+            "transport.backend", "transport.host", "transport.socket_dir",
+            "transport.connect_retries", "transport.retry_base_ms",
+            "transport.retry_max_ms", "transport.io_timeout_ms",
+            "transport.heartbeat_ms", "transport.heartbeat_misses",
+            "transport.round_timeout_ms", "transport.kill_worker",
             "out_dir",
         ];
         for key in doc.keys() {
@@ -638,6 +739,48 @@ impl ExperimentConfig {
                 .as_bool()
                 .ok_or_else(|| "faults.compressed must be a boolean".to_string())?;
         }
+        // transport: any `transport.*` key switches socket mode on.
+        if doc.keys().any(|k| k.starts_with("transport.")) {
+            let mut t = TransportConfig::default();
+            if let Some(v) = get_str("transport.backend") {
+                t.backend = match v.as_str() {
+                    "tcp" => TransportBackend::Tcp,
+                    "unix" => TransportBackend::Unix,
+                    other => return Err(format!("unknown transport backend {other}; options: tcp, unix")),
+                };
+            }
+            if let Some(v) = get_str("transport.host") {
+                t.host = v;
+            }
+            if let Some(v) = get_str("transport.socket_dir") {
+                t.socket_dir = Some(v);
+            }
+            if let Some(v) = get_usize("transport.connect_retries")? {
+                t.connect_retries = v as u32;
+            }
+            if let Some(v) = get_usize("transport.retry_base_ms")? {
+                t.retry_base_ms = v as u64;
+            }
+            if let Some(v) = get_usize("transport.retry_max_ms")? {
+                t.retry_max_ms = v as u64;
+            }
+            if let Some(v) = get_usize("transport.io_timeout_ms")? {
+                t.io_timeout_ms = v as u64;
+            }
+            if let Some(v) = get_usize("transport.heartbeat_ms")? {
+                t.heartbeat_ms = v as u64;
+            }
+            if let Some(v) = get_usize("transport.heartbeat_misses")? {
+                t.heartbeat_misses = v as u32;
+            }
+            if let Some(v) = get_usize("transport.round_timeout_ms")? {
+                t.round_timeout_ms = v as u64;
+            }
+            if let Some(v) = get_str("transport.kill_worker") {
+                t.kill_worker = Some(parse_kill_spec(&v)?);
+            }
+            cfg.transport = Some(t);
+        }
         if let Some(v) = get_str("out_dir") {
             cfg.out_dir = v;
         }
@@ -670,6 +813,183 @@ impl ExperimentConfig {
             self.cost_model,
             self.faults,
         )
+    }
+
+    /// Serialize back into the TOML subset `from_toml_str` reads, so
+    /// the coordinator can hand worker processes the *exact* resolved
+    /// experiment (`from_toml_str(cfg.to_toml()) == cfg` for every
+    /// representable config — float fields print their shortest
+    /// round-trip form). Errs on states `from_doc` cannot produce
+    /// (warmup schedules, non-default decay factors, straggler/churn
+    /// plans), none of which socket mode permits anyway.
+    pub fn to_toml(&self) -> Result<String, String> {
+        fn esc(s: &str) -> String {
+            format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+        }
+        let mut out = String::new();
+        let mut line = |s: String| {
+            out.push_str(&s);
+            out.push('\n');
+        };
+        line(format!("name = {}", esc(&self.name)));
+        line(format!("algorithm = {}", esc(&self.algorithm)));
+        line(format!("workers = {}", self.workers));
+        line(format!("steps = {}", self.steps));
+        line(format!("eval_every = {}", self.eval_every));
+        line(format!("seed = {}", self.seed));
+        let topo = match self.topology {
+            Topology::Ring => "ring".to_string(),
+            Topology::Chain => "chain".to_string(),
+            Topology::Complete => "complete".to_string(),
+            Topology::Star => "star".to_string(),
+            Topology::Torus2d => "torus".to_string(),
+            Topology::Hypercube => "hypercube".to_string(),
+            Topology::ExpGraph => "expgraph".to_string(),
+            Topology::RandomRegular { degree } => format!("random-regular:{degree}"),
+        };
+        line(format!("topology = {}", esc(&topo)));
+        let weighting = match self.weighting {
+            Weighting::UniformDegree => "uniform",
+            Weighting::Metropolis => "metropolis",
+            Weighting::LazyMetropolis => "lazy-metropolis",
+        };
+        line(format!("weighting = {}", esc(weighting)));
+        line(format!("out_dir = {}", esc(&self.out_dir)));
+        line("".into());
+        match self.sharding {
+            Sharding::Iid => line("sharding.kind = \"iid\"".into()),
+            Sharding::Dirichlet { alpha } => {
+                line("sharding.kind = \"dirichlet\"".into());
+                // `from_doc` reads alpha through f32; print the f32 form
+                // so it re-parses to the identical value.
+                line(format!("sharding.alpha = {:?}", alpha as f32));
+            }
+        }
+        line("".into());
+        let (eta, schedule) = match &self.hyper.lr {
+            LrSchedule::Constant { eta } => (*eta, None),
+            LrSchedule::StepDecay { eta0, factor, milestones, total_steps } => {
+                if *factor != 0.1 {
+                    return Err("to_toml: step-decay factor must be 0.1".into());
+                }
+                if *total_steps != self.steps {
+                    return Err("to_toml: step-decay horizon differs from steps".into());
+                }
+                let ms = milestones
+                    .iter()
+                    .map(|m| format!("{m:?}"))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                (*eta0, Some(("step-decay", Some(ms))))
+            }
+            LrSchedule::Corollary1 { eta0, k, total_steps } => {
+                if *k != self.workers || *total_steps != self.steps {
+                    return Err("to_toml: corollary1 horizon differs from (workers, steps)".into());
+                }
+                (*eta0, Some(("corollary1", None)))
+            }
+            LrSchedule::Warmup { .. } => {
+                return Err("to_toml: warmup schedules have no config syntax".into())
+            }
+        };
+        line(format!("hyper.eta = {eta:?}"));
+        if let Some((name, milestones)) = schedule {
+            line(format!("hyper.lr_schedule = {}", esc(name)));
+            if let Some(ms) = milestones {
+                line(format!("hyper.lr_milestones = [{ms}]"));
+            }
+        }
+        line(format!("hyper.mu = {:?}", self.hyper.mu));
+        line(format!("hyper.weight_decay = {:?}", self.hyper.weight_decay));
+        line(format!("hyper.period = {}", self.hyper.period));
+        line(format!("hyper.gamma = {:?}", self.hyper.gamma));
+        if let Some(c) = &self.compressor {
+            line(format!("compressor = {}", esc(c)));
+        }
+        line("".into());
+        match &self.workload {
+            WorkloadConfig::Quadratic { dim, heterogeneity, noise } => {
+                line("workload.kind = \"quadratic\"".into());
+                line(format!("workload.dim = {dim}"));
+                line(format!("workload.heterogeneity = {heterogeneity:?}"));
+                line(format!("workload.noise = {noise:?}"));
+            }
+            WorkloadConfig::Logistic { n, dim, classes, batch, l2 } => {
+                line("workload.kind = \"logistic\"".into());
+                line(format!("workload.n = {n}"));
+                line(format!("workload.dim = {dim}"));
+                line(format!("workload.classes = {classes}"));
+                line(format!("workload.batch = {batch}"));
+                line(format!("workload.l2 = {l2:?}"));
+            }
+            WorkloadConfig::Mlp { n, dim, classes, hidden, batch } => {
+                line("workload.kind = \"mlp\"".into());
+                line(format!("workload.n = {n}"));
+                line(format!("workload.dim = {dim}"));
+                line(format!("workload.classes = {classes}"));
+                line(format!("workload.hidden = {hidden}"));
+                line(format!("workload.batch = {batch}"));
+            }
+            WorkloadConfig::Transformer { model, artifacts_dir } => {
+                line("workload.kind = \"transformer\"".into());
+                line(format!("workload.model = {}", esc(model)));
+                line(format!("workload.artifacts_dir = {}", esc(artifacts_dir)));
+            }
+        }
+        line("".into());
+        // `from_doc` reads the cost model through f32 — print f32 forms.
+        line(format!("cost.alpha = {:?}", self.cost_model.alpha as f32));
+        line(format!("cost.beta = {:?}", self.cost_model.beta as f32));
+        line(format!("cost.step_seconds = {:?}", self.cost_model.step_seconds as f32));
+        if let Some(v) = self.stop.target_loss {
+            line(format!("stop.target_loss = {:?}", v as f32));
+        }
+        if let Some(v) = self.stop.comm_budget_mb {
+            line(format!("stop.comm_budget_mb = {:?}", v as f32));
+        }
+        if let Some(v) = self.stop.sim_seconds_budget {
+            line(format!("stop.sim_seconds_budget = {:?}", v as f32));
+        }
+        if let Some(v) = self.stop.wall_clock_seconds {
+            line(format!("stop.wall_clock_seconds = {v:?}"));
+        }
+        if self.faults.straggler.is_some() || !self.faults.churn.is_empty() {
+            return Err("to_toml: straggler/churn plans have no serializer".into());
+        }
+        if self.faults != FaultsConfig::default() {
+            line(format!("faults.enabled = {}", self.faults.enabled));
+            line(format!("faults.drop_prob = {:?}", self.faults.drop_prob));
+            line(format!("faults.delay_prob = {:?}", self.faults.delay_prob));
+            line(format!("faults.max_delay = {}", self.faults.max_delay));
+            line(format!("faults.reorder_prob = {:?}", self.faults.reorder_prob));
+            line(format!("faults.seed = {}", self.faults.seed));
+            line(format!("faults.compressed = {}", self.faults.compressed));
+        }
+        if let Some(t) = &self.transport {
+            line("".into());
+            line(format!(
+                "transport.backend = {}",
+                esc(match t.backend {
+                    TransportBackend::Tcp => "tcp",
+                    TransportBackend::Unix => "unix",
+                })
+            ));
+            line(format!("transport.host = {}", esc(&t.host)));
+            if let Some(d) = &t.socket_dir {
+                line(format!("transport.socket_dir = {}", esc(d)));
+            }
+            line(format!("transport.connect_retries = {}", t.connect_retries));
+            line(format!("transport.retry_base_ms = {}", t.retry_base_ms));
+            line(format!("transport.retry_max_ms = {}", t.retry_max_ms));
+            line(format!("transport.io_timeout_ms = {}", t.io_timeout_ms));
+            line(format!("transport.heartbeat_ms = {}", t.heartbeat_ms));
+            line(format!("transport.heartbeat_misses = {}", t.heartbeat_misses));
+            line(format!("transport.round_timeout_ms = {}", t.round_timeout_ms));
+            if let Some((w, s)) = t.kill_worker {
+                line(format!("transport.kill_worker = {}", esc(&format!("{w}@{s}"))));
+            }
+        }
+        Ok(out)
     }
 
     pub fn validate(&self) -> Result<(), String> {
@@ -746,6 +1066,50 @@ impl ExperimentConfig {
             }
         }
         self.faults.validate(self.workers)?;
+        if let Some(t) = &self.transport {
+            t.validate()?;
+            // Socket mode replays the sequential pd-sgdm schedule one
+            // row per OS process; anything that couples workers through
+            // shared in-process state can't be split across processes
+            // and is rejected up front (DESIGN.md §10).
+            if self.algorithm != "pd-sgdm" {
+                return Err(format!(
+                    "[transport] supports algorithm = \"pd-sgdm\" only (got {}); \
+                     compressed/tracking variants keep cross-worker state in-process",
+                    self.algorithm
+                ));
+            }
+            if self.compressor.is_some() {
+                return Err("[transport] does not support compressed gossip yet".into());
+            }
+            if self.faults.is_active() || !self.faults.churn.is_empty() || self.faults.straggler.is_some() {
+                return Err(
+                    "[transport] provides real faults (peer loss, timeouts); remove the \
+                     simulated [faults] section"
+                        .into(),
+                );
+            }
+            if matches!(self.workload, WorkloadConfig::Transformer { .. }) {
+                return Err(
+                    "[transport] does not support the transformer workload (XLA gradient \
+                     state cannot be sharded per-process)"
+                        .into(),
+                );
+            }
+            if self.stop != StopConfig::default() {
+                return Err(
+                    "[transport] runs are step-bounded; [stop] budgets are not supported".into(),
+                );
+            }
+            if let Some((w, _)) = t.kill_worker {
+                if w >= self.workers {
+                    return Err(format!(
+                        "transport.kill_worker: worker {w} does not exist (K = {})",
+                        self.workers
+                    ));
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -1237,5 +1601,118 @@ exit_when_idle = true
         )
         .unwrap();
         assert_eq!(cfg.algorithm, "pd-sgdm");
+    }
+
+    /// `to_toml` must be a fixed point of the parser: every field a
+    /// worker process consumes survives serialize → parse bit-exactly,
+    /// including awkward f32 values (0.3) and exponent forms (1e-4).
+    #[test]
+    fn to_toml_round_trips() {
+        let src = r#"
+            name = "rt"
+            algorithm = "pd-sgdm"
+            workers = 8
+            steps = 120
+            eval_every = 10
+            seed = 7
+            topology = "random-regular:3"
+            weighting = "metropolis"
+            sharding.kind = "dirichlet"
+            sharding.alpha = 0.3
+            hyper.eta = 0.05
+            hyper.lr_schedule = "step-decay"
+            hyper.lr_milestones = [0.5, 0.75]
+            hyper.mu = 0.9
+            hyper.weight_decay = 1e-4
+            hyper.period = 4
+            hyper.gamma = 0.4
+            workload.kind = "quadratic"
+            workload.dim = 16
+            workload.heterogeneity = 0.3
+            workload.noise = 0.01
+            cost.alpha = 0.0005
+            cost.beta = 0.0000000125
+            cost.step_seconds = 0.002
+            transport.backend = "tcp"
+            transport.host = "127.0.0.1"
+            transport.connect_retries = 5
+            transport.retry_base_ms = 10
+            transport.retry_max_ms = 400
+            transport.io_timeout_ms = 2000
+            transport.heartbeat_ms = 250
+            transport.heartbeat_misses = 4
+            transport.round_timeout_ms = 9000
+            transport.kill_worker = "3@40"
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(src).unwrap();
+        let toml = cfg.to_toml().unwrap();
+        let back = ExperimentConfig::from_toml_str(&toml)
+            .unwrap_or_else(|e| panic!("re-parse failed: {e}\n--- emitted ---\n{toml}"));
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"), "--- emitted ---\n{toml}");
+        // And again through the emitted form: to_toml is a fixed point.
+        assert_eq!(toml, back.to_toml().unwrap());
+    }
+
+    #[test]
+    fn to_toml_round_trips_other_workloads() {
+        for workload in [
+            "workload.kind = \"logistic\"\nworkload.n = 64\nworkload.dim = 5\n\
+             workload.classes = 3\nworkload.batch = 8\nworkload.l2 = 0.001",
+            "workload.kind = \"mlp\"\nworkload.n = 64\nworkload.dim = 5\n\
+             workload.classes = 3\nworkload.hidden = 7\nworkload.batch = 8",
+        ] {
+            let src = format!(
+                "algorithm = \"pd-sgdm\"\nworkers = 4\nsteps = 20\n\
+                 hyper.lr_schedule = \"corollary1\"\nstop.target_loss = 0.3\n{workload}\n"
+            );
+            let cfg = ExperimentConfig::from_toml_str(&src).unwrap();
+            let back = ExperimentConfig::from_toml_str(&cfg.to_toml().unwrap()).unwrap();
+            assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
+        }
+    }
+
+    #[test]
+    fn to_toml_rejects_unrepresentable_schedules() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.hyper.lr = crate::optim::LrSchedule::Warmup { eta: 0.1, warmup_steps: 5 };
+        assert!(cfg.to_toml().is_err());
+        cfg.hyper.lr = crate::optim::LrSchedule::StepDecay {
+            eta0: 0.1,
+            factor: 0.5,
+            milestones: vec![0.5],
+            total_steps: cfg.steps,
+        };
+        assert!(cfg.to_toml().is_err());
+    }
+
+    #[test]
+    fn transport_section_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "algorithm = \"pd-sgdm\"\nworkers = 4\nsteps = 20\n\
+             workload.kind = \"quadratic\"\nworkload.dim = 4\n\
+             transport.backend = \"unix\"\ntransport.kill_worker = \"1@8\"\n",
+        )
+        .unwrap();
+        let t = cfg.transport.as_ref().unwrap();
+        assert_eq!(t.backend, TransportBackend::Unix);
+        assert_eq!(t.kill_worker, Some((1, 8)));
+
+        // Simulated faults and real transport are mutually exclusive
+        // (validate runs inside from_doc, so the parse itself fails).
+        let err = ExperimentConfig::from_toml_str(
+            "algorithm = \"pd-sgdm\"\nworkers = 4\nsteps = 20\n\
+             workload.kind = \"quadratic\"\nworkload.dim = 4\n\
+             faults.drop_prob = 0.1\ntransport.backend = \"tcp\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("transport"), "{err}");
+
+        // kill_worker index must be a real worker.
+        assert!(ExperimentConfig::from_toml_str(
+            "algorithm = \"pd-sgdm\"\nworkers = 4\nsteps = 20\n\
+             workload.kind = \"quadratic\"\nworkload.dim = 4\n\
+             transport.backend = \"tcp\"\ntransport.kill_worker = \"9@5\"\n",
+        )
+        .is_err());
     }
 }

@@ -162,6 +162,19 @@ pub trait Observer {
     fn on_eval(&mut self, label: &str, point: &TracePoint) {
         let _ = (label, point);
     }
+
+    /// After an evaluation point was recorded. Only called on sessions
+    /// driving a real socket transport (`[transport]` runs): the
+    /// fleet-aggregated wire counters at that step — retries,
+    /// reconnects, timeouts, heartbeat misses, dead peers, frames and
+    /// bytes actually moved (see `comm::transport`).
+    fn on_transport_counters(
+        &mut self,
+        step: u64,
+        counters: &crate::comm::transport::TransportCounters,
+    ) {
+        let _ = (step, counters);
+    }
 }
 
 /// Reproduces the driver's old `verbose: true` stderr lines as an
@@ -308,6 +321,42 @@ pub struct Session<'a> {
     pub rho: f64,
     /// The originating config, when built from one.
     pub config: Option<ExperimentConfig>,
+    /// Live fleet-aggregated wire counters, set by the socket-transport
+    /// coordinator (`comm::transport::run_coordinator`). When present,
+    /// every eval point also fires `Observer::on_transport_counters`
+    /// with a snapshot.
+    transport_counters:
+        Option<std::sync::Arc<std::sync::Mutex<crate::comm::transport::TransportCounters>>>,
+}
+
+/// Construct the gradient oracle a config describes. Shared between
+/// [`Session::build`] and the socket-transport worker processes
+/// (`comm::transport::run_worker`), which must rebuild the *identical*
+/// oracle from the same seed to reproduce the in-memory run bit-exactly.
+pub fn build_source(config: &ExperimentConfig) -> Result<Box<dyn GradientSource>> {
+    let k = config.workers;
+    Ok(match &config.workload {
+        WorkloadConfig::Quadratic { dim, heterogeneity, noise } => {
+            Box::new(Quadratic::new(k, *dim, *heterogeneity, *noise, config.seed))
+        }
+        WorkloadConfig::Logistic { n, dim, classes, batch, l2 } => {
+            let data = Blobs { n: *n, dim: *dim, classes: *classes, spread: 3.0 }
+                .generate(config.seed);
+            Box::new(Logistic::new(data, k, config.sharding, *batch, *l2, config.seed))
+        }
+        WorkloadConfig::Mlp { n, dim, classes, hidden, batch } => {
+            let data = Blobs { n: *n, dim: *dim, classes: *classes, spread: 3.0 }
+                .generate(config.seed);
+            Box::new(Mlp::new(data, k, config.sharding, *hidden, *batch, 0.2, config.seed))
+        }
+        WorkloadConfig::Transformer { model, artifacts_dir } => {
+            let rt = crate::runtime::Runtime::new(artifacts_dir.clone())?;
+            let step = rt.train_step(model)?;
+            // ~64 windows per worker is plenty for a few hundred steps
+            let corpus = (step.manifest.seq_len + 1) * 64 * k + (step.manifest.seq_len + 1) * 8;
+            Box::new(crate::runtime::XlaGradSource::new(step, k, corpus, config.seed)?)
+        }
+    })
 }
 
 impl Session<'static> {
@@ -324,36 +373,7 @@ impl Session<'static> {
             topology::build_sparse(config.topology, k, config.weighting, config.seed);
         let net = Network::new(&graph);
 
-        let source: Box<dyn GradientSource> = match &config.workload {
-            WorkloadConfig::Quadratic { dim, heterogeneity, noise } => Box::new(
-                Quadratic::new(k, *dim, *heterogeneity, *noise, config.seed),
-            ),
-            WorkloadConfig::Logistic { n, dim, classes, batch, l2 } => {
-                let data = Blobs { n: *n, dim: *dim, classes: *classes, spread: 3.0 }
-                    .generate(config.seed);
-                Box::new(Logistic::new(data, k, config.sharding, *batch, *l2, config.seed))
-            }
-            WorkloadConfig::Mlp { n, dim, classes, hidden, batch } => {
-                let data = Blobs { n: *n, dim: *dim, classes: *classes, spread: 3.0 }
-                    .generate(config.seed);
-                Box::new(Mlp::new(
-                    data,
-                    k,
-                    config.sharding,
-                    *hidden,
-                    *batch,
-                    0.2,
-                    config.seed,
-                ))
-            }
-            WorkloadConfig::Transformer { model, artifacts_dir } => {
-                let rt = crate::runtime::Runtime::new(artifacts_dir.clone())?;
-                let step = rt.train_step(model)?;
-                // ~64 windows per worker is plenty for a few hundred steps
-                let corpus = (step.manifest.seq_len + 1) * 64 * k + (step.manifest.seq_len + 1) * 8;
-                Box::new(crate::runtime::XlaGradSource::new(step, k, corpus, config.seed)?)
-            }
-        };
+        let source = build_source(&config)?;
 
         let x0 = source.init(config.seed);
         let compressor = config
@@ -477,7 +497,18 @@ impl<'a> Session<'a> {
             wall_start: std::time::Instant::now(),
             rho: 0.0,
             config: None,
+            transport_counters: None,
         }
+    }
+
+    /// Attach the shared wire-counter cell a socket-transport run keeps
+    /// current; eval points then notify observers via
+    /// [`Observer::on_transport_counters`].
+    pub fn set_transport_counters(
+        &mut self,
+        counters: std::sync::Arc<std::sync::Mutex<crate::comm::transport::TransportCounters>>,
+    ) {
+        self.transport_counters = Some(counters);
     }
 
     /// Attach an observer; all attached observers receive every
@@ -686,10 +717,19 @@ impl<'a> Session<'a> {
         self.last_eval = Some(point.step);
         self.forced_final = false; // direct pulls are deliberate; run_until overrides
         let counters = self.fault_counters();
+        // Snapshot before the observer loop: observers must never block
+        // on the transport's live mutex mid-callback.
+        let wire = self
+            .transport_counters
+            .as_ref()
+            .map(|c| c.lock().expect("transport counter mutex poisoned").clone());
         for obs in self.observers.iter_mut() {
             obs.on_eval(&self.trace.label, &point);
             if let Some(c) = &counters {
                 obs.on_fault_counters(point.step, c);
+            }
+            if let Some(w) = &wire {
+                obs.on_transport_counters(point.step, w);
             }
         }
         point

@@ -474,6 +474,27 @@ impl LocalStepEngine {
     }
 }
 
+/// One worker's Alg. 1 lines 2–4 — gradient at `x`, heavy-ball update —
+/// exactly as the in-process engine executes them ([`WorkerUpdate`]'s
+/// momentum arm), exposed for the socket-transport worker processes
+/// (`comm::transport::run_worker`): a process replaying only its own row
+/// must perform bit-identical float ops to the simulator's per-worker
+/// slice to keep loopback runs reproducible. Returns the sampled loss.
+pub fn momentum_row_step(
+    source: &mut dyn GradientSource,
+    worker: usize,
+    x: &mut [f32],
+    m: &mut [f32],
+    scratch: &mut [f32],
+    mu: f32,
+    wd: f32,
+    eta: f32,
+) -> f64 {
+    let loss = source.grad_into(worker, x, scratch);
+    optim::momentum_step(m, x, scratch, mu, wd, eta);
+    loss
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -50,6 +50,7 @@ fn real_main() -> Result<()> {
     let flags = Flags::parse(rest)?;
     match cmd.as_str() {
         "train" => cmd_train(flags),
+        "worker" => cmd_worker(flags),
         "topology" => cmd_topology(flags),
         "inspect" => cmd_inspect(flags),
         "serve" => cmd_serve(flags),
@@ -82,6 +83,7 @@ fn print_help() {
                           [--max-delay N] [--reorder-prob F] [--straggler SPEC]\n\
                           [--churn W@LEAVE:REJOIN,..] [--fault-seed N]\n\
                           [--fault-compressed]\n\
+                          [--transport none|tcp|unix] [--transport-kill W@STEP]\n\
                           [--resume CKPT] [--out CSV] [--ckpt FILE] [--verbose]\n\
            pdsgdm topology --kind ring|chain|complete|star|torus|hypercube|expgraph\n\
                           |random-regular:D  [--workers K] [--seed N]\n\
@@ -106,6 +108,11 @@ fn print_help() {
          of cpd-sgdm | choco-sgd | deepsqueeze (needs an active fault plan).\n\
          Checkpoints: --ckpt writes a full-state PDSGDM02 file; --resume continues\n\
          it bit-identically (give the same config plus the new --steps total).\n\
+         Transport: --transport tcp|unix (or a [transport] config section) runs\n\
+         K real OS worker processes over loopback sockets — bit-identical trace\n\
+         to the in-memory run on the same seed, measured wall-clock, retries/\n\
+         heartbeats/peer-loss degradation built in; --transport none strips the\n\
+         section; --transport-kill 3@40 kills worker 3 at step 40 (fault drill).\n\
          Serve: jobs are experiment TOMLs (+ optional [job] name/priority); the\n\
          daemon multiplexes --max-concurrent sessions onto one --threads pool,\n\
          exports Prometheus text at /metrics and JSON at /jobs, and on SIGTERM\n\
@@ -291,7 +298,36 @@ fn cmd_train(flags: Flags) -> Result<()> {
     if flags.has("fault-compressed") {
         cfg.faults.compressed = true;
     }
+    // Real-socket transport overrides (`[transport]` in the config, or
+    // `--transport tcp|unix` from a plain config; `none` strips the
+    // section so the same file can drive both legs of a bit-identity
+    // comparison).
+    match flags.get("transport") {
+        Some("none") => cfg.transport = None,
+        Some(backend @ ("tcp" | "unix")) => {
+            let mut t = cfg.transport.take().unwrap_or_default();
+            t.backend = match backend {
+                "tcp" => pdsgdm::config::TransportBackend::Tcp,
+                _ => pdsgdm::config::TransportBackend::Unix,
+            };
+            cfg.transport = Some(t);
+        }
+        Some(other) => bail!("--transport must be none|tcp|unix, got {other}"),
+        None => {}
+    }
+    if let Some(spec) = flags.get("transport-kill") {
+        let kill = pdsgdm::config::parse_kill_spec(spec).map_err(|e| anyhow!(e))?;
+        let t = cfg
+            .transport
+            .as_mut()
+            .ok_or_else(|| anyhow!("--transport-kill needs socket mode (--transport tcp|unix)"))?;
+        t.kill_worker = Some(kill);
+    }
     cfg.validate().map_err(|e| anyhow!(e))?;
+
+    if cfg.transport.is_some() {
+        return cmd_train_transport(cfg, &flags);
+    }
 
     eprintln!(
         "building: {} | K={} {:?} | p={} mu={} | workload={:?}",
@@ -337,6 +373,74 @@ fn cmd_train(flags: Flags) -> Result<()> {
         eprintln!("checkpoint (PDSGDM02 full state) -> {ckpt}");
     }
     Ok(())
+}
+
+/// Socket-mode `train`: spawn K `pdsgdm worker` OS processes and drive
+/// the run over real loopback TCP / Unix sockets. Bit-identical to the
+/// in-memory run on the same seed; wall-clock is *measured*, not the
+/// α–β simulation.
+fn cmd_train_transport(cfg: ExperimentConfig, flags: &Flags) -> Result<()> {
+    for unsupported in ["resume", "ckpt", "threads"] {
+        if flags.has(unsupported) {
+            bail!("--{unsupported} is not supported in socket-transport mode (--transport none to disable)");
+        }
+    }
+    let t = cfg.transport.as_ref().expect("caller checked");
+    eprintln!(
+        "transport: {} | K={} {:?} OS processes | p={} | workload={:?}",
+        match t.backend {
+            pdsgdm::config::TransportBackend::Tcp => "loopback tcp",
+            pdsgdm::config::TransportBackend::Unix => "unix sockets",
+        },
+        cfg.workers,
+        cfg.topology,
+        cfg.hyper.period,
+        cfg.workload
+    );
+    let exe = std::env::current_exe()?;
+    let outcome = pdsgdm::comm::transport::run_coordinator(&cfg, &exe, flags.has("verbose"))
+        .map_err(|e| anyhow!(e))?;
+    eprintln!("spectral gap rho = {:.4}", outcome.rho);
+    print!("{}", metrics::summary_table(std::slice::from_ref(&outcome.trace)));
+    eprintln!("measured wall-clock: {:.3}s", outcome.wall_seconds);
+    if outcome.peers_lost > 0 {
+        eprintln!(
+            "degraded: lost {} worker process(es) mid-run; mixing renormalized over survivors",
+            outcome.peers_lost
+        );
+    }
+    let wire: Vec<String> = outcome
+        .counters
+        .named()
+        .iter()
+        .filter(|(_, v)| *v > 0)
+        .map(|(n, v)| format!("{n}={v}"))
+        .collect();
+    eprintln!("wire: {}", if wire.is_empty() { "quiet".into() } else { wire.join(" ") });
+    if let Some(out) = flags.get("out") {
+        metrics::write_csv(Path::new(out), std::slice::from_ref(&outcome.trace))?;
+        eprintln!("trace -> {out}");
+    }
+    Ok(())
+}
+
+/// One worker OS process (spawned by the socket-mode coordinator — not
+/// intended for interactive use). Replays its worker's exact slice of
+/// the simulated schedule against the real socket fabric.
+fn cmd_worker(flags: Flags) -> Result<()> {
+    flags.no_positionals()?;
+    let cfg_path = flags
+        .get("config")
+        .ok_or_else(|| anyhow!("worker: --config FILE required"))?;
+    let me: usize = flags
+        .get_parse("worker")?
+        .ok_or_else(|| anyhow!("worker: --worker INDEX required"))?;
+    let coordinator = flags
+        .get("coordinator")
+        .ok_or_else(|| anyhow!("worker: --coordinator ADDR required"))?;
+    let cfg = ExperimentConfig::from_file(Path::new(cfg_path)).map_err(|e| anyhow!(e))?;
+    pdsgdm::comm::transport::run_worker(&cfg, me, coordinator)
+        .map_err(|e| anyhow!("worker {me}: {e}"))
 }
 
 fn cmd_serve(flags: Flags) -> Result<()> {
@@ -387,7 +491,7 @@ fn cmd_submit(flags: Flags) -> Result<()> {
     if name.is_some() && flags.positionals.len() > 1 {
         bail!("--name applies to a single job; submit the files one at a time");
     }
-    for (i, job) in flags.positionals.iter().enumerate() {
+    for job in &flags.positionals {
         let mut src =
             std::fs::read_to_string(job).map_err(|e| anyhow!("{job}: {e}"))?;
         if name.is_some() || priority.is_some() {
@@ -408,18 +512,10 @@ fn cmd_submit(flags: Flags) -> Result<()> {
         // Validate before spooling so a typo is rejected here, with the
         // file name, instead of asynchronously by the daemon.
         pdsgdm::service::queue::parse_job_toml(&src).map_err(|e| anyhow!("{job}: {e}"))?;
-        // Sortable unique name: the daemon scans the spool in
-        // lexicographic order, so epoch-first keeps submission order.
-        let epoch_ms = std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.as_millis())
-            .unwrap_or(0);
-        let file = format!("{epoch_ms:013}-{:05}-{i:03}.toml", std::process::id());
-        let dest = Path::new(spool).join(&file);
-        // Write-then-rename so the daemon never scans a half-written job.
-        let tmp = Path::new(spool).join(format!(".{file}.tmp"));
-        std::fs::write(&tmp, &src)?;
-        std::fs::rename(&tmp, &dest)?;
+        // Collision-proof sortable spool name (epoch + pid + sequence):
+        // see `queue::spool_job` — two submissions in the same epoch
+        // second used to overwrite each other.
+        let dest = pdsgdm::service::queue::spool_job(Path::new(spool), &src)?;
         eprintln!("submitted {job} -> {}", dest.display());
     }
     Ok(())

@@ -15,6 +15,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::comm::transport::TransportCounters;
 use crate::comm::FaultCounters;
 use crate::coordinator::Observer;
 use crate::metrics::TracePoint;
@@ -30,6 +31,9 @@ struct JobMetrics {
     consensus_error: Option<f64>,
     sim_seconds: f64,
     faults: Option<FaultCounters>,
+    /// Fleet-aggregated socket-transport counters (only populated for
+    /// `[transport]` jobs; in-memory runs never fire the callback).
+    transport: Option<TransportCounters>,
 }
 
 struct Inner {
@@ -256,6 +260,42 @@ impl MetricsRegistry {
             "Messages delayed by the fault plan (encoded = compressed-gossip subset).",
             &fault_samples(&|c| (c.delayed_total, c.delayed_encoded)),
         );
+        // Socket-transport wire counters, one family per counter so each
+        // carries its own HELP line. `named()` walks the same list the
+        // wire codec serializes, so a newly added counter shows up here
+        // (with a generic HELP) without touching the exporter.
+        fn transport_help(field: &str) -> &'static str {
+            match field {
+                "connect_retries" => "Connect attempts beyond the first, fleet-wide.",
+                "send_retries" => "Frame send retries after timeouts/backpressure.",
+                "reconnects" => "Link re-establishments after a hard send error.",
+                "timeouts" => "Socket deadline expiries (read or write).",
+                "heartbeats_sent" => "Heartbeat frames sent while waiting on peers.",
+                "heartbeat_misses" => "Silent heartbeat intervals observed on live links.",
+                "peers_dead" => "Peers declared dead (EOF, timeout, miss threshold).",
+                "frames_sent" => "Frames put on the wire.",
+                "frames_received" => "Frames decoded off the wire.",
+                "bytes_sent" => "Bytes put on the wire (payloads + frame headers).",
+                "bytes_received" => "Bytes read off the wire.",
+                "crc_errors" => "Frames rejected by CRC32/structure checks.",
+                _ => "Socket-transport counter.",
+            }
+        }
+        for (idx, (field, _)) in TransportCounters::default().named().iter().enumerate() {
+            let samples: Vec<(String, f64)> = inner
+                .jobs
+                .iter()
+                .filter_map(|(name, m)| m.transport.as_ref().map(|t| (name, t)))
+                .map(|(name, t)| (job_label(name), t.named()[idx].1 as f64))
+                .collect();
+            family(
+                &mut out,
+                &format!("pdsgdm_job_transport_{field}_total"),
+                "counter",
+                transport_help(field),
+                &samples,
+            );
+        }
         out
     }
 }
@@ -300,6 +340,11 @@ impl Observer for MetricsObserver {
     fn on_fault_counters(&mut self, _step: u64, counters: &FaultCounters) {
         // The plan's counters are already cumulative; store the latest.
         self.registry.with_job(&self.job, |m| m.faults = Some(*counters));
+    }
+
+    fn on_transport_counters(&mut self, _step: u64, counters: &TransportCounters) {
+        // Fleet-aggregated and cumulative, like the fault counters.
+        self.registry.with_job(&self.job, |m| m.transport = Some(counters.clone()));
     }
 }
 
@@ -416,6 +461,28 @@ mod tests {
         assert!(text.contains("pdsgdm_job_dropped_messages_total{job=\"f\",kind=\"dense\"} 7"));
         assert!(text.contains("pdsgdm_job_dropped_messages_total{job=\"f\",kind=\"encoded\"} 3"));
         assert!(text.contains("pdsgdm_job_delayed_messages_total{job=\"f\",kind=\"dense\"} 5"));
+    }
+
+    #[test]
+    fn transport_counters_export_one_family_per_field() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let mut obs = MetricsObserver::new("t", Arc::clone(&reg));
+        let mut c = TransportCounters::default();
+        c.send_retries = 4;
+        c.peers_dead = 1;
+        c.bytes_sent = 12345;
+        obs.on_transport_counters(20, &c);
+        let text = reg.render();
+        validate_exposition(&text).unwrap();
+        assert!(text.contains("pdsgdm_job_transport_send_retries_total{job=\"t\"} 4"), "{text}");
+        assert!(text.contains("pdsgdm_job_transport_peers_dead_total{job=\"t\"} 1"), "{text}");
+        assert!(text.contains("pdsgdm_job_transport_bytes_sent_total{job=\"t\"} 12345"), "{text}");
+        // Zero-valued fields still export (a scrape sees the whole set).
+        assert!(text.contains("pdsgdm_job_transport_crc_errors_total{job=\"t\"} 0"), "{text}");
+        // In-memory jobs never fire the callback: no transport families.
+        let quiet = Arc::new(MetricsRegistry::new());
+        MetricsObserver::new("q", Arc::clone(&quiet));
+        assert!(!quiet.render().contains("pdsgdm_job_transport_"), "absent when unused");
     }
 
     #[test]

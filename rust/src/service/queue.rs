@@ -106,6 +106,38 @@ pub fn parse_job_toml(src: &str) -> Result<JobSpec, String> {
     Ok(JobSpec { name, priority, config })
 }
 
+/// Atomically drop a job file into a daemon's spool directory under a
+/// sortable, collision-proof name: `EPOCH_MS-PID-SEQ.toml`. The daemon
+/// scans lexicographically, so epoch-first preserves submission order;
+/// pid + a process-wide sequence counter make two submissions in the
+/// same millisecond — same process or not — land in distinct files
+/// instead of silently overwriting (the rename target is additionally
+/// guarded). Write-then-rename so the daemon never scans a
+/// half-written job.
+pub fn spool_job(spool: &std::path::Path, src: &str) -> std::io::Result<PathBuf> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let epoch_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0);
+    let pid = std::process::id();
+    loop {
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let file = format!("{epoch_ms:013}-{pid:05}-{seq:04}.toml");
+        let dest = spool.join(&file);
+        if dest.exists() {
+            // Another process picked the same (epoch, pid-collision, seq)
+            // triple — bump the sequence and retry rather than clobber.
+            continue;
+        }
+        let tmp = spool.join(format!(".{file}.tmp"));
+        std::fs::write(&tmp, src)?;
+        std::fs::rename(&tmp, &dest)?;
+        return Ok(dest);
+    }
+}
+
 struct Inner {
     jobs: BTreeMap<u64, Job>,
     next_id: u64,
@@ -325,5 +357,30 @@ mod tests {
         assert_eq!(s.priority, 0);
         // bad types surface as errors, not defaults
         assert!(parse_job_toml("[job]\npriority = \"high\"").is_err());
+    }
+
+    /// Two submissions inside the same epoch second (same millisecond,
+    /// even) must land in two distinct spool files — the old
+    /// epoch+pid+loop-index scheme collided across invocations and
+    /// silently overwrote the earlier job.
+    #[test]
+    fn same_second_double_submit_never_collides() {
+        let dir = std::env::temp_dir().join(format!("pdsgdm-spool-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = spool_job(&dir, "steps = 1\n").unwrap();
+        let b = spool_job(&dir, "steps = 2\n").unwrap();
+        assert_ne!(a, b, "same-millisecond submissions must not collide");
+        assert_eq!(std::fs::read_to_string(&a).unwrap(), "steps = 1\n");
+        assert_eq!(std::fs::read_to_string(&b).unwrap(), "steps = 2\n");
+        // Spool scan order == submission order (epoch-first, seq-second).
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        assert_eq!(names.len(), 2, "no stray tmp files left behind");
+        assert!(a.ends_with(&names[0]) && b.ends_with(&names[1]));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

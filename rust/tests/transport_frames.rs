@@ -1,0 +1,203 @@
+//! Frame-decoder fuzz hardening (ISSUE 10 satellite): the socket
+//! transport's decoders face bytes from the network, so truncated,
+//! garbage, and bit-flipped inputs must all come back as clean `Err`
+//! (or `Incomplete` for honest prefixes) — never a panic, never an
+//! over-read, never an absurd allocation. Mirrors the
+//! `Session::load_state` catch_unwind sweep from the checkpoint suite.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use pdsgdm::comm::transport::{
+    decode_dense, decode_eval, decode_frame, encode_dense, encode_eval, encode_frame, Frame,
+    FrameError, FrameKind, TransportCounters,
+};
+
+/// Deterministic byte stream for garbage inputs (no rand crate).
+fn splitmix_bytes(seed: u64, n: usize) -> Vec<u8> {
+    let mut s = seed;
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            (z ^ (z >> 31)) as u8
+        })
+        .collect()
+}
+
+fn sample_frames() -> Vec<Frame> {
+    let counters = TransportCounters { frames_sent: 3, bytes_sent: 999, ..Default::default() };
+    vec![
+        Frame::new(FrameKind::Hello, 3, 0, 0, b"tcp:127.0.0.1:4000".to_vec()),
+        Frame::new(FrameKind::PeerTable, 0, 3, 0, b"0 tcp:h:1\n1 tcp:h:2\n".to_vec()),
+        Frame::new(FrameKind::Dense, 1, 2, 17, encode_dense(&[1.0, -2.5, 3.25e-8, f32::MAX])),
+        Frame::new(FrameKind::Heartbeat, 2, 1, 9, Vec::new()),
+        Frame::new(FrameKind::Eval, 4, 0, 40, encode_eval(0.125, &[0.5; 7], &counters)),
+        Frame::new(FrameKind::Bye, 5, 0, 99, Vec::new()),
+    ]
+}
+
+/// Every truncation of a valid frame decodes to `Incomplete` (an honest
+/// prefix wants more bytes) — never Ok, never a panic.
+#[test]
+fn truncations_at_every_offset_are_incomplete() {
+    for f in sample_frames() {
+        let bytes = encode_frame(&f);
+        for cut in 0..bytes.len() {
+            let slice = bytes[..cut].to_vec();
+            let out = catch_unwind(AssertUnwindSafe(|| decode_frame(&slice)))
+                .unwrap_or_else(|_| panic!("decode_frame panicked at truncation {cut}"));
+            match out {
+                Err(FrameError::Incomplete) => {}
+                Err(FrameError::Corrupt(_)) => {
+                    panic!("truncation {cut} of a valid frame reported Corrupt, not Incomplete")
+                }
+                Ok(_) => panic!("truncation {cut} decoded Ok from a partial frame"),
+            }
+        }
+        // The untruncated frame round-trips.
+        let (back, used) = decode_frame(&bytes).expect("full frame decodes");
+        assert_eq!(used, bytes.len());
+        assert_eq!(back.kind, f.kind);
+        assert_eq!((back.from, back.to, back.step), (f.from, f.to, f.step));
+        assert_eq!(back.payload, f.payload);
+    }
+}
+
+/// Flipping any single bit of a frame must yield a clean outcome:
+/// `Corrupt` (CRC or structure check caught it), `Incomplete` (the
+/// length prefix shrank/grew), or — only for bits inside the length
+/// prefix that grew it — a request for more bytes. Never a panic, and
+/// never an Ok whose bytes differ from what was sent.
+#[test]
+fn single_bit_flips_never_panic_and_never_pass_silently() {
+    for f in sample_frames() {
+        let bytes = encode_frame(&f);
+        for byte_idx in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut m = bytes.clone();
+                m[byte_idx] ^= 1 << bit;
+                let out = catch_unwind(AssertUnwindSafe(|| decode_frame(&m)))
+                    .unwrap_or_else(|_| {
+                        panic!("decode_frame panicked on bit flip {byte_idx}:{bit}")
+                    });
+                if let Ok((back, _)) = out {
+                    // A flip confined to the length prefix can re-frame
+                    // the stream; anything that decodes Ok must still
+                    // have passed its own CRC over the *mutated* bytes,
+                    // so it cannot silently equal the original frame.
+                    assert!(
+                        back.payload != f.payload
+                            || back.kind != f.kind
+                            || back.from != f.from
+                            || back.to != f.to
+                            || back.step != f.step,
+                        "bit flip {byte_idx}:{bit} decoded as the original frame"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Random garbage at every length: clean Err/Incomplete, no panic.
+#[test]
+fn garbage_streams_never_panic() {
+    for seed in 0..64u64 {
+        let junk = splitmix_bytes(seed, 256);
+        for cut in 0..=junk.len() {
+            let slice = junk[..cut].to_vec();
+            let r = catch_unwind(AssertUnwindSafe(|| decode_frame(&slice)))
+                .unwrap_or_else(|_| panic!("decode_frame panicked on garbage seed={seed} cut={cut}"));
+            // Ok is astronomically unlikely (CRC32) but would be legal;
+            // what matters is no panic and no unbounded allocation.
+            let _ = r;
+        }
+    }
+}
+
+/// A hostile length prefix (u32::MAX and friends) is rejected before
+/// any allocation is sized by it.
+#[test]
+fn hostile_length_prefixes_are_rejected_cheaply() {
+    for len in [u32::MAX, u32::MAX - 1, (1u32 << 28) + 1, 1u32 << 30] {
+        let mut buf = len.to_le_bytes().to_vec();
+        buf.extend_from_slice(&[0u8; 64]);
+        match decode_frame(&buf) {
+            Err(FrameError::Corrupt(msg)) => {
+                assert!(msg.contains("exceeds cap"), "unexpected message: {msg}")
+            }
+            other => panic!("hostile length {len} not rejected: {other:?}"),
+        }
+    }
+    // A length *below* the minimum body is equally structural garbage.
+    let mut buf = 3u32.to_le_bytes().to_vec();
+    buf.extend_from_slice(&[0u8; 64]);
+    assert!(matches!(decode_frame(&buf), Err(FrameError::Corrupt(_))));
+}
+
+/// The payload decoders (dense vectors, eval reports, counter lists)
+/// survive the same truncation + garbage sweeps.
+#[test]
+fn payload_decoders_survive_truncation_and_garbage() {
+    let counters = TransportCounters {
+        connect_retries: 1,
+        peers_dead: 2,
+        bytes_received: 1 << 40,
+        ..Default::default()
+    };
+    let dense = encode_dense(&[1.0f32, 2.0, -0.5, 1e-20]);
+    let eval = encode_eval(-3.5, &[9.0; 5], &counters);
+    let enc = counters.encode();
+
+    for (name, bytes) in [("dense", &dense), ("eval", &eval), ("counters", &enc)] {
+        for cut in 0..bytes.len() {
+            let slice = bytes[..cut].to_vec();
+            let ok = catch_unwind(AssertUnwindSafe(|| match name {
+                "dense" => decode_dense(&slice).map(|_| ()),
+                "eval" => decode_eval(&slice).map(|_| ()),
+                _ => TransportCounters::decode(&slice).map(|_| ()),
+            }));
+            assert!(ok.is_ok(), "{name} decoder panicked at truncation {cut}");
+        }
+    }
+    for seed in 64..96u64 {
+        let junk = splitmix_bytes(seed, 128);
+        assert!(
+            catch_unwind(AssertUnwindSafe(|| {
+                let _ = decode_dense(&junk);
+                let _ = decode_eval(&junk);
+                let _ = TransportCounters::decode(&junk);
+            }))
+            .is_ok(),
+            "payload decoder panicked on garbage seed {seed}"
+        );
+    }
+    // And the valid encodings round-trip.
+    assert_eq!(decode_dense(&dense).unwrap(), vec![1.0f32, 2.0, -0.5, 1e-20]);
+    let (loss, x, c) = decode_eval(&eval).unwrap();
+    assert_eq!(loss, -3.5);
+    assert_eq!(x, vec![9.0f32; 5]);
+    assert_eq!(c, counters);
+}
+
+/// Two frames concatenated decode one at a time with correct consumed
+/// lengths — the stream decoder's actual usage pattern.
+#[test]
+fn concatenated_frames_decode_sequentially() {
+    let frames = sample_frames();
+    let mut stream = Vec::new();
+    for f in &frames {
+        stream.extend_from_slice(&encode_frame(f));
+    }
+    let mut off = 0;
+    for f in &frames {
+        let (back, used) = decode_frame(&stream[off..]).expect("next frame decodes");
+        assert_eq!(back.kind, f.kind);
+        assert_eq!(back.payload, f.payload);
+        off += used;
+    }
+    assert_eq!(off, stream.len());
+    assert!(matches!(decode_frame(&stream[off..]), Err(FrameError::Incomplete)));
+}

@@ -1,0 +1,173 @@
+//! End-to-end socket-transport tests (ISSUE 10): spawn real `pdsgdm
+//! worker` OS processes over loopback sockets and check the two
+//! headline properties —
+//!
+//! 1. **Bit-identity**: a socket run reproduces the in-memory run's
+//!    trace CSV byte-for-byte on the same seed (Unix sockets and TCP).
+//! 2. **Graceful degradation**: killing a worker process mid-run
+//!    completes with finite loss and nonzero peer-loss counters
+//!    instead of hanging.
+//!
+//! The worker binary is the crate's own `pdsgdm` bin, resolved via
+//! `CARGO_BIN_EXE_pdsgdm`, so `cargo test` builds it automatically.
+
+use std::path::PathBuf;
+
+use pdsgdm::comm::transport::run_coordinator;
+use pdsgdm::config::{ExperimentConfig, TransportBackend, TransportConfig};
+use pdsgdm::coordinator::{Session, SessionSpec, StopCondition};
+use pdsgdm::metrics;
+
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_pdsgdm"))
+}
+
+/// A small, fast experiment: K=5 ring over the heterogeneous quadratic
+/// (deterministic, no data generation cost), a few comm periods and
+/// several eval points.
+fn base_config(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::from_toml_str(&format!(
+        r#"
+        name = "{name}"
+        algorithm = "pd-sgdm"
+        workers = 5
+        steps = 24
+        eval_every = 6
+        seed = 11
+        topology = "ring"
+        weighting = "metropolis"
+        hyper.eta = 0.05
+        hyper.mu = 0.9
+        hyper.period = 3
+        workload.kind = "quadratic"
+        workload.dim = 12
+        workload.heterogeneity = 0.5
+        workload.noise = 0.05
+        "#
+    ))
+    .expect("base config parses");
+    cfg.out_dir = std::env::temp_dir().display().to_string();
+    cfg
+}
+
+fn csv_of_trace(tag: &str, trace: &metrics::Trace) -> Vec<u8> {
+    let path = std::env::temp_dir().join(format!("pdsgdm-ti-{tag}-{}.csv", std::process::id()));
+    metrics::write_csv(&path, std::slice::from_ref(trace)).expect("write csv");
+    let bytes = std::fs::read(&path).expect("read csv back");
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+/// In-memory reference run for the same config (transport stripped).
+fn inproc_trace(mut cfg: ExperimentConfig) -> metrics::Trace {
+    cfg.transport = None;
+    let steps = cfg.steps;
+    let mut session = Session::build(SessionSpec::new(cfg)).expect("build in-proc session");
+    session.run_until(StopCondition::Steps(steps)).clone()
+}
+
+fn socket_run(cfg: &ExperimentConfig) -> pdsgdm::comm::transport::TransportRunOutcome {
+    run_coordinator(cfg, &worker_exe(), false).expect("socket run completes")
+}
+
+#[test]
+fn unix_socket_run_is_bit_identical_to_inproc() {
+    let mut cfg = base_config("uds-bitid");
+    cfg.transport = Some(TransportConfig {
+        backend: TransportBackend::Unix,
+        ..TransportConfig::default()
+    });
+    let outcome = socket_run(&cfg);
+    let reference = inproc_trace(cfg);
+
+    assert_eq!(
+        outcome.trace.points.len(),
+        reference.points.len(),
+        "same evaluation cadence"
+    );
+    // CSV bytes are the contract (what the CI job diffs) …
+    assert_eq!(
+        csv_of_trace("uds", &outcome.trace),
+        csv_of_trace("ref", &reference),
+        "socket CSV differs from in-memory CSV"
+    );
+    // … and the floats behind them match bitwise, not just in print.
+    for (s, r) in outcome.trace.points.iter().zip(reference.points.iter()) {
+        assert_eq!(s.step, r.step);
+        assert_eq!(s.loss.to_bits(), r.loss.to_bits(), "loss at step {}", s.step);
+        assert_eq!(s.consensus.to_bits(), r.consensus.to_bits(), "consensus at {}", s.step);
+        assert_eq!(s.comm_mb.to_bits(), r.comm_mb.to_bits(), "comm_mb at {}", s.step);
+        assert_eq!(s.sim_seconds.to_bits(), r.sim_seconds.to_bits(), "sim_seconds at {}", s.step);
+    }
+    assert_eq!(outcome.peers_lost, 0, "healthy run loses nobody");
+    assert!(outcome.counters.frames_sent > 0, "bytes actually moved on the wire");
+    assert!(outcome.counters.bytes_sent > 0);
+    assert_eq!(outcome.counters.crc_errors, 0);
+    assert!(outcome.wall_seconds > 0.0);
+}
+
+#[test]
+fn tcp_socket_run_is_bit_identical_to_inproc() {
+    let mut cfg = base_config("tcp-bitid");
+    cfg.steps = 12; // smoke-sized: UDS already covers the long leg
+    cfg.eval_every = 4;
+    cfg.transport = Some(TransportConfig::default()); // tcp backend
+    let outcome = socket_run(&cfg);
+    let reference = inproc_trace(cfg);
+    assert_eq!(
+        csv_of_trace("tcp", &outcome.trace),
+        csv_of_trace("tcp-ref", &reference),
+        "TCP CSV differs from in-memory CSV"
+    );
+    assert_eq!(outcome.peers_lost, 0);
+}
+
+/// Satellite: kill one worker process mid-run. The fabric must detect
+/// the death (EOF/heartbeats), renormalize mixing over the survivors,
+/// and finish with finite loss and visible peer-loss counters — no
+/// hang, no panic.
+#[test]
+fn killed_worker_degrades_gracefully() {
+    let mut cfg = base_config("kill-drill");
+    cfg.steps = 30;
+    cfg.eval_every = 6;
+    let mut t = TransportConfig { backend: TransportBackend::Unix, ..TransportConfig::default() };
+    // Kill worker 2 right after the step-12 reports are collected, and
+    // keep the death-detection knobs tight so the test stays fast.
+    t.kill_worker = Some((2, 12));
+    t.heartbeat_ms = 100;
+    t.heartbeat_misses = 3;
+    t.round_timeout_ms = 10_000;
+    cfg.transport = Some(t);
+
+    let outcome = socket_run(&cfg);
+    assert!(outcome.peers_lost >= 1, "the kill must be observed");
+    assert!(outcome.counters.peers_dead >= 1, "peer-death counters must be nonzero");
+    let last = outcome.trace.points.last().expect("run produced a final eval");
+    assert_eq!(last.step, 30, "run completed all steps despite the kill");
+    assert!(last.loss.is_finite(), "survivors' loss stayed finite: {}", last.loss);
+    // Pre-kill prefix is still deterministic: it must match the
+    // in-memory run up to the kill step.
+    let reference = inproc_trace(cfg);
+    for (s, r) in outcome.trace.points.iter().zip(reference.points.iter()) {
+        if s.step > 12 {
+            break;
+        }
+        assert_eq!(s.loss.to_bits(), r.loss.to_bits(), "pre-kill loss at step {}", s.step);
+    }
+}
+
+/// The CLI path: `pdsgdm train --transport none` vs the socket run via
+/// `run_coordinator` share one config file (what the CI smoke job
+/// does, minus the process spawn for the in-memory leg).
+#[test]
+fn config_file_round_trips_through_worker_processes() {
+    let cfg = base_config("cfg-roundtrip");
+    // What run_coordinator writes for workers must re-parse to the same
+    // experiment — the whole bit-identity story rests on this.
+    let mut with_t = cfg.clone();
+    with_t.transport = Some(TransportConfig { backend: TransportBackend::Unix, ..TransportConfig::default() });
+    let toml = with_t.to_toml().expect("serializable");
+    let back = ExperimentConfig::from_toml_str(&toml).expect("re-parses");
+    assert_eq!(format!("{:?}", with_t), format!("{back:?}"));
+}
